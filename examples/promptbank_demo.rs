@@ -1,0 +1,103 @@
+//! Prompt Bank demo on the real runtime: build the two-layer structure
+//! from a candidate corpus (task tags + noisy variants), then compare
+//! three ways of choosing an initial prompt for a job —
+//!
+//!   * two-layer lookup (the paper's Prompt Bank, K + C/K score evals),
+//!   * brute force over all C candidates (the "ideal"-ish K=1 baseline),
+//!   * the user's own (wrong-task) prompt,
+//!
+//! and measure the ITA each achieves on a real tuning run.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example promptbank_demo -- [--size 200] [--k 14] [--task 4]
+//! ```
+
+use std::time::Instant;
+
+use prompttuner::promptbank::{PromptCandidate, TwoLayerBank};
+use prompttuner::runtime::{ModelRuntime, RuntimeScorer};
+use prompttuner::tuning::{TaskUniverse, Trainer, TrainerConfig};
+use prompttuner::util::cli::Args;
+use prompttuner::util::manifest::Manifest;
+use prompttuner::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(0);
+    let dir = args.get_or("artifacts", "artifacts");
+    let variant = args.get_or("variant", "sim-gpt2b");
+    let size: usize = args.parse_or("size", 200)?;
+    let k: usize = args.parse_or("k", 14)?;
+    let task: usize = args.parse_or("task", 4)?;
+
+    println!("== Prompt Bank demo: {variant}, C={size}, K={k}, task {task} ==");
+    let manifest = Manifest::load(dir)?;
+    let uni = TaskUniverse::load(manifest.tasks_path_abs())?;
+    let rt = ModelRuntime::load(&manifest, variant)?;
+
+    // ---- offline phase: corpus + activation features + K-medoids ----
+    let mut rng = Rng::new(9);
+    let t0 = Instant::now();
+    let mut cands = vec![];
+    for i in 0..size {
+        let t = i % uni.n_tasks;
+        let tokens = if i < uni.n_tasks {
+            uni.tag(t).to_vec()
+        } else {
+            uni.noisy_tag(&mut rng, t, 0.3)
+        };
+        let feature = rt.features(&tokens)?;
+        cands.push(PromptCandidate { tokens, feature, source_task: Some(t) });
+    }
+    let bank = TwoLayerBank::build(cands, k, 3000, &mut rng)?;
+    println!("offline construction: {} candidates -> {} clusters in {:.1}s",
+             bank.len(), bank.n_clusters(), t0.elapsed().as_secs_f64());
+
+    // ---- online phase: lookup for one job ----
+    let trainer = Trainer::new(
+        &rt,
+        &uni,
+        TrainerConfig { lr: 0.08, max_iters: 150, eval_every: 5, seed: 2 },
+    );
+    let (etoks, etgts) = trainer.eval_batch(task);
+
+    let mut s_two = RuntimeScorer::new(&rt, etoks.clone(), etgts.clone());
+    let t1 = Instant::now();
+    let two = bank.lookup(&mut s_two);
+    let two_t = t1.elapsed().as_secs_f64();
+
+    let mut s_brute = RuntimeScorer::new(&rt, etoks, etgts);
+    let t2 = Instant::now();
+    let brute = bank.lookup_bruteforce(&mut s_brute);
+    let brute_t = t2.elapsed().as_secs_f64();
+
+    println!("two-layer lookup : {:>4} evals, {:.2}s, score {:.4}, from task {:?}",
+             two.evals, two_t, two.best_score,
+             bank.candidate(two.best).source_task);
+    println!("brute force (K=1): {:>4} evals, {:.2}s, score {:.4}, from task {:?}",
+             brute.evals, brute_t, brute.best_score,
+             bank.candidate(brute.best).source_task);
+    println!("lookup speedup: {:.1}x with {:.1}% score gap",
+             brute_t / two_t.max(1e-9),
+             100.0 * (two.best_score - brute.best_score)
+                 / brute.best_score.max(1e-9));
+
+    // ---- ITA comparison: bank pick vs brute pick vs a poor user prompt --
+    let target = trainer.score_tokens(task, uni.tag(task))? + 0.10;
+    println!("ITA to target eval loss {target:.4}:");
+    let mut run = |label: &str, tokens: &[i32]| -> anyhow::Result<()> {
+        let out = trainer.tune(task, tokens, target)?;
+        println!("  {label:<18}: {:>4} iters (reached: {}, final {:.4})",
+                 out.iters, out.reached_target, out.final_eval_loss);
+        Ok(())
+    };
+    run("bank (two-layer)", &bank.candidate(two.best).tokens.clone())?;
+    run("ideal-ish (brute)", &bank.candidate(brute.best).tokens.clone())?;
+    let wrong = (0..uni.n_tasks)
+        .find(|&t| uni.arch_id[t] != uni.arch_id[task])
+        .unwrap_or((task + 1) % uni.n_tasks);
+    run("user (wrong task)", uni.tag(wrong))?;
+    println!("OK — the bank's pick converges like the ideal pick at a \
+              fraction of the query cost");
+    Ok(())
+}

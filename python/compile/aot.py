@@ -1,0 +1,165 @@
+"""AOT export: lower the L2 model (with the L1 Pallas kernel inside) to HLO
+**text** artifacts the Rust runtime loads via the `xla` crate.
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs under --out (default ../artifacts):
+  tasks.bin                      synthetic task universe (shared)
+  manifest.txt                   models + segments + artifact index
+  <variant>/theta.bin            pretrained flat params (sim variants only)
+  <variant>/{embed_prompt,score,features,tune_step,eval_loss}.hlo.txt
+
+Run via `make artifacts`; a no-op when inputs are unchanged (make rules).
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .pretrain import pretrain, tag_gap
+from .tasks import TaskUniverse
+
+UNIVERSE_SEED = 20260710
+SIM_VARIANTS = ["sim-gpt2b", "sim-gpt2l", "sim-v7b"]
+PRETRAIN_STEPS = {"sim-gpt2b": 1200, "sim-gpt2l": 1000, "sim-v7b": 900}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_fns(cfg: M.ModelConfig):
+    """(name, fn, example_args) for every artifact of one variant."""
+    n = M.n_params(cfg)
+    p, d, s = cfg.prompt_len, cfg.d_model, cfg.seq
+    bt, be = cfg.batch_train, cfg.batch_eval
+    return [
+        ("embed_prompt",
+         lambda th, pt: M.embed_prompt(cfg, th, pt),
+         (f32(n), i32(p))),
+        ("score",
+         lambda th, pt, tk, tg: M.score(cfg, th, pt, tk, tg),
+         (f32(n), i32(p), i32(be, s), i32(be, s))),
+        ("features",
+         lambda th, pt: M.features(cfg, th, pt),
+         (f32(n), i32(p))),
+        ("tune_step",
+         lambda th, pr, m, v, st, tk, tg, lr:
+             M.tune_step(cfg, th, pr, m, v, st, tk, tg, lr),
+         (f32(n), f32(p, d), f32(p, d), f32(p, d), f32(),
+          i32(bt, s), i32(bt, s), f32())),
+        ("eval_loss",
+         lambda th, pr, tk, tg: M.eval_loss(cfg, th, pr, tk, tg),
+         (f32(n), f32(p, d), i32(be, s), i32(be, s))),
+        ("grad_prompt",
+         lambda th, pr, tk, tg: M.grad_prompt(cfg, th, pr, tk, tg),
+         (f32(n), f32(p, d), i32(bt, s), i32(bt, s))),
+    ]
+
+
+def write_manifest(out_dir: str, variants, universe: TaskUniverse,
+                   have_theta) -> None:
+    lines = ["manifest-version 1", f"tasks tasks.bin seed={universe.seed}"]
+    for name in variants:
+        cfg = M.VARIANTS[name]
+        lines.append(
+            f"model {cfg.name} d={cfg.d_model} layers={cfg.n_layers} "
+            f"heads={cfg.n_heads} vocab={cfg.vocab} seq={cfg.seq} "
+            f"prompt={cfg.prompt_len} batch_train={cfg.batch_train} "
+            f"batch_eval={cfg.batch_eval} n_params={M.n_params(cfg)}")
+        off = 0
+        for seg, shape, kind, p in M.param_spec(cfg):
+            cnt = int(np.prod(shape))
+            lines.append(f"segment {cfg.name} {seg} {off} {cnt} {kind} {p}")
+            off += cnt
+        for fn_name, _, _ in export_fns(cfg):
+            lines.append(f"artifact {cfg.name} {fn_name} "
+                         f"{cfg.name}/{fn_name}.hlo.txt")
+        if name in have_theta:
+            lines.append(f"theta {cfg.name} {cfg.name}/theta.bin")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(SIM_VARIANTS + ["e2e-90m"]))
+    ap.add_argument("--pretrain-steps", type=int, default=0,
+                    help="override per-variant defaults (0 = defaults)")
+    ap.add_argument("--skip-pretrain", action="store_true",
+                    help="random-init theta for sim variants (tests only)")
+    ap.add_argument("--reuse-theta", action="store_true",
+                    help="keep existing theta.bin files (re-lower HLO only; "
+                         "used when only kernels/model lowering changed)")
+    args = ap.parse_args()
+    variants = [v.strip() for v in args.variants.split(",") if v.strip()]
+    os.makedirs(args.out, exist_ok=True)
+
+    uni = TaskUniverse(UNIVERSE_SEED)
+    uni.write_bin(os.path.join(args.out, "tasks.bin"))
+    print(f"tasks.bin: vocab={uni.vocab} tasks={uni.n_tasks} "
+          f"archetypes={uni.n_archetypes}")
+
+    have_theta = set()
+    for name in variants:
+        cfg = M.VARIANTS[name]
+        vdir = os.path.join(args.out, name)
+        os.makedirs(vdir, exist_ok=True)
+        # --- theta (sim variants are pretrained; e2e is Rust-initialized) ---
+        if name in SIM_VARIANTS:
+            t0 = time.time()
+            theta_path = os.path.join(vdir, "theta.bin")
+            if args.reuse_theta and os.path.exists(theta_path):
+                theta = np.fromfile(theta_path, dtype="<f4")
+                assert theta.size == M.n_params(cfg), "stale theta.bin"
+                print(f"  [{name}] reusing existing theta.bin")
+            elif args.skip_pretrain:
+                theta = M.init_theta(cfg, seed=1)
+            else:
+                steps = args.pretrain_steps or PRETRAIN_STEPS[name]
+                theta = pretrain(cfg, uni, steps=steps)
+                gap = tag_gap(cfg, uni, theta)
+                print(f"  [{name}] tag gap (wrong-right loss): {gap:.3f}")
+            theta.astype("<f4").tofile(os.path.join(vdir, "theta.bin"))
+            have_theta.add(name)
+            print(f"  [{name}] theta.bin ({theta.nbytes / 1e6:.1f} MB, "
+                  f"{time.time() - t0:.0f}s)")
+        # --- HLO artifacts ---
+        for fn_name, fn, ex_args in export_fns(cfg):
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*ex_args)
+            text = to_hlo_text(lowered)
+            path = os.path.join(vdir, f"{fn_name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  [{name}] {fn_name}.hlo.txt "
+                  f"({len(text) / 1e3:.0f} kB, {time.time() - t0:.1f}s)")
+
+    write_manifest(args.out, variants, uni, have_theta)
+    print(f"manifest.txt written under {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the prefix-attention kernel (correctness reference).
+
+Every numeric claim about the Pallas kernel is checked against this module
+in ``python/tests/test_kernel.py`` (exact same math, no Pallas involved).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def prefix_mask(t: int, prefix_len: int) -> np.ndarray:
+    """allowed[i, j] = (j < P) or (j <= i) — prefix-LM visibility."""
+    rows = np.arange(t)[:, None]
+    cols = np.arange(t)[None, :]
+    return (cols < prefix_len) | (cols <= rows)
+
+
+def prefix_attention_ref(q, k, v, prefix_len: int):
+    """Reference prefix attention over [B, H, T, Dh] arrays."""
+    _, _, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    mask = jnp.asarray(prefix_mask(t, prefix_len))
+    s = jnp.where(mask, s, -1e30)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)

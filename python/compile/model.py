@@ -1,0 +1,252 @@
+"""L2: the LPT compute graph — a tiny GPT-style decoder with a tunable
+soft prompt, written in JAX and calling the L1 Pallas prefix-attention
+kernel so everything lowers into one HLO module.
+
+All entry points exported to the Rust runtime take the flattened parameter
+vector ``theta`` (f32[n_params]) as their first argument; the flat layout is
+defined by :func:`param_spec` and mirrored in ``artifacts/manifest.txt`` so
+the Rust side can initialize / persist weights without Python.
+
+Exported functions (see aot.py):
+  * ``embed_prompt(theta, ptoks)``            -> prompt [P, D]
+  * ``score(theta, ptoks, toks, tgts)``       -> mean eval loss (paper Eqn. 1)
+  * ``features(theta, ptoks)``                -> activation feature [D]
+  * ``tune_step(theta, prompt, m, v, step, toks, tgts, lr)``
+        one Adam step on the soft prompt     -> (prompt', m', v', loss)
+  * ``eval_loss(theta, prompt, toks, tgts)``  -> mean eval loss
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.prefix_attention import prefix_attention
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + AOT batch dims for one simulated LLM variant."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int
+    seq: int           # number of data tokens per sequence
+    prompt_len: int    # soft-prompt length P (== task tag length)
+    batch_train: int   # tune_step batch (fixed at AOT time)
+    batch_eval: int    # score/eval_loss batch (fixed at AOT time)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.seq
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The three simulated-LLM variants (stand-ins for GPT2-Base / GPT2-Large /
+# Vicuna-7B: same qualitative behaviour, scaled-down size) plus the large
+# end-to-end variant used by examples/e2e_prompt_tuning.rs.
+VARIANTS: Dict[str, ModelConfig] = {
+    "sim-gpt2b": ModelConfig("sim-gpt2b", 64, 2, 2, 256, 32, 16, 8, 16),
+    "sim-gpt2l": ModelConfig("sim-gpt2l", 128, 3, 4, 256, 32, 16, 8, 16),
+    "sim-v7b": ModelConfig("sim-v7b", 192, 4, 6, 256, 32, 16, 8, 16),
+    "e2e-90m": ModelConfig("e2e-90m", 768, 12, 12, 4096, 64, 16, 4, 8),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str, float]]:
+    """Flat parameter layout: (name, shape, init_kind, init_param).
+
+    init_kind: "normal" (std = init_param), "zeros", "ones".
+    The order here *is* the byte order of theta and of manifest segments.
+    """
+    d, v = cfg.d_model, cfg.vocab
+    spec: List[Tuple[str, Tuple[int, ...], str, float]] = [
+        ("wte", (v, d), "normal", 0.02),
+        ("wpe", (cfg.total_len, d), "normal", 0.02),
+    ]
+    out_std = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"h{i}.ln1_g", (d,), "ones", 0.0),
+            (f"h{i}.ln1_b", (d,), "zeros", 0.0),
+            (f"h{i}.w_qkv", (d, 3 * d), "normal", 0.02),
+            (f"h{i}.b_qkv", (3 * d,), "zeros", 0.0),
+            (f"h{i}.w_o", (d, d), "normal", out_std),
+            (f"h{i}.b_o", (d,), "zeros", 0.0),
+            (f"h{i}.ln2_g", (d,), "ones", 0.0),
+            (f"h{i}.ln2_b", (d,), "zeros", 0.0),
+            (f"h{i}.w_fc", (d, 4 * d), "normal", 0.02),
+            (f"h{i}.b_fc", (4 * d,), "zeros", 0.0),
+            (f"h{i}.w_proj", (4 * d, d), "normal", out_std),
+            (f"h{i}.b_proj", (d,), "zeros", 0.0),
+        ]
+    spec += [("lnf_g", (d,), "ones", 0.0), ("lnf_b", (d,), "zeros", 0.0)]
+    return spec
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s, _, _ in param_spec(cfg))
+
+
+def init_theta(cfg: ModelConfig, seed: int) -> np.ndarray:
+    """Initialize the flat parameter vector (same rules the manifest states)."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _, shape, kind, p in param_spec(cfg):
+        n = int(np.prod(shape))
+        if kind == "normal":
+            parts.append(rng.normal(0.0, p, n).astype(np.float32))
+        elif kind == "zeros":
+            parts.append(np.zeros(n, dtype=np.float32))
+        elif kind == "ones":
+            parts.append(np.ones(n, dtype=np.float32))
+        else:
+            raise ValueError(kind)
+    return np.concatenate(parts)
+
+
+def unflatten(cfg: ModelConfig, theta) -> Dict[str, jnp.ndarray]:
+    """Static-slice theta back into named arrays (traceable)."""
+    out = {}
+    off = 0
+    for name, shape, _, _ in param_spec(cfg):
+        n = int(np.prod(shape))
+        out[name] = jax.lax.dynamic_slice(theta, (off,), (n,)).reshape(shape)
+        off += n
+    return out
+
+
+def flatten(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate([params[name].reshape(-1)
+                            for name, _, _, _ in param_spec(cfg)])
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def forward_hidden(cfg: ModelConfig, params, prompt, tokens, *,
+                   use_pallas: bool = True):
+    """Hidden states [B, P+S, D] for a continuous prompt + token batch."""
+    b = tokens.shape[0]
+    tok_emb = params["wte"][tokens]  # [B, S, D]
+    x = jnp.concatenate(
+        [jnp.broadcast_to(prompt[None], (b,) + prompt.shape), tok_emb], axis=1)
+    x = x + params["wpe"][None, : cfg.total_len]
+    p_len = cfg.prompt_len
+    for i in range(cfg.n_layers):
+        h = _layernorm(x, params[f"h{i}.ln1_g"], params[f"h{i}.ln1_b"])
+        qkv = h @ params[f"h{i}.w_qkv"] + params[f"h{i}.b_qkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):  # [B, T, D] -> [B, H, T, Dh]
+            return t.reshape(b, cfg.total_len, cfg.n_heads, cfg.head_dim
+                             ).transpose(0, 2, 1, 3)
+
+        if use_pallas:
+            attn = prefix_attention(heads(q), heads(k), heads(v), p_len)
+        else:
+            from .kernels.ref import prefix_attention_ref
+            attn = prefix_attention_ref(heads(q), heads(k), heads(v), p_len)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, cfg.total_len, cfg.d_model)
+        x = x + attn @ params[f"h{i}.w_o"] + params[f"h{i}.b_o"]
+        h = _layernorm(x, params[f"h{i}.ln2_g"], params[f"h{i}.ln2_b"])
+        h = jax.nn.gelu(h @ params[f"h{i}.w_fc"] + params[f"h{i}.b_fc"])
+        x = x + h @ params[f"h{i}.w_proj"] + params[f"h{i}.b_proj"]
+    return _layernorm(x, params["lnf_g"], params["lnf_b"])
+
+
+def loss_from_hidden(cfg: ModelConfig, params, hidden, targets):
+    """Mean next-token cross-entropy over the S data positions."""
+    # Positions P-1 .. P+S-2 predict data tokens 1..S; position P+S-1 predicts
+    # the token after the window. We align on the S data positions: hidden at
+    # absolute position P+i predicts targets[:, i] (the generator supplies
+    # targets shifted by one).
+    h = hidden[:, cfg.prompt_len:, :]  # [B, S, D]
+    logits = h @ params["wte"].T  # tied output head, [B, S, V]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg: ModelConfig, theta, prompt, tokens, targets, *,
+            use_pallas: bool = True):
+    params = unflatten(cfg, theta)
+    hidden = forward_hidden(cfg, params, prompt, tokens, use_pallas=use_pallas)
+    return loss_from_hidden(cfg, params, hidden, targets)
+
+
+# ---------------------------------------------------------------- exports --
+
+def embed_prompt(cfg: ModelConfig, theta, ptoks):
+    """Token-sequence candidate -> continuous initial prompt [P, D]."""
+    params = unflatten(cfg, theta)
+    return (params["wte"][ptoks],)
+
+
+def score(cfg: ModelConfig, theta, ptoks, tokens, targets, *,
+          use_pallas: bool = True):
+    """Paper Eqn. 1: mean eval loss with a *discrete* candidate prompt."""
+    params = unflatten(cfg, theta)
+    prompt = params["wte"][ptoks]
+    hidden = forward_hidden(cfg, params, prompt, tokens, use_pallas=use_pallas)
+    return (loss_from_hidden(cfg, params, hidden, targets),)
+
+
+def features(cfg: ModelConfig, theta, ptoks, *, use_pallas: bool = True):
+    """Activation feature of a candidate prompt: mean-pooled last hidden
+    state of the prompt positions when the model reads only the prompt."""
+    params = unflatten(cfg, theta)
+    prompt = params["wte"][ptoks]
+    # Feed a dummy single data token (position P); pool only prompt positions.
+    dummy = jnp.zeros((1, cfg.seq), dtype=jnp.int32)
+    hidden = forward_hidden(cfg, params, prompt, dummy, use_pallas=use_pallas)
+    return (jnp.mean(hidden[0, : cfg.prompt_len, :], axis=0),)
+
+
+def tune_step(cfg: ModelConfig, theta, prompt, m, v, step, tokens, targets,
+              lr, *, use_pallas: bool = True):
+    """One Adam step on the soft prompt (theta frozen). Returns
+    (prompt', m', v', loss). ``step`` is the 1-based step count as f32."""
+    loss, grad = jax.value_and_grad(
+        lambda p: loss_fn(cfg, theta, p, tokens, targets, use_pallas=use_pallas)
+    )(prompt)
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m2 / (1.0 - ADAM_B1 ** step)
+    vhat = v2 / (1.0 - ADAM_B2 ** step)
+    new_prompt = prompt - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_prompt, m2, v2, loss
+
+
+def eval_loss(cfg: ModelConfig, theta, prompt, tokens, targets, *,
+              use_pallas: bool = True):
+    """Mean eval loss with a *continuous* prompt (ITA termination check)."""
+    return (loss_fn(cfg, theta, prompt, tokens, targets,
+                    use_pallas=use_pallas),)
+
+
+def grad_prompt(cfg: ModelConfig, theta, prompt, tokens, targets, *,
+                use_pallas: bool = True):
+    """Prompt gradient + loss for one micro-batch. This is the unit of the
+    *synchronous cross-GPU* execution mode: each worker computes the
+    gradient of its micro-batch, the Rust coordinator all-reduces (averages)
+    the gradients and applies Adam host-side (tested to match tune_step)."""
+    loss, grad = jax.value_and_grad(
+        lambda p: loss_fn(cfg, theta, p, tokens, targets,
+                          use_pallas=use_pallas))(prompt)
+    return grad, loss

@@ -1,0 +1,113 @@
+"""L1/L2 performance analysis (build-time; part of the §Perf pass).
+
+Measures, per model variant:
+  * tune_step wall time with the Pallas prefix-attention kernel
+    (interpret=True — the CPU-correctness vehicle) vs the pure-jnp
+    attention path (the XLA-fused roofline on this host);
+  * HLO op counts of the lowered module (fusion quality proxy);
+  * static VMEM footprint + MXU-utilization estimate of the Pallas
+    kernel's BlockSpec (the real-TPU proxy — interpret timings are NOT a
+    TPU predictor, see DESIGN.md §Perf).
+
+Usage: cd python && python -m compile.perf [--variants sim-gpt2b,...]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def time_fn(fn, args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def hlo_op_counts(lowered):
+    text = lowered.compile().as_text() if hasattr(lowered, "compile") else ""
+    if not text:
+        return {}
+    counts = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if "=" in line and not line.startswith(("HloModule", "ENTRY", "//", "%")):
+            continue
+        for op in ("fusion", "dot", "while", "custom-call", "dynamic-slice",
+                   "dynamic-update-slice"):
+            if f" {op}(" in line or f"{op}(" in line.split("=")[-1][:40]:
+                counts[op] = counts.get(op, 0) + 1
+    return counts
+
+
+def vmem_mxu_estimate(cfg: M.ModelConfig):
+    """Static per-tile analysis of the Pallas kernel's BlockSpec.
+
+    Each grid step (one batch×head tile) holds Q, K, V, O blocks of
+    [T, Dh] f32 plus the [T, T] score matrix in VMEM. MXU utilization
+    estimate = fraction of the tile's FLOPs that are matmul (MXU-eligible)
+    vs elementwise (VPU), with Dh padded to the 128-lane MXU width.
+    """
+    t = cfg.total_len
+    dh = cfg.head_dim
+    h = cfg.n_heads
+    bytes_per = 4
+    # one grid step holds all heads: Q/K/V/O blocks + the score matrix
+    vmem = h * (4 * t * dh + t * t) * bytes_per
+    matmul_flops = 2 * t * t * dh * 2  # QK^T and PV
+    elementwise_flops = 6 * t * t      # mask, sub-max, exp, div, etc.
+    mxu_frac = matmul_flops / (matmul_flops + elementwise_flops)
+    # systolic-array fill efficiency: dh vs the 128-wide MXU
+    mxu_fill = min(dh, 128) / 128.0
+    return vmem, mxu_frac, mxu_fill
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--variants", default="sim-gpt2b,sim-gpt2l,sim-v7b")
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    print(f"{'variant':<12} {'pallas ms':>10} {'jnp ms':>10} {'ratio':>7} "
+          f"{'VMEM/tile':>10} {'MXU frac':>9} {'MXU fill':>9}")
+    for name in args.variants.split(","):
+        cfg = M.VARIANTS[name]
+        n = M.n_params(cfg)
+        theta = jnp.asarray(rng.normal(0, 0.02, n).astype(np.float32))
+        prompt = jnp.zeros((cfg.prompt_len, cfg.d_model), jnp.float32)
+        m = jnp.zeros_like(prompt)
+        v = jnp.zeros_like(prompt)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab,
+                                        (cfg.batch_train, cfg.seq)), jnp.int32)
+        tgts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                        (cfg.batch_train, cfg.seq)), jnp.int32)
+
+        def step(use_pallas):
+            f = jax.jit(lambda th, p, m_, v_, tk, tg: M.tune_step(
+                cfg, th, p, m_, v_, jnp.float32(1.0), tk, tg,
+                jnp.float32(0.05), use_pallas=use_pallas))
+            return time_fn(f, (theta, prompt, m, v, toks, tgts),
+                           iters=args.iters)
+
+        t_pallas = step(True)
+        t_jnp = step(False)
+        vmem, mxu_frac, mxu_fill = vmem_mxu_estimate(cfg)
+        print(f"{name:<12} {t_pallas * 1e3:>10.2f} {t_jnp * 1e3:>10.2f} "
+              f"{t_pallas / t_jnp:>6.2f}x {vmem / 1024:>8.1f}kB "
+              f"{mxu_frac:>8.1%} {mxu_fill:>8.1%}")
+    print("\nratio = interpret-Pallas vs XLA-fused-jnp on this host; the "
+          "kernel's TPU viability is judged by the static VMEM/MXU columns "
+          "(tile must fit ~16 MB VMEM; MXU frac/fill should be high).")
+
+
+if __name__ == "__main__":
+    main()

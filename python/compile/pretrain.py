@@ -1,0 +1,107 @@
+"""Build-time pretraining of the simulated base LLMs.
+
+The paper's LPT jobs tune prompts against *pretrained* LLMs (GPT2, Vicuna).
+Our scaled-down stand-ins must therefore also be pretrained, otherwise a
+prompt has nothing to steer. We train each sim variant on the synthetic
+task mixture (tasks.py) with the task *tag* prepended as the prompt, so the
+base model learns "tag prefix => task-specific next-token shift". That is
+exactly the structure prompt tuning later exploits — and what makes ITA
+depend on the initial prompt (paper Fig 2c).
+
+Runs once inside ``make artifacts``; the resulting flat theta is written to
+``artifacts/<variant>/theta.bin`` (little-endian f32) for the Rust runtime.
+Pretraining uses the pure-jnp attention path (same math as the Pallas
+kernel, asserted by tests) because interpret-mode Pallas is needlessly slow
+for a build step that never ships.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .tasks import TaskUniverse
+
+
+def adam_update(params_flat, grad, m, v, step, lr):
+    m = M.ADAM_B1 * m + (1 - M.ADAM_B1) * grad
+    v = M.ADAM_B2 * v + (1 - M.ADAM_B2) * grad * grad
+    mhat = m / (1 - M.ADAM_B1 ** step)
+    vhat = v / (1 - M.ADAM_B2 ** step)
+    return params_flat - lr * mhat / (jnp.sqrt(vhat) + M.ADAM_EPS), m, v
+
+
+def make_step(cfg: M.ModelConfig):
+    """Jitted full-theta Adam step with the tag embedded as the prompt."""
+
+    def step_fn(theta, m, v, step, ptoks, tokens, targets, lr):
+        def loss_of(th):
+            params = M.unflatten(cfg, th)
+            prompt = params["wte"][ptoks]
+            hidden = M.forward_hidden(cfg, params, prompt, tokens,
+                                      use_pallas=False)
+            return M.loss_from_hidden(cfg, params, hidden, targets)
+
+        loss, grad = jax.value_and_grad(loss_of)(theta)
+        theta2, m2, v2 = adam_update(theta, grad, m, v, step, lr)
+        return theta2, m2, v2, loss
+
+    return jax.jit(step_fn)
+
+
+def pretrain(cfg: M.ModelConfig, uni: TaskUniverse, *, steps: int = 900,
+             batch: int = 16, lr: float = 2e-3, seed: int = 7,
+             log_every: int = 150, verbose: bool = True) -> np.ndarray:
+    """Train theta on the tag-conditioned task mixture; returns flat theta."""
+    assert cfg.prompt_len == uni.tag_len and cfg.vocab == uni.vocab
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(M.init_theta(cfg, seed))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    step_fn = make_step(cfg)
+    t0 = time.time()
+    for it in range(1, steps + 1):
+        task = int(rng.integers(0, uni.n_tasks))
+        seqs = uni.sample_sequences(rng, task, batch, cfg.seq + 1)
+        tokens = jnp.asarray(seqs[:, : cfg.seq])
+        targets = jnp.asarray(seqs[:, 1:])
+        ptoks = jnp.asarray(uni.tags[task])
+        theta, m, v, loss = step_fn(theta, m, v, jnp.float32(it),
+                                    ptoks, tokens, targets, jnp.float32(lr))
+        if verbose and (it % log_every == 0 or it == 1):
+            print(f"  [{cfg.name}] pretrain step {it:4d}/{steps} "
+                  f"loss={float(loss):.4f} ({time.time() - t0:.0f}s)")
+    return np.asarray(theta)
+
+
+def tag_gap(cfg: M.ModelConfig, uni: TaskUniverse, theta: np.ndarray,
+            n_tasks: int = 8, batch: int = 16, seed: int = 11) -> float:
+    """Diagnostic: mean(loss with wrong tag) - mean(loss with right tag).
+
+    A healthy pretrained base shows a clearly positive gap — the prompt
+    carries real task information (this is what ITA sensitivity rests on).
+    """
+    rng = np.random.default_rng(seed)
+    theta_j = jnp.asarray(theta)
+
+    @jax.jit
+    def eval_with_tag(ptoks, tokens, targets):
+        params = M.unflatten(cfg, theta_j)
+        prompt = params["wte"][ptoks]
+        hidden = M.forward_hidden(cfg, params, prompt, tokens,
+                                  use_pallas=False)
+        return M.loss_from_hidden(cfg, params, hidden, targets)
+
+    right, wrong = [], []
+    for task in rng.choice(uni.n_tasks, n_tasks, replace=False):
+        seqs = uni.sample_sequences(rng, int(task), batch, cfg.seq + 1)
+        tokens = jnp.asarray(seqs[:, : cfg.seq])
+        targets = jnp.asarray(seqs[:, 1:])
+        other = int((task + uni.n_tasks // 2) % uni.n_tasks)
+        right.append(float(eval_with_tag(jnp.asarray(uni.tags[task]),
+                                         tokens, targets)))
+        wrong.append(float(eval_with_tag(jnp.asarray(uni.tags[other]),
+                                         tokens, targets)))
+    return float(np.mean(wrong) - np.mean(right))

@@ -1,0 +1,108 @@
+"""Synthetic task universe — the stand-in for the paper's 12 NLP datasets.
+
+Each *task* is a first-order Markov language over a shared vocabulary whose
+next-token distribution is shifted by a latent task vector:
+
+    P_tau(next = j | cur = i) = softmax_j( L0[i, j] + ALPHA * tvec[tau, j] )
+
+Task vectors are drawn around a small number of *archetypes* (clusters), so
+tasks within an archetype are similar — this reproduces the prompt-transfer
+and prompt-similarity structure the paper's Prompt Bank exploits (Figs 9/10).
+
+Every task also has a discrete *tag*: a P-token instruction sequence built
+from its archetype's signature with task-specific noise. During pretraining
+the tag is prepended to every sequence, so the base model learns
+"tag prefix => distribution shift". Prompt tuning later recovers that shift
+from a continuous prefix; tags of similar tasks act as good initial prompts.
+
+The universe is serialized to ``artifacts/tasks.bin`` so the Rust layer
+samples from the *same* distributions (format documented in `write_bin`).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x50544E4B  # "PTNK"
+VERSION = 1
+ALPHA = 2.0  # task-shift strength in logits
+
+
+class TaskUniverse:
+    """Shared base language + per-task shift vectors + discrete tags."""
+
+    def __init__(self, seed: int, vocab: int = 256, n_tasks: int = 64,
+                 n_archetypes: int = 12, tag_len: int = 16):
+        rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.vocab = vocab
+        self.n_tasks = n_tasks
+        self.n_archetypes = n_archetypes
+        self.tag_len = tag_len
+        # Shared base bigram logits.
+        self.base_logits = rng.normal(0.0, 1.0, (vocab, vocab)).astype(np.float32)
+        # Archetype centroids and per-task vectors around them.
+        arch = rng.normal(0.0, 1.0, (n_archetypes, vocab))
+        self.arch_id = rng.integers(0, n_archetypes, n_tasks).astype(np.int32)
+        self.tvec = (arch[self.arch_id]
+                     + 0.35 * rng.normal(0.0, 1.0, (n_tasks, vocab))).astype(np.float32)
+        # Tags: archetype signature tokens with 30% task-specific noise.
+        sig = rng.integers(0, vocab, (n_archetypes, tag_len))
+        noise = rng.integers(0, vocab, (n_tasks, tag_len))
+        keep = rng.random((n_tasks, tag_len)) < 0.7
+        self.tags = np.where(keep, sig[self.arch_id], noise).astype(np.int32)
+
+    def next_logits(self, task: int, cur: np.ndarray) -> np.ndarray:
+        """Logits over next token for current tokens `cur` (any shape)."""
+        return self.base_logits[cur] + ALPHA * self.tvec[task]
+
+    def sample_sequences(self, rng: np.random.Generator, task: int,
+                         batch: int, length: int) -> np.ndarray:
+        """Sample [batch, length] Markov sequences for one task."""
+        out = np.empty((batch, length), dtype=np.int32)
+        cur = rng.integers(0, self.vocab, batch)
+        out[:, 0] = cur
+        for t in range(1, length):
+            logits = self.next_logits(task, cur)
+            logits = logits - logits.max(axis=-1, keepdims=True)
+            p = np.exp(logits)
+            p /= p.sum(axis=-1, keepdims=True)
+            # Vectorized categorical draw via inverse-CDF.
+            u = rng.random((batch, 1))
+            cur = (p.cumsum(axis=-1) < u).sum(axis=-1).clip(0, self.vocab - 1)
+            out[:, t] = cur
+        return out
+
+    def write_bin(self, path: str) -> None:
+        """Binary layout (little-endian):
+
+        u32 magic, u32 version, u32 seed, u32 vocab, u32 n_tasks,
+        u32 n_archetypes, u32 tag_len,
+        f32 base_logits[vocab*vocab], f32 tvec[n_tasks*vocab],
+        i32 arch_id[n_tasks], i32 tags[n_tasks*tag_len]
+        """
+        with open(path, "wb") as f:
+            f.write(struct.pack("<7I", MAGIC, VERSION, self.seed, self.vocab,
+                                self.n_tasks, self.n_archetypes, self.tag_len))
+            f.write(self.base_logits.astype("<f4").tobytes())
+            f.write(self.tvec.astype("<f4").tobytes())
+            f.write(self.arch_id.astype("<i4").tobytes())
+            f.write(self.tags.astype("<i4").tobytes())
+
+    @classmethod
+    def read_bin(cls, path: str) -> "TaskUniverse":
+        with open(path, "rb") as f:
+            magic, version, seed, vocab, n_tasks, n_arch, tag_len = struct.unpack(
+                "<7I", f.read(28))
+            assert magic == MAGIC and version == VERSION, "bad tasks.bin header"
+            uni = cls.__new__(cls)
+            uni.seed, uni.vocab, uni.n_tasks = seed, vocab, n_tasks
+            uni.n_archetypes, uni.tag_len = n_arch, tag_len
+            uni.base_logits = np.frombuffer(
+                f.read(4 * vocab * vocab), dtype="<f4").reshape(vocab, vocab).copy()
+            uni.tvec = np.frombuffer(
+                f.read(4 * n_tasks * vocab), dtype="<f4").reshape(n_tasks, vocab).copy()
+            uni.arch_id = np.frombuffer(f.read(4 * n_tasks), dtype="<i4").copy()
+            uni.tags = np.frombuffer(
+                f.read(4 * n_tasks * tag_len), dtype="<i4").reshape(n_tasks, tag_len).copy()
+            return uni

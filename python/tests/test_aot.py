@@ -1,0 +1,93 @@
+"""AOT export path: HLO text emission, manifest consistency, and that every
+export function lowers with the expected signature (smallest variant only —
+the full export is exercised by `make artifacts`)."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import export_fns, to_hlo_text, write_manifest
+from compile.tasks import TaskUniverse
+
+CFG = M.ModelConfig("aot-test", d_model=32, n_layers=1, n_heads=2, vocab=64,
+                    seq=8, prompt_len=16, batch_train=2, batch_eval=3)
+
+
+@pytest.fixture(scope="module")
+def lowered_texts():
+    # monkeypatch-free: export_fns only needs a config
+    out = {}
+    for name, fn, ex_args in export_fns(CFG):
+        out[name] = to_hlo_text(jax.jit(fn).lower(*ex_args))
+    return out
+
+
+class TestHloText:
+    def test_all_five_functions_export(self, lowered_texts):
+        assert set(lowered_texts) == {"embed_prompt", "score", "features",
+                                      "tune_step", "eval_loss", "grad_prompt"}
+
+    def test_text_is_hlo_module(self, lowered_texts):
+        for name, text in lowered_texts.items():
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_tune_step_has_four_outputs(self, lowered_texts):
+        # root tuple of (prompt', m', v', loss)
+        text = lowered_texts["tune_step"]
+        # count top-level entry parameters: theta,prompt,m,v,step,toks,tgts,lr
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count("parameter(")
+        assert n_params == 8, entry[:2000]
+
+    def test_scalar_outputs_are_f32(self, lowered_texts):
+        assert "f32[]" in lowered_texts["score"]
+        assert "f32[]" in lowered_texts["eval_loss"]
+
+    def test_no_64bit_ids_needed(self, lowered_texts):
+        """Text interchange: ids are reassigned by the parser, so the text
+        must not embed serialized proto blobs."""
+        for text in lowered_texts.values():
+            assert "\x00" not in text
+
+
+class TestManifest:
+    def test_manifest_contents(self, tmp_path):
+        uni = TaskUniverse(seed=5, vocab=32, n_tasks=4, n_archetypes=2,
+                           tag_len=4)
+        M.VARIANTS["aot-test"] = CFG  # register temporarily
+        try:
+            write_manifest(str(tmp_path), ["aot-test"], uni, {"aot-test"})
+        finally:
+            del M.VARIANTS["aot-test"]
+        text = (tmp_path / "manifest.txt").read_text()
+        lines = text.strip().split("\n")
+        assert lines[0] == "manifest-version 1"
+        assert any(l.startswith("tasks tasks.bin") for l in lines)
+        model_lines = [l for l in lines if l.startswith("model ")]
+        assert len(model_lines) == 1
+        assert f"n_params={M.n_params(CFG)}" in model_lines[0]
+        seg_lines = [l for l in lines if l.startswith("segment ")]
+        assert len(seg_lines) == len(M.param_spec(CFG))
+        # offsets contiguous and total == n_params
+        offs = [(int(l.split()[3]), int(l.split()[4])) for l in seg_lines]
+        total = 0
+        for off, cnt in offs:
+            assert off == total
+            total += cnt
+        assert total == M.n_params(CFG)
+        art_lines = [l for l in lines if l.startswith("artifact ")]
+        assert len(art_lines) == 6
+        assert any(l.startswith("theta aot-test") for l in lines)
+
+
+def test_theta_bin_roundtrip(tmp_path):
+    theta = M.init_theta(CFG, seed=3)
+    path = str(tmp_path / "theta.bin")
+    theta.astype("<f4").tofile(path)
+    back = np.fromfile(path, dtype="<f4")
+    np.testing.assert_array_equal(theta, back)
+    assert os.path.getsize(path) == 4 * M.n_params(CFG)

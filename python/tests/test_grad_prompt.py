@@ -1,0 +1,89 @@
+"""grad_prompt export: the data-parallel worker unit must be consistent
+with the fused tune_step artifact (gradient + host Adam == fused Adam)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig("gp-test", d_model=32, n_layers=1, n_heads=2, vocab=64,
+                    seq=8, prompt_len=4, batch_train=3, batch_eval=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(M.init_theta(CFG, seed=0))
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch_train, CFG.seq)),
+                       dtype=jnp.int32)
+    tgts = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch_train, CFG.seq)),
+                       dtype=jnp.int32)
+    prompt = jnp.asarray(
+        rng.normal(0, 0.02, (CFG.prompt_len, CFG.d_model)).astype(np.float32))
+    return theta, prompt, toks, tgts
+
+
+def test_grad_matches_jax_grad(setup):
+    theta, prompt, toks, tgts = setup
+    g_export, loss = M.grad_prompt(CFG, theta, prompt, toks, tgts)
+    g_direct = jax.grad(
+        lambda p: M.loss_fn(CFG, theta, p, toks, tgts))(prompt)
+    np.testing.assert_allclose(np.asarray(g_export), np.asarray(g_direct),
+                               atol=1e-6)
+    l_direct = M.loss_fn(CFG, theta, prompt, toks, tgts)
+    assert abs(float(loss) - float(l_direct)) < 1e-6
+
+
+def test_grad_plus_host_adam_equals_tune_step(setup):
+    theta, prompt, toks, tgts = setup
+    m = jnp.zeros_like(prompt)
+    v = jnp.zeros_like(prompt)
+    lr = 0.01
+    # fused path
+    p_fused, m_fused, v_fused, _ = M.tune_step(
+        CFG, theta, prompt, m, v, jnp.float32(1.0), toks, tgts,
+        jnp.float32(lr))
+    # grad_prompt + host-side Adam (the Rust dp path, mirrored here)
+    g, _ = M.grad_prompt(CFG, theta, prompt, toks, tgts)
+    g = np.asarray(g)
+    m2 = (1 - M.ADAM_B1) * g
+    v2 = (1 - M.ADAM_B2) * g * g
+    mhat = m2 / (1 - M.ADAM_B1)
+    vhat = v2 / (1 - M.ADAM_B2)
+    p2 = np.asarray(prompt) - lr * mhat / (np.sqrt(vhat) + M.ADAM_EPS)
+    np.testing.assert_allclose(np.asarray(p_fused), p2, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_fused), m2, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(v_fused), v2, atol=1e-9)
+
+
+def test_gradient_averaging_is_linear(setup):
+    """avg(grad(batch A), grad(batch B)) == grad over both micro-batches
+    (cross-entropy mean is linear in examples of equal batch size)."""
+    theta, prompt, toks, tgts = setup
+    rng = np.random.default_rng(1)
+    toks_b = jnp.asarray(rng.integers(0, CFG.vocab, toks.shape), dtype=jnp.int32)
+    tgts_b = jnp.asarray(rng.integers(0, CFG.vocab, tgts.shape), dtype=jnp.int32)
+    ga, _ = M.grad_prompt(CFG, theta, prompt, toks, tgts)
+    gb, _ = M.grad_prompt(CFG, theta, prompt, toks_b, tgts_b)
+    avg = (np.asarray(ga) + np.asarray(gb)) / 2.0
+    both_toks = jnp.concatenate([toks, toks_b], axis=0)
+    both_tgts = jnp.concatenate([tgts, tgts_b], axis=0)
+    g_both = jax.grad(
+        lambda p: M.loss_fn(CFG, theta, p, both_toks, both_tgts))(prompt)
+    np.testing.assert_allclose(avg, np.asarray(g_both), atol=1e-6)
+
+
+def test_grad_zero_only_if_converged(setup):
+    theta, prompt, toks, tgts = setup
+    g, _ = M.grad_prompt(CFG, theta, prompt, toks, tgts)
+    assert float(jnp.max(jnp.abs(g))) > 1e-8
+
+
+def test_pallas_and_jnp_grads_agree(setup):
+    theta, prompt, toks, tgts = setup
+    gp, lp = M.grad_prompt(CFG, theta, prompt, toks, tgts, use_pallas=True)
+    gj, lj = M.grad_prompt(CFG, theta, prompt, toks, tgts, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gj), atol=2e-5)
+    assert abs(float(lp) - float(lj)) < 1e-5

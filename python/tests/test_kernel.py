@@ -1,0 +1,195 @@
+"""L1 correctness: Pallas prefix-attention vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: the same kernel that
+lowers into every HLO artifact is asserted against ref.py, including a
+hypothesis sweep over shapes/dtypes and gradient checks through the
+custom_vjp.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prefix_attention import prefix_attention
+from compile.kernels.ref import prefix_attention_ref, prefix_mask
+
+ATOL = 2e-5
+
+
+def rand_qkv(rng, b, h, t, dh, dtype=np.float32):
+    return tuple(jnp.asarray(rng.normal(size=(b, h, t, dh)).astype(dtype))
+                 for _ in range(3))
+
+
+class TestForward:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        q, k, v = rand_qkv(rng, 2, 3, 24, 16)
+        out = prefix_attention(q, k, v, 8)
+        ref = prefix_attention_ref(q, k, v, 8)
+        np.testing.assert_allclose(out, ref, atol=ATOL)
+
+    def test_zero_prefix_is_pure_causal(self):
+        rng = np.random.default_rng(1)
+        q, k, v = rand_qkv(rng, 1, 2, 12, 8)
+        out = prefix_attention(q, k, v, 0)
+        ref = prefix_attention_ref(q, k, v, 0)
+        np.testing.assert_allclose(out, ref, atol=ATOL)
+        # position 0 can only see itself => output row 0 == v row 0
+        np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], atol=ATOL)
+
+    def test_full_prefix_is_full_attention(self):
+        rng = np.random.default_rng(2)
+        t = 10
+        q, k, v = rand_qkv(rng, 1, 1, t, 8)
+        out = prefix_attention(q, k, v, t)
+        # every position sees everything: equals softmax without mask
+        s = jnp.einsum("bhtd,bhsd->bhts", q, k) / np.sqrt(8)
+        p = jax.nn.softmax(s, axis=-1)
+        ref = jnp.einsum("bhts,bhsd->bhtd", p, v)
+        np.testing.assert_allclose(out, ref, atol=ATOL)
+
+    def test_prefix_rows_ignore_suffix(self):
+        """Changing suffix K/V must not change prefix-position outputs."""
+        rng = np.random.default_rng(3)
+        p_len, t = 6, 16
+        q, k, v = rand_qkv(rng, 1, 2, t, 8)
+        k2 = k.at[:, :, p_len:, :].set(123.0)
+        v2 = v.at[:, :, p_len:, :].set(-7.0)
+        a = prefix_attention(q, k, v, p_len)[:, :, :p_len, :]
+        # prefix queries DO see causal suffix? No: for i < P, allowed j:
+        # j < P or j <= i — j <= i < P already within prefix, so prefix rows
+        # attend only to the prefix block.
+        b = prefix_attention(q, k2, v2, p_len)[:, :, :p_len, :]
+        np.testing.assert_allclose(a, b, atol=ATOL)
+
+    def test_causality_of_suffix(self):
+        """Future suffix tokens must not leak into earlier suffix outputs."""
+        rng = np.random.default_rng(4)
+        p_len, t = 4, 12
+        q, k, v = rand_qkv(rng, 1, 1, t, 8)
+        pos = 7  # absolute position in [P, T)
+        k2 = k.at[:, :, pos + 1:, :].add(50.0)
+        v2 = v.at[:, :, pos + 1:, :].add(50.0)
+        a = prefix_attention(q, k, v, p_len)[:, :, : pos + 1, :]
+        b = prefix_attention(q, k2, v2, p_len)[:, :, : pos + 1, :]
+        np.testing.assert_allclose(a, b, atol=ATOL)
+
+    def test_rows_are_convex_combinations(self):
+        """Each output row lies in the convex hull of visible v rows."""
+        rng = np.random.default_rng(5)
+        q, k, v = rand_qkv(rng, 1, 1, 10, 4)
+        out = prefix_attention(q, k, v, 3)
+        vmin = np.asarray(v).min()
+        vmax = np.asarray(v).max()
+        assert np.all(np.asarray(out) >= vmin - ATOL)
+        assert np.all(np.asarray(out) <= vmax + ATOL)
+
+    def test_inside_jit(self):
+        rng = np.random.default_rng(6)
+        q, k, v = rand_qkv(rng, 2, 2, 16, 8)
+        f = jax.jit(lambda q, k, v: prefix_attention(q, k, v, 5))
+        np.testing.assert_allclose(f(q, k, v),
+                                   prefix_attention_ref(q, k, v, 5), atol=ATOL)
+
+
+class TestBackward:
+    def test_grads_match_ref(self):
+        rng = np.random.default_rng(10)
+        q, k, v = rand_qkv(rng, 2, 2, 20, 8)
+        co = jnp.asarray(rng.normal(size=(2, 2, 20, 8)).astype(np.float32))
+
+        def f(fn):
+            def g(q, k, v):
+                return jnp.sum(fn(q, k, v, 7) * co)
+            return g
+
+        g1 = jax.grad(f(prefix_attention), argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f(prefix_attention_ref), argnums=(0, 1, 2))(q, k, v)
+        for a, b, nm in zip(g1, g2, "qkv"):
+            np.testing.assert_allclose(a, b, atol=5e-5, err_msg=f"d{nm}")
+
+    def test_grad_wrt_masked_kv_is_zero(self):
+        """dK/dV at positions invisible to every query are zero... the last
+        suffix position is visible to the last query, so instead check that
+        dK at future positions doesn't depend on earlier queries: zero out
+        all queries except position i, then dK[j] == 0 for j > max(i, P-1)."""
+        rng = np.random.default_rng(11)
+        p_len, t, i = 3, 10, 5
+        q, k, v = rand_qkv(rng, 1, 1, t, 4)
+        qm = jnp.zeros_like(q).at[:, :, i, :].set(q[:, :, i, :])
+
+        def g(k):
+            return jnp.sum(prefix_attention(qm, k, v, p_len))
+
+        dk = np.asarray(jax.grad(g)(k))
+        assert np.allclose(dk[:, :, i + 1:, :], 0.0, atol=1e-7)
+
+    def test_value_and_grad_finite(self):
+        rng = np.random.default_rng(12)
+        q, k, v = rand_qkv(rng, 1, 2, 16, 8)
+        val, grad = jax.value_and_grad(
+            lambda q: jnp.sum(prefix_attention(q, k, v, 4) ** 2))(q)
+        assert np.isfinite(float(val))
+        assert np.all(np.isfinite(np.asarray(grad)))
+
+
+class TestMask:
+    @pytest.mark.parametrize("t,p", [(1, 0), (1, 1), (8, 0), (8, 8), (8, 3)])
+    def test_prefix_mask_shape_and_diag(self, t, p):
+        m = prefix_mask(t, p)
+        assert m.shape == (t, t)
+        assert np.all(np.diag(m))  # self-attention always allowed
+
+    def test_mask_counts(self):
+        # row i sees max(P, i+1) positions
+        t, p = 12, 5
+        m = prefix_mask(t, p)
+        for i in range(t):
+            assert m[i].sum() == max(p, i + 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    t=st.integers(2, 24),
+    dh=st.sampled_from([4, 8, 16]),
+    data=st.data(),
+)
+def test_hypothesis_shapes_match_ref(b, h, t, dh, data):
+    """Hypothesis sweep over kernel shapes: pallas == ref everywhere."""
+    p_len = data.draw(st.integers(0, t))
+    seed = data.draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, b, h, t, dh)
+    out = prefix_attention(q, k, v, p_len)
+    ref = prefix_attention_ref(q, k, v, p_len)
+    np.testing.assert_allclose(out, ref, atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(4, 16), p=st.integers(0, 4), seed=st.integers(0, 10 ** 6))
+def test_hypothesis_grads_match_ref(t, p, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, 1, 2, t, 8)
+
+    def make(fn):
+        return lambda q, k, v: jnp.sum(jnp.tanh(fn(q, k, v, p)))
+
+    g1 = jax.grad(make(prefix_attention), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(make(prefix_attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, atol=5e-5)
+
+
+def test_bfloat16_forward_close():
+    """dtype sweep: bf16 kernel tracks the f32 oracle within bf16 tolerance."""
+    rng = np.random.default_rng(13)
+    q, k, v = rand_qkv(rng, 1, 2, 12, 8)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    out = prefix_attention(qb, kb, vb, 4).astype(jnp.float32)
+    ref = prefix_attention_ref(q, k, v, 4)
+    np.testing.assert_allclose(out, ref, atol=0.05, rtol=0.05)

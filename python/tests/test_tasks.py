@@ -1,0 +1,110 @@
+"""Task-universe substrate: distribution shape, clustering structure, and
+the tasks.bin serialization the Rust layer depends on."""
+
+import numpy as np
+import pytest
+
+from compile.tasks import ALPHA, TaskUniverse
+
+
+@pytest.fixture(scope="module")
+def uni():
+    return TaskUniverse(seed=123, vocab=64, n_tasks=16, n_archetypes=4,
+                        tag_len=8)
+
+
+class TestStructure:
+    def test_shapes(self, uni):
+        assert uni.base_logits.shape == (64, 64)
+        assert uni.tvec.shape == (16, 64)
+        assert uni.tags.shape == (16, 8)
+        assert uni.arch_id.shape == (16,)
+
+    def test_archetype_clustering_in_tvec(self, uni):
+        """Same-archetype task vectors are closer than cross-archetype."""
+        same, cross = [], []
+        for i in range(uni.n_tasks):
+            for j in range(i + 1, uni.n_tasks):
+                d = np.linalg.norm(uni.tvec[i] - uni.tvec[j])
+                (same if uni.arch_id[i] == uni.arch_id[j] else cross).append(d)
+        if same and cross:
+            assert np.mean(same) < np.mean(cross)
+
+    def test_tags_share_archetype_signature(self, uni):
+        """Same-archetype tags agree on more positions than cross."""
+        same, cross = [], []
+        for i in range(uni.n_tasks):
+            for j in range(i + 1, uni.n_tasks):
+                agree = (uni.tags[i] == uni.tags[j]).mean()
+                (same if uni.arch_id[i] == uni.arch_id[j] else cross).append(agree)
+        if same and cross:
+            assert np.mean(same) > np.mean(cross)
+
+    def test_next_logits_shift(self, uni):
+        cur = np.array([0, 1, 2])
+        lg = uni.next_logits(3, cur)
+        expect = uni.base_logits[cur] + ALPHA * uni.tvec[3]
+        np.testing.assert_allclose(lg, expect)
+
+
+class TestSampling:
+    def test_sample_shape_and_range(self, uni):
+        rng = np.random.default_rng(0)
+        seqs = uni.sample_sequences(rng, 0, batch=5, length=20)
+        assert seqs.shape == (5, 20)
+        assert seqs.min() >= 0 and seqs.max() < uni.vocab
+        assert seqs.dtype == np.int32
+
+    def test_sampling_follows_task_shift(self, uni):
+        """Tokens favoured by tvec occur more often under that task."""
+        rng = np.random.default_rng(1)
+        task = 2
+        seqs = uni.sample_sequences(rng, task, batch=64, length=50)
+        counts = np.bincount(seqs[:, 1:].ravel(), minlength=uni.vocab)
+        top = np.argsort(uni.tvec[task])[-8:]
+        bot = np.argsort(uni.tvec[task])[:8]
+        assert counts[top].sum() > counts[bot].sum()
+
+    def test_different_tasks_different_marginals(self, uni):
+        rng = np.random.default_rng(2)
+        a = uni.sample_sequences(rng, 0, 64, 40)
+        b = uni.sample_sequences(rng, 8, 64, 40)
+        ca = np.bincount(a.ravel(), minlength=uni.vocab) / a.size
+        cb = np.bincount(b.ravel(), minlength=uni.vocab) / b.size
+        assert np.abs(ca - cb).sum() > 0.1  # L1 distance between marginals
+
+
+class TestSerialization:
+    def test_roundtrip(self, uni, tmp_path):
+        path = str(tmp_path / "tasks.bin")
+        uni.write_bin(path)
+        back = TaskUniverse.read_bin(path)
+        assert back.vocab == uni.vocab
+        assert back.n_tasks == uni.n_tasks
+        assert back.n_archetypes == uni.n_archetypes
+        assert back.tag_len == uni.tag_len
+        np.testing.assert_array_equal(back.base_logits, uni.base_logits)
+        np.testing.assert_array_equal(back.tvec, uni.tvec)
+        np.testing.assert_array_equal(back.arch_id, uni.arch_id)
+        np.testing.assert_array_equal(back.tags, uni.tags)
+
+    def test_file_size_exact(self, uni, tmp_path):
+        path = str(tmp_path / "tasks.bin")
+        uni.write_bin(path)
+        import os
+        v, t, p = uni.vocab, uni.n_tasks, uni.tag_len
+        expect = 28 + 4 * (v * v + t * v + t + t * p)
+        assert os.path.getsize(path) == expect
+
+    def test_bad_magic_rejected(self, tmp_path):
+        path = str(tmp_path / "bad.bin")
+        with open(path, "wb") as f:
+            f.write(b"\x00" * 28)
+        with pytest.raises(AssertionError):
+            TaskUniverse.read_bin(path)
+
+    def test_determinism_by_seed(self):
+        a = TaskUniverse(seed=9, vocab=32, n_tasks=4, n_archetypes=2, tag_len=4)
+        b = TaskUniverse(seed=9, vocab=32, n_tasks=4, n_archetypes=2, tag_len=4)
+        np.testing.assert_array_equal(a.tvec, b.tvec)
+        np.testing.assert_array_equal(a.tags, b.tags)

@@ -1,0 +1,81 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every bench is a `harness = false` binary (criterion is unavailable in
+//! this offline environment) that prints the rows/series of one paper
+//! table or figure. `cargo bench` runs them all; EXPERIMENTS.md records
+//! paper-vs-measured.
+
+#![allow(dead_code)]
+
+use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
+use prompttuner::cluster::{Policy, SimConfig, SimResult, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::workload::{JobSpec, PerfModel};
+
+pub const SYSTEMS: [&str; 3] = ["prompttuner", "infless", "elasticflow"];
+
+pub fn make_policy(system: &str, gpus: usize, seed: u64) -> Box<dyn Policy> {
+    match system {
+        "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        })),
+        "infless" => Box::new(Infless::new(InflessConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        })),
+        "elasticflow" => Box::new(ElasticFlow::new(ElasticFlowConfig {
+            cluster_size: gpus,
+            seed,
+            ..Default::default()
+        })),
+        other => panic!("unknown system {other}"),
+    }
+}
+
+pub fn gen_trace(load: Load, slo: f64, seed: u64) -> Vec<JobSpec> {
+    let perf = PerfModel::default();
+    let mut gen = TraceGenerator::new(
+        TraceConfig { seed, slo_emergence: slo, ..Default::default() },
+        perf,
+    );
+    gen.generate_main(load)
+}
+
+pub fn run_sim(system: &str, jobs: Vec<JobSpec>, gpus: usize, seed: u64) -> SimResult {
+    let sim = Simulator::new(
+        SimConfig { max_gpus: gpus, ..Default::default() },
+        PerfModel::default(),
+    );
+    let mut policy = make_policy(system, gpus, seed);
+    sim.run(policy.as_mut(), jobs)
+}
+
+/// Average violation/cost over seeds (the paper runs one trace; we
+/// average a few seeds for stable series).
+pub fn avg_runs(system: &str, load: Load, slo: f64, gpus: usize,
+                seeds: &[u64]) -> (f64, f64) {
+    let mut viol = 0.0;
+    let mut cost = 0.0;
+    for &s in seeds {
+        let r = run_sim(system, gen_trace(load, slo, s), gpus, s);
+        viol += r.violation_rate();
+        cost += r.cost_usd;
+    }
+    (100.0 * viol / seeds.len() as f64, cost / seeds.len() as f64)
+}
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

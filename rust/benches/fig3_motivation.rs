@@ -1,0 +1,70 @@
+//! Fig 3 — inefficiencies of existing DL systems on LPT workloads:
+//! (a) ElasticFlow cluster utilization over time (paper: ~56 % average),
+//! (b) CDF of the waiting-delay fraction caused by instance
+//!     initialization in INFless (paper: avg 11 %, up to 50 %),
+//! (c) SLO violation vs maximum GPU count for both baselines
+//!     (paper: up to 70 %).
+//!
+//! Uses the first-20-minutes Vicuna-7B slice of the trace, as §3 does.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::util::stats::{cdf_points, mean};
+use prompttuner::workload::{Llm, PerfModel};
+
+/// §3 workload: only the V7B share of the medium trace.
+fn v7b_trace(seed: u64, slo: f64) -> Vec<prompttuner::workload::JobSpec> {
+    let perf = PerfModel::default();
+    let mut gen = TraceGenerator::new(
+        TraceConfig { seed, slo_emergence: slo, ..Default::default() },
+        perf,
+    );
+    let mut jobs = gen.generate_for(Llm::V7B, 65);
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i;
+    }
+    jobs
+}
+
+fn main() {
+    banner("Fig 3a — ElasticFlow cluster utilization over time (32 GPUs)");
+    let res = run_sim("elasticflow", gen_trace(Load::Medium, 1.0, 42), 32, 42);
+    let utils: Vec<f64> = res.util_timeline.iter().map(|(_, u)| *u).collect();
+    println!("{:<10} {:>12}", "minute", "utilization");
+    for chunk in res.util_timeline.chunks(6) {
+        let t = chunk[0].0 / 60.0;
+        let u = mean(&chunk.iter().map(|(_, u)| *u).collect::<Vec<_>>());
+        println!("{:<10.1} {:>11.1}%", t, u * 100.0);
+    }
+    println!("average utilization: {:.1}% (paper: ~56%)",
+             mean(&utils) * 100.0);
+
+    banner("Fig 3b — INFless: init-wait fraction of end-to-end latency (CDF)");
+    let res = run_sim("infless", v7b_trace(42, 1.0), 32, 42);
+    let fracs: Vec<f64> = res
+        .job_latencies
+        .iter()
+        .filter(|(lat, ..)| *lat > 0.0 && lat.is_finite())
+        .map(|(lat, _, init, _)| init / lat)
+        .collect();
+    println!("{:<14} {:>8}", "init fraction", "CDF");
+    for (x, q) in cdf_points(&fracs, 10) {
+        println!("{:<14.3} {:>8.2}", x, q);
+    }
+    println!("mean init fraction: {:.1}% (paper: ~11%), max: {:.1}% (paper: ~50%)",
+             mean(&fracs) * 100.0,
+             fracs.iter().cloned().fold(0.0f64, f64::max) * 100.0);
+
+    banner("Fig 3c — SLO violation (%) vs maximum GPUs (S = 0.5, V7B slice)");
+    println!("{:<10} {:>12} {:>14}", "max GPUs", "INFless", "ElasticFlow");
+    for gpus in [8usize, 16, 24, 32] {
+        let iv = run_sim("infless", v7b_trace(42, 0.5), gpus, 42).violation_rate();
+        let ev = run_sim("elasticflow", v7b_trace(42, 0.5), gpus, 42).violation_rate();
+        println!("{:<10} {:>11.1}% {:>13.1}%", gpus, iv * 100.0, ev * 100.0);
+    }
+    println!("(paper: violations reach ~70% at constrained GPU counts)");
+}

@@ -1,0 +1,89 @@
+//! Fig 8 — feature evaluations:
+//! (a, b) impact of prompt reusing (P.R.) and runtime reusing (R.R.) on
+//!        SLO violation and cost across SLO levels (paper: P.R. cuts
+//!        violations 13–23 % and cost 30–40 %);
+//! (c)    cold-allocator window-size sweep (paper: 60 s is the sweet spot);
+//! (d)    Prompt-Bank size sweep (paper: below ~2000 candidates both
+//!        violations and cost rise).
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use prompttuner::cluster::{SimConfig, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::promptbank::BankModel;
+use prompttuner::trace::Load;
+use prompttuner::workload::PerfModel;
+
+fn run_cfg(cfg: PromptTunerConfig, slo: f64, seeds: &[u64]) -> (f64, f64) {
+    let mut viol = 0.0;
+    let mut cost = 0.0;
+    for &s in seeds {
+        let jobs = gen_trace(Load::Medium, slo, s);
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut p = PromptTuner::new(PromptTunerConfig { seed: s, ..cfg.clone() });
+        let r = sim.run(&mut p, jobs);
+        viol += r.violation_rate();
+        cost += r.cost_usd;
+    }
+    (100.0 * viol / seeds.len() as f64, cost / seeds.len() as f64)
+}
+
+fn main() {
+    let seeds = [42u64, 43, 44];
+
+    banner("Fig 8a/8b — prompt reusing (P.R.) & runtime reusing (R.R.) ablation");
+    println!("{:<22} {:>10} {:>10} {:>10}  |  {:>9} {:>9} {:>9}",
+             "config", "S=0.5", "S=1.0", "S=1.5", "S=0.5$", "S=1.0$", "S=1.5$");
+    let configs: [(&str, PromptTunerConfig); 4] = [
+        ("full (P.R.+R.R.)", PromptTunerConfig::default()),
+        ("w/o P.R.", PromptTunerConfig { use_bank: false, ..Default::default() }),
+        ("w/o R.R.", PromptTunerConfig { use_warm_pools: false, ..Default::default() }),
+        ("w/o both", PromptTunerConfig {
+            use_bank: false,
+            use_warm_pools: false,
+            ..Default::default()
+        }),
+    ];
+    for (label, cfg) in configs {
+        let mut viols = vec![];
+        let mut costs = vec![];
+        for slo in [0.5, 1.0, 1.5] {
+            let (v, c) = run_cfg(cfg.clone(), slo, &seeds);
+            viols.push(v);
+            costs.push(c);
+        }
+        println!("{:<22} {:>9.1}% {:>9.1}% {:>9.1}%  |  {:>8.2} {:>8.2} {:>8.2}",
+                 label, viols[0], viols[1], viols[2],
+                 costs[0], costs[1], costs[2]);
+    }
+
+    banner("Fig 8c — warm-pool idle-window size sweep (S = 1.0, medium)");
+    println!("{:<12} {:>14} {:>10}", "window (s)", "violation", "cost");
+    for window in [15.0f64, 30.0, 60.0, 120.0, 300.0] {
+        let (v, c) = run_cfg(
+            PromptTunerConfig { window_s: window, ..Default::default() },
+            1.0,
+            &seeds,
+        );
+        println!("{:<12} {:>13.1}% {:>9.2}$", window, v, c);
+    }
+    println!("(paper: 60 s balances violation against cost)");
+
+    banner("Fig 8d — Prompt Bank size sweep (S = 1.0, medium)");
+    println!("{:<12} {:>14} {:>10}", "bank size", "violation", "cost");
+    for size in [500usize, 1000, 2000, 3000] {
+        let bank = BankModel { bank_size: size, ..Default::default() };
+        let (v, c) = run_cfg(
+            PromptTunerConfig { bank, ..Default::default() },
+            1.0,
+            &seeds,
+        );
+        println!("{:<12} {:>13.1}% {:>9.2}$", size, v, c);
+    }
+    println!("(paper: shrinking below ~2000 raises both metrics)");
+}

@@ -1,0 +1,134 @@
+//! Fig 9 — quality of the score metric (Eqn. 1), on the real runtime:
+//! (a) relative ITA of the *score candidate* vs the *ideal candidate*
+//!     (paper: most score candidates reach ≥ 90 % of ideal performance),
+//! (b) relative ITA speedup of the score candidate over the *induction
+//!     candidate* (paper: ≥1.81× / 1.38× / 1.28× for GPT2-B/L/V7B, with
+//!     the weakest base model benefiting most).
+//!
+//! Ideal: shortlist the best few candidates by score, tune each, keep the
+//! best ITA (the paper's computationally-infeasible oracle, shrunk).
+//! Induction: the LLM writing its own prompt — simulated as a capability-
+//! dependent pick (see DESIGN.md §Substitutions).
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use prompttuner::promptbank::{PromptCandidate, TwoLayerBank};
+use prompttuner::runtime::{ModelRuntime, RuntimeScorer};
+use prompttuner::tuning::{TaskUniverse, Trainer, TrainerConfig};
+use prompttuner::util::manifest::Manifest;
+use prompttuner::util::rng::Rng;
+use prompttuner::util::stats::{mean, median};
+
+fn build_bank(rt: &ModelRuntime, uni: &TaskUniverse, size: usize,
+              rng: &mut Rng) -> TwoLayerBank {
+    let mut cands = vec![];
+    for i in 0..size {
+        let t = i % uni.n_tasks;
+        let tokens = if i < uni.n_tasks {
+            uni.tag(t).to_vec()
+        } else {
+            uni.noisy_tag(rng, t, 0.3)
+        };
+        let feature = rt.features(&tokens).unwrap();
+        cands.push(PromptCandidate { tokens, feature, source_task: Some(t) });
+    }
+    TwoLayerBank::build(cands, 12, 3000, rng).unwrap()
+}
+
+/// Induction baseline: the base model generating its own initial prompt.
+/// Simulated capability-dependent: with probability = capability the pick
+/// lands in the right archetype (a noisy same-archetype tag), otherwise
+/// it is an unrelated noisy tag. Capabilities follow the model ladder.
+fn induction_pick(uni: &TaskUniverse, task: usize, capability: f64,
+                  rng: &mut Rng) -> Vec<i32> {
+    if rng.f64() < capability {
+        let arch = uni.arch_id[task];
+        let same: Vec<usize> = (0..uni.n_tasks)
+            .filter(|&t| uni.arch_id[t] == arch)
+            .collect();
+        let pick = same[rng.below(same.len())];
+        uni.noisy_tag(rng, pick, 0.35)
+    } else {
+        let t = rng.below(uni.n_tasks);
+        uni.noisy_tag(rng, t, 0.5)
+    }
+}
+
+fn main() {
+    if !have_artifacts() {
+        println!("skipped: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let uni = TaskUniverse::load(manifest.tasks_path_abs()).unwrap();
+    let variants: [(&str, f64); 3] = [
+        ("sim-gpt2b", 0.30),
+        ("sim-gpt2l", 0.45),
+        ("sim-v7b", 0.62),
+    ];
+    banner("Fig 9 — score vs ideal vs induction (relative ITA, real runtime)");
+    let n_tasks = 6usize;
+    for (variant, capability) in variants {
+        let rt = ModelRuntime::load(&manifest, variant).unwrap();
+        let mut rng = Rng::new(3);
+        let bank = build_bank(&rt, &uni, 160, &mut rng);
+        let trainer = Trainer::new(
+            &rt,
+            &uni,
+            TrainerConfig { lr: 0.05, max_iters: 220, eval_every: 1, seed: 4 },
+        );
+        let mut rel_ideal = vec![];
+        let mut speedup_induction = vec![];
+        for task in (0..uni.n_tasks).step_by(uni.n_tasks / n_tasks) {
+            let target = trainer
+                .reference_target(task, uni.tag(task), 80, 0.05)
+                .unwrap();
+            let (etoks, etgts) = trainer.eval_batch(task);
+            // --- score candidate: two-layer lookup ---
+            let mut scorer = RuntimeScorer::new(&rt, etoks.clone(), etgts.clone());
+            let pick = bank.lookup(&mut scorer);
+            let ita_of = |tokens: &[i32]| -> f64 {
+                let out = trainer.tune(task, tokens, target).unwrap();
+                if out.reached_target { out.iters.max(1) as f64 } else { 220.0 }
+            };
+            let score_ita = ita_of(&bank.candidate(pick.best).tokens.clone());
+            // --- ideal candidate: tune the top-3 by score, keep the best --
+            let mut brute = RuntimeScorer::new(&rt, etoks, etgts);
+            let mut scored: Vec<(f32, usize)> = (0..bank.len())
+                .map(|i| {
+                    use prompttuner::promptbank::Scorer;
+                    (brute.score(&bank.candidate(i).tokens), i)
+                })
+                .collect();
+            scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let ideal_ita = scored
+                .iter()
+                .take(4)
+                .map(|&(_, i)| ita_of(&bank.candidate(i).tokens.clone()))
+                .fold(f64::MAX, f64::min);
+            // --- induction candidate ---
+            let ind = induction_pick(&uni, task, capability, &mut rng);
+            let ind_ita = ita_of(&ind);
+            rel_ideal.push(ideal_ita / score_ita);
+            speedup_induction.push(ind_ita / score_ita);
+        }
+        println!(
+            "{variant:<10} rel. ITA vs ideal: median {:.2} mean {:.2} \
+             (paper: >=0.9 for most)   |   speedup vs induction: median \
+             {:.2}x mean {:.2}x",
+            median(&rel_ideal),
+            mean(&rel_ideal),
+            median(&speedup_induction),
+            mean(&speedup_induction)
+        );
+        print!("           per-task speedup vs induction:");
+        for s in &speedup_induction {
+            print!(" {s:.2}x");
+        }
+        println!();
+    }
+    println!("(paper Fig 9b: GPT2-B benefits most — its own generated \
+              prompts are weakest)");
+}

@@ -1,0 +1,139 @@
+//! §Perf — wall-clock performance of the L3 hot paths (the paper's §6.2
+//! reports 13/67 ms avg/max scheduling overhead; ours must be far below
+//! since the simulator executes thousands of rounds):
+//! * one Algorithm-1 + Algorithm-2 scheduling round at 96 GPUs with large
+//!   pending queues,
+//! * K-medoid bank construction and two-layer lookup data-path costs,
+//! * PJRT runtime micro-benchmarks (tune_step / score / features) when
+//!   artifacts are available.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::cluster::{SimConfig, Simulator};
+use prompttuner::coordinator::{allocate_from_cold_pool, allocate_from_warm_pool};
+use prompttuner::promptbank::{PromptCandidate, TwoLayerBank};
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::util::rng::Rng;
+use prompttuner::workload::PerfModel;
+
+fn main() {
+    banner("scheduling-round cost (pure algorithm, 1000-job queue)");
+    // synthetic worst-ish case: 1000 pending jobs, 96 free GPUs
+    let n = 1000usize;
+    let mut rng = Rng::new(1);
+    let work: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 400.0)).collect();
+    let slo: Vec<f64> = (0..n).map(|_| rng.range_f64(10.0, 400.0)).collect();
+    let mut pending: Vec<usize> = (0..n).collect();
+    pending.sort_by(|&a, &b| slo[a].partial_cmp(&slo[b]).unwrap());
+    let iters = 200;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let w = &work;
+        let s = &slo;
+        let (grants, _) = allocate_from_warm_pool(
+            &pending, 96, 1, 8, |j| s[j], |j, g| w[j] / g as f64);
+        std::hint::black_box(grants);
+    }
+    println!("Algorithm 1 (warm), 1000 jobs: {:.3} ms/round",
+             t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let w = &work;
+        let s = &slo;
+        let mut e_l: Vec<f64> = (0..96).map(|i| i as f64).collect();
+        let exec = |j: usize, g: usize| w[j] / g as f64;
+        let plans = allocate_from_cold_pool(
+            &pending, 96, 1, 8, 0.0, |j| s[j], &exec, 30.0, &mut e_l, true);
+        std::hint::black_box(plans);
+    }
+    println!("Algorithm 2 (cold + DelaySchedulable), 1000 jobs: {:.3} ms/round",
+             t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+
+    banner("end-to-end simulated 96-GPU run: measured per-tick overhead");
+    let perf = PerfModel::default();
+    for system in SYSTEMS {
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 11, ..Default::default() },
+            perf.clone(),
+        );
+        let jobs = gen.generate_scaled(Load::Medium, 3.0);
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 96, ..Default::default() },
+            perf.clone(),
+        );
+        let mut p = make_policy(system, 96, 11);
+        let wall = Instant::now();
+        let r = sim.run(p.as_mut(), jobs);
+        println!(
+            "{:<14} tick avg/max {:.3}/{:.2} ms (paper: 13/67 ms)  \
+             [{} jobs simulated in {:.2}s wall]",
+            system, r.sched_overhead_ms_mean, r.sched_overhead_ms_max,
+            r.n_jobs, wall.elapsed().as_secs_f64()
+        );
+    }
+
+    banner("Prompt Bank data-path (synthetic features, C = 3000, K = 50)");
+    let mut rng = Rng::new(2);
+    let cands: Vec<PromptCandidate> = (0..3000)
+        .map(|i| {
+            let c = i % 12;
+            PromptCandidate {
+                tokens: vec![i as i32; 16],
+                feature: (0..64)
+                    .map(|j| ((c * 97 + j) % 13) as f32 + 0.1 * rng.normal() as f32)
+                    .collect(),
+                source_task: Some(c),
+            }
+        })
+        .collect();
+    let t0 = Instant::now();
+    let bank = TwoLayerBank::build(cands, 50, 3000, &mut rng).unwrap();
+    println!("K-medoid construction (C=3000, K=50): {:.2} s (paper: ~5 min \
+              offline incl. feature extraction)", t0.elapsed().as_secs_f64());
+    let t0 = Instant::now();
+    let reps = 100;
+    for i in 0..reps {
+        let mut scorer = |t: &[i32]| (t[0] as f32 * 31.0 + i as f32) % 7.0;
+        std::hint::black_box(bank.lookup(&mut scorer));
+    }
+    println!("two-layer lookup data path (excl. score evals): {:.3} ms",
+             t0.elapsed().as_secs_f64() * 1e3 / reps as f64);
+
+    if have_artifacts() {
+        banner("PJRT runtime micro-benchmarks (sim-gpt2b)");
+        use prompttuner::runtime::{ModelRuntime, TuneState};
+        use prompttuner::tuning::TaskUniverse;
+        use prompttuner::util::manifest::Manifest;
+        let manifest = Manifest::load(artifacts_dir()).unwrap();
+        let uni = TaskUniverse::load(manifest.tasks_path_abs()).unwrap();
+        let t0 = Instant::now();
+        let rt = ModelRuntime::load(&manifest, "sim-gpt2b").unwrap();
+        println!("model load (cold start): {:.2} s", t0.elapsed().as_secs_f64());
+        let mut r = Rng::new(3);
+        let (toks, tgts) = uni.sample_batch(&mut r, 0, rt.info.batch_train, rt.info.seq);
+        let (etoks, etgts) = uni.sample_batch(&mut r, 0, rt.info.batch_eval, rt.info.seq);
+        let mut st = TuneState::new(rt.embed_prompt(uni.tag(0)).unwrap());
+        rt.tune_step(&mut st, &toks, &tgts, 0.05).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..50 {
+            rt.tune_step(&mut st, &toks, &tgts, 0.05).unwrap();
+        }
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3 / 50.0;
+        let tok_s = (rt.info.batch_train * rt.info.seq) as f64 / (step_ms / 1e3);
+        println!("tune_step: {:.2} ms ({:.0} tokens/s)", step_ms, tok_s);
+        let t0 = Instant::now();
+        for _ in 0..50 {
+            rt.score(uni.tag(0), &etoks, &etgts).unwrap();
+        }
+        println!("score (Eqn.1): {:.2} ms", t0.elapsed().as_secs_f64() * 1e3 / 50.0);
+        let t0 = Instant::now();
+        for _ in 0..50 {
+            rt.features(uni.tag(0)).unwrap();
+        }
+        println!("features: {:.2} ms", t0.elapsed().as_secs_f64() * 1e3 / 50.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Baseline cluster-management systems the paper compares against (§3, §6):
+//!
+//! * [`infless`] — an INFless-like SLO-aware serverless *inference* system:
+//!   per-model instance autoscaling with keep-alive, one GPU per instance,
+//!   extended (as in the paper, §5.1) with Memcached-style synchronous
+//!   multi-instance execution. Its weakness: per-instance initialization is
+//!   independent, so a multi-GPU job waits for its slowest instance
+//!   (Fig 3b) and there is no globally optimal schedule.
+//! * [`elasticflow`] — an ElasticFlow-like SLO-aware elastic *training*
+//!   system: a statically provisioned fixed-size cluster (billed 24/7,
+//!   Fig 3a: ~56 % utilization), deadline-driven elastic allocation, and no
+//!   runtime reuse — every (re)allocation pays the full cold start.
+//!
+//! For fairness the paper grafts the Prompt Bank onto both baselines; the
+//! shared [`BankRouter`] reproduces that.
+
+pub mod elasticflow;
+pub mod infless;
+
+pub use elasticflow::{ElasticFlow, ElasticFlowConfig};
+pub use infless::{Infless, InflessConfig};
+
+use crate::promptbank::BankModel;
+use crate::util::rng::Rng;
+use crate::workload::JobSpec;
+
+/// Prompt-Bank routing shared by the baselines (the paper reinforces both
+/// baselines with the bank; they inherit the same 20 % latency budget).
+#[derive(Clone, Debug)]
+pub struct BankRouter {
+    pub enabled: bool,
+    pub budget_frac: f64,
+    pub model: BankModel,
+    pub est_quality: f64,
+}
+
+impl Default for BankRouter {
+    fn default() -> Self {
+        BankRouter {
+            enabled: true,
+            budget_frac: 0.2,
+            model: BankModel::default(),
+            est_quality: 0.85,
+        }
+    }
+}
+
+impl BankRouter {
+    /// Decide at arrival: (use_bank, bank_latency).
+    pub fn route(&self, spec: &JobSpec) -> (bool, f64) {
+        if !self.enabled {
+            return (false, 0.0);
+        }
+        let lat = self.model.lookup_latency(spec.llm);
+        if lat <= self.budget_frac * spec.slo_s {
+            (true, lat)
+        } else {
+            (false, 0.0)
+        }
+    }
+
+    /// Realize quality at launch.
+    pub fn realize(&self, spec: &JobSpec, use_bank: bool, rng: &mut Rng) -> f64 {
+        if use_bank {
+            self.model.draw_quality(rng).max(spec.user_prompt_quality)
+        } else {
+            spec.user_prompt_quality
+        }
+    }
+
+    /// Quality to assume in completion-time predictions.
+    pub fn estimate(&self, spec: &JobSpec, use_bank: bool) -> f64 {
+        if use_bank {
+            spec.user_prompt_quality.max(self.est_quality)
+        } else {
+            spec.user_prompt_quality
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Llm;
+
+    fn spec(slo: f64) -> JobSpec {
+        JobSpec {
+            id: 0,
+            llm: Llm::Gpt2B,
+            task_id: 0,
+            submit_s: 0.0,
+            duration_s: 10.0,
+            traced_gpus: 1,
+            base_iters: 10.0,
+            user_prompt_quality: 0.5,
+            slo_s: slo,
+        }
+    }
+
+    #[test]
+    fn router_respects_budget() {
+        let r = BankRouter::default();
+        // gpt2-base lookup ≈ 5.3 s; budget 20 % => SLO must be ≥ ~26.4 s
+        let (use_short, _) = r.route(&spec(10.0));
+        assert!(!use_short);
+        let (use_long, lat) = r.route(&spec(120.0));
+        assert!(use_long);
+        assert!(lat > 1.0);
+    }
+
+    #[test]
+    fn disabled_router_never_uses_bank() {
+        let r = BankRouter { enabled: false, ..Default::default() };
+        assert_eq!(r.route(&spec(1e9)), (false, 0.0));
+    }
+
+    #[test]
+    fn realize_respects_user_floor() {
+        let r = BankRouter::default();
+        let mut rng = Rng::new(1);
+        let mut s = spec(100.0);
+        s.user_prompt_quality = 0.97;
+        for _ in 0..100 {
+            assert!(r.realize(&s, true, &mut rng) >= 0.97);
+        }
+        assert_eq!(r.realize(&s, false, &mut rng), 0.97);
+    }
+
+    #[test]
+    fn estimate_is_conservative() {
+        let r = BankRouter::default();
+        let s = spec(100.0);
+        assert_eq!(r.estimate(&s, true), 0.85);
+        assert_eq!(r.estimate(&s, false), 0.5);
+    }
+}

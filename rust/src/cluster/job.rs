@@ -1,0 +1,168 @@
+//! Per-job simulation state: lifecycle, progress accounting, and the
+//! latency components the paper's figures break down (queueing, Prompt
+//! Bank, initialization, execution).
+
+use crate::workload::JobSpec;
+
+/// Lifecycle of a simulated LPT job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobStatus {
+    /// Submitted, not yet allocated GPUs.
+    Pending,
+    /// GPUs held, paying allocation/initialization overhead (no progress).
+    Initializing,
+    /// Iterating.
+    Running,
+    /// Finished (reached its termination condition).
+    Done,
+}
+
+/// Simulation state of one job.
+#[derive(Clone, Debug)]
+pub struct JobState {
+    pub spec: JobSpec,
+    pub status: JobStatus,
+    /// Initial-prompt quality actually used (bank may improve the user's).
+    pub quality: f64,
+    /// Iterations still to run (set at launch from quality).
+    pub iters_remaining: f64,
+    /// Current GPU allocation (0 while pending).
+    pub gpus: usize,
+    /// Time initialization finishes and progress starts.
+    pub init_until: f64,
+    /// Last time `iters_remaining` was brought up to date.
+    pub last_progress_t: f64,
+    /// Completion-event generation (stale events are ignored).
+    pub gen: u64,
+    /// Time the job started holding GPUs (for breakdown metrics).
+    pub launched_at: f64,
+    /// Completion timestamp (valid when status == Done).
+    pub completed_at: f64,
+    /// Seconds spent on Prompt Bank lookup (part of the latency budget).
+    pub bank_latency: f64,
+    /// Seconds of initialization the job paid (Fig 3b numerator).
+    pub init_wait: f64,
+    /// GPU-seconds consumed by this job (including initialization hold).
+    pub gpu_seconds: f64,
+}
+
+impl JobState {
+    pub fn new(spec: JobSpec) -> Self {
+        let quality = spec.user_prompt_quality;
+        JobState {
+            spec,
+            status: JobStatus::Pending,
+            quality,
+            iters_remaining: 0.0,
+            gpus: 0,
+            init_until: 0.0,
+            last_progress_t: 0.0,
+            gen: 0,
+            launched_at: 0.0,
+            completed_at: f64::INFINITY,
+            bank_latency: 0.0,
+            init_wait: 0.0,
+            gpu_seconds: 0.0,
+        }
+    }
+
+    /// Whether the job met its SLO (only meaningful once Done; an
+    /// unfinished job at experiment end counts as a violation).
+    pub fn met_slo(&self) -> bool {
+        self.status == JobStatus::Done && self.completed_at <= self.spec.deadline()
+    }
+
+    /// End-to-end latency (submission to completion).
+    pub fn latency(&self) -> f64 {
+        self.completed_at - self.spec.submit_s
+    }
+
+    /// Bring `iters_remaining` up to date at time `now` (while Running).
+    pub fn advance_progress(&mut self, now: f64, iter_time: f64) {
+        if self.status == JobStatus::Running && now > self.last_progress_t {
+            let done = (now - self.last_progress_t) / iter_time;
+            self.iters_remaining = (self.iters_remaining - done).max(0.0);
+            self.last_progress_t = now;
+        } else if self.status == JobStatus::Initializing && now >= self.init_until {
+            self.status = JobStatus::Running;
+            self.last_progress_t = self.init_until;
+            if now > self.init_until {
+                self.advance_progress(now, iter_time);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Llm;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            id: 0,
+            llm: Llm::Gpt2B,
+            task_id: 0,
+            submit_s: 0.0,
+            duration_s: 10.0,
+            traced_gpus: 1,
+            base_iters: 100.0,
+            user_prompt_quality: 0.5,
+            slo_s: 30.0,
+        }
+    }
+
+    #[test]
+    fn new_job_is_pending_with_user_quality() {
+        let j = JobState::new(spec());
+        assert_eq!(j.status, JobStatus::Pending);
+        assert_eq!(j.quality, 0.5);
+        assert!(!j.met_slo());
+    }
+
+    #[test]
+    fn progress_advances_only_while_running() {
+        let mut j = JobState::new(spec());
+        j.status = JobStatus::Running;
+        j.iters_remaining = 10.0;
+        j.last_progress_t = 0.0;
+        j.advance_progress(5.0, 1.0);
+        assert!((j.iters_remaining - 5.0).abs() < 1e-9);
+        j.advance_progress(20.0, 1.0);
+        assert_eq!(j.iters_remaining, 0.0); // clamped at zero
+    }
+
+    #[test]
+    fn init_transitions_to_running_and_progresses() {
+        let mut j = JobState::new(spec());
+        j.status = JobStatus::Initializing;
+        j.init_until = 4.0;
+        j.iters_remaining = 10.0;
+        j.advance_progress(6.0, 1.0);
+        assert_eq!(j.status, JobStatus::Running);
+        assert!((j.iters_remaining - 8.0).abs() < 1e-9);
+        assert_eq!(j.last_progress_t, 6.0);
+    }
+
+    #[test]
+    fn init_not_elapsed_means_no_progress() {
+        let mut j = JobState::new(spec());
+        j.status = JobStatus::Initializing;
+        j.init_until = 4.0;
+        j.iters_remaining = 10.0;
+        j.advance_progress(2.0, 1.0);
+        assert_eq!(j.status, JobStatus::Initializing);
+        assert_eq!(j.iters_remaining, 10.0);
+    }
+
+    #[test]
+    fn met_slo_requires_done_before_deadline() {
+        let mut j = JobState::new(spec());
+        j.status = JobStatus::Done;
+        j.completed_at = 29.0;
+        assert!(j.met_slo());
+        j.completed_at = 31.0;
+        assert!(!j.met_slo());
+        assert!((j.latency() - 31.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event GPU-cluster substrate.
+//!
+//! The paper evaluates on 32–96 physical A100s behind Knative; we rebuild
+//! that substrate as a deterministic discrete-event simulator (DESIGN.md
+//! §Substitutions): GPUs, allocation overheads (container + framework +
+//! runtime + weight load), synchronous per-iteration execution, elastic
+//! reallocation, and GPU-second cost integration. Scheduling policies
+//! (PromptTuner and the baselines) plug in through the [`sim::Policy`]
+//! trait; the simulator measures their *real wall-clock* decision overhead
+//! (§6.2 reports 13/67 ms avg/max) alongside the simulated metrics.
+
+pub mod job;
+pub mod sim;
+
+pub use job::{JobState, JobStatus};
+pub use sim::{ClusterState, Policy, SimConfig, SimResult, Simulator};

@@ -1,0 +1,666 @@
+//! The discrete-event simulator core: event queue, cluster accounting,
+//! the [`Policy`] trait that schedulers implement, and the run loop.
+//!
+//! Time is f64 seconds. Events are totally ordered by (time, sequence).
+//! GPU *cost* is integrated from a `billable_gpus` level that the policy
+//! maintains (warm-pool GPUs for PromptTuner, the whole fixed cluster for
+//! ElasticFlow, live instances for INFless); GPU *usage* (busy) is
+//! integrated automatically from job allocations.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::cluster::job::{JobState, JobStatus};
+use crate::util::stats::Accum;
+use crate::workload::{JobSpec, PerfModel, COMM_PAYLOAD_GB, GPU_PRICE_PER_S,
+                      STORAGE_PRICE_PER_GB_H};
+
+/// Simulator parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Total GPUs available to the provider (cold pool size ceiling).
+    pub max_gpus: usize,
+    /// Hard horizon after the last arrival (stragglers beyond it stay
+    /// unfinished and count as SLO violations).
+    pub horizon_s: f64,
+    /// Sampling period of the utilization timeline (Fig 3a series).
+    pub util_sample_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { max_gpus: 32, horizon_s: 7200.0, util_sample_s: 10.0 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EventKind {
+    Arrival(usize),
+    /// (job, generation) — stale generations are ignored.
+    JobDone(usize, u64),
+    Tick,
+    End,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Mutable cluster state policies operate on.
+pub struct ClusterState {
+    now: f64,
+    pub jobs: Vec<JobState>,
+    pub perf: PerfModel,
+    pub cfg: SimConfig,
+    /// Current billed GPU level (policy-maintained).
+    billable_gpus: f64,
+    /// Current busy GPU level (maintained by launch/finish/realloc).
+    busy_gpus: f64,
+    last_integrate_t: f64,
+    /// Integrated billed GPU-seconds.
+    pub cost_gpu_s: f64,
+    /// Integrated busy GPU-seconds.
+    pub busy_gpu_s: f64,
+    /// Integrated billable GPU-seconds while *any* billable capacity
+    /// exists (denominator of utilization).
+    pub billable_gpu_s: f64,
+    /// Storage cost accumulator (synchronous-communication channel, $).
+    pub storage_cost: f64,
+    /// (time, utilization) samples.
+    pub util_timeline: Vec<(f64, f64)>,
+    next_util_sample: f64,
+    queued: Vec<(f64, EventKind)>,
+    seq: u64,
+}
+
+impl ClusterState {
+    fn new(cfg: SimConfig, perf: PerfModel, specs: Vec<JobSpec>) -> Self {
+        ClusterState {
+            now: 0.0,
+            jobs: specs.into_iter().map(JobState::new).collect(),
+            perf,
+            cfg,
+            billable_gpus: 0.0,
+            busy_gpus: 0.0,
+            last_integrate_t: 0.0,
+            cost_gpu_s: 0.0,
+            busy_gpu_s: 0.0,
+            billable_gpu_s: 0.0,
+            storage_cost: 0.0,
+            util_timeline: vec![],
+            next_util_sample: 0.0,
+            queued: vec![],
+            seq: 0,
+        }
+    }
+
+    /// Current simulated time, seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance cost/usage integration to `t` (called by the run loop).
+    fn integrate_to(&mut self, t: f64) {
+        let dt = t - self.last_integrate_t;
+        if dt > 0.0 {
+            self.cost_gpu_s += self.billable_gpus * dt;
+            self.busy_gpu_s += self.busy_gpus * dt;
+            self.billable_gpu_s += self.billable_gpus.max(0.0) * dt;
+            // charge running jobs' gpu_seconds
+            self.last_integrate_t = t;
+        }
+        while self.next_util_sample <= t {
+            let util = if self.billable_gpus > 0.0 {
+                self.busy_gpus / self.billable_gpus
+            } else {
+                0.0
+            };
+            self.util_timeline.push((self.next_util_sample, util.min(1.0)));
+            self.next_util_sample += self.cfg.util_sample_s;
+        }
+        self.now = t;
+    }
+
+    /// Set the current billed GPU level (e.g. warm-pool size, or the
+    /// fixed cluster size). Integration is handled by the run loop.
+    pub fn set_billable(&mut self, gpus: f64) {
+        self.billable_gpus = gpus;
+    }
+
+    pub fn billable(&self) -> f64 {
+        self.billable_gpus
+    }
+
+    pub fn busy(&self) -> f64 {
+        self.busy_gpus
+    }
+
+    /// Launch a pending job on `gpus` GPUs after `init_delay` seconds of
+    /// initialization, starting from a prompt of quality `quality` after
+    /// `bank_latency` seconds of Prompt-Bank lookup (sequential with the
+    /// job, §5.2). Schedules the completion event.
+    pub fn launch(
+        &mut self,
+        job_id: usize,
+        gpus: usize,
+        init_delay: f64,
+        bank_latency: f64,
+        quality: f64,
+    ) {
+        debug_assert!(gpus > 0);
+        let now = self.now;
+        let (iters, exec, iter_time);
+        {
+            let job = &mut self.jobs[job_id];
+            debug_assert_eq!(job.status, JobStatus::Pending, "job {job_id}");
+            job.quality = quality.max(job.spec.user_prompt_quality);
+            job.bank_latency = bank_latency;
+            job.iters_remaining = job.spec.iters_at(job.quality);
+            job.gpus = gpus;
+            job.status = JobStatus::Initializing;
+            job.launched_at = now;
+            job.init_wait = init_delay;
+            job.init_until = now + init_delay + bank_latency;
+            job.last_progress_t = job.init_until;
+            job.gen += 1;
+            iter_time = self.perf.iter_time(job.spec.llm, gpus);
+            iters = job.iters_remaining;
+            exec = job.init_until + iters * iter_time;
+            // storage cost of the synchronous gradient channel
+            let replicas = (gpus / job.spec.llm.gpus_per_replica()).max(1);
+            if replicas > 1 {
+                let exec_h = (iters * iter_time) / 3600.0;
+                self.storage_cost +=
+                    COMM_PAYLOAD_GB * replicas as f64 * exec_h * STORAGE_PRICE_PER_GB_H;
+            }
+        }
+        self.busy_gpus += gpus as f64;
+        let gen = self.jobs[job_id].gen;
+        self.push(exec, EventKind::JobDone(job_id, gen));
+    }
+
+    /// Elastically change a running/initializing job's allocation. The
+    /// remaining work is recomputed and the completion event rescheduled.
+    /// Returns the old allocation.
+    pub fn realloc(&mut self, job_id: usize, new_gpus: usize,
+                   extra_delay: f64) -> usize {
+        let now = self.now;
+        let (old, finish);
+        {
+            let job = &mut self.jobs[job_id];
+            debug_assert!(matches!(job.status,
+                JobStatus::Running | JobStatus::Initializing));
+            let it_old = self.perf.iter_time(job.spec.llm, job.gpus.max(1));
+            job.advance_progress(now, it_old);
+            old = job.gpus;
+            job.gpus = new_gpus;
+            job.gen += 1;
+            let it_new = self.perf.iter_time(job.spec.llm, new_gpus.max(1));
+            if job.status == JobStatus::Initializing {
+                job.init_until = job.init_until.max(now + extra_delay);
+                job.last_progress_t = job.init_until;
+                finish = job.init_until + job.iters_remaining * it_new;
+            } else if extra_delay > 0.0 {
+                job.status = JobStatus::Initializing;
+                job.init_until = now + extra_delay;
+                job.init_wait += extra_delay;
+                job.last_progress_t = job.init_until;
+                finish = job.init_until + job.iters_remaining * it_new;
+            } else {
+                job.last_progress_t = now;
+                finish = now + job.iters_remaining * it_new;
+            }
+        }
+        self.busy_gpus += new_gpus as f64 - old as f64;
+        let gen = self.jobs[job_id].gen;
+        self.push(finish, EventKind::JobDone(job_id, gen));
+        old
+    }
+
+    /// Estimated completion time if `job` were launched now on `gpus`
+    /// GPUs with the given delays (the T_i(a) the algorithms reason with).
+    pub fn estimate_completion(&self, job_id: usize, gpus: usize,
+                               init_delay: f64, bank_latency: f64,
+                               quality: f64) -> f64 {
+        let job = &self.jobs[job_id];
+        let iters = job.spec.iters_at(quality.max(job.spec.user_prompt_quality));
+        self.now + init_delay + bank_latency
+            + iters * self.perf.iter_time(job.spec.llm, gpus)
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.queued.push((time, kind));
+    }
+
+    fn drain_queued(&mut self, heap: &mut BinaryHeap<Event>) {
+        for (time, kind) in self.queued.drain(..) {
+            self.seq += 1;
+            heap.push(Event { time, seq: self.seq, kind });
+        }
+    }
+}
+
+/// A scheduling policy (PromptTuner's Workload Scheduler or a baseline).
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// Scheduling round period (the paper uses 50 ms rounds, §5.3).
+    fn tick_interval(&self) -> f64 {
+        0.05
+    }
+
+    /// A job was submitted.
+    fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize);
+
+    /// A job finished and released its GPUs.
+    fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize);
+
+    /// One scheduling round.
+    fn on_tick(&mut self, st: &mut ClusterState);
+}
+
+/// Outcome of one simulated experiment.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub policy: String,
+    pub n_jobs: usize,
+    pub n_done: usize,
+    pub n_violations: usize,
+    /// Total dollar cost (GPU time + storage channel).
+    pub cost_usd: f64,
+    pub gpu_seconds_billed: f64,
+    pub gpu_seconds_busy: f64,
+    /// Mean utilization over the billed capacity (Fig 3a).
+    pub mean_utilization: f64,
+    pub util_timeline: Vec<(f64, f64)>,
+    /// Per-job (latency, slo, init_wait, bank_latency) for CDFs.
+    pub job_latencies: Vec<(f64, f64, f64, f64)>,
+    /// Wall-clock scheduler decision overhead (paper §6.2: 13/67 ms).
+    pub sched_overhead_ms_mean: f64,
+    pub sched_overhead_ms_max: f64,
+}
+
+impl SimResult {
+    pub fn violation_rate(&self) -> f64 {
+        if self.n_jobs == 0 {
+            0.0
+        } else {
+            self.n_violations as f64 / self.n_jobs as f64
+        }
+    }
+}
+
+/// Drives a [`Policy`] over a trace.
+pub struct Simulator {
+    pub cfg: SimConfig,
+    pub perf: PerfModel,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig, perf: PerfModel) -> Self {
+        Simulator { cfg, perf }
+    }
+
+    /// Run `policy` over the trace and collect metrics.
+    pub fn run(&self, policy: &mut dyn Policy, specs: Vec<JobSpec>) -> SimResult {
+        let n_jobs = specs.len();
+        let last_arrival =
+            specs.iter().map(|s| s.submit_s).fold(0.0f64, f64::max);
+        let horizon = last_arrival + self.cfg.horizon_s;
+        let mut st = ClusterState::new(self.cfg.clone(), self.perf.clone(), specs);
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq = 0u64;
+        for (i, job) in st.jobs.iter().enumerate() {
+            seq += 1;
+            heap.push(Event {
+                time: job.spec.submit_s,
+                seq,
+                kind: EventKind::Arrival(i),
+            });
+        }
+        seq += 1;
+        heap.push(Event { time: 0.0, seq, kind: EventKind::Tick });
+        seq += 1;
+        heap.push(Event { time: horizon, seq, kind: EventKind::End });
+        st.seq = seq;
+
+        let mut overhead = Accum::new();
+        let mut done = 0usize;
+        let tick = policy.tick_interval();
+        while let Some(ev) = heap.pop() {
+            if ev.time > horizon {
+                break;
+            }
+            st.integrate_to(ev.time);
+            match ev.kind {
+                EventKind::Arrival(id) => {
+                    policy.on_arrival(&mut st, id);
+                }
+                EventKind::JobDone(id, gen) => {
+                    let stale = st.jobs[id].gen != gen
+                        || st.jobs[id].status == JobStatus::Done;
+                    if !stale {
+                        let gpus;
+                        {
+                            let job = &mut st.jobs[id];
+                            job.status = JobStatus::Done;
+                            job.completed_at = ev.time;
+                            job.iters_remaining = 0.0;
+                            gpus = job.gpus;
+                            job.gpu_seconds =
+                                gpus as f64 * (ev.time - job.launched_at);
+                            job.gpus = 0;
+                        }
+                        st.busy_gpus -= gpus as f64;
+                        policy.on_job_complete(&mut st, id);
+                        done += 1;
+                    }
+                }
+                EventKind::Tick => {
+                    let t0 = Instant::now();
+                    policy.on_tick(&mut st);
+                    overhead.add(t0.elapsed().as_secs_f64() * 1e3);
+                    if done < n_jobs {
+                        st.push(ev.time + tick, EventKind::Tick);
+                    }
+                }
+                EventKind::End => break,
+            }
+            st.drain_queued(&mut heap);
+            if done == n_jobs {
+                break;
+            }
+        }
+        st.integrate_to(st.now());
+
+        let n_done = st.jobs.iter().filter(|j| j.status == JobStatus::Done).count();
+        let n_violations = st.jobs.iter().filter(|j| !j.met_slo()).count();
+        let cost_usd = st.cost_gpu_s * GPU_PRICE_PER_S + st.storage_cost;
+        let mean_utilization = if st.billable_gpu_s > 0.0 {
+            st.busy_gpu_s / st.billable_gpu_s
+        } else {
+            0.0
+        };
+        SimResult {
+            policy: policy.name().to_string(),
+            n_jobs,
+            n_done,
+            n_violations,
+            cost_usd,
+            gpu_seconds_billed: st.cost_gpu_s,
+            gpu_seconds_busy: st.busy_gpu_s,
+            mean_utilization,
+            util_timeline: std::mem::take(&mut st.util_timeline),
+            job_latencies: st
+                .jobs
+                .iter()
+                .map(|j| (j.latency(), j.spec.slo_s, j.init_wait, j.bank_latency))
+                .collect(),
+            sched_overhead_ms_mean: overhead.mean(),
+            sched_overhead_ms_max: if overhead.n == 0 { 0.0 } else { overhead.max },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Llm;
+
+    fn spec(id: usize, submit: f64, iters: f64) -> JobSpec {
+        JobSpec {
+            id,
+            llm: Llm::Gpt2B,
+            task_id: 0,
+            submit_s: submit,
+            duration_s: iters * 0.12,
+            traced_gpus: 1,
+            base_iters: iters,
+            user_prompt_quality: 1.0, // multiplier 1 => deterministic time
+            slo_s: 1e9,
+            // qual 1.0 so iters_at == base_iters
+        }
+    }
+
+    /// Greedy test policy: run every arrival immediately on 1 GPU.
+    struct Greedy {
+        billable: f64,
+    }
+    impl Policy for Greedy {
+        fn name(&self) -> &str {
+            "greedy"
+        }
+        fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+            self.billable += 1.0;
+            st.set_billable(self.billable);
+            st.launch(id, 1, 0.0, 0.0, 1.0);
+        }
+        fn on_job_complete(&mut self, st: &mut ClusterState, _id: usize) {
+            self.billable -= 1.0;
+            st.set_billable(self.billable);
+        }
+        fn on_tick(&mut self, _st: &mut ClusterState) {}
+    }
+
+    #[test]
+    fn single_job_completes_at_exact_time() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = Greedy { billable: 0.0 };
+        let res = sim.run(&mut p, vec![spec(0, 5.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+        assert_eq!(res.n_violations, 0);
+        let (lat, _, _, _) = res.job_latencies[0];
+        // 100 iters × 0.12 s = 12 s
+        assert!((lat - 12.0).abs() < 1e-6, "{lat}");
+    }
+
+    #[test]
+    fn init_delay_postpones_completion_and_counts() {
+        struct Delayed;
+        impl Policy for Delayed {
+            fn name(&self) -> &str {
+                "delayed"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_billable(1.0);
+                st.launch(id, 1, 3.0, 2.0, 1.0);
+            }
+            fn on_job_complete(&mut self, st: &mut ClusterState, _id: usize) {
+                st.set_billable(0.0);
+            }
+            fn on_tick(&mut self, _st: &mut ClusterState) {}
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let res = sim.run(&mut Delayed, vec![spec(0, 0.0, 100.0)]);
+        let (lat, _, init_wait, bank) = res.job_latencies[0];
+        assert!((lat - 17.0).abs() < 1e-6, "{lat}"); // 3 + 2 + 12
+        assert!((init_wait - 3.0).abs() < 1e-12);
+        assert!((bank - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_integration_matches_busy_time() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = Greedy { billable: 0.0 };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0), spec(1, 0.0, 50.0)]);
+        // job0: 12 gpu-s, job1: 6 gpu-s, billable == busy for greedy
+        assert!((res.gpu_seconds_billed - 18.0).abs() < 1e-6,
+                "{}", res.gpu_seconds_billed);
+        assert!((res.gpu_seconds_busy - 18.0).abs() < 1e-6);
+        assert!((res.mean_utilization - 1.0).abs() < 1e-9);
+        assert!(res.cost_usd > 0.0);
+    }
+
+    #[test]
+    fn quality_scales_iterations() {
+        struct LowQ;
+        impl Policy for LowQ {
+            fn name(&self) -> &str {
+                "lowq"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_billable(1.0);
+                st.launch(id, 1, 0.0, 0.0, 0.0);
+            }
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, _st: &mut ClusterState) {}
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut s = spec(0, 0.0, 100.0);
+        s.user_prompt_quality = 0.0; // multiplier 4.5
+        let res = sim.run(&mut LowQ, vec![s]);
+        let (lat, _, _, _) = res.job_latencies[0];
+        assert!((lat - 12.0 * 4.5).abs() < 1e-6, "{lat}");
+    }
+
+    #[test]
+    fn realloc_speeds_up_remaining_work() {
+        struct Boost {
+            boosted: bool,
+        }
+        impl Policy for Boost {
+            fn name(&self) -> &str {
+                "boost"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_billable(4.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, st: &mut ClusterState) {
+                if !self.boosted && st.now() >= 6.0 {
+                    self.boosted = true;
+                    st.realloc(0, 4, 0.0);
+                }
+            }
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let res = sim.run(&mut Boost { boosted: false }, vec![spec(0, 0.0, 100.0)]);
+        let (lat, _, _, _) = res.job_latencies[0];
+        // ~6 s at 1 GPU (50 iters), remaining 50 iters at 4 GPUs ≈ 1.52 s
+        assert!(lat < 8.0, "{lat}");
+        assert!(lat > 7.0, "{lat}");
+        assert_eq!(res.n_done, 1);
+    }
+
+    #[test]
+    fn unfinished_jobs_count_as_violations() {
+        struct Never;
+        impl Policy for Never {
+            fn name(&self) -> &str {
+                "never"
+            }
+            fn on_arrival(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, _st: &mut ClusterState) {}
+        }
+        let cfg = SimConfig { horizon_s: 50.0, ..Default::default() };
+        let sim = Simulator::new(cfg, PerfModel::default());
+        let res = sim.run(&mut Never, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 0);
+        assert_eq!(res.n_violations, 1);
+        assert_eq!(res.violation_rate(), 1.0);
+    }
+
+    #[test]
+    fn stale_completion_events_ignored_after_realloc() {
+        struct ReallocEarly {
+            done: bool,
+        }
+        impl Policy for ReallocEarly {
+            fn name(&self) -> &str {
+                "re"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_billable(2.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {
+                assert!(!self.done, "double completion");
+                self.done = true;
+            }
+            fn on_tick(&mut self, st: &mut ClusterState) {
+                if st.now() >= 1.0 && st.now() < 1.1 && st.jobs[0].gpus == 1 {
+                    st.realloc(0, 2, 0.0);
+                }
+            }
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let res = sim.run(&mut ReallocEarly { done: false }, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+    }
+
+    #[test]
+    fn ticks_fire_at_interval() {
+        struct CountTicks {
+            n: usize,
+        }
+        impl Policy for CountTicks {
+            fn name(&self) -> &str {
+                "ticks"
+            }
+            fn tick_interval(&self) -> f64 {
+                1.0
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, _st: &mut ClusterState) {
+                self.n += 1;
+            }
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = CountTicks { n: 0 };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+        // 12 s of work, 1 s ticks => ~12 ticks observed
+        assert!((11..=14).contains(&p.n), "{}", p.n);
+    }
+
+    #[test]
+    fn utilization_timeline_sampled() {
+        let sim = Simulator::new(
+            SimConfig { util_sample_s: 1.0, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut p = Greedy { billable: 0.0 };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert!(res.util_timeline.len() >= 10);
+    }
+
+    #[test]
+    fn scheduler_overhead_measured() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = Greedy { billable: 0.0 };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 10.0)]);
+        assert!(res.sched_overhead_ms_mean >= 0.0);
+        assert!(res.sched_overhead_ms_max >= res.sched_overhead_ms_mean);
+    }
+}

@@ -1,0 +1,231 @@
+//! Experiment configuration: a TOML-subset parser (offline environment —
+//! no serde) plus typed experiment configs assembled from file + CLI
+//! overrides.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! (`"..."`), boolean, integer and float values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` configuration map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse the TOML subset.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section '{raw}'", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Overlay another config (e.g. CLI overrides win over file values).
+    pub fn merge_from(&mut self, other: Config) {
+        self.values.extend(other.values);
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 7
+[scheduler]
+max_gpus = 32
+window_s = 60.0
+use_bank = true
+name = "prompttuner"  # inline comment
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("seed", 0), 7);
+        assert_eq!(c.usize_or("scheduler.max_gpus", 0), 32);
+        assert_eq!(c.f64_or("scheduler.window_s", 0.0), 60.0);
+        assert!(c.bool_or("scheduler.use_bank", false));
+        assert_eq!(c.str_or("scheduler.name", ""), "prompttuner");
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 5), 5);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn int_value_readable_as_f64() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("x = @@\n").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut base = Config::parse("a = 1\nb = 2").unwrap();
+        let over = Config::parse("b = 9\nc = 3").unwrap();
+        base.merge_from(over);
+        assert_eq!(base.usize_or("a", 0), 1);
+        assert_eq!(base.usize_or("b", 0), 9);
+        assert_eq!(base.usize_or("c", 0), 3);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(c.str_or("s", ""), "a # b");
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let c = Config::parse("a = -4\nb = 2.5e-3").unwrap();
+        assert_eq!(c.get("a"), Some(&Value::Int(-4)));
+        assert!((c.f64_or("b", 0.0) - 2.5e-3).abs() < 1e-12);
+        assert_eq!(c.usize_or("a", 7), 7); // negative not a usize
+    }
+}

@@ -1,0 +1,300 @@
+//! Algorithm 2 (§4.4.2): GPU allocation from the shared cold pool, with
+//! the `DelaySchedulable` test.
+//!
+//! For each still-pending job (ascending SLO): if delaying it until
+//! already-running jobs release warm GPUs still meets its SLO, do nothing
+//! (saving the cost of new warm GPUs). Otherwise grow a cold-pool
+//! allocation until the SLO is met *including* the cold allocation
+//! overhead T_l^cold; the granted GPUs join the LLM's warm pool.
+
+/// One cold-pool grant: `gpus` move from the cold pool into the job's
+/// LLM warm pool and start the job after the cold-start overhead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ColdPlan {
+    pub job_id: usize,
+    pub gpus: usize,
+}
+
+/// The `DelaySchedulable` function (Algorithm 2 lines 23–35).
+///
+/// `e_l` holds, per busy warm GPU of this LLM, the earliest absolute time
+/// it becomes available (sorted ascending by the caller or here). If some
+/// k exists with `exec_dur(job, k) + e_l[k-1] <= deadline`, the job can be
+/// delayed: the k reserved entries are pushed back to the job's own
+/// predicted completion (line 30) and true is returned.
+///
+/// `replica` restricts k to replica multiples.
+pub fn delay_schedulable(
+    e_l: &mut Vec<f64>,
+    job: usize,
+    replica: usize,
+    deadline: f64,
+    exec_dur: impl Fn(usize, usize) -> f64,
+) -> bool {
+    e_l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut k = replica;
+    while k <= e_l.len() {
+        let start = e_l[k - 1];
+        let completion = start + exec_dur(job, k);
+        if completion <= deadline {
+            // reserve: the k earliest GPUs now free up when this job ends
+            for slot in e_l.iter_mut().take(k) {
+                *slot = completion;
+            }
+            e_l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return true;
+        }
+        k += replica;
+    }
+    false
+}
+
+/// Run Algorithm 2 over `pending` (sorted by SLO ascending). Returns the
+/// cold-pool grants; `e_l` is mutated by successful DelaySchedulable
+/// reservations.
+///
+/// * `cold_free` — GPUs available in the shared cold pool.
+/// * `exec_dur(job, gpus)` — execution duration (bank + iterations) once
+///   initialized, excluding allocation overheads.
+/// * `cold_overhead` — T_l^cold for this LLM.
+/// * `now` — current time (deadlines are absolute).
+pub fn allocate_from_cold_pool(
+    pending: &[usize],
+    mut cold_free: usize,
+    replica: usize,
+    max_gpus_per_job: usize,
+    now: f64,
+    deadline: impl Fn(usize) -> f64,
+    exec_dur: impl Fn(usize, usize) -> f64 + Copy,
+    cold_overhead: f64,
+    e_l: &mut Vec<f64>,
+    use_delay: bool,
+) -> Vec<ColdPlan> {
+    let mut plans = vec![];
+    for &job in pending {
+        // lines 7-9: skip jobs that can wait for released warm GPUs
+        if use_delay
+            && delay_schedulable(e_l, job, replica, deadline(job), exec_dur)
+        {
+            continue;
+        }
+        if cold_free < replica {
+            continue;
+        }
+        let cap = max_gpus_per_job.min(cold_free) / replica * replica;
+        if cap == 0 {
+            continue;
+        }
+        // lines 10-14: grow until SLO met including the cold overhead
+        let mut a = replica;
+        while now + cold_overhead + exec_dur(job, a) > deadline(job)
+            && a + replica <= cap
+        {
+            a += replica;
+        }
+        // line 15: only commit if the SLO is actually met
+        if now + cold_overhead + exec_dur(job, a) <= deadline(job) {
+            plans.push(ColdPlan { job_id: job, gpus: a });
+            cold_free -= a;
+            // line 19: these GPUs free up when the job completes
+            let completion = now + cold_overhead + exec_dur(job, a);
+            for _ in 0..a {
+                e_l.push(completion);
+            }
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn delay_schedulable_waits_for_one_gpu() {
+        // one busy GPU frees at t=10; job runs 5 s; deadline 20 => delay ok
+        let mut e = vec![10.0];
+        assert!(delay_schedulable(&mut e, 0, 1, 20.0, |_, _| 5.0));
+        // reservation recorded: GPU now frees at 15
+        assert_eq!(e, vec![15.0]);
+    }
+
+    #[test]
+    fn delay_schedulable_rejects_tight_deadline() {
+        let mut e = vec![10.0];
+        assert!(!delay_schedulable(&mut e, 0, 1, 12.0, |_, _| 5.0));
+        assert_eq!(e, vec![10.0]); // untouched on failure
+    }
+
+    #[test]
+    fn delay_schedulable_uses_more_gpus_when_faster() {
+        // 4 GPUs free at 2,4,6,8; exec 16/k seconds; deadline 12:
+        // k=1: 2+16=18 ✗; k=2: 4+8=12 ✓
+        let mut e = vec![2.0, 4.0, 6.0, 8.0];
+        assert!(delay_schedulable(&mut e, 0, 1, 12.0, |_, k| 16.0 / k as f64));
+        assert_eq!(e, vec![6.0, 8.0, 12.0, 12.0]);
+    }
+
+    #[test]
+    fn delay_respects_replica_granularity() {
+        // replica = 2: only k = 2 considered; e[1] = 4
+        let mut e = vec![2.0, 4.0];
+        assert!(delay_schedulable(&mut e, 0, 2, 13.0, |_, k| 16.0 / k as f64));
+        assert_eq!(e, vec![12.0, 12.0]);
+        let mut e2 = vec![2.0];
+        // replica 2 but only 1 busy GPU => cannot delay
+        assert!(!delay_schedulable(&mut e2, 0, 2, 100.0, |_, _| 1.0));
+    }
+
+    #[test]
+    fn cold_allocation_includes_overhead() {
+        // exec 10/k s, cold overhead 8, deadline at 16 (now=0):
+        // k=1: 8+10=18 ✗; k=2: 8+5=13 ✓
+        let mut e = vec![];
+        let plans = allocate_from_cold_pool(
+            &[0],
+            8,
+            1,
+            8,
+            0.0,
+            |_| 16.0,
+            |_, k| 10.0 / k as f64,
+            8.0,
+            &mut e,
+            true,
+        );
+        assert_eq!(plans, vec![ColdPlan { job_id: 0, gpus: 2 }]);
+        assert_eq!(e.len(), 2);
+        assert!((e[0] - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unmeetable_slo_gets_nothing() {
+        let mut e = vec![];
+        let plans = allocate_from_cold_pool(
+            &[0],
+            8,
+            1,
+            8,
+            0.0,
+            |_| 5.0, // < cold overhead alone
+            |_, k| 10.0 / k as f64,
+            8.0,
+            &mut e,
+            true,
+        );
+        assert!(plans.is_empty());
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn delayed_jobs_consume_no_cold_gpus() {
+        // two identical jobs; one busy GPU frees at t=1, generous SLOs:
+        // the first job is delay-schedulable, the second reserves after it.
+        let mut e = vec![1.0];
+        let plans = allocate_from_cold_pool(
+            &[0, 1],
+            8,
+            1,
+            8,
+            0.0,
+            |_| 100.0,
+            |_, _| 5.0,
+            8.0,
+            &mut e,
+            true,
+        );
+        assert!(plans.is_empty());
+        assert!((e[0] - 11.0).abs() < 1e-9); // 1 + 5 + 5 via two reservations
+    }
+
+    #[test]
+    fn delay_disabled_forces_cold_allocation() {
+        let mut e = vec![1.0];
+        let plans = allocate_from_cold_pool(
+            &[0],
+            8,
+            1,
+            8,
+            0.0,
+            |_| 100.0,
+            |_, _| 5.0,
+            8.0,
+            &mut e,
+            false,
+        );
+        assert_eq!(plans.len(), 1);
+    }
+
+    #[test]
+    fn prop_cold_grants_meet_slo_and_conserve_gpus() {
+        check("Algorithm 2 invariants", 200, |rng| {
+            let n = 1 + rng.below(10);
+            let cold0 = rng.below(24);
+            let replica = [1usize, 1, 4][rng.below(3)];
+            let now = rng.range_f64(0.0, 100.0);
+            let overhead = rng.range_f64(1.0, 30.0);
+            let work: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 300.0)).collect();
+            let dl: Vec<f64> =
+                (0..n).map(|_| now + rng.range_f64(5.0, 200.0)).collect();
+            let mut pending: Vec<usize> = (0..n).collect();
+            pending.sort_by(|&a, &b| dl[a].partial_cmp(&dl[b]).unwrap());
+            let mut e_l: Vec<f64> =
+                (0..rng.below(6)).map(|_| now + rng.range_f64(0.0, 50.0)).collect();
+            let d = dl.clone();
+            let w = work.clone();
+            let exec_fn = move |j: usize, g: usize| w[j] / g as f64;
+            let use_delay = rng.below(2) == 0;
+            let plans = allocate_from_cold_pool(
+                &pending,
+                cold0,
+                replica,
+                16,
+                now,
+                move |j| d[j],
+                &exec_fn,
+                overhead,
+                &mut e_l,
+                use_delay,
+            );
+            let granted: usize = plans.iter().map(|p| p.gpus).sum();
+            ensure(granted <= cold0, "cold pool oversubscribed")?;
+            for p in &plans {
+                ensure(p.gpus % replica == 0, "granularity")?;
+                let completion = now + overhead + work[p.job_id] / p.gpus as f64;
+                ensure(completion <= dl[p.job_id] + 1e-9,
+                       format!("plan misses SLO: job {}", p.job_id))?;
+            }
+            let mut ids: Vec<usize> = plans.iter().map(|p| p.job_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ensure(ids.len() == plans.len(), "duplicate plan")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_delay_reservation_monotone() {
+        // After a successful reservation every entry of e_l is >= the
+        // entry it replaced (reservations only push availability later).
+        check("DelaySchedulable pushes availability later", 200, |rng| {
+            let m = 1 + rng.below(8);
+            let mut e: Vec<f64> = (0..m).map(|_| rng.range_f64(0.0, 20.0)).collect();
+            e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let before = e.clone();
+            let dur = rng.range_f64(0.1, 10.0);
+            let dl = rng.range_f64(0.0, 40.0);
+            let ok = delay_schedulable(&mut e, 0, 1, dl, |_, k| dur / k as f64);
+            ensure(e.len() == before.len(), "length changed")?;
+            if ok {
+                for i in 0..e.len() {
+                    ensure(e[i] >= before[i] - 1e-9, "availability moved earlier")?;
+                }
+            } else {
+                ensure(e == before, "failed delay mutated e_l")?;
+            }
+            Ok(())
+        });
+    }
+}

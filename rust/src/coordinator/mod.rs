@@ -1,0 +1,29 @@
+//! The Workload Scheduler (§4.4) — PromptTuner's resource-management
+//! contribution.
+//!
+//! A single shared **cold** GPU pool feeds per-LLM **warm** pools whose
+//! GPUs hold a pre-loaded runtime + weights (runtime reusing). Three
+//! mechanisms cooperate every 50 ms round:
+//!
+//! * **Algorithm 1** ([`warm_alloc`]): fast multi-GPU allocation from a
+//!   warm pool — grow each pending job's allocation until its SLO is met
+//!   or the pool is exhausted.
+//! * **Algorithm 2** ([`cold_alloc`]): grow warm pools from the cold pool
+//!   for jobs whose SLOs cannot otherwise be met — unless
+//!   `DelaySchedulable` shows that waiting for soon-to-be-released warm
+//!   GPUs still meets the SLO.
+//! * **Latency budget** ([`scheduler`]): route a job through the Prompt
+//!   Bank only when the lookup fits in 20 % of its SLO.
+//!
+//! Warm pools shrink back to the cold pool after an idle window (§6.3:
+//! 60 s balances violation vs cost).
+
+pub mod cold_alloc;
+pub mod pools;
+pub mod scheduler;
+pub mod warm_alloc;
+
+pub use cold_alloc::{allocate_from_cold_pool, delay_schedulable, ColdPlan};
+pub use pools::WarmPool;
+pub use scheduler::{PromptTuner, PromptTunerConfig};
+pub use warm_alloc::{allocate_from_warm_pool, WarmAllocation};

@@ -1,0 +1,234 @@
+//! Algorithm 1 (§4.4.1): GPU allocation from a warm pool.
+//!
+//! Jobs are taken in ascending-SLO order; each job's allocation grows from
+//! one replica until its predicted completion meets its SLO or the pool is
+//! exhausted. Jobs whose SLO cannot be met from the warm pool get no
+//! allocation (A_i = 0) and stay pending for Algorithm 2.
+
+/// One granted allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WarmAllocation {
+    pub job_id: usize,
+    pub gpus: usize,
+}
+
+/// Run Algorithm 1 over `pending` (must already be sorted by SLO
+/// ascending — the caller owns queue ordering).
+///
+/// * `free` — free GPUs in this LLM's warm pool (R_l).
+/// * `replica` — GPU granularity (tensor-parallel group size).
+/// * `max_gpus_per_job` — allocation cap per job.
+/// * `deadline(job)` — absolute SLO deadline T_i^slo.
+/// * `completion(job, gpus)` — estimated absolute completion time
+///   T_i^warm(a) when launched now from the warm pool.
+///
+/// Returns the granted allocations and the remaining free count.
+pub fn allocate_from_warm_pool(
+    pending: &[usize],
+    mut free: usize,
+    replica: usize,
+    max_gpus_per_job: usize,
+    deadline: impl Fn(usize) -> f64,
+    completion: impl Fn(usize, usize) -> f64,
+) -> (Vec<WarmAllocation>, usize) {
+    debug_assert!(replica > 0);
+    let mut grants = vec![];
+    for &job in pending {
+        if free < replica {
+            break; // pool depleted for every granularity
+        }
+        let cap = max_gpus_per_job.min(free) / replica * replica;
+        if cap == 0 {
+            continue;
+        }
+        // A_i = 1 replica; grow while the SLO is still missed (lines 6-9).
+        let mut a = replica;
+        while completion(job, a) > deadline(job) && a + replica <= cap {
+            a += replica;
+        }
+        if completion(job, a) <= deadline(job) {
+            grants.push(WarmAllocation { job_id: job, gpus: a });
+            free -= a; // line 11: R_l -= A_i
+        }
+        // else: A_i = 0 (line 13) — job stays pending.
+    }
+    (grants, free)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    /// Completion model: now=0, job j needs work[j] GPU-seconds; perfect
+    /// linear scaling.
+    fn completion_for(work: Vec<f64>) -> impl Fn(usize, usize) -> f64 {
+        move |job, gpus| work[job] / gpus as f64
+    }
+
+    #[test]
+    fn grows_allocation_until_slo_met() {
+        // job 0 needs 40 GPU-s, SLO at t=12 => needs 4 GPUs
+        let (grants, free) = allocate_from_warm_pool(
+            &[0],
+            8,
+            1,
+            8,
+            |_| 12.0,
+            completion_for(vec![40.0]),
+        );
+        assert_eq!(grants, vec![WarmAllocation { job_id: 0, gpus: 4 }]);
+        assert_eq!(free, 4);
+    }
+
+    #[test]
+    fn single_gpu_when_slo_loose() {
+        let (grants, free) = allocate_from_warm_pool(
+            &[0],
+            8,
+            1,
+            8,
+            |_| 100.0,
+            completion_for(vec![40.0]),
+        );
+        assert_eq!(grants, vec![WarmAllocation { job_id: 0, gpus: 1 }]);
+        assert_eq!(free, 7);
+    }
+
+    #[test]
+    fn unmeetable_job_gets_zero_and_blocks_nothing() {
+        // job 0 needs 1000 GPU-s with SLO 10 (needs 100 GPUs, only 8 free);
+        // job 1 trivially satisfiable.
+        let (grants, free) = allocate_from_warm_pool(
+            &[0, 1],
+            8,
+            1,
+            8,
+            |_| 10.0,
+            completion_for(vec![1000.0, 5.0]),
+        );
+        assert_eq!(grants, vec![WarmAllocation { job_id: 1, gpus: 1 }]);
+        assert_eq!(free, 7);
+    }
+
+    #[test]
+    fn respects_replica_granularity() {
+        // tensor-parallel LLM: replica = 4; job needs 6 GPU-s, SLO 1.0
+        // => 8 GPUs (2 replicas) since 6/4 = 1.5 > 1.0.
+        let (grants, _) = allocate_from_warm_pool(
+            &[0],
+            8,
+            4,
+            8,
+            |_| 1.0,
+            completion_for(vec![6.0]),
+        );
+        assert_eq!(grants, vec![WarmAllocation { job_id: 0, gpus: 8 }]);
+    }
+
+    #[test]
+    fn pool_depletion_stops_early() {
+        let (grants, free) = allocate_from_warm_pool(
+            &[0, 1, 2],
+            2,
+            1,
+            8,
+            |_| 10.0,
+            completion_for(vec![5.0, 5.0, 5.0]),
+        );
+        assert_eq!(grants.len(), 2);
+        assert_eq!(free, 0);
+    }
+
+    #[test]
+    fn max_gpus_per_job_caps_growth() {
+        let (grants, _) = allocate_from_warm_pool(
+            &[0],
+            16,
+            1,
+            4,
+            |_| 12.0,
+            completion_for(vec![40.0]),
+        );
+        // needs 4 at cap 4 => exactly meets 40/4=10 <= 12
+        assert_eq!(grants, vec![WarmAllocation { job_id: 0, gpus: 4 }]);
+        // tighter SLO that would need more than the cap => nothing
+        let (grants, free) = allocate_from_warm_pool(
+            &[0],
+            16,
+            1,
+            4,
+            |_| 5.0,
+            completion_for(vec![40.0]),
+        );
+        assert!(grants.is_empty());
+        assert_eq!(free, 16);
+    }
+
+    #[test]
+    fn prop_never_oversubscribes_and_all_grants_meet_slo() {
+        check("Algorithm 1 invariants", 200, |rng| {
+            let n = 1 + rng.below(12);
+            let free0 = rng.below(20);
+            let replica = [1usize, 1, 1, 4][rng.below(4)];
+            let work: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 200.0)).collect();
+            let slo: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 100.0)).collect();
+            let mut pending: Vec<usize> = (0..n).collect();
+            pending.sort_by(|&a, &b| slo[a].partial_cmp(&slo[b]).unwrap());
+            let w = work.clone();
+            let s = slo.clone();
+            let (grants, free) = allocate_from_warm_pool(
+                &pending,
+                free0,
+                replica,
+                8,
+                move |j| s[j],
+                move |j, g| w[j] / g as f64,
+            );
+            let granted: usize = grants.iter().map(|g| g.gpus).sum();
+            ensure(granted + free == free0, "GPU conservation")?;
+            for g in &grants {
+                ensure(g.gpus % replica == 0, "granularity")?;
+                ensure(g.gpus <= 8, "cap")?;
+                ensure(
+                    work[g.job_id] / g.gpus as f64 <= slo[g.job_id] + 1e-9,
+                    format!("grant misses SLO: job {}", g.job_id),
+                )?;
+            }
+            // no duplicate grants
+            let mut ids: Vec<usize> = grants.iter().map(|g| g.job_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ensure(ids.len() == grants.len(), "duplicate job grant")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_minimal_sufficient_allocation() {
+        // Algorithm 1 allocates the smallest replica multiple meeting the
+        // SLO — granting fewer GPUs would miss it.
+        check("Algorithm 1 minimality", 200, |rng| {
+            let work = rng.range_f64(1.0, 100.0);
+            let slo = rng.range_f64(0.5, 50.0);
+            let (grants, _) = allocate_from_warm_pool(
+                &[0],
+                64,
+                1,
+                64,
+                |_| slo,
+                move |_, g| work / g as f64,
+            );
+            if let Some(g) = grants.first() {
+                ensure(work / g.gpus as f64 <= slo, "meets SLO")?;
+                if g.gpus > 1 {
+                    ensure(
+                        work / (g.gpus - 1) as f64 > slo,
+                        format!("not minimal: {} gpus", g.gpus),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

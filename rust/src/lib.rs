@@ -1,0 +1,34 @@
+//! PromptTuner: an SLO-aware elastic cluster-management system for LLM
+//! prompt-tuning (LPT) workloads — a full reproduction of the CS.DC 2026
+//! paper, built as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! - **L3 (this crate)** — the paper's coordination contribution: the
+//!   [`coordinator`] Workload Scheduler (warm/cold GPU pools, Algorithms 1
+//!   and 2, `DelaySchedulable`, latency-budget routing) and the
+//!   [`promptbank`] two-layer query engine; plus every substrate they need:
+//!   a discrete-event GPU [`cluster`] simulator, [`trace`] generation,
+//!   [`baselines`] (INFless-like, ElasticFlow-like), [`metrics`]/cost
+//!   accounting, and a real execution engine ([`serve`], [`tuning`]).
+//! - **L2/L1 (build-time Python)** — the LPT compute graph (tiny GPT with a
+//!   tunable soft prompt, Pallas prefix-attention kernel) AOT-lowered to
+//!   HLO text artifacts.
+//! - **[`runtime`]** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) and executes them from the Rust hot path; Python is never on
+//!   the request path.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod promptbank;
+pub mod runtime;
+pub mod serve;
+pub mod trace;
+pub mod tuning;
+pub mod util;
+pub mod workload;
+
+/// Default location of AOT artifacts relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

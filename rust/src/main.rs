@@ -1,0 +1,255 @@
+//! PromptTuner launcher: the L3 coordinator CLI.
+//!
+//! ```text
+//! prompttuner simulate  --system prompttuner|infless|elasticflow
+//!                       --load low|medium|high --slo 1.0 --gpus 32 [--seed N]
+//! prompttuner trace     --load medium [--out trace.txt] [--seed N]
+//! prompttuner calibrate [--variant sim-gpt2b] [--iters 30]
+//! prompttuner bank      [--variant sim-gpt2b] [--size 300] [--k 20] [--task 3]
+//! prompttuner tune      [--variant sim-gpt2b] --task 3 [--iters 200] [--lr 0.05]
+//! prompttuner info
+//! ```
+
+use anyhow::{bail, Result};
+use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
+use prompttuner::cluster::{Policy, SimConfig, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::metrics::summary_line;
+use prompttuner::runtime::ModelRuntime;
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::tuning::{TaskUniverse, Trainer, TrainerConfig};
+use prompttuner::util::cli::Args;
+use prompttuner::util::manifest::Manifest;
+use prompttuner::util::rng::Rng;
+use prompttuner::workload::PerfModel;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(argv.iter().skip(1).cloned());
+    let result = match cmd {
+        "simulate" => cmd_simulate(&args),
+        "trace" => cmd_trace(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "bank" => cmd_bank(&args),
+        "tune" => cmd_tune(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n{}", HELP);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+PromptTuner — SLO-aware elastic system for LLM prompt tuning (reproduction)
+
+USAGE: prompttuner <command> [--options]
+
+COMMANDS:
+  simulate    run a scheduling policy over a generated trace
+  trace       generate / inspect an LPT workload trace
+  calibrate   measure real per-iteration & lookup times via the PJRT runtime
+  bank        build a Prompt Bank and run a lookup for a task (real runtime)
+  tune        run one real prompt-tuning job end to end (real runtime)
+  info        show artifact manifest summary
+";
+
+fn load_level(s: &str) -> Result<Load> {
+    Load::from_name(s).ok_or_else(|| anyhow::anyhow!("bad --load '{s}'"))
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let system = args.get_or("system", "prompttuner");
+    let load = load_level(args.get_or("load", "medium"))?;
+    let slo: f64 = args.parse_or("slo", 1.0)?;
+    let gpus: usize = args.parse_or("gpus", 32)?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    let perf = PerfModel::default();
+    let mut gen = TraceGenerator::new(
+        TraceConfig { seed, slo_emergence: slo, ..Default::default() },
+        perf.clone(),
+    );
+    let jobs = gen.generate_main(load);
+    let sim = Simulator::new(SimConfig { max_gpus: gpus, ..Default::default() }, perf);
+    let mut policy: Box<dyn Policy> = match system {
+        "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        })),
+        "infless" => Box::new(Infless::new(InflessConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        })),
+        "elasticflow" => Box::new(ElasticFlow::new(ElasticFlowConfig {
+            cluster_size: gpus,
+            seed,
+            ..Default::default()
+        })),
+        other => bail!("unknown --system '{other}'"),
+    };
+    let res = sim.run(policy.as_mut(), jobs);
+    println!("{}", summary_line(&res));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let load = load_level(args.get_or("load", "medium"))?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    let slo: f64 = args.parse_or("slo", 1.0)?;
+    let perf = PerfModel::default();
+    let mut gen = TraceGenerator::new(
+        TraceConfig { seed, slo_emergence: slo, ..Default::default() },
+        perf,
+    );
+    let jobs = gen.generate_main(load);
+    if let Some(out) = args.get("out") {
+        prompttuner::trace::save(out, &jobs)?;
+        println!("wrote {} jobs to {out}", jobs.len());
+    } else {
+        let counts =
+            prompttuner::trace::generator::arrivals_per_minute(&jobs, 1200.0);
+        println!("{} jobs; arrivals/minute:", jobs.len());
+        for (m, c) in counts.iter().enumerate() {
+            println!("  min {m:>2}: {} {}", c, "#".repeat(*c));
+        }
+    }
+    Ok(())
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", prompttuner::DEFAULT_ARTIFACTS_DIR).to_string()
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.get_or("variant", "sim-gpt2b");
+    let iters: usize = args.parse_or("iters", 30)?;
+    let manifest = Manifest::load(&dir)?;
+    let uni = TaskUniverse::load(manifest.tasks_path_abs())?;
+    println!("loading {variant} ...");
+    let rt = ModelRuntime::load(&manifest, variant)?;
+    println!("  cold start (compile + weights): {:.2}s", rt.load_time_s);
+    let mut rng = Rng::new(7);
+    let (toks, tgts) = uni.sample_batch(&mut rng, 0, rt.info.batch_train, rt.info.seq);
+    let mut state = prompttuner::runtime::TuneState::new(
+        rt.embed_prompt(uni.tag(0))?,
+    );
+    // warmup
+    rt.tune_step(&mut state, &toks, &tgts, 0.05)?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        rt.tune_step(&mut state, &toks, &tgts, 0.05)?;
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  tune_step: {:.2} ms/iter", per_iter * 1e3);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        rt.score(uni.tag(0), &toks_eval(&uni, &rt)?, &tgts_eval(&uni, &rt)?)?;
+    }
+    println!("  score (Eqn.1): {:.2} ms/eval", t0.elapsed().as_secs_f64() / iters as f64 * 1e3);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        rt.features(uni.tag(0))?;
+    }
+    println!("  features: {:.2} ms", t0.elapsed().as_secs_f64() / iters as f64 * 1e3);
+    Ok(())
+}
+
+fn toks_eval(uni: &TaskUniverse, rt: &ModelRuntime) -> Result<Vec<i32>> {
+    let mut rng = Rng::new(11);
+    Ok(uni.sample_batch(&mut rng, 0, rt.info.batch_eval, rt.info.seq).0)
+}
+
+fn tgts_eval(uni: &TaskUniverse, rt: &ModelRuntime) -> Result<Vec<i32>> {
+    let mut rng = Rng::new(11);
+    Ok(uni.sample_batch(&mut rng, 0, rt.info.batch_eval, rt.info.seq).1)
+}
+
+fn cmd_bank(args: &Args) -> Result<()> {
+    use prompttuner::promptbank::{build_bank, store};
+    use prompttuner::runtime::RuntimeScorer;
+    let dir = artifacts_dir(args);
+    let variant = args.get_or("variant", "sim-gpt2b");
+    let size: usize = args.parse_or("size", 300)?;
+    let k: usize = args.parse_or("k", 20)?;
+    let task: usize = args.parse_or("task", 3)?;
+    let manifest = Manifest::load(&dir)?;
+    let uni = TaskUniverse::load(manifest.tasks_path_abs())?;
+    let rt = ModelRuntime::load(&manifest, variant)?;
+    let mut rng = Rng::new(5);
+    let bank = if let Some(path) = args.get("load") {
+        println!("loading bank from {path} ...");
+        store::load(path)?
+    } else {
+        println!("building bank: {size} candidates, K={k} (offline phase) ...");
+        build_bank(&rt, &uni, size, k, 3000, &mut rng)?
+    };
+    if let Some(path) = args.get("save") {
+        store::save(&bank, path)?;
+        println!("bank persisted to {path}");
+    }
+    let trainer = Trainer::new(&rt, &uni, TrainerConfig::default());
+    let (etoks, etgts) = trainer.eval_batch(task);
+    let mut scorer = RuntimeScorer::new(&rt, etoks, etgts);
+    let t0 = std::time::Instant::now();
+    let res = bank.lookup(&mut scorer);
+    let dt = t0.elapsed().as_secs_f64();
+    let best = bank.candidate(res.best);
+    println!(
+        "lookup: {} evals in {:.2}s -> candidate from task {:?} (score {:.4})",
+        res.evals, dt, best.source_task, res.best_score
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.get_or("variant", "sim-gpt2b");
+    let task: usize = args.parse_or("task", 3)?;
+    let iters: usize = args.parse_or("iters", 200)?;
+    let lr: f32 = args.parse_or("lr", 0.05)?;
+    let manifest = Manifest::load(&dir)?;
+    let uni = TaskUniverse::load(manifest.tasks_path_abs())?;
+    let rt = ModelRuntime::load(&manifest, variant)?;
+    let trainer = Trainer::new(
+        &rt,
+        &uni,
+        TrainerConfig { lr, max_iters: iters, ..Default::default() },
+    );
+    let init = uni.tag((task + 1) % uni.n_tasks).to_vec(); // a transfer prompt
+    println!("tuning {variant} task {task} from a neighbour task's prompt ...");
+    let out = trainer.tune(task, &init, 0.0)?; // target 0 => run all iters
+    for (it, loss) in out.loss_curve.iter().step_by(10.max(iters / 20)) {
+        println!("  iter {it:>4}: train loss {loss:.4}");
+    }
+    println!("final eval loss: {:.4}", out.final_eval_loss);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!("task universe: seed {}", manifest.universe_seed);
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name}: d={} layers={} heads={} vocab={} seq={} P={} params={} \
+             artifacts={} theta={}",
+            m.d_model, m.n_layers, m.n_heads, m.vocab, m.seq, m.prompt_len,
+            m.n_params, m.artifacts.len(),
+            m.theta_path.is_some()
+        );
+    }
+    Ok(())
+}

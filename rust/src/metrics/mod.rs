@@ -1,0 +1,143 @@
+//! Metrics & reporting: SLO-violation / cost summaries and the plain-text
+//! table/series printers the benches use to regenerate the paper's
+//! figures and tables.
+
+use crate::cluster::SimResult;
+
+/// One row of a paper-style comparison table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub violation_pct: f64,
+    pub cost_usd: f64,
+}
+
+impl From<&SimResult> for Row {
+    fn from(r: &SimResult) -> Row {
+        Row {
+            label: r.policy.clone(),
+            violation_pct: r.violation_rate() * 100.0,
+            cost_usd: r.cost_usd,
+        }
+    }
+}
+
+/// Render a violation/cost comparison table (the Fig 7 / Table 7 format).
+pub fn render_table(title: &str, rows: &[Row]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!("{:<24} {:>16} {:>12}\n", "system",
+                          "SLO violation %", "cost $"));
+    for r in rows {
+        out.push_str(&format!("{:<24} {:>16.1} {:>12.2}\n",
+                              r.label, r.violation_pct, r.cost_usd));
+    }
+    out
+}
+
+/// Render an (x, y) series as aligned text (the figure-series format).
+pub fn render_series(title: &str, xlabel: &str, ylabel: &str,
+                     points: &[(f64, f64)]) -> String {
+    let mut out = format!("== {title} ==\n{:<14} {:<14}\n", xlabel, ylabel);
+    for (x, y) in points {
+        out.push_str(&format!("{:<14.4} {:<14.4}\n", x, y));
+    }
+    out
+}
+
+/// Improvement factors of `ours` vs `other` (the paper's "N.N×" numbers).
+pub fn improvement(ours: &SimResult, other: &SimResult) -> (f64, f64) {
+    let viol = if ours.violation_rate() > 0.0 {
+        other.violation_rate() / ours.violation_rate()
+    } else if other.violation_rate() > 0.0 {
+        f64::INFINITY
+    } else {
+        1.0
+    };
+    let cost = if ours.cost_usd > 0.0 {
+        other.cost_usd / ours.cost_usd
+    } else {
+        1.0
+    };
+    (viol, cost)
+}
+
+/// A compact one-line summary of a run.
+pub fn summary_line(r: &SimResult) -> String {
+    format!(
+        "{:<24} jobs={:<4} done={:<4} viol={:>5.1}% cost=${:<8.2} util={:>5.1}% \
+         sched_ms avg/max={:.2}/{:.2}",
+        r.policy,
+        r.n_jobs,
+        r.n_done,
+        r.violation_rate() * 100.0,
+        r.cost_usd,
+        r.mean_utilization * 100.0,
+        r.sched_overhead_ms_mean,
+        r.sched_overhead_ms_max
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(policy: &str, viol: usize, n: usize, cost: f64) -> SimResult {
+        SimResult {
+            policy: policy.into(),
+            n_jobs: n,
+            n_done: n,
+            n_violations: viol,
+            cost_usd: cost,
+            gpu_seconds_billed: 0.0,
+            gpu_seconds_busy: 0.0,
+            mean_utilization: 0.5,
+            util_timeline: vec![],
+            job_latencies: vec![],
+            sched_overhead_ms_mean: 1.0,
+            sched_overhead_ms_max: 2.0,
+        }
+    }
+
+    #[test]
+    fn table_contains_rows_and_title() {
+        let rows = vec![Row::from(&result("a", 1, 10, 5.0))];
+        let t = render_table("Fig 7a", &rows);
+        assert!(t.contains("Fig 7a"));
+        assert!(t.contains("a"));
+        assert!(t.contains("10.0"));
+    }
+
+    #[test]
+    fn improvement_factors() {
+        let ours = result("pt", 5, 100, 10.0);
+        let other = result("b", 20, 100, 45.0);
+        let (v, c) = improvement(&ours, &other);
+        assert!((v - 4.0).abs() < 1e-9);
+        assert!((c - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_handles_zero_violations() {
+        let ours = result("pt", 0, 100, 10.0);
+        let other = result("b", 20, 100, 45.0);
+        let (v, _) = improvement(&ours, &other);
+        assert!(v.is_infinite());
+        let (v2, _) = improvement(&ours, &result("c", 0, 100, 45.0));
+        assert_eq!(v2, 1.0);
+    }
+
+    #[test]
+    fn series_renders_points() {
+        let s = render_series("Fig 2b", "minute", "arrivals",
+                              &[(0.0, 3.0), (1.0, 15.0)]);
+        assert!(s.contains("minute"));
+        assert!(s.contains("15.0"));
+    }
+
+    #[test]
+    fn summary_line_mentions_policy() {
+        let s = summary_line(&result("prompttuner", 2, 10, 3.5));
+        assert!(s.contains("prompttuner"));
+        assert!(s.contains("20.0%"));
+    }
+}

@@ -1,0 +1,474 @@
+//! The two-layer Prompt Bank structure: lookup (§4.3.2), insertion &
+//! replacement (§4.3.3).
+
+use anyhow::{bail, Result};
+
+use crate::promptbank::kmedoid::{cosine_distance, kmedoids};
+use crate::util::rng::Rng;
+
+/// One candidate initial prompt: a discrete token sequence plus its
+/// activation feature (extracted by the base LLM at construction time).
+#[derive(Clone, Debug)]
+pub struct PromptCandidate {
+    pub tokens: Vec<i32>,
+    pub feature: Vec<f32>,
+    /// Universe task this candidate originated from (None for synthetic
+    /// perturbations); used by evaluation, not by the bank itself.
+    pub source_task: Option<usize>,
+}
+
+/// Paper Eqn. 1: score(p) = mean eval-sample loss with candidate p as the
+/// prompt. Implemented by the PJRT runtime for real runs and by synthetic
+/// scorers in tests/benches. Lower is better.
+pub trait Scorer {
+    fn score(&mut self, tokens: &[i32]) -> f32;
+}
+
+impl<F: FnMut(&[i32]) -> f32> Scorer for F {
+    fn score(&mut self, tokens: &[i32]) -> f32 {
+        self(tokens)
+    }
+}
+
+/// Result of a lookup: the selected candidate and the query's cost.
+#[derive(Clone, Debug)]
+pub struct LookupResult {
+    pub best: usize,
+    pub best_score: f32,
+    /// Number of Eqn.-1 score evaluations performed (K + |cluster|).
+    pub evals: usize,
+}
+
+/// One cluster of the two-layer structure.
+#[derive(Clone, Debug)]
+struct Cluster {
+    /// Index into `prompts` of the representative (medoid) prompt.
+    medoid: usize,
+    /// Indices into `prompts` (includes the medoid).
+    members: Vec<usize>,
+}
+
+/// The two-layer data structure (Fig 5).
+pub struct TwoLayerBank {
+    prompts: Vec<PromptCandidate>,
+    clusters: Vec<Cluster>,
+    /// Replacement threshold (paper default 3000).
+    pub max_size: usize,
+}
+
+impl TwoLayerBank {
+    /// Build the structure by K-medoid clustering of activation features
+    /// (§4.3.1). `k` is the cluster count (paper default 50).
+    pub fn build(
+        prompts: Vec<PromptCandidate>,
+        k: usize,
+        max_size: usize,
+        rng: &mut Rng,
+    ) -> Result<TwoLayerBank> {
+        if prompts.is_empty() {
+            bail!("cannot build a Prompt Bank from zero candidates");
+        }
+        let features: Vec<Vec<f32>> =
+            prompts.iter().map(|p| p.feature.clone()).collect();
+        let (medoids, assignment) = kmedoids(&features, k, 30, rng);
+        let mut clusters: Vec<Cluster> = medoids
+            .iter()
+            .map(|&m| Cluster { medoid: m, members: vec![] })
+            .collect();
+        for (i, &c) in assignment.iter().enumerate() {
+            clusters[c].members.push(i);
+        }
+        clusters.retain(|c| !c.members.is_empty());
+        Ok(TwoLayerBank { prompts, clusters, max_size })
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn candidate(&self, idx: usize) -> &PromptCandidate {
+        &self.prompts[idx]
+    }
+
+    /// Two-layer lookup (Fig 5a): score the K representatives, descend
+    /// into the best cluster, score its members, return the best.
+    pub fn lookup(&self, scorer: &mut dyn Scorer) -> LookupResult {
+        debug_assert!(!self.clusters.is_empty());
+        let mut evals = 0usize;
+        // layer 1: representatives
+        let mut best_cluster = 0usize;
+        let mut best_rep_score = f32::INFINITY;
+        for (c, cl) in self.clusters.iter().enumerate() {
+            let s = scorer.score(&self.prompts[cl.medoid].tokens);
+            evals += 1;
+            if s < best_rep_score {
+                best_rep_score = s;
+                best_cluster = c;
+            }
+        }
+        // layer 2: members of the matched cluster
+        let mut best = self.clusters[best_cluster].medoid;
+        let mut best_score = best_rep_score;
+        for &m in &self.clusters[best_cluster].members {
+            if m == self.clusters[best_cluster].medoid {
+                continue; // already scored at layer 1
+            }
+            let s = scorer.score(&self.prompts[m].tokens);
+            evals += 1;
+            if s < best_score {
+                best_score = s;
+                best = m;
+            }
+        }
+        LookupResult { best, best_score, evals }
+    }
+
+    /// Brute-force lookup over all C candidates (the K = 1 baseline the
+    /// paper reports hours for; used to quantify the two-layer speedup).
+    pub fn lookup_bruteforce(&self, scorer: &mut dyn Scorer) -> LookupResult {
+        let mut best = 0usize;
+        let mut best_score = f32::INFINITY;
+        for (i, p) in self.prompts.iter().enumerate() {
+            let s = scorer.score(&p.tokens);
+            if s < best_score {
+                best_score = s;
+                best = i;
+            }
+        }
+        LookupResult { best, best_score, evals: self.prompts.len() }
+    }
+
+    /// Insertion & replacement (Fig 5b): attach the new candidate to the
+    /// cluster whose representative is nearest in feature space (no Eqn.-1
+    /// scoring involved); if the bank now exceeds `max_size`, evict the
+    /// member of that cluster closest to its representative (maximizing
+    /// remaining diversity). Returns the index of the inserted candidate.
+    pub fn insert(&mut self, cand: PromptCandidate) -> usize {
+        // nearest cluster by cosine distance of activation features
+        let mut best_c = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (c, cl) in self.clusters.iter().enumerate() {
+            let d = cosine_distance(&cand.feature,
+                                    &self.prompts[cl.medoid].feature);
+            if d < best_d {
+                best_d = d;
+                best_c = c;
+            }
+        }
+        let idx = self.prompts.len();
+        self.prompts.push(cand);
+        self.clusters[best_c].members.push(idx);
+        if self.prompts.len() > self.max_size {
+            self.replace_within(best_c, idx);
+        }
+        idx
+    }
+
+    /// Evict the member of cluster `c` with minimal cosine distance to the
+    /// representative (never the representative itself, never `keep`).
+    fn replace_within(&mut self, c: usize, keep: usize) {
+        let medoid = self.clusters[c].medoid;
+        let mut victim: Option<usize> = None;
+        let mut victim_d = f32::INFINITY;
+        for &m in &self.clusters[c].members {
+            if m == medoid || m == keep {
+                continue;
+            }
+            let d = cosine_distance(&self.prompts[m].feature,
+                                    &self.prompts[medoid].feature);
+            if d < victim_d {
+                victim_d = d;
+                victim = Some(m);
+            }
+        }
+        if let Some(v) = victim {
+            self.remove_candidate(v);
+        }
+    }
+
+    /// Remove a candidate by index (swap-remove with index fix-ups).
+    fn remove_candidate(&mut self, idx: usize) {
+        let last = self.prompts.len() - 1;
+        self.prompts.swap_remove(idx);
+        for cl in self.clusters.iter_mut() {
+            cl.members.retain(|&m| m != idx);
+            for m in cl.members.iter_mut() {
+                if *m == last {
+                    *m = idx;
+                }
+            }
+            if cl.medoid == last {
+                cl.medoid = idx;
+            }
+        }
+    }
+
+    /// Reassemble a bank from serialized parts (see `store`), validating
+    /// the structural invariants: members partition the candidate set and
+    /// every medoid belongs to its own cluster.
+    pub fn from_parts(
+        prompts: Vec<PromptCandidate>,
+        clusters: Vec<(usize, Vec<usize>)>,
+        max_size: usize,
+    ) -> Result<TwoLayerBank> {
+        if prompts.is_empty() || clusters.is_empty() {
+            bail!("empty bank parts");
+        }
+        let n = prompts.len();
+        let mut seen = vec![false; n];
+        for (medoid, members) in &clusters {
+            if members.is_empty() {
+                bail!("empty cluster");
+            }
+            if !members.contains(medoid) {
+                bail!("medoid {medoid} not a member of its cluster");
+            }
+            for &m in members {
+                if m >= n {
+                    bail!("member index {m} out of range {n}");
+                }
+                if seen[m] {
+                    bail!("candidate {m} in two clusters");
+                }
+                seen[m] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            bail!("cluster members do not cover all candidates");
+        }
+        Ok(TwoLayerBank {
+            prompts,
+            clusters: clusters
+                .into_iter()
+                .map(|(medoid, members)| Cluster { medoid, members })
+                .collect(),
+            max_size,
+        })
+    }
+
+    /// Total members across clusters (== len(); structural invariant).
+    pub fn member_count(&self) -> usize {
+        self.clusters.iter().map(|c| c.members.len()).sum()
+    }
+
+    /// Iterate candidate indices cluster by cluster.
+    pub fn clusters_view(&self) -> Vec<(usize, &[usize])> {
+        self.clusters
+            .iter()
+            .map(|c| (c.medoid, c.members.as_slice()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    /// Synthetic candidates on `nc` feature clusters; the "true" best
+    /// candidate is the one whose feature is closest to `target`.
+    fn make_candidates(rng: &mut Rng, n: usize, nc: usize) -> Vec<PromptCandidate> {
+        let centers: Vec<Vec<f32>> = (0..nc)
+            .map(|_| (0..8).map(|_| rng.normal() as f32 * 4.0).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                let c = i % nc;
+                let feature: Vec<f32> = centers[c]
+                    .iter()
+                    .map(|&x| x + 0.3 * rng.normal() as f32)
+                    .collect();
+                PromptCandidate {
+                    tokens: vec![i as i32; 4],
+                    feature,
+                    source_task: Some(c),
+                }
+            })
+            .collect()
+    }
+
+    /// Scorer: score = distance of candidate's (known) feature to target.
+    struct FeatScorer<'a> {
+        bank_feats: Vec<(&'a [i32], Vec<f32>)>,
+        target: Vec<f32>,
+    }
+    impl Scorer for FeatScorer<'_> {
+        fn score(&mut self, tokens: &[i32]) -> f32 {
+            let f = &self
+                .bank_feats
+                .iter()
+                .find(|(t, _)| *t == tokens)
+                .expect("unknown candidate")
+                .1;
+            cosine_distance(f, &self.target)
+        }
+    }
+
+    fn build(rng: &mut Rng, n: usize, nc: usize, k: usize) -> TwoLayerBank {
+        let cands = make_candidates(rng, n, nc);
+        TwoLayerBank::build(cands, k, 10_000, rng).unwrap()
+    }
+
+    #[test]
+    fn build_rejects_empty() {
+        let mut rng = Rng::new(0);
+        assert!(TwoLayerBank::build(vec![], 5, 100, &mut rng).is_err());
+    }
+
+    #[test]
+    fn lookup_costs_k_plus_cluster_size() {
+        let mut rng = Rng::new(1);
+        let bank = build(&mut rng, 120, 6, 6);
+        let mut calls = 0usize;
+        let res = bank.lookup(&mut |_: &[i32]| {
+            calls += 1;
+            calls as f32
+        });
+        assert_eq!(res.evals, calls);
+        // two-layer cost must be far below brute force
+        assert!(res.evals < 120 / 2, "evals = {}", res.evals);
+    }
+
+    #[test]
+    fn lookup_close_to_bruteforce_on_clustered_data() {
+        let mut rng = Rng::new(2);
+        let cands = make_candidates(&mut rng, 200, 8);
+        let feats: Vec<(Vec<i32>, Vec<f32>)> = cands
+            .iter()
+            .map(|c| (c.tokens.clone(), c.feature.clone()))
+            .collect();
+        let target = cands[17].feature.clone();
+        let bank = TwoLayerBank::build(cands, 8, 10_000, &mut rng).unwrap();
+        let mk = || FeatScorer {
+            bank_feats: feats.iter().map(|(t, f)| (t.as_slice(), f.clone())).collect(),
+            target: target.clone(),
+        };
+        let two = bank.lookup(&mut mk());
+        let brute = bank.lookup_bruteforce(&mut mk());
+        // the two-layer result must be near the global optimum
+        assert!(two.best_score <= brute.best_score + 0.05,
+                "two {} vs brute {}", two.best_score, brute.best_score);
+        assert!(two.evals < brute.evals / 4);
+    }
+
+    #[test]
+    fn insert_grows_and_respects_max_size() {
+        let mut rng = Rng::new(3);
+        let cands = make_candidates(&mut rng, 50, 5);
+        let mut bank = TwoLayerBank::build(cands, 5, 52, &mut rng).unwrap();
+        let extra = make_candidates(&mut rng, 10, 5);
+        for c in extra {
+            bank.insert(c);
+        }
+        assert!(bank.len() <= 52, "len = {}", bank.len());
+        assert_eq!(bank.member_count(), bank.len());
+    }
+
+    #[test]
+    fn replacement_evicts_most_redundant() {
+        let mut rng = Rng::new(4);
+        // two clusters far apart; cap at current size so insert must evict
+        let cands = make_candidates(&mut rng, 20, 2);
+        let mut bank = TwoLayerBank::build(cands, 2, 20, &mut rng).unwrap();
+        let before = bank.len();
+        let new = PromptCandidate {
+            tokens: vec![999; 4],
+            feature: vec![100.0; 8],
+            source_task: None,
+        };
+        bank.insert(new);
+        assert_eq!(bank.len(), before); // one in, one out
+        // the inserted candidate must still be present
+        assert!((0..bank.len()).any(|i| bank.candidate(i).tokens == vec![999; 4]));
+    }
+
+    #[test]
+    fn medoids_survive_replacement() {
+        let mut rng = Rng::new(5);
+        let cands = make_candidates(&mut rng, 30, 3);
+        let mut bank = TwoLayerBank::build(cands, 3, 30, &mut rng).unwrap();
+        let medoid_tokens: Vec<Vec<i32>> = bank
+            .clusters_view()
+            .iter()
+            .map(|(m, _)| bank.candidate(*m).tokens.clone())
+            .collect();
+        for _ in 0..10 {
+            let c = make_candidates(&mut rng, 1, 3).pop().unwrap();
+            bank.insert(c);
+        }
+        for mt in &medoid_tokens {
+            assert!(
+                bank.clusters_view()
+                    .iter()
+                    .any(|(m, _)| &bank.candidate(*m).tokens == mt),
+                "medoid evicted"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_membership_partition_invariant() {
+        check("members partition candidates", 20, |rng| {
+            let n = 10 + rng.below(60);
+            let nc = 1 + rng.below(5);
+            let k = 1 + rng.below(8);
+            let mut bank = build(rng, n, nc, k);
+            for _ in 0..rng.below(20) {
+                let c = make_candidates(rng, 1, nc).pop().unwrap();
+                bank.insert(c);
+            }
+            ensure(bank.member_count() == bank.len(),
+                   format!("{} members vs {} prompts",
+                           bank.member_count(), bank.len()))?;
+            // every index appears exactly once
+            let mut seen = vec![0usize; bank.len()];
+            for (_, members) in bank.clusters_view() {
+                for &m in members {
+                    ensure(m < bank.len(), "member out of range")?;
+                    seen[m] += 1;
+                }
+            }
+            ensure(seen.iter().all(|&c| c == 1), "index seen != once")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lookup_returns_minimum_of_evaluated() {
+        check("lookup best is min over evaluated", 20, |rng| {
+            let n = 20 + rng.below(80);
+            let bank = build(rng, n, 4, 5);
+            let mut scores = std::collections::HashMap::new();
+            let mut r2 = rng.fork(1);
+            let res = bank.lookup(&mut |t: &[i32]| {
+                *scores.entry(t.to_vec()).or_insert_with(|| r2.f32())
+            });
+            let best = bank.candidate(res.best).tokens.clone();
+            ensure(
+                scores.values().all(|&s| res.best_score <= s)
+                    || scores[&best] == res.best_score,
+                "best_score inconsistent",
+            )?;
+            ensure((res.best_score - scores[&best]).abs() < 1e-6,
+                   "returned score mismatch")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bruteforce_finds_global_min() {
+        let mut rng = Rng::new(6);
+        let bank = build(&mut rng, 60, 3, 4);
+        let res = bank.lookup_bruteforce(&mut |t: &[i32]| t[0] as f32);
+        assert_eq!(res.evals, 60);
+        assert_eq!(bank.candidate(res.best).tokens[0], 0);
+    }
+}

@@ -1,0 +1,242 @@
+//! K-medoid clustering over activation-feature cosine distance — the
+//! offline construction step of the two-layer data structure (§4.3.1,
+//! §5.2: cosine is the one distance metric that converged; the paper sets
+//! K = 50 for C ≤ 3000 candidates).
+
+use crate::util::rng::Rng;
+
+/// Cosine distance in [0, 2]: 1 − cos(a, b). Zero vectors are treated as
+/// maximally distant from everything (distance 1).
+pub fn cosine_distance(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut dot = 0f32;
+    let mut na = 0f32;
+    let mut nb = 0f32;
+    for i in 0..a.len() {
+        dot += a[i] * b[i];
+        na += a[i] * a[i];
+        nb += b[i] * b[i];
+    }
+    if na <= 0.0 || nb <= 0.0 {
+        return 1.0;
+    }
+    1.0 - dot / (na.sqrt() * nb.sqrt())
+}
+
+/// K-medoids (PAM-style alternate): k-means++-like seeding, then repeat
+/// { assign to nearest medoid; re-pick each cluster's medoid as the member
+/// minimizing total intra-cluster distance } until stable.
+///
+/// Returns `(medoids, assignment)` where `medoids[c]` is an index into
+/// `features` and `assignment[i]` is the cluster of point i.
+pub fn kmedoids(
+    features: &[Vec<f32>],
+    k: usize,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<usize>) {
+    let n = features.len();
+    assert!(n > 0, "kmedoids on empty set");
+    let k = k.min(n).max(1);
+
+    // ---- seeding: first medoid random, rest d²-weighted (k-means++) ----
+    let mut medoids: Vec<usize> = Vec::with_capacity(k);
+    medoids.push(rng.below(n));
+    let mut dist_to_nearest: Vec<f64> = features
+        .iter()
+        .map(|f| cosine_distance(f, &features[medoids[0]]) as f64)
+        .collect();
+    while medoids.len() < k {
+        let weights: Vec<f64> =
+            dist_to_nearest.iter().map(|d| (d * d).max(1e-12)).collect();
+        let next = rng.categorical(&weights);
+        medoids.push(next);
+        for (i, f) in features.iter().enumerate() {
+            let d = cosine_distance(f, &features[next]) as f64;
+            if d < dist_to_nearest[i] {
+                dist_to_nearest[i] = d;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for _ in 0..max_iters {
+        // assign
+        let mut changed = false;
+        for (i, f) in features.iter().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (c, &m) in medoids.iter().enumerate() {
+                let d = cosine_distance(f, &features[m]);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // update medoids
+        let mut members: Vec<Vec<usize>> = vec![vec![]; medoids.len()];
+        for (i, &c) in assignment.iter().enumerate() {
+            members[c].push(i);
+        }
+        let mut medoid_moved = false;
+        for (c, mem) in members.iter().enumerate() {
+            if mem.is_empty() {
+                continue;
+            }
+            let mut best = medoids[c];
+            let mut best_total = f64::INFINITY;
+            for &cand in mem {
+                let total: f64 = mem
+                    .iter()
+                    .map(|&o| cosine_distance(&features[cand], &features[o]) as f64)
+                    .sum();
+                if total < best_total {
+                    best_total = total;
+                    best = cand;
+                }
+            }
+            if medoids[c] != best {
+                medoids[c] = best;
+                medoid_moved = true;
+            }
+        }
+        if !changed && !medoid_moved {
+            break;
+        }
+    }
+    // final assignment against the settled medoids
+    for (i, f) in features.iter().enumerate() {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (c, &m) in medoids.iter().enumerate() {
+            let d = cosine_distance(f, &features[m]);
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        assignment[i] = best;
+    }
+    (medoids, assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    fn blob(rng: &mut Rng, center: &[f32], n: usize, noise: f32) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                center
+                    .iter()
+                    .map(|&c| c + noise * rng.normal() as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cosine_distance_basics() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        let c = [2.0f32, 0.0];
+        assert!((cosine_distance(&a, &b) - 1.0).abs() < 1e-6);
+        assert!(cosine_distance(&a, &c).abs() < 1e-6); // scale-invariant
+        assert!((cosine_distance(&a, &[-1.0, 0.0]) - 2.0).abs() < 1e-6);
+        assert_eq!(cosine_distance(&[0.0, 0.0], &a), 1.0); // zero vector
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let mut feats = blob(&mut rng, &[10.0, 0.0, 0.0], 30, 0.1);
+        feats.extend(blob(&mut rng, &[0.0, 10.0, 0.0], 30, 0.1));
+        feats.extend(blob(&mut rng, &[0.0, 0.0, 10.0], 30, 0.1));
+        let (medoids, assign) = kmedoids(&feats, 3, 20, &mut rng);
+        assert_eq!(medoids.len(), 3);
+        // All members of each ground-truth blob share one cluster label.
+        for blob_idx in 0..3 {
+            let labels: std::collections::BTreeSet<usize> =
+                (blob_idx * 30..(blob_idx + 1) * 30).map(|i| assign[i]).collect();
+            assert_eq!(labels.len(), 1, "blob {blob_idx} split: {labels:?}");
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(2);
+        let feats = vec![vec![1.0f32, 0.0], vec![0.0, 1.0]];
+        let (medoids, assign) = kmedoids(&feats, 10, 5, &mut rng);
+        assert!(medoids.len() <= 2);
+        assert_eq!(assign.len(), 2);
+    }
+
+    #[test]
+    fn single_cluster_covers_all() {
+        let mut rng = Rng::new(3);
+        let feats = blob(&mut rng, &[1.0, 2.0], 20, 0.5);
+        let (medoids, assign) = kmedoids(&feats, 1, 5, &mut rng);
+        assert_eq!(medoids.len(), 1);
+        assert!(assign.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn prop_assignment_is_nearest_medoid() {
+        check("each point assigned to its nearest medoid", 25, |rng| {
+            let n = 5 + rng.below(40);
+            let dim = 2 + rng.below(6);
+            let feats: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let k = 1 + rng.below(5.min(n));
+            let (medoids, assign) = kmedoids(&feats, k, 10, rng);
+            for (i, f) in feats.iter().enumerate() {
+                let mine = cosine_distance(f, &feats[medoids[assign[i]]]);
+                for &m in &medoids {
+                    let d = cosine_distance(f, &feats[m]);
+                    ensure(
+                        mine <= d + 1e-5,
+                        format!("point {i}: assigned {} but {} closer", mine, d),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_medoids_are_members() {
+        check("medoid indices valid and in own cluster", 25, |rng| {
+            let n = 3 + rng.below(30);
+            let feats: Vec<Vec<f32>> = (0..n)
+                .map(|_| vec![rng.normal() as f32, rng.normal() as f32])
+                .collect();
+            let k = 1 + rng.below(4);
+            let (medoids, assign) = kmedoids(&feats, k, 10, rng);
+            for (c, &m) in medoids.iter().enumerate() {
+                ensure(m < n, "medoid out of range")?;
+                ensure(assign[m] == c,
+                       format!("medoid {m} not in own cluster {c}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let feats: Vec<Vec<f32>> = (0..50)
+            .map(|i| vec![(i % 5) as f32, (i / 5) as f32 + 0.1])
+            .collect();
+        let a = kmedoids(&feats, 5, 10, &mut r1);
+        let b = kmedoids(&feats, 5, 10, &mut r2);
+        assert_eq!(a, b);
+    }
+}

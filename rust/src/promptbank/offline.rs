@@ -1,0 +1,51 @@
+//! Offline phase (§5.2): assemble the candidate corpus and build the
+//! two-layer structure against a real model runtime — feature extraction
+//! for every candidate, then K-medoid clustering.
+//!
+//! The corpus mirrors the paper's "thousands of public prompts": every
+//! universe task's instruction tag plus noisy variants (the stand-in
+//! documented in DESIGN.md §Substitutions).
+
+use anyhow::Result;
+
+use crate::promptbank::bank::{PromptCandidate, TwoLayerBank};
+use crate::runtime::ModelRuntime;
+use crate::tuning::data::TaskUniverse;
+use crate::util::rng::Rng;
+
+/// Assemble `size` candidates: each task's tag first, then noisy variants
+/// round-robin across tasks. Features are extracted with the real model.
+pub fn build_corpus(
+    rt: &ModelRuntime,
+    uni: &TaskUniverse,
+    size: usize,
+    flip_prob: f64,
+    rng: &mut Rng,
+) -> Result<Vec<PromptCandidate>> {
+    let mut cands = Vec::with_capacity(size);
+    for i in 0..size {
+        let t = i % uni.n_tasks;
+        let tokens = if i < uni.n_tasks {
+            uni.tag(t).to_vec()
+        } else {
+            uni.noisy_tag(rng, t, flip_prob)
+        };
+        let feature = rt.features(&tokens)?;
+        cands.push(PromptCandidate { tokens, feature, source_task: Some(t) });
+    }
+    Ok(cands)
+}
+
+/// Full offline phase: corpus + clustering. `k` clusters, replacement
+/// threshold `max_size` (paper defaults: K = 50, 3000 candidates).
+pub fn build_bank(
+    rt: &ModelRuntime,
+    uni: &TaskUniverse,
+    size: usize,
+    k: usize,
+    max_size: usize,
+    rng: &mut Rng,
+) -> Result<TwoLayerBank> {
+    let corpus = build_corpus(rt, uni, size, 0.3, rng)?;
+    TwoLayerBank::build(corpus, k, max_size, rng)
+}

@@ -1,0 +1,183 @@
+//! Bank persistence (the paper's offline phase, §5.2: construction takes
+//! minutes and the structure is reused across all jobs of an LLM, so the
+//! service stores it per model — "storage size remains under 5 GB").
+//!
+//! Binary layout (little-endian):
+//! ```text
+//! u32 magic "PTBK", u32 version, u32 max_size,
+//! u32 n_prompts, u32 n_clusters, u32 tok_len, u32 feat_dim
+//! per prompt:  i32 source_task (-1 = none), i32 tokens[tok_len],
+//!              f32 feature[feat_dim]
+//! per cluster: u32 medoid, u32 n_members, u32 members[n_members]
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::promptbank::bank::{PromptCandidate, TwoLayerBank};
+use crate::util::binio::{read_all, LeReader, LeWriter};
+
+const MAGIC: u32 = 0x5054_424B; // "PTBK"
+const VERSION: u32 = 1;
+
+/// Serialize a bank to disk.
+pub fn save(bank: &TwoLayerBank, path: impl AsRef<Path>) -> Result<()> {
+    if bank.is_empty() {
+        bail!("refusing to save an empty bank");
+    }
+    let tok_len = bank.candidate(0).tokens.len();
+    let feat_dim = bank.candidate(0).feature.len();
+    let clusters = bank.clusters_view();
+    let mut w = LeWriter::new();
+    w.u32(MAGIC);
+    w.u32(VERSION);
+    w.u32(bank.max_size as u32);
+    w.u32(bank.len() as u32);
+    w.u32(clusters.len() as u32);
+    w.u32(tok_len as u32);
+    w.u32(feat_dim as u32);
+    for i in 0..bank.len() {
+        let c = bank.candidate(i);
+        if c.tokens.len() != tok_len || c.feature.len() != feat_dim {
+            bail!("candidate {i} has inconsistent dims");
+        }
+        w.i32_slice(&[c.source_task.map(|t| t as i32).unwrap_or(-1)]);
+        w.i32_slice(&c.tokens);
+        w.f32_slice(&c.feature);
+    }
+    for (medoid, members) in clusters {
+        w.u32(medoid as u32);
+        w.u32(members.len() as u32);
+        for &m in members {
+            w.u32(m as u32);
+        }
+    }
+    w.write_to(path)
+}
+
+/// Load a bank saved by [`save`]; the structural invariants (partition,
+/// medoid membership) are re-validated.
+pub fn load(path: impl AsRef<Path>) -> Result<TwoLayerBank> {
+    let bytes = read_all(path)?;
+    let mut r = LeReader::new(&bytes);
+    let magic = r.u32()?;
+    let version = r.u32()?;
+    if magic != MAGIC || version != VERSION {
+        bail!("bad bank file header: magic={magic:#x} version={version}");
+    }
+    let max_size = r.u32()? as usize;
+    let n_prompts = r.u32()? as usize;
+    let n_clusters = r.u32()? as usize;
+    let tok_len = r.u32()? as usize;
+    let feat_dim = r.u32()? as usize;
+    let mut prompts = Vec::with_capacity(n_prompts);
+    for _ in 0..n_prompts {
+        let source = r.i32_vec(1)?[0];
+        let tokens = r.i32_vec(tok_len)?;
+        let feature = r.f32_vec(feat_dim)?;
+        prompts.push(PromptCandidate {
+            tokens,
+            feature,
+            source_task: (source >= 0).then_some(source as usize),
+        });
+    }
+    let mut clusters = Vec::with_capacity(n_clusters);
+    for _ in 0..n_clusters {
+        let medoid = r.u32()? as usize;
+        let n_members = r.u32()? as usize;
+        let mut members = Vec::with_capacity(n_members);
+        for _ in 0..n_members {
+            members.push(r.u32()? as usize);
+        }
+        clusters.push((medoid, members));
+    }
+    if r.remaining() != 0 {
+        bail!("bank file has {} trailing bytes", r.remaining());
+    }
+    TwoLayerBank::from_parts(prompts, clusters, max_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_bank(seed: u64, n: usize) -> TwoLayerBank {
+        let mut rng = Rng::new(seed);
+        let cands: Vec<PromptCandidate> = (0..n)
+            .map(|i| PromptCandidate {
+                tokens: vec![i as i32, (i * 2) as i32, 7],
+                feature: (0..6).map(|_| rng.normal() as f32).collect(),
+                source_task: if i % 3 == 0 { Some(i) } else { None },
+            })
+            .collect();
+        TwoLayerBank::build(cands, 4, 100, &mut rng).unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pt_bank_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let bank = sample_bank(1, 30);
+        let path = tmp("roundtrip.bank");
+        save(&bank, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), bank.len());
+        assert_eq!(back.n_clusters(), bank.n_clusters());
+        assert_eq!(back.max_size, bank.max_size);
+        for i in 0..bank.len() {
+            assert_eq!(back.candidate(i).tokens, bank.candidate(i).tokens);
+            assert_eq!(back.candidate(i).feature, bank.candidate(i).feature);
+            assert_eq!(back.candidate(i).source_task, bank.candidate(i).source_task);
+        }
+        assert_eq!(back.clusters_view(), bank.clusters_view());
+    }
+
+    #[test]
+    fn loaded_bank_answers_lookups_identically() {
+        let bank = sample_bank(2, 40);
+        let path = tmp("lookup.bank");
+        save(&bank, &path).unwrap();
+        let back = load(&path).unwrap();
+        let scorer = |t: &[i32]| (t[0] % 13) as f32;
+        let a = bank.lookup(&mut { scorer });
+        let b = back.lookup(&mut { scorer });
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let path = tmp("corrupt.bank");
+        std::fs::write(&path, [0u8; 16]).unwrap();
+        assert!(load(&path).is_err());
+        // truncated valid file
+        let bank = sample_bank(3, 10);
+        let good = tmp("trunc.bank");
+        save(&bank, &good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&good, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load(&good).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_structure() {
+        // hand-craft a file whose cluster members don't partition prompts
+        let bank = sample_bank(4, 8);
+        let path = tmp("invalid.bank");
+        save(&bank, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // duplicate the last member index (breaks the partition invariant)
+        let n = bytes.len();
+        let last4: [u8; 4] = bytes[n - 4..].try_into().unwrap();
+        bytes.extend_from_slice(&last4);
+        // fix the member count of the last cluster? no — leave inconsistent
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time — the flow is
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute_b` with device-resident
+//! parameters (the flat `theta` buffer is uploaded once per model load).
+//!
+//! HLO **text** (not serialized protos) is the interchange format: jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod model;
+pub mod scorer;
+
+pub use model::{ModelRuntime, TuneState};
+pub use scorer::RuntimeScorer;

@@ -1,0 +1,313 @@
+//! Per-variant model runtime: compiled executables for every exported
+//! function plus the device-resident flat parameter buffer.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+use crate::util::binio::read_f32_file;
+use crate::util::manifest::{InitKind, Manifest, ModelInfo};
+use crate::util::rng::Rng;
+
+/// Host-side Adam state of one prompt-tuning session. The tensors are
+/// small ([P, D] each), so round-tripping them through the host between
+/// steps costs microseconds; the heavyweight `theta` stays on device.
+#[derive(Clone, Debug)]
+pub struct TuneState {
+    pub prompt: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based Adam step counter.
+    pub step: f32,
+}
+
+impl TuneState {
+    pub fn new(prompt: Vec<f32>) -> Self {
+        let n = prompt.len();
+        TuneState { prompt, m: vec![0.0; n], v: vec![0.0; n], step: 0.0 }
+    }
+}
+
+/// A loaded model variant: PJRT client, compiled executables, theta.
+pub struct ModelRuntime {
+    pub info: ModelInfo,
+    client: PjRtClient,
+    theta: PjRtBuffer,
+    exe_embed: PjRtLoadedExecutable,
+    exe_score: PjRtLoadedExecutable,
+    exe_features: PjRtLoadedExecutable,
+    exe_tune_step: PjRtLoadedExecutable,
+    exe_eval_loss: PjRtLoadedExecutable,
+    exe_grad: PjRtLoadedExecutable,
+    /// Wall-clock seconds spent loading (compile + weight upload) — the
+    /// real "cold start" this architecture pays (cf. §2.2).
+    pub load_time_s: f64,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+}
+
+impl ModelRuntime {
+    /// Load a variant: compile all six artifacts and upload theta. When
+    /// the manifest carries no pretrained theta (the e2e variant), the
+    /// parameters are initialized from the manifest's segment init specs.
+    pub fn load(manifest: &Manifest, variant: &str) -> Result<ModelRuntime> {
+        let t0 = Instant::now();
+        let info = manifest
+            .models
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' not in manifest"))?
+            .clone();
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        let theta_host = match &info.theta_path {
+            Some(rel) => {
+                let theta = read_f32_file(manifest.dir.join(rel))?;
+                if theta.len() != info.n_params {
+                    bail!("theta.bin has {} params, manifest says {}",
+                          theta.len(), info.n_params);
+                }
+                theta
+            }
+            None => init_theta(&info, 1),
+        };
+        let theta = client
+            .buffer_from_host_buffer(&theta_host, &[info.n_params], None)
+            .map_err(|e| anyhow!("theta upload: {e}"))?;
+        let exe = |f: &str| -> Result<PjRtLoadedExecutable> {
+            compile(&client, &manifest.artifact_path(variant, f)?)
+        };
+        let rt = ModelRuntime {
+            exe_embed: exe("embed_prompt")?,
+            exe_score: exe("score")?,
+            exe_features: exe("features")?,
+            exe_tune_step: exe("tune_step")?,
+            exe_eval_loss: exe("eval_loss")?,
+            exe_grad: exe("grad_prompt")?,
+            info,
+            client,
+            theta,
+            load_time_s: 0.0,
+        };
+        let mut rt = rt;
+        rt.load_time_s = t0.elapsed().as_secs_f64();
+        Ok(rt)
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("f32 upload: {e}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("i32 upload: {e}"))
+    }
+
+    /// Run an executable and decompose the 1-tuple/(n)-tuple result.
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer])
+           -> Result<Vec<Literal>> {
+        let out = exe.execute_b(args).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+
+    fn check_ptoks(&self, ptoks: &[i32]) -> Result<()> {
+        if ptoks.len() != self.info.prompt_len {
+            bail!("prompt tokens: expected {}, got {}",
+                  self.info.prompt_len, ptoks.len());
+        }
+        Ok(())
+    }
+
+    fn check_batch(&self, toks: &[i32], tgts: &[i32], batch: usize) -> Result<()> {
+        let want = batch * self.info.seq;
+        if toks.len() != want || tgts.len() != want {
+            bail!("batch: expected {}x{}={} tokens, got {}/{}",
+                  batch, self.info.seq, want, toks.len(), tgts.len());
+        }
+        Ok(())
+    }
+
+    /// Candidate tokens -> continuous initial prompt ([P*D] row-major).
+    pub fn embed_prompt(&self, ptoks: &[i32]) -> Result<Vec<f32>> {
+        self.check_ptoks(ptoks)?;
+        let pt = self.buf_i32(ptoks, &[self.info.prompt_len])?;
+        let parts = self.run(&self.exe_embed, &[&self.theta, &pt])?;
+        parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Paper Eqn. 1: mean eval loss of a *discrete* candidate prompt over
+    /// an eval batch of `batch_eval` sequences.
+    pub fn score(&self, ptoks: &[i32], toks: &[i32], tgts: &[i32]) -> Result<f32> {
+        self.check_ptoks(ptoks)?;
+        self.check_batch(toks, tgts, self.info.batch_eval)?;
+        let be = self.info.batch_eval;
+        let s = self.info.seq;
+        let pt = self.buf_i32(ptoks, &[self.info.prompt_len])?;
+        let tk = self.buf_i32(toks, &[be, s])?;
+        let tg = self.buf_i32(tgts, &[be, s])?;
+        let parts = self.run(&self.exe_score, &[&self.theta, &pt, &tk, &tg])?;
+        parts[0].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Activation feature of a candidate prompt ([D]).
+    pub fn features(&self, ptoks: &[i32]) -> Result<Vec<f32>> {
+        self.check_ptoks(ptoks)?;
+        let pt = self.buf_i32(ptoks, &[self.info.prompt_len])?;
+        let parts = self.run(&self.exe_features, &[&self.theta, &pt])?;
+        parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Mean eval loss of a *continuous* prompt (ITA termination check).
+    pub fn eval_loss(&self, prompt: &[f32], toks: &[i32], tgts: &[i32]) -> Result<f32> {
+        let (p, d) = (self.info.prompt_len, self.info.d_model);
+        if prompt.len() != p * d {
+            bail!("prompt: expected {}x{}={}, got {}", p, d, p * d, prompt.len());
+        }
+        self.check_batch(toks, tgts, self.info.batch_eval)?;
+        let be = self.info.batch_eval;
+        let s = self.info.seq;
+        let pr = self.buf_f32(prompt, &[p, d])?;
+        let tk = self.buf_i32(toks, &[be, s])?;
+        let tg = self.buf_i32(tgts, &[be, s])?;
+        let parts = self.run(&self.exe_eval_loss, &[&self.theta, &pr, &tk, &tg])?;
+        parts[0].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// One fused Adam step on the soft prompt; updates `state` in place
+    /// and returns the training loss of the micro-batch.
+    pub fn tune_step(&self, state: &mut TuneState, toks: &[i32], tgts: &[i32],
+                     lr: f32) -> Result<f32> {
+        let (p, d) = (self.info.prompt_len, self.info.d_model);
+        self.check_batch(toks, tgts, self.info.batch_train)?;
+        let bt = self.info.batch_train;
+        let s = self.info.seq;
+        state.step += 1.0;
+        let pr = self.buf_f32(&state.prompt, &[p, d])?;
+        let m = self.buf_f32(&state.m, &[p, d])?;
+        let v = self.buf_f32(&state.v, &[p, d])?;
+        let st = self.buf_f32(&[state.step], &[])?;
+        let tk = self.buf_i32(toks, &[bt, s])?;
+        let tg = self.buf_i32(tgts, &[bt, s])?;
+        let lrb = self.buf_f32(&[lr], &[])?;
+        let parts = self.run(
+            &self.exe_tune_step,
+            &[&self.theta, &pr, &m, &v, &st, &tk, &tg, &lrb],
+        )?;
+        if parts.len() != 4 {
+            bail!("tune_step returned {} outputs, expected 4", parts.len());
+        }
+        state.prompt = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        state.m = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        state.v = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        parts[3].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Prompt gradient + loss for one micro-batch (the data-parallel
+    /// worker unit; the coordinator averages gradients and applies Adam
+    /// host-side — see `tuning::dp`).
+    pub fn grad_prompt(&self, prompt: &[f32], toks: &[i32], tgts: &[i32])
+                       -> Result<(Vec<f32>, f32)> {
+        let (p, d) = (self.info.prompt_len, self.info.d_model);
+        if prompt.len() != p * d {
+            bail!("prompt: expected {}, got {}", p * d, prompt.len());
+        }
+        self.check_batch(toks, tgts, self.info.batch_train)?;
+        let bt = self.info.batch_train;
+        let s = self.info.seq;
+        let pr = self.buf_f32(prompt, &[p, d])?;
+        let tk = self.buf_i32(toks, &[bt, s])?;
+        let tg = self.buf_i32(tgts, &[bt, s])?;
+        let parts = self.run(&self.exe_grad, &[&self.theta, &pr, &tk, &tg])?;
+        let grad = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let loss = parts[1].get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?;
+        Ok((grad, loss))
+    }
+}
+
+/// Initialize theta from the manifest's segment init specs (used for the
+/// e2e variant, which ships no pretrained weights).
+pub fn init_theta(info: &ModelInfo, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0.0f32; info.n_params];
+    for seg in &info.segments {
+        let slice = &mut theta[seg.offset..seg.offset + seg.count];
+        match seg.init {
+            InitKind::Normal(std) => {
+                for x in slice.iter_mut() {
+                    *x = (rng.normal() as f32) * std;
+                }
+            }
+            InitKind::Zeros => {}
+            InitKind::Ones => slice.fill(1.0),
+        }
+    }
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_info() -> ModelInfo {
+        use crate::util::manifest::Segment;
+        ModelInfo {
+            name: "t".into(),
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            vocab: 8,
+            seq: 4,
+            prompt_len: 2,
+            batch_train: 2,
+            batch_eval: 2,
+            n_params: 10,
+            segments: vec![
+                Segment { name: "a".into(), offset: 0, count: 4,
+                          init: InitKind::Normal(0.5) },
+                Segment { name: "b".into(), offset: 4, count: 3,
+                          init: InitKind::Ones },
+                Segment { name: "c".into(), offset: 7, count: 3,
+                          init: InitKind::Zeros },
+            ],
+            artifacts: Default::default(),
+            theta_path: None,
+        }
+    }
+
+    #[test]
+    fn init_theta_follows_segments() {
+        let theta = init_theta(&tiny_info(), 3);
+        assert_eq!(theta.len(), 10);
+        assert!(theta[0..4].iter().any(|&x| x != 0.0));
+        assert_eq!(&theta[4..7], &[1.0, 1.0, 1.0]);
+        assert_eq!(&theta[7..10], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn init_theta_deterministic() {
+        assert_eq!(init_theta(&tiny_info(), 9), init_theta(&tiny_info(), 9));
+        assert_ne!(init_theta(&tiny_info(), 9)[0], init_theta(&tiny_info(), 10)[0]);
+    }
+
+    #[test]
+    fn tune_state_zero_moments() {
+        let s = TuneState::new(vec![1.0; 8]);
+        assert_eq!(s.m, vec![0.0; 8]);
+        assert_eq!(s.v, vec![0.0; 8]);
+        assert_eq!(s.step, 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! The real Eqn.-1 scorer: adapts [`ModelRuntime::score`] to the Prompt
+//! Bank's [`Scorer`] trait with a fixed eval batch (the paper uses a
+//! handful of eval samples — 16 — so labelling effort stays minimal).
+
+use crate::promptbank::Scorer;
+use crate::runtime::ModelRuntime;
+
+/// Scores candidates against one job's eval batch via the PJRT runtime.
+pub struct RuntimeScorer<'a> {
+    rt: &'a ModelRuntime,
+    toks: Vec<i32>,
+    tgts: Vec<i32>,
+    /// Number of score evaluations performed (latency accounting).
+    pub evals: usize,
+}
+
+impl<'a> RuntimeScorer<'a> {
+    /// `toks`/`tgts` must be `batch_eval × seq` row-major token ids.
+    pub fn new(rt: &'a ModelRuntime, toks: Vec<i32>, tgts: Vec<i32>) -> Self {
+        assert_eq!(toks.len(), rt.info.batch_eval * rt.info.seq);
+        assert_eq!(tgts.len(), toks.len());
+        RuntimeScorer { rt, toks, tgts, evals: 0 }
+    }
+}
+
+impl Scorer for RuntimeScorer<'_> {
+    fn score(&mut self, tokens: &[i32]) -> f32 {
+        self.evals += 1;
+        self.rt
+            .score(tokens, &self.toks, &self.tgts)
+            .expect("runtime score failed")
+    }
+}

@@ -1,0 +1,267 @@
+//! A real (non-simulated) miniature of the serving plane: worker threads
+//! stand in for GPUs, each owning at most one loaded [`ModelRuntime`];
+//! loading (PJRT compile + weight upload) is the *real, measured* cold
+//! start, and routing jobs to a worker that already holds the right model
+//! is the *real* runtime reusing of the paper. Python is never involved —
+//! workers execute AOT artifacts only.
+//!
+//! `examples/cluster_serving.rs` drives this engine over a trace and
+//! reports warm/cold start times and SLO attainment.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::promptbank::TwoLayerBank;
+use crate::runtime::{ModelRuntime, RuntimeScorer};
+use crate::tuning::data::TaskUniverse;
+use crate::tuning::trainer::{Trainer, TrainerConfig};
+use crate::util::manifest::Manifest;
+
+/// One real LPT request.
+#[derive(Clone, Debug)]
+pub struct ServeJob {
+    pub id: usize,
+    /// Artifact variant name (e.g. "sim-gpt2b").
+    pub variant: String,
+    pub task_id: usize,
+    /// Initial prompt candidate tokens (length = prompt_len) — the user's
+    /// own prompt; replaced by the bank's pick when `use_bank` is set.
+    pub init_tokens: Vec<i32>,
+    /// Route through the Prompt Bank first (the caller applies the 20 %
+    /// latency budget, §4.4.3).
+    pub use_bank: bool,
+    pub target_loss: f32,
+    pub max_iters: usize,
+    pub lr: f32,
+}
+
+/// Completion record of one request.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    pub id: usize,
+    pub worker: usize,
+    /// Seconds spent loading the model (0 when served warm).
+    pub cold_start_s: f64,
+    /// Seconds spent on the Prompt Bank lookup (0 when skipped).
+    pub bank_s: f64,
+    /// Eqn.-1 evaluations the lookup performed.
+    pub bank_evals: usize,
+    /// Seconds spent tuning.
+    pub tune_s: f64,
+    pub iters: usize,
+    pub reached_target: bool,
+    pub final_loss: f32,
+}
+
+enum Msg {
+    Run(ServeJob),
+    Shutdown,
+}
+
+struct Worker {
+    tx: Sender<Msg>,
+    handle: JoinHandle<()>,
+    /// Variant currently loaded on the worker (engine's routing view).
+    loaded: Option<String>,
+    /// Jobs dispatched and not yet collected.
+    inflight: Arc<AtomicUsize>,
+}
+
+/// The serving engine: dispatcher + worker threads.
+pub struct ServeEngine {
+    workers: Vec<Worker>,
+    result_rx: Receiver<ServeOutcome>,
+    outstanding: usize,
+}
+
+impl ServeEngine {
+    /// Spawn `n_workers` threads. Each worker lazily loads model variants
+    /// on first use (the measured cold start). `bank` (if provided) is a
+    /// pre-built two-layer Prompt Bank shared by all workers — jobs with
+    /// `use_bank` run a real lookup on their worker before tuning (the
+    /// paper's sequential bank-then-LPT execution, §5.2).
+    pub fn start(artifacts_dir: impl Into<std::path::PathBuf>,
+                 n_workers: usize, uni: Arc<TaskUniverse>,
+                 bank: Option<Arc<TwoLayerBank>>) -> Result<ServeEngine> {
+        let dir = artifacts_dir.into();
+        let (result_tx, result_rx) = channel::<ServeOutcome>();
+        let mut workers = vec![];
+        for wid in 0..n_workers {
+            let (tx, rx) = channel::<Msg>();
+            let res_tx = result_tx.clone();
+            let dir = dir.clone();
+            let uni = uni.clone();
+            let bank = bank.clone();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let inflight_w = inflight.clone();
+            let handle = std::thread::spawn(move || {
+                worker_loop(wid, &dir, &uni, bank, rx, res_tx, inflight_w);
+            });
+            workers.push(Worker { tx, handle, loaded: None, inflight });
+        }
+        Ok(ServeEngine { workers, result_rx, outstanding: 0 })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dispatch a job: prefer an idle worker that already holds the
+    /// variant (warm), then any idle worker, then the least-loaded one.
+    pub fn submit(&mut self, job: ServeJob) -> Result<()> {
+        let variant = job.variant.clone();
+        let pick = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.inflight.load(Ordering::SeqCst) == 0
+                    && w.loaded.as_deref() == Some(variant.as_str()))
+            .map(|(i, _)| i)
+            .next()
+            .or_else(|| {
+                self.workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| w.inflight.load(Ordering::SeqCst) == 0)
+                    .map(|(i, _)| i)
+                    .next()
+            })
+            .unwrap_or_else(|| {
+                // least loaded
+                let mut best = 0;
+                let mut load = usize::MAX;
+                for (i, w) in self.workers.iter().enumerate() {
+                    let l = w.inflight.load(Ordering::SeqCst);
+                    if l < load {
+                        load = l;
+                        best = i;
+                    }
+                }
+                best
+            });
+        let w = &mut self.workers[pick];
+        w.inflight.fetch_add(1, Ordering::SeqCst);
+        w.loaded = Some(variant);
+        w.tx.send(Msg::Run(job)).map_err(|_| anyhow!("worker {pick} gone"))?;
+        self.outstanding += 1;
+        Ok(())
+    }
+
+    /// Collect `n` completed jobs (blocking).
+    pub fn collect(&mut self, n: usize) -> Result<Vec<ServeOutcome>> {
+        let mut out = vec![];
+        for _ in 0..n.min(self.outstanding) {
+            out.push(self.result_rx.recv().map_err(|_| anyhow!("workers gone"))?);
+            self.outstanding -= 1;
+        }
+        Ok(out)
+    }
+
+    /// Drain everything outstanding.
+    pub fn collect_all(&mut self) -> Result<Vec<ServeOutcome>> {
+        self.collect(usize::MAX)
+    }
+
+    /// Stop all workers.
+    pub fn shutdown(self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers {
+            let _ = w.handle.join();
+        }
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    dir: &std::path::Path,
+    uni: &TaskUniverse,
+    bank: Option<Arc<TwoLayerBank>>,
+    rx: Receiver<Msg>,
+    res_tx: Sender<ServeOutcome>,
+    inflight: Arc<AtomicUsize>,
+) {
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("worker {wid}: manifest load failed: {e}");
+            return;
+        }
+    };
+    let mut loaded: Option<(String, ModelRuntime)> = None;
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            Msg::Run(j) => j,
+            Msg::Shutdown => break,
+        };
+        // --- cold start when the wrong (or no) model is resident ---
+        let mut cold_start_s = 0.0;
+        let need_load =
+            loaded.as_ref().map(|(v, _)| v != &job.variant).unwrap_or(true);
+        if need_load {
+            match ModelRuntime::load(&manifest, &job.variant) {
+                Ok(rt) => {
+                    cold_start_s = rt.load_time_s;
+                    loaded = Some((job.variant.clone(), rt));
+                }
+                Err(e) => {
+                    eprintln!("worker {wid}: load {} failed: {e}", job.variant);
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    continue;
+                }
+            }
+        }
+        let rt = &loaded.as_ref().unwrap().1;
+        let trainer = Trainer::new(
+            rt,
+            uni,
+            TrainerConfig {
+                lr: job.lr,
+                max_iters: job.max_iters,
+                eval_every: 10,
+                seed: job.id as u64 + 1,
+            },
+        );
+        // --- Prompt Bank lookup (sequential with the job, §5.2) ---
+        let mut init_tokens = job.init_tokens.clone();
+        let mut bank_s = 0.0;
+        let mut bank_evals = 0;
+        if job.use_bank {
+            if let Some(bank) = bank.as_deref() {
+                let (etoks, etgts) = trainer.eval_batch(job.task_id);
+                let mut scorer = RuntimeScorer::new(rt, etoks, etgts);
+                let tb = Instant::now();
+                let pick = bank.lookup(&mut scorer);
+                bank_s = tb.elapsed().as_secs_f64();
+                bank_evals = pick.evals;
+                init_tokens = bank.candidate(pick.best).tokens.clone();
+            }
+        }
+        let t0 = Instant::now();
+        let outcome = trainer.tune(job.task_id, &init_tokens, job.target_loss);
+        let tune_s = t0.elapsed().as_secs_f64();
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        match outcome {
+            Ok(o) => {
+                let _ = res_tx.send(ServeOutcome {
+                    id: job.id,
+                    worker: wid,
+                    cold_start_s,
+                    bank_s,
+                    bank_evals,
+                    tune_s,
+                    iters: o.iters,
+                    reached_target: o.reached_target,
+                    final_loss: o.final_eval_loss,
+                });
+            }
+            Err(e) => eprintln!("worker {wid}: job {} failed: {e}", job.id),
+        }
+    }
+}

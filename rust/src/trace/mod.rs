@@ -1,0 +1,120 @@
+//! LPT workload traces: the spiky dynamic-traffic generator (stand-in for
+//! the paper's anonymized 2-hour production trace, Fig 2b), the task table
+//! (stand-in for Table 6), and a plain-text trace (de)serializer.
+
+pub mod generator;
+pub mod tasks;
+
+pub use generator::{Load, TraceConfig, TraceGenerator};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::workload::{JobSpec, Llm};
+
+/// Serialize a trace to a plain-text file (one job per line).
+pub fn save(path: impl AsRef<Path>, jobs: &[JobSpec]) -> Result<()> {
+    let mut out = String::from(
+        "# id llm task submit_s duration_s gpus base_iters quality slo_s\n",
+    );
+    for j in jobs {
+        out.push_str(&format!(
+            "{} {} {} {:.3} {:.3} {} {:.3} {:.4} {:.3}\n",
+            j.id,
+            j.llm.name(),
+            j.task_id,
+            j.submit_s,
+            j.duration_s,
+            j.traced_gpus,
+            j.base_iters,
+            j.user_prompt_quality,
+            j.slo_s
+        ));
+    }
+    std::fs::write(path.as_ref(), out)
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+/// Load a trace written by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+/// Parse trace text.
+pub fn parse(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs = vec![];
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let t: Vec<&str> = line.split_whitespace().collect();
+        if t.len() != 9 {
+            bail!("trace line {} malformed: '{line}'", lineno + 1);
+        }
+        jobs.push(JobSpec {
+            id: t[0].parse()?,
+            llm: Llm::from_name(t[1])?,
+            task_id: t[2].parse()?,
+            submit_s: t[3].parse()?,
+            duration_s: t[4].parse()?,
+            traced_gpus: t[5].parse()?,
+            base_iters: t[6].parse()?,
+            user_prompt_quality: t[7].parse()?,
+            slo_s: t[8].parse()?,
+        });
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_job(id: usize) -> JobSpec {
+        JobSpec {
+            id,
+            llm: Llm::V7B,
+            task_id: 5,
+            submit_s: 1.5,
+            duration_s: 120.0,
+            traced_gpus: 2,
+            base_iters: 88.25,
+            user_prompt_quality: 0.61,
+            slo_s: 180.0,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("pt_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let jobs = vec![sample_job(0), sample_job(1)];
+        save(&path, &jobs).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].id, 1);
+        assert_eq!(back[0].llm, Llm::V7B);
+        assert!((back[0].base_iters - 88.25).abs() < 1e-6);
+        assert!((back[0].user_prompt_quality - 0.61).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank() {
+        let text = "# header\n\n0 gpt2-base 1 0.0 10.0 1 5.0 0.5 20.0\n";
+        let jobs = parse(text).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].llm, Llm::Gpt2B);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse("0 gpt2-base 1 0.0\n").is_err());
+        assert!(parse("0 unknown-llm 1 0 10 1 5 0.5 20\n").is_err());
+    }
+}

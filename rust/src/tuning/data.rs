@@ -1,0 +1,289 @@
+//! The synthetic task universe, read from `artifacts/tasks.bin` — the
+//! Rust mirror of `python/compile/tasks.py` (same distributions, same
+//! binary layout, same ALPHA; the Python side *writes* the file, this
+//! side samples workloads from it at run time).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::binio::{read_all, LeReader};
+use crate::util::rng::Rng;
+
+/// Task-shift strength — must match python/compile/tasks.py::ALPHA.
+pub const ALPHA: f32 = 2.0;
+
+const MAGIC: u32 = 0x50544E4B; // "PTNK"
+const VERSION: u32 = 1;
+
+/// Shared base language + per-task shift vectors + discrete tags.
+#[derive(Clone, Debug)]
+pub struct TaskUniverse {
+    pub seed: u32,
+    pub vocab: usize,
+    pub n_tasks: usize,
+    pub n_archetypes: usize,
+    pub tag_len: usize,
+    /// [vocab * vocab] row-major base bigram logits.
+    pub base_logits: Vec<f32>,
+    /// [n_tasks * vocab] task shift vectors.
+    pub tvec: Vec<f32>,
+    /// [n_tasks] archetype of each task.
+    pub arch_id: Vec<i32>,
+    /// [n_tasks * tag_len] instruction tags.
+    pub tags: Vec<i32>,
+}
+
+impl TaskUniverse {
+    /// Load `tasks.bin` (layout documented in tasks.py::write_bin).
+    pub fn load(path: impl AsRef<Path>) -> Result<TaskUniverse> {
+        let bytes = read_all(path)?;
+        let mut r = LeReader::new(&bytes);
+        let magic = r.u32()?;
+        let version = r.u32()?;
+        if magic != MAGIC || version != VERSION {
+            bail!("bad tasks.bin header: magic={magic:#x} version={version}");
+        }
+        let seed = r.u32()?;
+        let vocab = r.u32()? as usize;
+        let n_tasks = r.u32()? as usize;
+        let n_archetypes = r.u32()? as usize;
+        let tag_len = r.u32()? as usize;
+        let uni = TaskUniverse {
+            seed,
+            vocab,
+            n_tasks,
+            n_archetypes,
+            tag_len,
+            base_logits: r.f32_vec(vocab * vocab)?,
+            tvec: r.f32_vec(n_tasks * vocab)?,
+            arch_id: r.i32_vec(n_tasks)?,
+            tags: r.i32_vec(n_tasks * tag_len)?,
+        };
+        if r.remaining() != 0 {
+            bail!("tasks.bin has {} trailing bytes", r.remaining());
+        }
+        Ok(uni)
+    }
+
+    /// Build a small synthetic universe in-process (tests/benches that
+    /// must not depend on artifacts).
+    pub fn synthetic(seed: u64, vocab: usize, n_tasks: usize,
+                     n_archetypes: usize, tag_len: usize) -> TaskUniverse {
+        let mut rng = Rng::new(seed);
+        let base_logits: Vec<f32> =
+            (0..vocab * vocab).map(|_| rng.normal() as f32).collect();
+        let arch: Vec<Vec<f32>> = (0..n_archetypes)
+            .map(|_| (0..vocab).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let arch_id: Vec<i32> =
+            (0..n_tasks).map(|_| rng.below(n_archetypes) as i32).collect();
+        let mut tvec = Vec::with_capacity(n_tasks * vocab);
+        for &a in &arch_id {
+            for j in 0..vocab {
+                tvec.push(arch[a as usize][j] + 0.35 * rng.normal() as f32);
+            }
+        }
+        let sig: Vec<Vec<i32>> = (0..n_archetypes)
+            .map(|_| (0..tag_len).map(|_| rng.below(vocab) as i32).collect())
+            .collect();
+        let mut tags = Vec::with_capacity(n_tasks * tag_len);
+        for &a in &arch_id {
+            for p in 0..tag_len {
+                if rng.f64() < 0.7 {
+                    tags.push(sig[a as usize][p]);
+                } else {
+                    tags.push(rng.below(vocab) as i32);
+                }
+            }
+        }
+        TaskUniverse {
+            seed: seed as u32,
+            vocab,
+            n_tasks,
+            n_archetypes,
+            tag_len,
+            base_logits,
+            tvec,
+            arch_id,
+            tags,
+        }
+    }
+
+    /// The instruction tag of one task.
+    pub fn tag(&self, task: usize) -> &[i32] {
+        &self.tags[task * self.tag_len..(task + 1) * self.tag_len]
+    }
+
+    /// Task shift vector.
+    pub fn task_vec(&self, task: usize) -> &[f32] {
+        &self.tvec[task * self.vocab..(task + 1) * self.vocab]
+    }
+
+    /// Sample one Markov sequence of `len` tokens for `task`.
+    pub fn sample_sequence(&self, rng: &mut Rng, task: usize, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = rng.below(self.vocab);
+        out.push(cur as i32);
+        let tv = self.task_vec(task);
+        let mut logits = vec![0.0f32; self.vocab];
+        for _ in 1..len {
+            let row = &self.base_logits[cur * self.vocab..(cur + 1) * self.vocab];
+            for j in 0..self.vocab {
+                logits[j] = row[j] + ALPHA * tv[j];
+            }
+            cur = rng.from_logits(&logits);
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// Sample a training batch: `(tokens, targets)` each `batch × seq`
+    /// row-major, targets shifted by one.
+    pub fn sample_batch(&self, rng: &mut Rng, task: usize, batch: usize,
+                        seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut tgts = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let s = self.sample_sequence(rng, task, seq + 1);
+            toks.extend_from_slice(&s[..seq]);
+            tgts.extend_from_slice(&s[1..]);
+        }
+        (toks, tgts)
+    }
+
+    /// A noisy variant of a task's tag (extra prompt-bank candidates).
+    pub fn noisy_tag(&self, rng: &mut Rng, task: usize, flip_prob: f64) -> Vec<i32> {
+        self.tag(task)
+            .iter()
+            .map(|&t| {
+                if rng.f64() < flip_prob {
+                    rng.below(self.vocab) as i32
+                } else {
+                    t
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uni() -> TaskUniverse {
+        TaskUniverse::synthetic(5, 32, 8, 3, 6)
+    }
+
+    #[test]
+    fn synthetic_shapes() {
+        let u = uni();
+        assert_eq!(u.base_logits.len(), 32 * 32);
+        assert_eq!(u.tvec.len(), 8 * 32);
+        assert_eq!(u.tags.len(), 8 * 6);
+        assert_eq!(u.tag(3).len(), 6);
+        assert_eq!(u.task_vec(7).len(), 32);
+    }
+
+    #[test]
+    fn sequences_in_vocab_and_deterministic() {
+        let u = uni();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = u.sample_sequence(&mut r1, 0, 50);
+        let b = u.sample_sequence(&mut r2, 0, 50);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| t >= 0 && (t as usize) < u.vocab));
+    }
+
+    #[test]
+    fn batch_targets_are_shifted() {
+        let u = uni();
+        let mut rng = Rng::new(2);
+        let (toks, tgts) = u.sample_batch(&mut rng, 1, 3, 10);
+        assert_eq!(toks.len(), 30);
+        assert_eq!(tgts.len(), 30);
+        // within each row, tgts[i] == toks[i+1]
+        for row in 0..3 {
+            for i in 0..9 {
+                assert_eq!(tgts[row * 10 + i], toks[row * 10 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_have_distinct_marginals() {
+        let u = uni();
+        let mut rng = Rng::new(3);
+        let count = |task: usize, rng: &mut Rng| {
+            let mut c = vec![0usize; u.vocab];
+            for _ in 0..50 {
+                for t in u.sample_sequence(rng, task, 30) {
+                    c[t as usize] += 1;
+                }
+            }
+            c
+        };
+        let a = count(0, &mut rng);
+        let b = count(4, &mut rng);
+        let total: usize = a.iter().sum();
+        let l1: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| ((x as f64) - (y as f64)).abs())
+            .sum::<f64>()
+            / total as f64;
+        assert!(l1 > 0.1, "tasks indistinguishable: {l1}");
+    }
+
+    #[test]
+    fn same_archetype_tags_agree_more() {
+        let u = TaskUniverse::synthetic(7, 64, 24, 3, 12);
+        let mut same = vec![];
+        let mut cross = vec![];
+        for i in 0..u.n_tasks {
+            for j in i + 1..u.n_tasks {
+                let agree = u
+                    .tag(i)
+                    .iter()
+                    .zip(u.tag(j))
+                    .filter(|(a, b)| a == b)
+                    .count() as f64
+                    / u.tag_len as f64;
+                if u.arch_id[i] == u.arch_id[j] {
+                    same.push(agree);
+                } else {
+                    cross.push(agree);
+                }
+            }
+        }
+        let m = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(m(&same) > m(&cross) + 0.1,
+                "same {} cross {}", m(&same), m(&cross));
+    }
+
+    #[test]
+    fn noisy_tag_flips_some() {
+        let u = uni();
+        let mut rng = Rng::new(4);
+        let noisy = u.noisy_tag(&mut rng, 0, 0.5);
+        assert_eq!(noisy.len(), u.tag_len);
+        let same = noisy.iter().zip(u.tag(0)).filter(|(a, b)| a == b).count();
+        assert!(same < u.tag_len); // at least one flip at p=0.5, len 6
+    }
+
+    #[test]
+    fn loads_real_tasks_bin_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/tasks.bin");
+        if !path.exists() {
+            eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
+            return;
+        }
+        let u = TaskUniverse::load(path).unwrap();
+        assert_eq!(u.vocab, 256);
+        assert_eq!(u.n_tasks, 64);
+        assert_eq!(u.tag_len, 16);
+        assert!(u.tags.iter().all(|&t| t >= 0 && (t as usize) < u.vocab));
+    }
+}

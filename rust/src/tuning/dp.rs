@@ -1,0 +1,110 @@
+//! Data-parallel prompt tuning with synchronous gradient exchange — the
+//! real counterpart of the paper's multi-GPU execution (§5.1, which uses
+//! Memcached between Knative function instances; here the storage channel
+//! is in-process and the "instances" are per-replica `grad_prompt` calls).
+//!
+//! Each replica computes the prompt gradient of its own micro-batch; the
+//! coordinator all-reduces (averages) the gradients and applies Adam
+//! host-side. With one replica this reproduces `tune_step` exactly (the
+//! equivalence is asserted in rust/tests/runtime_integration.rs).
+
+use anyhow::Result;
+
+use crate::runtime::ModelRuntime;
+
+/// Adam hyperparameters — must match python/compile/model.py.
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Host-side Adam state for data-parallel tuning.
+#[derive(Clone, Debug)]
+pub struct DpState {
+    pub prompt: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl DpState {
+    pub fn new(prompt: Vec<f32>) -> Self {
+        let n = prompt.len();
+        DpState { prompt, m: vec![0.0; n], v: vec![0.0; n], step: 0.0 }
+    }
+}
+
+/// One synchronous data-parallel step: every `(toks, tgts)` micro-batch is
+/// evaluated by `grad_prompt` (conceptually on its own GPU), gradients are
+/// averaged, Adam applied. Returns the mean micro-batch loss.
+pub fn dp_tune_step(
+    rt: &ModelRuntime,
+    state: &mut DpState,
+    micro_batches: &[(Vec<i32>, Vec<i32>)],
+    lr: f32,
+) -> Result<f32> {
+    assert!(!micro_batches.is_empty());
+    let n = state.prompt.len();
+    let mut grad_sum = vec![0.0f32; n];
+    let mut loss_sum = 0.0f32;
+    // --- scatter/compute: one grad_prompt per replica ---
+    for (toks, tgts) in micro_batches {
+        let (g, loss) = rt.grad_prompt(&state.prompt, toks, tgts)?;
+        for i in 0..n {
+            grad_sum[i] += g[i];
+        }
+        loss_sum += loss;
+    }
+    // --- all-reduce: average ---
+    let k = micro_batches.len() as f32;
+    for g in grad_sum.iter_mut() {
+        *g /= k;
+    }
+    // --- Adam (identical to the fused tune_step artifact) ---
+    state.step += 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(state.step);
+    let bc2 = 1.0 - ADAM_B2.powf(state.step);
+    for i in 0..n {
+        let g = grad_sum[i];
+        state.m[i] = ADAM_B1 * state.m[i] + (1.0 - ADAM_B1) * g;
+        state.v[i] = ADAM_B2 * state.v[i] + (1.0 - ADAM_B2) * g * g;
+        let mhat = state.m[i] / bc1;
+        let vhat = state.v[i] / bc2;
+        state.prompt[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+    Ok(loss_sum / k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_math_matches_reference() {
+        // hand-checked single Adam step on a 2-vector with known gradient
+        let mut st = DpState::new(vec![1.0, -1.0]);
+        st.step = 0.0;
+        // fake a gradient application by inlining the update with g known
+        let g = [0.5f32, -0.25];
+        st.step += 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(1.0);
+        let bc2 = 1.0 - ADAM_B2.powf(1.0);
+        for i in 0..2 {
+            st.m[i] = ADAM_B1 * st.m[i] + (1.0 - ADAM_B1) * g[i];
+            st.v[i] = ADAM_B2 * st.v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+            let mhat = st.m[i] / bc1;
+            let vhat = st.v[i] / bc2;
+            st.prompt[i] -= 0.1 * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+        // first Adam step moves by ~lr * sign(g)
+        assert!((st.prompt[0] - (1.0 - 0.1)).abs() < 1e-3, "{}", st.prompt[0]);
+        assert!((st.prompt[1] - (-1.0 + 0.1)).abs() < 1e-3, "{}", st.prompt[1]);
+    }
+
+    #[test]
+    fn dp_state_init() {
+        let st = DpState::new(vec![0.5; 6]);
+        assert_eq!(st.m, vec![0.0; 6]);
+        assert_eq!(st.v, vec![0.0; 6]);
+        assert_eq!(st.step, 0.0);
+    }
+}

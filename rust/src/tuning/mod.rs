@@ -1,0 +1,12 @@
+//! Real LPT execution: the synthetic task universe (shared with the
+//! Python build via `tasks.bin`), batch sampling, the prompt-tuning
+//! trainer that drives the PJRT runtime to a target loss (ITA), and the
+//! data-parallel executor with synchronous gradient exchange.
+
+pub mod data;
+pub mod dp;
+pub mod trainer;
+
+pub use data::TaskUniverse;
+pub use dp::{dp_tune_step, DpState};
+pub use trainer::{TuneOutcome, Trainer, TrainerConfig};

@@ -1,0 +1,182 @@
+//! Little-endian binary readers for the build-time artifacts:
+//! `theta.bin` (flat f32 parameters) and `tasks.bin` (task universe).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Read a whole file of little-endian f32 values.
+pub fn read_f32_file(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.as_ref().display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write little-endian f32 values (used to persist tuned prompts).
+pub fn write_f32_file(path: impl AsRef<Path>, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+/// Streaming little-endian reader over an in-memory byte buffer.
+pub struct LeReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> LeReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        LeReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("unexpected EOF: need {n} bytes, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Little-endian writer that mirrors [`LeReader`].
+#[derive(Default)]
+pub struct LeWriter {
+    buf: Vec<u8>,
+}
+
+impl LeWriter {
+    pub fn new() -> Self {
+        LeWriter { buf: vec![] }
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32_slice(&mut self, vs: &[f32]) {
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn i32_slice(&mut self, vs: &[i32]) {
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn write_to(self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.buf)
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+}
+
+/// Read an entire file into memory (helper that keeps error context).
+pub fn read_all(path: impl AsRef<Path>) -> Result<Vec<u8>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut buf = vec![];
+    f.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("pt_binio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = vec![0.0f32, 1.5, -2.25, f32::MAX];
+        write_f32_file(&path, &data).unwrap();
+        let back = read_f32_file(&path).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn f32_file_rejects_bad_length() {
+        let dir = std::env::temp_dir().join("pt_binio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8, 1, 2]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+    }
+
+    #[test]
+    fn le_reader_sequencing() {
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&7u32.to_le_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-3i32).to_le_bytes());
+        let mut r = LeReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.f32_vec(1).unwrap(), vec![1.5]);
+        assert_eq!(r.i32_vec(1).unwrap(), vec![-3]);
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn le_writer_reader_roundtrip() {
+        let mut w = LeWriter::new();
+        w.u32(42);
+        w.f32_slice(&[1.5, -2.0]);
+        w.i32_slice(&[-7, 9]);
+        let bytes = w.into_bytes();
+        let mut r = LeReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 42);
+        assert_eq!(r.f32_vec(2).unwrap(), vec![1.5, -2.0]);
+        assert_eq!(r.i32_vec(2).unwrap(), vec![-7, 9]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn le_reader_eof_is_error_not_panic() {
+        let mut r = LeReader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+        assert!(r.f32_vec(1).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (clap is not available offline): supports
+//! `--key value`, `--key=value`, boolean `--flag`, and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv tokens. A token `--k=v` or `--k v` becomes an option;
+    /// `--k` followed by another `--...` (or end) becomes a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// From the process environment, skipping the binary name (and an
+    /// optional subcommand already consumed by the caller).
+    pub fn from_env(skip: usize) -> Args {
+        Args::parse(std::env::args().skip(1 + skip))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("invalid value '{v}' for --{name}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_both_forms() {
+        let a = parse("--load medium --slo=1.5");
+        assert_eq!(a.get("load"), Some("medium"));
+        assert_eq!(a.get("slo"), Some("1.5"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("simulate trace.txt --seed 7 --verbose");
+        assert_eq!(a.positional, vec!["simulate", "trace.txt"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("seed"), Some("7"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("--x 1 --dry-run");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn parse_or_and_require() {
+        let a = parse("--n 5");
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 5);
+        assert_eq!(a.parse_or("m", 9usize).unwrap(), 9);
+        assert!(a.parse_or::<usize>("n", 0).is_ok());
+        assert!(parse("--n x").parse_or::<usize>("n", 0).is_err());
+        assert!(a.require("absent").is_err());
+        assert_eq!(a.require("n").unwrap(), "5");
+    }
+
+    #[test]
+    fn get_or_default() {
+        let a = parse("");
+        assert_eq!(a.get_or("load", "medium"), "medium");
+    }
+}

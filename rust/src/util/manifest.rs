@@ -1,0 +1,298 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the Python
+//! AOT pipeline and the Rust runtime. Plain whitespace-separated text; no
+//! serde in this environment, so the parser is hand-rolled and strict.
+//!
+//! Line grammar (see python/compile/aot.py `write_manifest`):
+//! ```text
+//! manifest-version 1
+//! tasks <relpath> seed=<u64>
+//! model <name> d=<n> layers=<n> heads=<n> vocab=<n> seq=<n> prompt=<n>
+//!       batch_train=<n> batch_eval=<n> n_params=<n>
+//! segment <model> <name> <offset> <count> <init-kind> <init-param>
+//! artifact <model> <fn> <relpath>
+//! theta <model> <relpath>
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// How a parameter segment is initialized when no pretrained theta exists.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitKind {
+    /// Gaussian with the given standard deviation.
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+/// One contiguous slice of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub count: usize,
+    pub init: InitKind,
+}
+
+/// Architecture + AOT batch dims of one exported model variant.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub prompt_len: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub n_params: usize,
+    pub segments: Vec<Segment>,
+    /// function name -> HLO text path (relative to the artifacts dir).
+    pub artifacts: BTreeMap<String, PathBuf>,
+    /// pretrained flat theta, if exported.
+    pub theta_path: Option<PathBuf>,
+}
+
+/// Parsed manifest: all model variants plus the shared task universe.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tasks_path: PathBuf,
+    pub universe_seed: u64,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn kv<'a>(tok: &'a str, key: &str) -> Result<&'a str> {
+    tok.strip_prefix(key)
+        .and_then(|s| s.strip_prefix('='))
+        .ok_or_else(|| anyhow!("expected {key}=<v>, got '{tok}'"))
+}
+
+fn kv_usize(tok: &str, key: &str) -> Result<usize> {
+    kv(tok, key)?.parse().with_context(|| format!("bad {key} in '{tok}'"))
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir is retained for resolving relative paths).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let first = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        if first.trim() != "manifest-version 1" {
+            bail!("unsupported manifest version: '{first}'");
+        }
+        let mut tasks_path = None;
+        let mut universe_seed = 0u64;
+        let mut models: BTreeMap<String, ModelInfo> = BTreeMap::new();
+        for line in lines {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks[0] {
+                "tasks" => {
+                    if toks.len() != 3 {
+                        bail!("bad tasks line: '{line}'");
+                    }
+                    tasks_path = Some(PathBuf::from(toks[1]));
+                    universe_seed = kv(toks[2], "seed")?.parse()?;
+                }
+                "model" => {
+                    if toks.len() != 11 {
+                        bail!("bad model line: '{line}'");
+                    }
+                    let name = toks[1].to_string();
+                    let info = ModelInfo {
+                        name: name.clone(),
+                        d_model: kv_usize(toks[2], "d")?,
+                        n_layers: kv_usize(toks[3], "layers")?,
+                        n_heads: kv_usize(toks[4], "heads")?,
+                        vocab: kv_usize(toks[5], "vocab")?,
+                        seq: kv_usize(toks[6], "seq")?,
+                        prompt_len: kv_usize(toks[7], "prompt")?,
+                        batch_train: kv_usize(toks[8], "batch_train")?,
+                        batch_eval: kv_usize(toks[9], "batch_eval")?,
+                        n_params: kv_usize(toks[10], "n_params")?,
+                        segments: vec![],
+                        artifacts: BTreeMap::new(),
+                        theta_path: None,
+                    };
+                    models.insert(name, info);
+                }
+                "segment" => {
+                    if toks.len() != 7 {
+                        bail!("bad segment line: '{line}'");
+                    }
+                    let model = models
+                        .get_mut(toks[1])
+                        .ok_or_else(|| anyhow!("segment before model: '{line}'"))?;
+                    let init = match toks[5] {
+                        "normal" => InitKind::Normal(toks[6].parse()?),
+                        "zeros" => InitKind::Zeros,
+                        "ones" => InitKind::Ones,
+                        other => bail!("unknown init kind '{other}'"),
+                    };
+                    model.segments.push(Segment {
+                        name: toks[2].to_string(),
+                        offset: toks[3].parse()?,
+                        count: toks[4].parse()?,
+                        init,
+                    });
+                }
+                "artifact" => {
+                    if toks.len() != 4 {
+                        bail!("bad artifact line: '{line}'");
+                    }
+                    let model = models
+                        .get_mut(toks[1])
+                        .ok_or_else(|| anyhow!("artifact before model: '{line}'"))?;
+                    model
+                        .artifacts
+                        .insert(toks[2].to_string(), PathBuf::from(toks[3]));
+                }
+                "theta" => {
+                    if toks.len() != 3 {
+                        bail!("bad theta line: '{line}'");
+                    }
+                    let model = models
+                        .get_mut(toks[1])
+                        .ok_or_else(|| anyhow!("theta before model: '{line}'"))?;
+                    model.theta_path = Some(PathBuf::from(toks[2]));
+                }
+                other => bail!("unknown manifest record '{other}'"),
+            }
+        }
+        let manifest = Manifest {
+            dir,
+            tasks_path: tasks_path.ok_or_else(|| anyhow!("manifest missing tasks line"))?,
+            universe_seed,
+            models,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Structural validation: segment offsets contiguous and summing to
+    /// n_params; prompt/batch dims positive.
+    pub fn validate(&self) -> Result<()> {
+        for m in self.models.values() {
+            let mut off = 0usize;
+            for seg in &m.segments {
+                if seg.offset != off {
+                    bail!("{}: segment {} offset {} != expected {off}",
+                          m.name, seg.name, seg.offset);
+                }
+                off += seg.count;
+            }
+            if off != m.n_params {
+                bail!("{}: segments sum {} != n_params {}", m.name, off, m.n_params);
+            }
+            if m.d_model == 0 || m.n_heads == 0 || m.d_model % m.n_heads != 0 {
+                bail!("{}: bad d_model/heads", m.name);
+            }
+            if m.prompt_len == 0 || m.seq == 0 {
+                bail!("{}: bad prompt/seq", m.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Absolute path of a model's artifact file.
+    pub fn artifact_path(&self, model: &str, func: &str) -> Result<PathBuf> {
+        let m = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+        let rel = m
+            .artifacts
+            .get(func)
+            .ok_or_else(|| anyhow!("model '{model}' has no artifact '{func}'"))?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Absolute path of the task universe binary.
+    pub fn tasks_path_abs(&self) -> PathBuf {
+        self.dir.join(&self.tasks_path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+manifest-version 1
+tasks tasks.bin seed=77
+model tiny d=8 layers=1 heads=2 vocab=16 seq=4 prompt=2 batch_train=2 batch_eval=3 n_params=20
+segment tiny wte 0 12 normal 0.02
+segment tiny rest 12 8 zeros 0.0
+artifact tiny score tiny/score.hlo.txt
+theta tiny tiny/theta.bin
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.universe_seed, 77);
+        assert_eq!(m.tasks_path_abs(), PathBuf::from("/a/tasks.bin"));
+        let tiny = &m.models["tiny"];
+        assert_eq!(tiny.d_model, 8);
+        assert_eq!(tiny.n_params, 20);
+        assert_eq!(tiny.segments.len(), 2);
+        assert_eq!(tiny.segments[0].init, InitKind::Normal(0.02));
+        assert_eq!(tiny.segments[1].init, InitKind::Zeros);
+        assert_eq!(
+            m.artifact_path("tiny", "score").unwrap(),
+            PathBuf::from("/a/tiny/score.hlo.txt")
+        );
+        assert_eq!(tiny.theta_path.as_deref(),
+                   Some(Path::new("tiny/theta.bin")));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse("manifest-version 2\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_gap_in_segments() {
+        let bad = SAMPLE.replace("segment tiny rest 12 8", "segment tiny rest 13 7");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_total() {
+        let bad = SAMPLE.replace("n_params=20", "n_params=21");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_record() {
+        let bad = format!("{SAMPLE}banana 1 2\n");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn unknown_lookups_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert!(m.artifact_path("tiny", "nope").is_err());
+        assert!(m.artifact_path("nope", "score").is_err());
+    }
+
+    #[test]
+    fn segment_names_preserved_in_order() {
+        let m = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        let names: Vec<&str> =
+            m.models["tiny"].segments.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["wte", "rest"]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrates: deterministic PRNG, statistics helpers, a mini
+//! property-testing harness, and parsers for the build-time artifacts
+//! (`manifest.txt`, `theta.bin`, `tasks.bin`).
+//!
+//! Everything here is dependency-free by design — the only external crates
+//! in the whole binary are `xla` (PJRT) and `anyhow`.
+
+pub mod binio;
+pub mod cli;
+pub mod manifest;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,121 @@
+//! A minimal property-based testing harness (proptest is not available in
+//! this offline environment, so we build the substrate ourselves).
+//!
+//! Usage (`no_run`: rustdoc binaries miss the xla rpath in this env):
+//! ```no_run
+//! use prompttuner::util::prop::check;
+//! check("addition commutes", 200, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Each case gets a fresh deterministic RNG; on failure the harness panics
+//! with the case index and seed so the exact case can be replayed.
+
+use super::rng::Rng;
+
+/// Base seed for all property checks; override with PROP_SEED env var.
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `cases` random cases of `f`; panic with diagnostics on the first
+/// failure. `f` returns `Err(msg)` to fail a case.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: PROP_SEED={seed0}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property also receives the case index (handy for
+/// size-scaling: small cases first, larger later).
+pub fn check_sized<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng, u64) -> Result<(), String>,
+{
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: PROP_SEED={seed0}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always ok", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        check("fails", 10, |rng| {
+            ensure(rng.f64() < 2.0, "impossible")?;
+            Err("boom".to_string())
+        });
+    }
+
+    #[test]
+    fn sized_variant_passes_index() {
+        let mut seen = vec![];
+        check_sized("sizes", 5, |_, i| {
+            seen.push(i);
+            Ok(())
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = vec![];
+        check("collect a", 5, |rng| {
+            a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut b = vec![];
+        check("collect b", 5, |rng| {
+            b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,176 @@
+//! Statistics helpers used by metrics reporting and the benches
+//! (means, percentiles, CDF extraction, online accumulators).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation; 0.0 for fewer than 2 points.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank with linear interpolation), q in [0, 1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+/// Empirical CDF sampled at `points` evenly spaced quantiles — the format
+/// the figure benches print as (x, F(x)) series.
+pub fn cdf_points(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || points == 0 {
+        return vec![];
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let q = (i as f64 + 1.0) / points as f64;
+            let idx = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+            (v[idx], q)
+        })
+        .collect()
+}
+
+/// Histogram over [lo, hi) with `bins` equal-width buckets; out-of-range
+/// values clamp into the first/last bucket.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    if bins == 0 || hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let i = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[i] += 1;
+    }
+    h
+}
+
+/// Online mean/max accumulator (used for scheduler-overhead tracking).
+#[derive(Clone, Debug, Default)]
+pub struct Accum {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum { n: 0, sum: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert!(cdf_points(&[], 10).is_empty());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0];
+        assert!((median(&xs) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone_and_ends_at_one() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let cdf = cdf_points(&xs, 10);
+        assert_eq!(cdf.len(), 10);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+        assert!((cdf.last().unwrap().0 - 99.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let xs = [-1.0, 0.1, 0.5, 0.9, 2.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 3]); // -1.0 clamps low, 0.5/0.9/2.0 land high
+        assert_eq!(h.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn accum_tracks_extremes() {
+        let mut a = Accum::new();
+        for x in [3.0, 1.0, 2.0] {
+            a.add(x);
+        }
+        assert_eq!(a.n, 3);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(a.max, 3.0);
+        assert_eq!(a.min, 1.0);
+    }
+}

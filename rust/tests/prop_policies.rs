@@ -1,0 +1,155 @@
+//! Property-based tests over the full policy stack: randomized workloads
+//! through each scheduler with per-tick invariant checks (GPU
+//! conservation, billable within provider budget, completion, cost
+//! accounting sanity). Uses the in-crate mini property harness.
+
+use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
+use prompttuner::cluster::{ClusterState, Policy, SimConfig, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::util::prop::{check, ensure};
+use prompttuner::util::rng::Rng;
+use prompttuner::workload::{PerfModel, GPU_PRICE_PER_S};
+
+/// Wraps a policy and asserts cluster-wide invariants on every callback.
+struct Checked<P: Policy> {
+    inner: P,
+    max_gpus: f64,
+    violations: Vec<String>,
+}
+
+impl<P: Policy> Checked<P> {
+    fn new(inner: P, max_gpus: usize) -> Self {
+        Checked { inner, max_gpus: max_gpus as f64, violations: vec![] }
+    }
+
+    fn audit(&mut self, st: &ClusterState, whence: &str) {
+        if st.busy() < -1e-9 {
+            self.violations.push(format!("{whence}: negative busy {}", st.busy()));
+        }
+        if st.billable() > self.max_gpus + 1e-9 {
+            self.violations.push(format!(
+                "{whence}: billable {} exceeds provider budget {}",
+                st.billable(),
+                self.max_gpus
+            ));
+        }
+    }
+}
+
+impl<P: Policy> Policy for Checked<P> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn tick_interval(&self) -> f64 {
+        self.inner.tick_interval()
+    }
+    fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+        self.inner.on_arrival(st, id);
+        self.audit(st, "arrival");
+    }
+    fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
+        self.inner.on_job_complete(st, id);
+        self.audit(st, "complete");
+    }
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.inner.on_tick(st);
+        self.audit(st, "tick");
+    }
+}
+
+fn random_load(rng: &mut Rng) -> Load {
+    [Load::Low, Load::Medium, Load::High][rng.below(3)]
+}
+
+fn run_checked(system: usize, rng: &mut Rng) -> Result<(), String> {
+    let seed = rng.next_u64();
+    let gpus = 8 + 8 * rng.below(4); // 8..32
+    let slo = [0.5, 1.0, 1.5][rng.below(3)];
+    let perf = PerfModel::default();
+    let mut gen = TraceGenerator::new(
+        TraceConfig { seed, slo_emergence: slo, ..Default::default() },
+        perf.clone(),
+    );
+    let jobs = gen.generate_main(random_load(rng));
+    let n_jobs = jobs.len();
+    let sim = Simulator::new(SimConfig { max_gpus: gpus, ..Default::default() }, perf);
+    let (res, violations) = match system {
+        0 => {
+            let mut p = Checked::new(
+                PromptTuner::new(PromptTunerConfig {
+                    max_gpus: gpus,
+                    seed,
+                    // randomize the ablation switches too
+                    use_bank: rng.below(2) == 0,
+                    use_warm_pools: rng.below(2) == 0,
+                    use_warm_allocator: rng.below(2) == 0,
+                    use_delay_schedulable: rng.below(2) == 0,
+                    use_latency_budget: rng.below(2) == 0,
+                    ..Default::default()
+                }),
+                gpus,
+            );
+            let r = sim.run(&mut p, jobs);
+            (r, p.violations)
+        }
+        1 => {
+            let mut p = Checked::new(
+                Infless::new(InflessConfig { max_gpus: gpus, seed, ..Default::default() }),
+                gpus,
+            );
+            let r = sim.run(&mut p, jobs);
+            (r, p.violations)
+        }
+        _ => {
+            let mut p = Checked::new(
+                ElasticFlow::new(ElasticFlowConfig {
+                    cluster_size: gpus,
+                    seed,
+                    ..Default::default()
+                }),
+                gpus,
+            );
+            let r = sim.run(&mut p, jobs);
+            (r, p.violations)
+        }
+    };
+    ensure(violations.is_empty(), format!("{:?}", violations.first()))?;
+    ensure(res.n_done == n_jobs,
+           format!("only {}/{} jobs finished (gpus={gpus}, slo={slo})",
+                   res.n_done, n_jobs))?;
+    // cost must be at least the busy GPU time (can't bill less than used)
+    ensure(
+        res.cost_usd >= res.gpu_seconds_busy * GPU_PRICE_PER_S - 1e-6,
+        format!("cost {} below busy-time floor", res.cost_usd),
+    )?;
+    ensure(res.mean_utilization <= 1.0 + 1e-9, "utilization > 1")?;
+    // every job latency positive and init wait non-negative
+    for (lat, slo_s, init, bank) in &res.job_latencies {
+        ensure(*lat > 0.0, "non-positive latency")?;
+        ensure(*slo_s > 0.0, "non-positive slo")?;
+        ensure(*init >= 0.0 && *bank >= 0.0, "negative wait")?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_prompttuner_invariants_hold() {
+    check("prompttuner invariants over random workloads", 12, |rng| {
+        run_checked(0, rng)
+    });
+}
+
+#[test]
+fn prop_infless_invariants_hold() {
+    check("infless invariants over random workloads", 12, |rng| {
+        run_checked(1, rng)
+    });
+}
+
+#[test]
+fn prop_elasticflow_invariants_hold() {
+    check("elasticflow invariants over random workloads", 12, |rng| {
+        run_checked(2, rng)
+    });
+}

@@ -1,0 +1,65 @@
+//! Integration test for the real serving plane: worker threads with
+//! real PJRT model loads, warm-vs-cold routing, and job completion.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use prompttuner::serve::{ServeEngine, ServeJob};
+use prompttuner::tuning::TaskUniverse;
+use prompttuner::util::manifest::Manifest;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn job(id: usize, task: usize, uni: &TaskUniverse) -> ServeJob {
+    ServeJob {
+        id,
+        variant: "sim-gpt2b".into(),
+        task_id: task,
+        init_tokens: uni.tag(task).to_vec(),
+        use_bank: false,
+        target_loss: 0.0, // unreachable => run max_iters
+        max_iters: 15,
+        lr: 0.05,
+    }
+}
+
+#[test]
+fn serve_engine_runs_jobs_and_reuses_runtime() {
+    let manifest = Manifest::load(artifacts_dir()).expect("run `make artifacts`");
+    let uni = Arc::new(TaskUniverse::load(manifest.tasks_path_abs()).unwrap());
+    let mut engine = ServeEngine::start(artifacts_dir(), 2, uni.clone(), None).unwrap();
+    assert_eq!(engine.n_workers(), 2);
+
+    // two jobs back-to-back on the same variant: the second served by a
+    // warm worker must skip the model load entirely
+    engine.submit(job(0, 1, &uni)).unwrap();
+    let first = engine.collect(1).unwrap();
+    assert_eq!(first.len(), 1);
+    let cold = &first[0];
+    assert!(cold.cold_start_s > 0.5,
+            "first job should pay a real cold start, got {}", cold.cold_start_s);
+    assert_eq!(cold.iters, 15);
+    assert!(cold.final_loss.is_finite());
+
+    engine.submit(job(1, 2, &uni)).unwrap();
+    let second = engine.collect(1).unwrap();
+    let warm = &second[0];
+    assert_eq!(warm.worker, cold.worker, "warm routing must reuse the worker");
+    assert_eq!(warm.cold_start_s, 0.0, "warm job must not reload the model");
+    assert!(warm.tune_s < cold.tune_s + cold.cold_start_s,
+            "warm e2e should beat cold e2e");
+
+    // a burst of jobs exercising both workers
+    for i in 2..6 {
+        engine.submit(job(i, i % 4, &uni)).unwrap();
+    }
+    let rest = engine.collect_all().unwrap();
+    assert_eq!(rest.len(), 4);
+    for o in &rest {
+        assert_eq!(o.iters, 15);
+        assert!(o.final_loss.is_finite());
+    }
+    engine.shutdown();
+}
