@@ -4,36 +4,26 @@
 //! this offline environment) that prints the rows/series of one paper
 //! table or figure. `cargo bench` runs them all; EXPERIMENTS.md records
 //! paper-vs-measured.
+//!
+//! The grid benches (Fig 7/8, Tables 7/8, perf) now run their
+//! independent (policy, trace, seed) cells in parallel through
+//! [`prompttuner::bench::run_sweep`] and emit `BENCH_<suite>.json` perf
+//! records; the helpers here stay as thin serial wrappers for the
+//! remaining single-run benches.
 
 #![allow(dead_code)]
 
-use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
+pub use prompttuner::bench::{
+    run_cell, run_sweep, BenchReport, CellResult, SweepCell, SYSTEMS,
+};
 use prompttuner::cluster::{Policy, SimConfig, SimResult, Simulator};
-use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
 use prompttuner::workload::{JobSpec, PerfModel};
 
-pub const SYSTEMS: [&str; 3] = ["prompttuner", "infless", "elasticflow"];
-
 pub fn make_policy(system: &str, gpus: usize, seed: u64) -> Box<dyn Policy> {
-    match system {
-        "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
-            max_gpus: gpus,
-            seed,
-            ..Default::default()
-        })),
-        "infless" => Box::new(Infless::new(InflessConfig {
-            max_gpus: gpus,
-            seed,
-            ..Default::default()
-        })),
-        "elasticflow" => Box::new(ElasticFlow::new(ElasticFlowConfig {
-            cluster_size: gpus,
-            seed,
-            ..Default::default()
-        })),
-        other => panic!("unknown system {other}"),
-    }
+    prompttuner::bench::make_policy(&SweepCell::new(
+        system, system, Load::Medium, 1.0, gpus, seed,
+    ))
 }
 
 pub fn gen_trace(load: Load, slo: f64, seed: u64) -> Vec<JobSpec> {
@@ -54,8 +44,16 @@ pub fn run_sim(system: &str, jobs: Vec<JobSpec>, gpus: usize, seed: u64) -> SimR
     sim.run(policy.as_mut(), jobs)
 }
 
-/// Average violation/cost over seeds (the paper runs one trace; we
-/// average a few seeds for stable series).
+/// Average violation/cost over a slice of already-run sweep results.
+pub fn avg_of(results: &[&CellResult]) -> (f64, f64) {
+    let n = results.len().max(1) as f64;
+    let viol: f64 = results.iter().map(|r| r.result.violation_rate()).sum();
+    let cost: f64 = results.iter().map(|r| r.result.cost_usd).sum();
+    (100.0 * viol / n, cost / n)
+}
+
+/// Average violation/cost over seeds, executed serially (kept for the
+/// small benches; the grid benches sweep in parallel instead).
 pub fn avg_runs(system: &str, load: Load, slo: f64, gpus: usize,
                 seeds: &[u64]) -> (f64, f64) {
     let mut viol = 0.0;

@@ -5,24 +5,59 @@
 //! Paper reference: PromptTuner achieves 15–25 % lower violation than
 //! INFless, 48–51 % lower than ElasticFlow; cost savings of 17–38 % vs
 //! INFless and up to 70 % vs ElasticFlow at S = 1.5.
+//!
+//! All (system × load × S × seed) cells run in parallel through the
+//! sweep harness; a BENCH_fig7.json perf record is emitted.
 
 #[path = "common.rs"]
 mod common;
+
+use std::time::Instant;
 
 use common::*;
 use prompttuner::trace::Load;
 
 fn main() {
     let seeds = [42u64, 43, 44];
+    let loads = [("low", Load::Low), ("medium", Load::Medium), ("high", Load::High)];
+    let slos = [0.5, 1.0, 1.5];
+
+    // ---- build the full grid up front, run it once in parallel --------
+    let mut cells = vec![];
+    for (name, load) in loads {
+        for system in SYSTEMS {
+            for &seed in &seeds {
+                cells.push(SweepCell::new(
+                    format!("fig7ab/{name}"), system, load, 1.0, 32, seed));
+            }
+        }
+    }
+    for &slo in &slos {
+        for system in SYSTEMS {
+            for &seed in &seeds {
+                cells.push(SweepCell::new(
+                    format!("fig7cd/S{slo}"), system, Load::Medium, slo, 32, seed));
+            }
+        }
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    let select = |label: &str, system: &str| -> Vec<&CellResult> {
+        results
+            .iter()
+            .filter(|r| r.cell.label == label && r.cell.system == system)
+            .collect()
+    };
 
     banner("Fig 7a/7b — SLO violation (%) and cost ($) vs load (S = 1.0)");
     println!("{:<14} {:>12} {:>12} {:>12}", "load", "prompttuner", "infless",
              "elasticflow");
-    for (name, load) in [("low", Load::Low), ("medium", Load::Medium),
-                         ("high", Load::High)] {
+    for (name, _) in loads {
         let v: Vec<(f64, f64)> = SYSTEMS
             .iter()
-            .map(|s| avg_runs(s, load, 1.0, 32, &seeds))
+            .map(|s| avg_of(&select(&format!("fig7ab/{name}"), s)))
             .collect();
         println!("{:<14} {:>11.1}% {:>11.1}% {:>11.1}%", format!("viol {name}"),
                  v[0].0, v[1].0, v[2].0);
@@ -34,10 +69,10 @@ fn main() {
     println!("{:<14} {:>12} {:>12} {:>12}", "S", "prompttuner", "infless",
              "elasticflow");
     let mut improvements = vec![];
-    for slo in [0.5, 1.0, 1.5] {
+    for &slo in &slos {
         let v: Vec<(f64, f64)> = SYSTEMS
             .iter()
-            .map(|s| avg_runs(s, Load::Medium, slo, 32, &seeds))
+            .map(|s| avg_of(&select(&format!("fig7cd/S{slo}"), s)))
             .collect();
         println!("{:<14} {:>11.1}% {:>11.1}% {:>11.1}%", format!("viol S={slo}"),
                  v[0].0, v[1].0, v[2].0);
@@ -58,5 +93,12 @@ fn main() {
     for (slo, vi, ve, ci, ce) in improvements {
         println!("{:<8} {:>15.2}x {:>19.2}x {:>13.2}x {:>17.2}x",
                  slo, vi, ve, ci, ce);
+    }
+
+    let report = BenchReport::new("fig7", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!("\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+                             report.cells.len(), path.display()),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
     }
 }

@@ -5,40 +5,30 @@
 //! (c)    cold-allocator window-size sweep (paper: 60 s is the sweet spot);
 //! (d)    Prompt-Bank size sweep (paper: below ~2000 candidates both
 //!        violations and cost rise).
+//!
+//! All ablation cells run in parallel through the sweep harness; a
+//! BENCH_fig8.json perf record is emitted.
 
 #[path = "common.rs"]
 mod common;
 
+use std::time::Instant;
+
 use common::*;
-use prompttuner::cluster::{SimConfig, Simulator};
-use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::coordinator::PromptTunerConfig;
 use prompttuner::promptbank::BankModel;
 use prompttuner::trace::Load;
-use prompttuner::workload::PerfModel;
 
-fn run_cfg(cfg: PromptTunerConfig, slo: f64, seeds: &[u64]) -> (f64, f64) {
-    let mut viol = 0.0;
-    let mut cost = 0.0;
-    for &s in seeds {
-        let jobs = gen_trace(Load::Medium, slo, s);
-        let sim = Simulator::new(
-            SimConfig { max_gpus: 32, ..Default::default() },
-            PerfModel::default(),
-        );
-        let mut p = PromptTuner::new(PromptTunerConfig { seed: s, ..cfg.clone() });
-        let r = sim.run(&mut p, jobs);
-        viol += r.violation_rate();
-        cost += r.cost_usd;
-    }
-    (100.0 * viol / seeds.len() as f64, cost / seeds.len() as f64)
+fn ablation_cell(label: String, cfg: PromptTunerConfig, slo: f64,
+                 seed: u64) -> SweepCell {
+    let mut c = SweepCell::new(label, "prompttuner", Load::Medium, slo, 32, seed);
+    c.cfg = Some(cfg);
+    c
 }
 
 fn main() {
     let seeds = [42u64, 43, 44];
 
-    banner("Fig 8a/8b — prompt reusing (P.R.) & runtime reusing (R.R.) ablation");
-    println!("{:<22} {:>10} {:>10} {:>10}  |  {:>9} {:>9} {:>9}",
-             "config", "S=0.5", "S=1.0", "S=1.5", "S=0.5$", "S=1.0$", "S=1.5$");
     let configs: [(&str, PromptTunerConfig); 4] = [
         ("full (P.R.+R.R.)", PromptTunerConfig::default()),
         ("w/o P.R.", PromptTunerConfig { use_bank: false, ..Default::default() }),
@@ -49,11 +39,58 @@ fn main() {
             ..Default::default()
         }),
     ];
-    for (label, cfg) in configs {
+    let windows = [15.0f64, 30.0, 60.0, 120.0, 300.0];
+    let sizes = [500usize, 1000, 2000, 3000];
+
+    // ---- build the whole grid, run it once in parallel ----------------
+    let mut cells = vec![];
+    for (label, cfg) in &configs {
+        for slo in [0.5, 1.0, 1.5] {
+            for &seed in &seeds {
+                cells.push(ablation_cell(
+                    format!("fig8ab/{label}/S{slo}"), cfg.clone(), slo, seed));
+            }
+        }
+    }
+    for &window in &windows {
+        for &seed in &seeds {
+            cells.push(ablation_cell(
+                format!("fig8c/w{window}"),
+                PromptTunerConfig { window_s: window, ..Default::default() },
+                1.0,
+                seed,
+            ));
+        }
+    }
+    for &size in &sizes {
+        for &seed in &seeds {
+            let bank = BankModel { bank_size: size, ..Default::default() };
+            cells.push(ablation_cell(
+                format!("fig8d/c{size}"),
+                PromptTunerConfig { bank, ..Default::default() },
+                1.0,
+                seed,
+            ));
+        }
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    let avg = |label: String| -> (f64, f64) {
+        let sel: Vec<&CellResult> =
+            results.iter().filter(|r| r.cell.label == label).collect();
+        avg_of(&sel)
+    };
+
+    banner("Fig 8a/8b — prompt reusing (P.R.) & runtime reusing (R.R.) ablation");
+    println!("{:<22} {:>10} {:>10} {:>10}  |  {:>9} {:>9} {:>9}",
+             "config", "S=0.5", "S=1.0", "S=1.5", "S=0.5$", "S=1.0$", "S=1.5$");
+    for (label, _) in &configs {
         let mut viols = vec![];
         let mut costs = vec![];
         for slo in [0.5, 1.0, 1.5] {
-            let (v, c) = run_cfg(cfg.clone(), slo, &seeds);
+            let (v, c) = avg(format!("fig8ab/{label}/S{slo}"));
             viols.push(v);
             costs.push(c);
         }
@@ -64,26 +101,24 @@ fn main() {
 
     banner("Fig 8c — warm-pool idle-window size sweep (S = 1.0, medium)");
     println!("{:<12} {:>14} {:>10}", "window (s)", "violation", "cost");
-    for window in [15.0f64, 30.0, 60.0, 120.0, 300.0] {
-        let (v, c) = run_cfg(
-            PromptTunerConfig { window_s: window, ..Default::default() },
-            1.0,
-            &seeds,
-        );
+    for &window in &windows {
+        let (v, c) = avg(format!("fig8c/w{window}"));
         println!("{:<12} {:>13.1}% {:>9.2}$", window, v, c);
     }
     println!("(paper: 60 s balances violation against cost)");
 
     banner("Fig 8d — Prompt Bank size sweep (S = 1.0, medium)");
     println!("{:<12} {:>14} {:>10}", "bank size", "violation", "cost");
-    for size in [500usize, 1000, 2000, 3000] {
-        let bank = BankModel { bank_size: size, ..Default::default() };
-        let (v, c) = run_cfg(
-            PromptTunerConfig { bank, ..Default::default() },
-            1.0,
-            &seeds,
-        );
+    for &size in &sizes {
+        let (v, c) = avg(format!("fig8d/c{size}"));
         println!("{:<12} {:>13.1}% {:>9.2}$", size, v, c);
     }
     println!("(paper: shrinking below ~2000 raises both metrics)");
+
+    let report = BenchReport::new("fig8", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!("\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+                             report.cells.len(), path.display()),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
 }

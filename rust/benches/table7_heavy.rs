@@ -5,82 +5,87 @@
 //! Paper reference: PromptTuner cuts violations 1.36–2.90× (LLaMA-30B),
 //! 1.56–3.24× (Qwen7B-R1) and dominates the 96-GPU run (25.4 % vs
 //! 57.1 % / 78.2 %), with sub-70 ms scheduling overhead.
+//!
+//! All (setting × system × seed) cells run in parallel through the
+//! sweep harness; a BENCH_table7.json perf record is emitted.
 
 #[path = "common.rs"]
 mod common;
 
+use std::time::Instant;
+
 use common::*;
-use prompttuner::cluster::{SimConfig, Simulator};
-use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
-use prompttuner::workload::{Llm, PerfModel};
+use prompttuner::trace::Load;
+use prompttuner::workload::Llm;
 
 fn main() {
-    let perf = PerfModel::default();
     banner("Table 7 — heavy workload evaluation");
     println!("{:<14} {:<22} {:>12} {:>12} {:>12}", "setting", "metric",
              "prompttuner", "infless", "elasticflow");
 
+    let mut cells = vec![];
     for (label, llm) in [("LLaMA-30B", Llm::Llama30B), ("Qwen7B-R1", Llm::Qwen7BR1)] {
-        let mut viol = vec![];
-        let mut cost = vec![];
         for system in SYSTEMS {
-            let mut v = 0.0;
-            let mut c = 0.0;
-            let seeds = [7u64, 8, 9];
-            for &seed in &seeds {
-                let mut gen = TraceGenerator::new(
-                    TraceConfig { seed, ..Default::default() },
-                    perf.clone(),
-                );
-                let jobs = gen.generate_heavy(llm);
-                let r = run_sim(system, jobs, 32, seed);
-                v += r.violation_rate();
-                c += r.cost_usd;
+            for seed in [7u64, 8, 9] {
+                let mut c = SweepCell::new(
+                    format!("table7/{label}"), system, Load::Medium, 1.0, 32, seed);
+                c.heavy = Some(llm);
+                cells.push(c);
             }
-            viol.push(100.0 * v / 3.0);
-            cost.push(c / 3.0);
         }
+    }
+    // large-scale: 96 GPUs, 3x medium load
+    for system in SYSTEMS {
+        for seed in [11u64, 12, 13] {
+            let mut c = SweepCell::new(
+                "table7/large-scale", system, Load::Medium, 1.0, 96, seed);
+            c.scale = 3.0;
+            cells.push(c);
+        }
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    let select = |label: &str, system: &str| -> Vec<&CellResult> {
+        results
+            .iter()
+            .filter(|r| r.cell.label == label && r.cell.system == system)
+            .collect()
+    };
+
+    for label in ["LLaMA-30B", "Qwen7B-R1"] {
+        let per: Vec<(f64, f64)> = SYSTEMS
+            .iter()
+            .map(|s| avg_of(&select(&format!("table7/{label}"), s)))
+            .collect();
         println!("{:<14} {:<22} {:>11.1}% {:>11.1}% {:>11.1}%",
-                 label, "SLO violation (%)", viol[0], viol[1], viol[2]);
+                 label, "SLO violation (%)", per[0].0, per[1].0, per[2].0);
         println!("{:<14} {:<22} {:>11.2}$ {:>11.2}$ {:>11.2}$",
-                 "", "cost ($)", cost[0], cost[1], cost[2]);
+                 "", "cost ($)", per[0].1, per[1].1, per[2].1);
     }
 
-    // ---- large-scale: 96 GPUs, 3x medium load ----
-    let mut viol = vec![];
-    let mut cost = vec![];
-    let mut overhead = vec![];
-    for system in SYSTEMS {
-        let mut v = 0.0;
-        let mut c = 0.0;
-        let mut o: f64 = 0.0;
-        let seeds = [11u64, 12, 13];
-        for &seed in &seeds {
-            let mut gen = TraceGenerator::new(
-                TraceConfig { seed, ..Default::default() },
-                perf.clone(),
-            );
-            let jobs = gen.generate_scaled(Load::Medium, 3.0);
-            let sim = Simulator::new(
-                SimConfig { max_gpus: 96, ..Default::default() },
-                perf.clone(),
-            );
-            let mut p = make_policy(system, 96, seed);
-            let r = sim.run(p.as_mut(), jobs);
-            v += r.violation_rate();
-            c += r.cost_usd;
-            o = o.max(r.sched_overhead_ms_max);
-        }
-        viol.push(100.0 * v / 3.0);
-        cost.push(c / 3.0);
-        overhead.push(o);
-    }
+    let large: Vec<(f64, f64)> = SYSTEMS
+        .iter()
+        .map(|s| avg_of(&select("table7/large-scale", s)))
+        .collect();
     println!("{:<14} {:<22} {:>11.1}% {:>11.1}% {:>11.1}%",
-             "Large-Scale", "SLO violation (%)", viol[0], viol[1], viol[2]);
+             "Large-Scale", "SLO violation (%)", large[0].0, large[1].0, large[2].0);
     println!("{:<14} {:<22} {:>11.2}$ {:>11.2}$ {:>11.2}$",
-             "(96 GPUs)", "cost ($)", cost[0], cost[1], cost[2]);
+             "(96 GPUs)", "cost ($)", large[0].1, large[1].1, large[2].1);
     println!("\nscheduler overhead, max over runs (paper: avg/max 13/67 ms):");
-    for (s, o) in SYSTEMS.iter().zip(&overhead) {
-        println!("  {s:<14} {o:.2} ms");
+    for system in SYSTEMS {
+        let o = select("table7/large-scale", system)
+            .iter()
+            .map(|r| r.result.sched_overhead_ms_max)
+            .fold(0.0f64, f64::max);
+        println!("  {system:<14} {o:.2} ms");
+    }
+
+    let report = BenchReport::new("table7", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!("\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+                             report.cells.len(), path.display()),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
     }
 }

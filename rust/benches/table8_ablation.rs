@@ -5,15 +5,18 @@
 //!
 //! Paper reference: 12.4 % / 27.8 % / 15.6 % / 16.3 % violation and
 //! $22.9 / $20.9 / $26.6 / $23.2 cost.
+//!
+//! All (config × seed) cells run in parallel through the sweep harness;
+//! a BENCH_table8.json perf record is emitted.
 
 #[path = "common.rs"]
 mod common;
 
+use std::time::Instant;
+
 use common::*;
-use prompttuner::cluster::{SimConfig, Simulator};
-use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::coordinator::PromptTunerConfig;
 use prompttuner::trace::Load;
-use prompttuner::workload::PerfModel;
 
 fn main() {
     banner("Table 8 — Workload Scheduler component ablations (S = 1.0, medium)");
@@ -33,25 +36,35 @@ fn main() {
             ..Default::default()
         }),
     ];
-    println!("{:<22} {:>16} {:>10}", "config", "SLO violation", "cost");
-    for (label, cfg) in configs {
-        let mut viol = 0.0;
-        let mut cost = 0.0;
+
+    let mut cells = vec![];
+    for (label, cfg) in &configs {
         for &seed in &seeds {
-            let jobs = gen_trace(Load::Medium, 1.0, seed);
-            let sim = Simulator::new(
-                SimConfig { max_gpus: 32, ..Default::default() },
-                PerfModel::default(),
-            );
-            let mut p = PromptTuner::new(PromptTunerConfig { seed, ..cfg.clone() });
-            let r = sim.run(&mut p, jobs);
-            viol += r.violation_rate();
-            cost += r.cost_usd;
+            let mut c = SweepCell::new(
+                format!("table8/{label}"), "prompttuner", Load::Medium, 1.0, 32, seed);
+            c.cfg = Some(cfg.clone());
+            cells.push(c);
         }
-        println!("{:<22} {:>15.1}% {:>9.2}$",
-                 label,
-                 100.0 * viol / seeds.len() as f64,
-                 cost / seeds.len() as f64);
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    println!("{:<22} {:>16} {:>10}", "config", "SLO violation", "cost");
+    for (label, _) in &configs {
+        let sel: Vec<&CellResult> = results
+            .iter()
+            .filter(|r| r.cell.label == format!("table8/{label}"))
+            .collect();
+        let (v, c) = avg_of(&sel);
+        println!("{:<22} {:>15.1}% {:>9.2}$", label, v, c);
     }
     println!("(paper: 12.4/27.8/15.6/16.3 % and 22.9/20.9/26.6/23.2 $)");
+
+    let report = BenchReport::new("table8", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!("\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+                             report.cells.len(), path.display()),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
 }

@@ -11,10 +11,10 @@
 //!   schedule, no cross-LLM GPU sharing, no delay-based planning.
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, Policy};
+use crate::cluster::{ClusterState, JobStatus, Policy, Wake};
 use crate::coordinator::pools::WarmPool;
 use crate::util::rng::Rng;
-use crate::workload::Llm;
+use crate::workload::{Llm, N_LLM};
 
 /// INFless configuration.
 #[derive(Clone, Debug)]
@@ -53,15 +53,25 @@ pub struct Infless {
     pub cfg: InflessConfig,
     rng: Rng,
     /// Per-LLM warm instance pools (keep-alive).
-    pools: [WarmPool; 5],
-    pending: [Vec<usize>; 5],
+    pools: [WarmPool; N_LLM],
+    /// Per-LLM FCFS queues. Arrivals are delivered in (submit, id)
+    /// order, so the queues are naturally submit-sorted — the seed's
+    /// per-round stable sort was a no-op and has been dropped.
+    pending: [Vec<usize>; N_LLM],
     /// (use_bank, bank_latency) per job id.
     plans: Vec<(bool, f64)>,
-    /// Recent arrival timestamps per LLM (autoscaling signal).
-    arrivals: [Vec<f64>; 5],
+    /// Recent arrival timestamps per LLM (autoscaling signal;
+    /// time-ordered, stale entries are a prefix).
+    arrivals: [Vec<f64>; N_LLM],
     /// Instances currently cold-starting for the pre-warm pool:
     /// (ready_time, llm index).
     warming: Vec<(f64, usize)>,
+    /// State changed since the last round — the next round must run
+    /// densely before idle-round coalescing may resume.
+    needs_round: bool,
+    /// Scratch buffer for warming-instance completions (no per-round
+    /// allocation).
+    scratch_ready: Vec<usize>,
 }
 
 impl Infless {
@@ -75,6 +85,8 @@ impl Infless {
             plans: vec![],
             arrivals: Default::default(),
             warming: vec![],
+            needs_round: true,
+            scratch_ready: vec![],
         }
     }
 
@@ -153,8 +165,13 @@ impl Policy for Infless {
         }
         let spec = &st.jobs[job_id].spec;
         self.plans[job_id] = self.cfg.bank.route(spec);
-        self.pending[spec.llm.index()].push(job_id);
-        self.arrivals[spec.llm.index()].push(st.now());
+        let li = spec.llm.index();
+        debug_assert!(self.pending[li]
+            .last()
+            .map_or(true, |&j| st.jobs[j].spec.submit_s <= spec.submit_s));
+        self.pending[li].push(job_id);
+        self.arrivals[li].push(st.now());
+        self.needs_round = true;
         self.update_billable(st);
     }
 
@@ -165,17 +182,26 @@ impl Policy for Infless {
             / (job.completed_at - job.launched_at).max(1e-9))
             .round() as usize;
         self.pools[llm.index()].release(gpus, st.now());
+        self.needs_round = true;
         self.update_billable(st);
     }
 
     fn on_tick(&mut self, st: &mut ClusterState) {
         let now = st.now();
+        // Track whether this round changed anything: a changed round may
+        // enable follow-up work next round (e.g. a warm launch shrinking
+        // `free` below the autoscale target), so coalescing only resumes
+        // after a round that proves itself a no-op.
+        let mut changed = false;
         // keep-alive expiry (independent per model pool)
         for pool in self.pools.iter_mut() {
-            pool.expire_idle(now, self.cfg.keep_alive_s);
+            if pool.expire_idle(now, self.cfg.keep_alive_s) > 0 {
+                changed = true;
+            }
         }
         // finish pre-warm cold starts
-        let mut ready: Vec<usize> = vec![];
+        let mut ready = std::mem::take(&mut self.scratch_ready);
+        ready.clear();
         self.warming.retain(|&(t, li)| {
             if t <= now {
                 ready.push(li);
@@ -184,16 +210,23 @@ impl Policy for Infless {
                 true
             }
         });
-        for li in ready {
+        for &li in ready.iter() {
             self.pools[li].add_idle_from_cold(1, now);
+            changed = true;
         }
+        ready.clear();
+        self.scratch_ready = ready;
         // traffic-based autoscaling: pre-warm idle instances per model in
         // proportion to the trailing arrival rate (billed while warming —
         // the serverless cost the paper's Fig 7 cost gap comes from).
         for llm in Llm::ALL {
             let li = llm.index();
             let win = self.cfg.autoscale_window_s;
-            self.arrivals[li].retain(|&t| now - t <= win);
+            // arrivals are time-ordered: stale entries are a prefix
+            let stale = self.arrivals[li].partition_point(|&t| now - t > win);
+            if stale > 0 {
+                self.arrivals[li].drain(..stale);
+            }
             let desired =
                 (self.arrivals[li].len() as f64 * self.cfg.autoscale_factor).ceil()
                     as usize;
@@ -203,32 +236,71 @@ impl Policy for Infless {
             let mut want = desired.saturating_sub(have);
             while want > 0 && self.free_budget() > 0 {
                 self.warming.push((now + st.perf.cold_start(llm), li));
+                changed = true;
                 want -= 1;
             }
         }
-        // FCFS per model — no global coordination across LLMs.
+        // FCFS per model — no global coordination across LLMs. Launched
+        // jobs leave the queue through one status-based compaction pass
+        // instead of one retain per launch.
         for llm in Llm::ALL {
             let li = llm.index();
             if self.pending[li].is_empty() {
                 continue;
             }
-            self.pending[li].sort_by(|&a, &b| {
-                st.jobs[a]
-                    .spec
-                    .submit_s
-                    .partial_cmp(&st.jobs[b].spec.submit_s)
-                    .unwrap()
-            });
-            let queue: Vec<usize> = self.pending[li].clone();
-            for job in queue {
+            let mut launched = false;
+            let mut i = 0;
+            while i < self.pending[li].len() {
+                let job = self.pending[li][i];
                 if self.try_start(st, llm, job) {
-                    self.pending[li].retain(|&j| j != job);
+                    launched = true;
+                    i += 1;
                 } else {
                     break; // FCFS head-of-line blocking
                 }
             }
+            if launched {
+                changed = true;
+                let st_ref: &ClusterState = st;
+                self.pending[li]
+                    .retain(|&j| st_ref.jobs[j].status == JobStatus::Pending);
+            }
         }
         self.update_billable(st);
+        self.needs_round = changed;
+    }
+
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        let _ = st;
+        if self.needs_round {
+            return Wake::Dense;
+        }
+        if self.pending.iter().any(|q| !q.is_empty()) {
+            return Wake::Dense;
+        }
+        // Empty queues after a no-op round: the next possible actions are
+        // a keep-alive expiry (changes billing and the autoscale target)
+        // or a pre-warm instance becoming ready (its idle timestamp must
+        // be taken at the right round).
+        let mut next = f64::INFINITY;
+        for pool in &self.pools {
+            if let Some(t) = pool.earliest_idle() {
+                let expiry = t + self.cfg.keep_alive_s;
+                if expiry < next {
+                    next = expiry;
+                }
+            }
+        }
+        for &(t, _) in &self.warming {
+            if t < next {
+                next = t;
+            }
+        }
+        if next.is_finite() {
+            Wake::At(next)
+        } else {
+            Wake::Idle
+        }
     }
 }
 
@@ -294,5 +366,12 @@ mod tests {
         let b = run(InflessConfig::default(), Load::Low, 25);
         assert_eq!(a.n_violations, b.n_violations);
         assert!((a.cost_usd - b.cost_usd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coalescing_engages_on_idle_stretches() {
+        let res = run(InflessConfig::default(), Load::Low, 26);
+        assert_eq!(res.n_done, res.n_jobs);
+        assert!(res.rounds_coalesced > 0, "no rounds coalesced");
     }
 }

@@ -1,0 +1,345 @@
+//! Parallel sweep harness for the paper benches.
+//!
+//! Every fig/table bench is a grid of independent *(policy, trace, seed)*
+//! cells; the seed ran them serially. [`run_sweep`] distributes cells
+//! across scoped worker threads (`std::thread`, no external crates) and
+//! returns results in input order, so bench output stays deterministic
+//! while wall-clock drops by ~the core count.
+//!
+//! Each run also produces a machine-readable perf record
+//! (`BENCH_<suite>.json`, hand-rolled JSON — no serde offline) with
+//! per-cell wall-clock, executed/coalesced round counts and rounds/s, so
+//! the perf trajectory of the simulator hot path is tracked from PR 1
+//! onward. CI fails if the record is malformed or a cell regresses
+//! against the committed baseline (see `tools/check_bench.py`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
+use crate::cluster::{Policy, SimConfig, SimResult, Simulator};
+use crate::coordinator::{PromptTuner, PromptTunerConfig};
+use crate::trace::{Load, TraceConfig, TraceGenerator};
+use crate::workload::{JobSpec, Llm, PerfModel};
+
+/// The three systems every end-to-end comparison sweeps.
+pub const SYSTEMS: [&str; 3] = ["prompttuner", "infless", "elasticflow"];
+
+/// One independent simulated experiment of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Display/reporting label, e.g. "fig7/medium/S1.0".
+    pub label: String,
+    /// "prompttuner" | "infless" | "elasticflow".
+    pub system: String,
+    pub gpus: usize,
+    pub seed: u64,
+    pub load: Load,
+    /// SLO emergence S of the generated trace.
+    pub slo: f64,
+    /// Load scale factor; 1.0 = the plain §6.1 trace.
+    pub scale: f64,
+    /// Heavy-workload trace (Table 7) for this LLM instead of the main
+    /// mixed trace.
+    pub heavy: Option<Llm>,
+    /// PromptTuner config override (ablation sweeps); the cell seed is
+    /// applied on top.
+    pub cfg: Option<PromptTunerConfig>,
+}
+
+impl SweepCell {
+    pub fn new(label: impl Into<String>, system: impl Into<String>,
+               load: Load, slo: f64, gpus: usize, seed: u64) -> Self {
+        SweepCell {
+            label: label.into(),
+            system: system.into(),
+            gpus,
+            seed,
+            load,
+            slo,
+            scale: 1.0,
+            heavy: None,
+            cfg: None,
+        }
+    }
+}
+
+/// Result of one cell: the simulator metrics plus the cell's wall-clock.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub result: SimResult,
+    pub wall_s: f64,
+}
+
+/// Build the policy a cell names (ablation override aware).
+pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
+    match cell.system.as_str() {
+        "prompttuner" => {
+            let base = cell.cfg.clone().unwrap_or_default();
+            // The cell's seed and cluster size always win over the
+            // override: the simulator is sized by cell.gpus, and a policy
+            // silently capped at the override's max_gpus would simulate a
+            // smaller scheduler inside a bigger cluster.
+            Box::new(PromptTuner::new(PromptTunerConfig {
+                seed: cell.seed,
+                max_gpus: cell.gpus,
+                ..base
+            }))
+        }
+        "infless" => Box::new(Infless::new(InflessConfig {
+            max_gpus: cell.gpus,
+            seed: cell.seed,
+            ..Default::default()
+        })),
+        "elasticflow" => Box::new(ElasticFlow::new(ElasticFlowConfig {
+            cluster_size: cell.gpus,
+            seed: cell.seed,
+            ..Default::default()
+        })),
+        other => panic!("unknown system {other}"),
+    }
+}
+
+/// Generate the cell's trace (same generator paths as the seed benches).
+pub fn gen_jobs(cell: &SweepCell) -> Vec<JobSpec> {
+    let perf = PerfModel::default();
+    let mut gen = TraceGenerator::new(
+        TraceConfig {
+            seed: cell.seed,
+            slo_emergence: cell.slo,
+            ..Default::default()
+        },
+        perf,
+    );
+    if let Some(llm) = cell.heavy {
+        gen.generate_heavy(llm)
+    } else if (cell.scale - 1.0).abs() > 1e-12 {
+        gen.generate_scaled(cell.load, cell.scale)
+    } else {
+        gen.generate_main(cell.load)
+    }
+}
+
+/// Run one cell to completion.
+pub fn run_cell(cell: &SweepCell) -> CellResult {
+    let t0 = Instant::now();
+    let jobs = gen_jobs(cell);
+    let sim = Simulator::new(
+        SimConfig { max_gpus: cell.gpus, ..Default::default() },
+        PerfModel::default(),
+    );
+    let mut policy = make_policy(cell);
+    let result = sim.run(policy.as_mut(), jobs);
+    CellResult {
+        cell: cell.clone(),
+        result,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run all cells across worker threads; results come back in input
+/// order. Cell execution order across threads is nondeterministic, but
+/// every cell is self-contained and seeded, so results are not.
+pub fn run_sweep(cells: &[SweepCell]) -> Vec<CellResult> {
+    if cells.is_empty() {
+        return vec![];
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(cells.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellResult>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run_cell(&cells[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("worker thread dropped a cell")
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------- report
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+/// A machine-readable perf record of one sweep (BENCH_<suite>.json).
+pub struct BenchReport {
+    /// Suite name; the perf-tracking suite is "sim" → BENCH_sim.json.
+    pub suite: String,
+    pub cells: Vec<CellResult>,
+    pub total_wall_s: f64,
+}
+
+impl BenchReport {
+    pub fn new(suite: impl Into<String>, cells: Vec<CellResult>,
+               total_wall_s: f64) -> Self {
+        BenchReport { suite: suite.into(), cells, total_wall_s }
+    }
+
+    pub fn to_json(&self) -> String {
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(&self.suite)));
+        out.push_str(&format!("  \"created_unix\": {created},\n"));
+        out.push_str(&format!("  \"total_wall_s\": {},\n",
+                              json_f64(self.total_wall_s)));
+        out.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            let r = &c.result;
+            out.push_str("    {");
+            out.push_str(&format!("\"label\": \"{}\", ", json_escape(&c.cell.label)));
+            out.push_str(&format!("\"system\": \"{}\", ",
+                                  json_escape(&c.cell.system)));
+            out.push_str(&format!("\"gpus\": {}, ", c.cell.gpus));
+            out.push_str(&format!("\"seed\": {}, ", c.cell.seed));
+            out.push_str(&format!("\"load\": \"{}\", ", c.cell.load.name()));
+            out.push_str(&format!("\"slo\": {}, ", json_f64(c.cell.slo)));
+            out.push_str(&format!("\"scale\": {}, ", json_f64(c.cell.scale)));
+            out.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
+            out.push_str(&format!("\"rounds_executed\": {}, ",
+                                  r.rounds_executed));
+            out.push_str(&format!("\"rounds_coalesced\": {}, ",
+                                  r.rounds_coalesced));
+            out.push_str(&format!("\"ticks_per_s\": {}, ",
+                                  json_f64(r.ticks_per_s())));
+            out.push_str(&format!("\"n_jobs\": {}, ", r.n_jobs));
+            out.push_str(&format!("\"n_done\": {}, ", r.n_done));
+            out.push_str(&format!("\"n_violations\": {}, ", r.n_violations));
+            out.push_str(&format!("\"cost_usd\": {}, ", json_f64(r.cost_usd)));
+            out.push_str(&format!("\"mean_utilization\": {}, ",
+                                  json_f64(r.mean_utilization)));
+            out.push_str(&format!("\"sched_overhead_ms_mean\": {}, ",
+                                  json_f64(r.sched_overhead_ms_mean)));
+            out.push_str(&format!("\"sched_overhead_ms_max\": {}",
+                                  json_f64(r.sched_overhead_ms_max)));
+            out.push_str(if i + 1 < self.cells.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Default output path: `<crate root>/BENCH_<suite>.json`, overridable
+    /// with the BENCH_OUT_DIR environment variable.
+    pub fn default_path(&self) -> PathBuf {
+        let dir = std::env::var("BENCH_OUT_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+        dir.join(format!("BENCH_{}.json", self.suite))
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Write to the default path and report where it went.
+    pub fn write_default(&self) -> std::io::Result<PathBuf> {
+        let path = self.default_path();
+        self.write(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cells() -> Vec<SweepCell> {
+        SYSTEMS
+            .iter()
+            .map(|s| SweepCell::new(format!("t/{s}"), *s, Load::Low, 1.0, 16, 5))
+            .collect()
+    }
+
+    #[test]
+    fn sweep_runs_cells_in_order_and_completes_jobs() {
+        let cells = tiny_cells();
+        let results = run_sweep(&cells);
+        assert_eq!(results.len(), cells.len());
+        for (cell, res) in cells.iter().zip(&results) {
+            assert_eq!(res.cell.system, cell.system);
+            assert_eq!(res.result.n_done, res.result.n_jobs);
+            assert!(res.wall_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn sweep_matches_serial_execution() {
+        let cells = tiny_cells();
+        let parallel = run_sweep(&cells);
+        for (cell, p) in cells.iter().zip(&parallel) {
+            let serial = run_cell(cell);
+            assert_eq!(serial.result.n_violations, p.result.n_violations);
+            assert!((serial.result.cost_usd - p.result.cost_usd).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn report_emits_valid_looking_json() {
+        let cells = vec![SweepCell::new("a\"b", "prompttuner", Load::Low, 1.0, 8, 7)];
+        let results = run_sweep(&cells);
+        let report = BenchReport::new("test", results, 0.5);
+        let json = report.to_json();
+        assert!(json.contains("\"suite\": \"test\""));
+        assert!(json.contains("\\\"")); // label quote escaped
+        assert!(json.contains("\"ticks_per_s\""));
+        assert!(json.contains("\"rounds_coalesced\""));
+        // crude structural checks (no JSON parser offline)
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn ablation_override_keeps_cell_seed() {
+        let mut cell = SweepCell::new("abl", "prompttuner", Load::Low, 1.0, 8, 9);
+        cell.cfg = Some(PromptTunerConfig {
+            use_bank: false,
+            max_gpus: 8,
+            seed: 12345, // overridden by the cell seed
+            ..Default::default()
+        });
+        let r = run_cell(&cell);
+        assert_eq!(r.result.n_done, r.result.n_jobs);
+    }
+}

@@ -13,4 +13,4 @@ pub mod job;
 pub mod sim;
 
 pub use job::{JobState, JobStatus};
-pub use sim::{ClusterState, Policy, SimConfig, SimResult, Simulator};
+pub use sim::{ClusterState, Policy, SimConfig, SimResult, Simulator, Wake};

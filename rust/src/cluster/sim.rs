@@ -6,6 +6,24 @@
 //! maintains (warm-pool GPUs for PromptTuner, the whole fixed cluster for
 //! ElasticFlow, live instances for INFless); GPU *usage* (busy) is
 //! integrated automatically from job allocations.
+//!
+//! # Tick coalescing
+//!
+//! The paper's 50 ms scheduling round means a simulated experiment
+//! executes hundreds of thousands of rounds, the vast majority of which
+//! are no-ops (empty queues, nothing to expire). Policies can report
+//! their next *time-driven* action through
+//! [`Policy::next_timed_action`]; the run loop then fast-forwards the
+//! tick stream over provably-idle rounds while keeping the simulation
+//! bit-identical to dense ticking:
+//!
+//! * skipped rounds still advance cost/utilization integration at every
+//!   grid point, so float accumulation order is unchanged;
+//! * skipped rounds still consume the event sequence numbers their
+//!   next-tick pushes would have taken, so equal-time ordering between
+//!   ticks and job events is unchanged;
+//! * the default hint is [`Wake::Dense`] (tick every round), so policies
+//!   that don't opt in behave exactly as before.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -13,8 +31,8 @@ use std::time::Instant;
 
 use crate::cluster::job::{JobState, JobStatus};
 use crate::util::stats::Accum;
-use crate::workload::{JobSpec, PerfModel, COMM_PAYLOAD_GB, GPU_PRICE_PER_S,
-                      STORAGE_PRICE_PER_GB_H};
+use crate::workload::{JobSpec, Llm, PerfModel, COMM_PAYLOAD_GB, GPU_PRICE_PER_S,
+                      N_LLM, STORAGE_PRICE_PER_GB_H};
 
 /// Simulator parameters.
 #[derive(Clone, Debug)]
@@ -39,7 +57,6 @@ enum EventKind {
     Arrival(usize),
     /// (job, generation) — stale generations are ignored.
     JobDone(usize, u64),
-    Tick,
     End,
 }
 
@@ -72,6 +89,20 @@ impl Ord for Event {
     }
 }
 
+/// A policy's answer to "when is your next time-driven action?", used by
+/// the run loop to coalesce no-op scheduling rounds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Wake {
+    /// Tick every round (the dense reference behavior; the default).
+    Dense,
+    /// No round before the first grid tick at or after this absolute
+    /// time can perform any action. Rounds strictly before it are
+    /// skipped; discrete events (arrivals/completions) always re-query.
+    At(f64),
+    /// No round can perform any action until the next discrete event.
+    Idle,
+}
+
 /// Mutable cluster state policies operate on.
 pub struct ClusterState {
     now: f64,
@@ -97,10 +128,18 @@ pub struct ClusterState {
     next_util_sample: f64,
     queued: Vec<(f64, EventKind)>,
     seq: u64,
+    /// Per-LLM incremental index of jobs currently holding GPUs
+    /// (Initializing or Running), so policies need not scan `jobs`
+    /// wholesale every round. Order is arbitrary (swap-remove).
+    active: [Vec<usize>; N_LLM],
+    /// Position of each job in its LLM's `active` list (usize::MAX when
+    /// the job holds no GPUs).
+    active_pos: Vec<usize>,
 }
 
 impl ClusterState {
     fn new(cfg: SimConfig, perf: PerfModel, specs: Vec<JobSpec>) -> Self {
+        let n = specs.len();
         ClusterState {
             now: 0.0,
             jobs: specs.into_iter().map(JobState::new).collect(),
@@ -117,12 +156,38 @@ impl ClusterState {
             next_util_sample: 0.0,
             queued: vec![],
             seq: 0,
+            active: Default::default(),
+            active_pos: vec![usize::MAX; n],
         }
     }
 
     /// Current simulated time, seconds.
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Jobs of `llm` currently holding GPUs (Initializing or Running),
+    /// in arbitrary order. Maintained incrementally by launch/complete.
+    pub fn active_jobs(&self, llm: Llm) -> &[usize] {
+        &self.active[llm.index()]
+    }
+
+    fn activate(&mut self, job_id: usize) {
+        let li = self.jobs[job_id].spec.llm.index();
+        debug_assert_eq!(self.active_pos[job_id], usize::MAX);
+        self.active_pos[job_id] = self.active[li].len();
+        self.active[li].push(job_id);
+    }
+
+    fn deactivate(&mut self, job_id: usize) {
+        let li = self.jobs[job_id].spec.llm.index();
+        let pos = self.active_pos[job_id];
+        debug_assert!(pos != usize::MAX && self.active[li][pos] == job_id);
+        self.active[li].swap_remove(pos);
+        if let Some(&moved) = self.active[li].get(pos) {
+            self.active_pos[moved] = pos;
+        }
+        self.active_pos[job_id] = usize::MAX;
     }
 
     /// Advance cost/usage integration to `t` (called by the run loop).
@@ -201,6 +266,7 @@ impl ClusterState {
             }
         }
         self.busy_gpus += gpus as f64;
+        self.activate(job_id);
         let gen = self.jobs[job_id].gen;
         self.push(exec, EventKind::JobDone(job_id, gen));
     }
@@ -283,6 +349,17 @@ pub trait Policy {
 
     /// One scheduling round.
     fn on_tick(&mut self, st: &mut ClusterState);
+
+    /// When is this policy's next *time-driven* action, given the state
+    /// it just observed? Queried after every policy callback; rounds the
+    /// answer proves idle are coalesced (skipped). A policy must only
+    /// return [`Wake::At`]/[`Wake::Idle`] when every skipped round would
+    /// have been a no-op (no state changes, no RNG draws) under dense
+    /// ticking. The default keeps dense rounds.
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        let _ = st;
+        Wake::Dense
+    }
 }
 
 /// Outcome of one simulated experiment.
@@ -304,6 +381,12 @@ pub struct SimResult {
     /// Wall-clock scheduler decision overhead (paper §6.2: 13/67 ms).
     pub sched_overhead_ms_mean: f64,
     pub sched_overhead_ms_max: f64,
+    /// Scheduling rounds actually executed (policy `on_tick` calls).
+    pub rounds_executed: u64,
+    /// Rounds proven idle and skipped by tick coalescing.
+    pub rounds_coalesced: u64,
+    /// Wall-clock seconds for the whole simulated experiment.
+    pub wall_s: f64,
 }
 
 impl SimResult {
@@ -312,6 +395,16 @@ impl SimResult {
             0.0
         } else {
             self.n_violations as f64 / self.n_jobs as f64
+        }
+    }
+
+    /// Executed scheduling rounds per wall-clock second (the
+    /// BENCH_sim.json throughput metric; includes all event handling).
+    pub fn ticks_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.rounds_executed as f64 / self.wall_s
+        } else {
+            0.0
         }
     }
 }
@@ -329,12 +422,13 @@ impl Simulator {
 
     /// Run `policy` over the trace and collect metrics.
     pub fn run(&self, policy: &mut dyn Policy, specs: Vec<JobSpec>) -> SimResult {
+        let wall0 = Instant::now();
         let n_jobs = specs.len();
         let last_arrival =
             specs.iter().map(|s| s.submit_s).fold(0.0f64, f64::max);
         let horizon = last_arrival + self.cfg.horizon_s;
         let mut st = ClusterState::new(self.cfg.clone(), self.perf.clone(), specs);
-        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(n_jobs + 2);
         let mut seq = 0u64;
         for (i, job) in st.jobs.iter().enumerate() {
             seq += 1;
@@ -344,57 +438,102 @@ impl Simulator {
                 kind: EventKind::Arrival(i),
             });
         }
+        // The tick stream is managed outside the heap but consumes
+        // sequence numbers exactly as the dense heap-resident tick events
+        // did, so equal-time ordering against job events is unchanged.
         seq += 1;
-        heap.push(Event { time: 0.0, seq, kind: EventKind::Tick });
+        let mut tick_time = 0.0f64;
+        let mut tick_seq = seq;
         seq += 1;
         heap.push(Event { time: horizon, seq, kind: EventKind::End });
         st.seq = seq;
 
         let mut overhead = Accum::new();
         let mut done = 0usize;
+        let mut rounds: u64 = 0;
+        let mut coalesced: u64 = 0;
         let tick = policy.tick_interval();
-        while let Some(ev) = heap.pop() {
-            if ev.time > horizon {
-                break;
-            }
-            st.integrate_to(ev.time);
-            match ev.kind {
-                EventKind::Arrival(id) => {
-                    policy.on_arrival(&mut st, id);
+        let mut wake = Wake::Dense;
+        loop {
+            // Earliest of (pending tick, heap top) by (time, seq).
+            let tick_first = match heap.peek() {
+                Some(ev) => (tick_time, tick_seq) < (ev.time, ev.seq),
+                None => true,
+            };
+            if tick_first {
+                if tick_time > horizon {
+                    break;
                 }
-                EventKind::JobDone(id, gen) => {
-                    let stale = st.jobs[id].gen != gen
-                        || st.jobs[id].status == JobStatus::Done;
-                    if !stale {
-                        let gpus;
-                        {
-                            let job = &mut st.jobs[id];
-                            job.status = JobStatus::Done;
-                            job.completed_at = ev.time;
-                            job.iters_remaining = 0.0;
-                            gpus = job.gpus;
-                            job.gpu_seconds =
-                                gpus as f64 * (ev.time - job.launched_at);
-                            job.gpus = 0;
-                        }
-                        st.busy_gpus -= gpus as f64;
-                        policy.on_job_complete(&mut st, id);
-                        done += 1;
-                    }
-                }
-                EventKind::Tick => {
+                let skip = match wake {
+                    Wake::Dense => false,
+                    Wake::Idle => true,
+                    Wake::At(t) => tick_time < t,
+                };
+                st.integrate_to(tick_time);
+                if skip {
+                    coalesced += 1;
+                } else {
                     let t0 = Instant::now();
                     policy.on_tick(&mut st);
                     overhead.add(t0.elapsed().as_secs_f64() * 1e3);
-                    if done < n_jobs {
-                        st.push(ev.time + tick, EventKind::Tick);
+                    rounds += 1;
+                    st.drain_queued(&mut heap);
+                    wake = policy.next_timed_action(&st);
+                    if done == n_jobs {
+                        break;
                     }
                 }
-                EventKind::End => break,
-            }
-            st.drain_queued(&mut heap);
-            if done == n_jobs {
-                break;
+                // Re-arm the next round: advance by one period (repeated
+                // addition, the same float path dense ticking takes) and
+                // consume the sequence number its push would have taken.
+                st.seq += 1;
+                tick_seq = st.seq;
+                tick_time += tick;
+            } else {
+                let ev = match heap.pop() {
+                    Some(ev) => ev,
+                    None => break,
+                };
+                if ev.time > horizon {
+                    break;
+                }
+                st.integrate_to(ev.time);
+                match ev.kind {
+                    EventKind::Arrival(id) => {
+                        policy.on_arrival(&mut st, id);
+                        st.drain_queued(&mut heap);
+                        wake = policy.next_timed_action(&st);
+                    }
+                    EventKind::JobDone(id, gen) => {
+                        let stale = st.jobs[id].gen != gen
+                            || st.jobs[id].status == JobStatus::Done;
+                        if !stale {
+                            let gpus;
+                            {
+                                let job = &mut st.jobs[id];
+                                job.status = JobStatus::Done;
+                                job.completed_at = ev.time;
+                                job.iters_remaining = 0.0;
+                                gpus = job.gpus;
+                                job.gpu_seconds =
+                                    gpus as f64 * (ev.time - job.launched_at);
+                                job.gpus = 0;
+                            }
+                            st.busy_gpus -= gpus as f64;
+                            st.deactivate(id);
+                            policy.on_job_complete(&mut st, id);
+                            done += 1;
+                            st.drain_queued(&mut heap);
+                            wake = policy.next_timed_action(&st);
+                            if done == n_jobs {
+                                break;
+                            }
+                        } else {
+                            st.drain_queued(&mut heap);
+                        }
+                    }
+                    EventKind::End => break,
+                }
             }
         }
         st.integrate_to(st.now());
@@ -424,6 +563,9 @@ impl Simulator {
                 .collect(),
             sched_overhead_ms_mean: overhead.mean(),
             sched_overhead_ms_max: if overhead.n == 0 { 0.0 } else { overhead.max },
+            rounds_executed: rounds,
+            rounds_coalesced: coalesced,
+            wall_s: wall0.elapsed().as_secs_f64(),
         }
     }
 }
@@ -642,6 +784,8 @@ mod tests {
         assert_eq!(res.n_done, 1);
         // 12 s of work, 1 s ticks => ~12 ticks observed
         assert!((11..=14).contains(&p.n), "{}", p.n);
+        assert_eq!(res.rounds_executed, p.n as u64);
+        assert_eq!(res.rounds_coalesced, 0);
     }
 
     #[test]
@@ -662,5 +806,121 @@ mod tests {
         let res = sim.run(&mut p, vec![spec(0, 0.0, 10.0)]);
         assert!(res.sched_overhead_ms_mean >= 0.0);
         assert!(res.sched_overhead_ms_max >= res.sched_overhead_ms_mean);
+    }
+
+    /// Greedy launch-at-arrival policy that (correctly) declares itself
+    /// idle between events: its rounds do nothing.
+    struct LazyGreedy {
+        ticks: usize,
+    }
+    impl Policy for LazyGreedy {
+        fn name(&self) -> &str {
+            "lazy"
+        }
+        fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+            st.set_billable(st.billable() + 1.0);
+            st.launch(id, 1, 0.0, 0.0, 1.0);
+        }
+        fn on_job_complete(&mut self, st: &mut ClusterState, _id: usize) {
+            st.set_billable(st.billable() - 1.0);
+        }
+        fn on_tick(&mut self, _st: &mut ClusterState) {
+            self.ticks += 1;
+        }
+        fn next_timed_action(&self, _st: &ClusterState) -> Wake {
+            Wake::Idle
+        }
+    }
+
+    #[test]
+    fn coalescing_skips_idle_rounds_with_identical_metrics() {
+        let specs = vec![spec(0, 0.0, 100.0), spec(1, 3.0, 50.0)];
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut dense = Greedy { billable: 0.0 };
+        let ref_res = sim.run(&mut dense, specs.clone());
+        let mut lazy = LazyGreedy { ticks: 0 };
+        let res = sim.run(&mut lazy, specs);
+        // every 50 ms round over the ~12 s busy window was coalesced
+        assert_eq!(lazy.ticks, 0);
+        assert_eq!(res.rounds_executed, 0);
+        assert!(res.rounds_coalesced > 100, "{}", res.rounds_coalesced);
+        // metrics bit-identical to the dense reference
+        assert_eq!(res.n_done, ref_res.n_done);
+        assert_eq!(res.n_violations, ref_res.n_violations);
+        assert_eq!(res.cost_usd, ref_res.cost_usd);
+        assert_eq!(res.gpu_seconds_billed, ref_res.gpu_seconds_billed);
+        assert_eq!(res.util_timeline, ref_res.util_timeline);
+        assert_eq!(res.job_latencies, ref_res.job_latencies);
+    }
+
+    #[test]
+    fn wake_at_resumes_on_the_tick_grid() {
+        struct WakeLater {
+            acted_at: Option<f64>,
+        }
+        impl Policy for WakeLater {
+            fn name(&self) -> &str {
+                "wakelater"
+            }
+            fn on_arrival(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, st: &mut ClusterState) {
+                if self.acted_at.is_none() && st.now() >= 0.9999 {
+                    self.acted_at = Some(st.now());
+                    st.set_billable(1.0);
+                    st.launch(0, 1, 0.0, 0.0, 1.0);
+                }
+            }
+            fn next_timed_action(&self, _st: &ClusterState) -> Wake {
+                if self.acted_at.is_none() {
+                    Wake::At(1.0)
+                } else {
+                    Wake::Idle
+                }
+            }
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = WakeLater { acted_at: None };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 10.0)]);
+        assert_eq!(res.n_done, 1);
+        let t = p.acted_at.expect("policy never woke");
+        // first 50 ms grid point at/after 1.0
+        assert!((0.9999..1.1).contains(&t), "{t}");
+        // the ~20 rounds before the wake were skipped (a dense run would
+        // have executed them all)
+        assert!(res.rounds_coalesced >= 15, "{}", res.rounds_coalesced);
+        assert!(res.rounds_executed <= 5, "{}", res.rounds_executed);
+    }
+
+    #[test]
+    fn active_index_tracks_gpu_holding_jobs() {
+        struct Probe {
+            seen_active: bool,
+        }
+        impl Policy for Probe {
+            fn name(&self) -> &str {
+                "probe"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                assert!(!st.active_jobs(Llm::Gpt2B).contains(&id));
+                st.set_billable(1.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+                assert!(st.active_jobs(Llm::Gpt2B).contains(&id));
+                assert!(st.active_jobs(Llm::V7B).is_empty());
+            }
+            fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
+                assert!(!st.active_jobs(Llm::Gpt2B).contains(&id));
+            }
+            fn on_tick(&mut self, st: &mut ClusterState) {
+                if !st.active_jobs(Llm::Gpt2B).is_empty() {
+                    self.seen_active = true;
+                }
+            }
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = Probe { seen_active: false };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0), spec(1, 1.0, 50.0)]);
+        assert_eq!(res.n_done, 2);
+        assert!(p.seen_active);
     }
 }

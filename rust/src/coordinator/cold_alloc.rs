@@ -60,7 +60,7 @@ pub fn delay_schedulable(
 /// * `now` — current time (deadlines are absolute).
 pub fn allocate_from_cold_pool(
     pending: &[usize],
-    mut cold_free: usize,
+    cold_free: usize,
     replica: usize,
     max_gpus_per_job: usize,
     now: f64,
@@ -71,6 +71,31 @@ pub fn allocate_from_cold_pool(
     use_delay: bool,
 ) -> Vec<ColdPlan> {
     let mut plans = vec![];
+    allocate_from_cold_pool_into(
+        pending, cold_free, replica, max_gpus_per_job, now, deadline,
+        exec_dur, cold_overhead, e_l, use_delay, &mut plans,
+    );
+    plans
+}
+
+/// Allocation-free core of [`allocate_from_cold_pool`]: plans are pushed
+/// into a caller-owned (reusable) buffer. The scheduler's steady-state
+/// round uses this entry point with scratch buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn allocate_from_cold_pool_into(
+    pending: &[usize],
+    mut cold_free: usize,
+    replica: usize,
+    max_gpus_per_job: usize,
+    now: f64,
+    deadline: impl Fn(usize) -> f64,
+    exec_dur: impl Fn(usize, usize) -> f64 + Copy,
+    cold_overhead: f64,
+    e_l: &mut Vec<f64>,
+    use_delay: bool,
+    plans: &mut Vec<ColdPlan>,
+) {
+    debug_assert!(plans.is_empty());
     for &job in pending {
         // lines 7-9: skip jobs that can wait for released warm GPUs
         if use_delay
@@ -103,7 +128,6 @@ pub fn allocate_from_cold_pool(
             }
         }
     }
-    plans
 }
 
 #[cfg(test)]

@@ -23,7 +23,9 @@ pub mod pools;
 pub mod scheduler;
 pub mod warm_alloc;
 
-pub use cold_alloc::{allocate_from_cold_pool, delay_schedulable, ColdPlan};
+pub use cold_alloc::{allocate_from_cold_pool, allocate_from_cold_pool_into,
+                     delay_schedulable, ColdPlan};
 pub use pools::WarmPool;
 pub use scheduler::{PromptTuner, PromptTunerConfig};
-pub use warm_alloc::{allocate_from_warm_pool, WarmAllocation};
+pub use warm_alloc::{allocate_from_warm_pool, allocate_from_warm_pool_into,
+                     WarmAllocation};

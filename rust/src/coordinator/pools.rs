@@ -65,6 +65,13 @@ impl WarmPool {
         }
     }
 
+    /// Timestamp at which the longest-idle free GPU became idle — the
+    /// next idle-window expiry candidate (None when no GPU is free).
+    /// Used by tick coalescing to compute the pool's next wake time.
+    pub fn earliest_idle(&self) -> Option<f64> {
+        self.free_since.iter().copied().reduce(f64::min)
+    }
+
     /// Remove free GPUs idle longer than `window` (returns how many went
     /// back to the cold pool).
     pub fn expire_idle(&mut self, now: f64, window: f64) -> usize {
@@ -145,6 +152,19 @@ mod tests {
 
     impl WarmPool {
         fn release_helper_for_test(&mut self) {}
+    }
+
+    #[test]
+    fn earliest_idle_reports_oldest_free_gpu() {
+        let mut p = WarmPool::new();
+        assert_eq!(p.earliest_idle(), None);
+        p.add_idle_from_cold(1, 5.0);
+        p.add_idle_from_cold(1, 2.0);
+        p.add_idle_from_cold(1, 9.0);
+        assert_eq!(p.earliest_idle(), Some(2.0));
+        // expire the t=2 GPU; the oldest is now t=5
+        p.expire_idle(63.0, 60.0);
+        assert_eq!(p.earliest_idle(), Some(5.0));
     }
 
     #[test]

@@ -25,14 +25,35 @@ pub struct WarmAllocation {
 /// Returns the granted allocations and the remaining free count.
 pub fn allocate_from_warm_pool(
     pending: &[usize],
-    mut free: usize,
+    free: usize,
     replica: usize,
     max_gpus_per_job: usize,
     deadline: impl Fn(usize) -> f64,
     completion: impl Fn(usize, usize) -> f64,
 ) -> (Vec<WarmAllocation>, usize) {
-    debug_assert!(replica > 0);
     let mut grants = vec![];
+    let free = allocate_from_warm_pool_into(
+        pending, free, replica, max_gpus_per_job, deadline, completion,
+        &mut grants,
+    );
+    (grants, free)
+}
+
+/// Allocation-free core of [`allocate_from_warm_pool`]: grants are pushed
+/// into a caller-owned (reusable) buffer; returns the remaining free
+/// count. The scheduler's steady-state round uses this entry point with
+/// scratch buffers.
+pub fn allocate_from_warm_pool_into(
+    pending: &[usize],
+    mut free: usize,
+    replica: usize,
+    max_gpus_per_job: usize,
+    deadline: impl Fn(usize) -> f64,
+    completion: impl Fn(usize, usize) -> f64,
+    grants: &mut Vec<WarmAllocation>,
+) -> usize {
+    debug_assert!(replica > 0);
+    debug_assert!(grants.is_empty());
     for &job in pending {
         if free < replica {
             break; // pool depleted for every granularity
@@ -52,7 +73,7 @@ pub fn allocate_from_warm_pool(
         }
         // else: A_i = 0 (line 13) — job stays pending.
     }
-    (grants, free)
+    free
 }
 
 #[cfg(test)]

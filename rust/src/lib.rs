@@ -18,6 +18,7 @@
 //!   the request path.
 
 pub mod baselines;
+pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -95,6 +95,9 @@ mod tests {
             job_latencies: vec![],
             sched_overhead_ms_mean: 1.0,
             sched_overhead_ms_max: 2.0,
+            rounds_executed: 0,
+            rounds_coalesced: 0,
+            wall_s: 0.0,
         }
     }
 

@@ -9,9 +9,19 @@
 //! HLO **text** (not serialized protos) is the interchange format: jax
 //! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` dependency is gated behind the `pjrt` cargo feature; without
+//! it (the offline default) an API-identical stub is compiled instead
+//! whose `load` errors, so everything downstream still builds.
 
+pub mod common;
+#[cfg(feature = "pjrt")]
+pub mod model;
+#[cfg(not(feature = "pjrt"))]
+#[path = "model_stub.rs"]
 pub mod model;
 pub mod scorer;
 
-pub use model::{ModelRuntime, TuneState};
+pub use common::{init_theta, TuneState};
+pub use model::ModelRuntime;
 pub use scorer::RuntimeScorer;

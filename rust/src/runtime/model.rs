@@ -8,28 +8,9 @@ use anyhow::{anyhow, bail, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
           XlaComputation};
 
+use super::common::{init_theta, TuneState};
 use crate::util::binio::read_f32_file;
-use crate::util::manifest::{InitKind, Manifest, ModelInfo};
-use crate::util::rng::Rng;
-
-/// Host-side Adam state of one prompt-tuning session. The tensors are
-/// small ([P, D] each), so round-tripping them through the host between
-/// steps costs microseconds; the heavyweight `theta` stays on device.
-#[derive(Clone, Debug)]
-pub struct TuneState {
-    pub prompt: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    /// 1-based Adam step counter.
-    pub step: f32,
-}
-
-impl TuneState {
-    pub fn new(prompt: Vec<f32>) -> Self {
-        let n = prompt.len();
-        TuneState { prompt, m: vec![0.0; n], v: vec![0.0; n], step: 0.0 }
-    }
-}
+use crate::util::manifest::{Manifest, ModelInfo};
 
 /// A loaded model variant: PJRT client, compiled executables, theta.
 pub struct ModelRuntime {
@@ -238,76 +219,5 @@ impl ModelRuntime {
     }
 }
 
-/// Initialize theta from the manifest's segment init specs (used for the
-/// e2e variant, which ships no pretrained weights).
-pub fn init_theta(info: &ModelInfo, seed: u64) -> Vec<f32> {
-    let mut rng = Rng::new(seed);
-    let mut theta = vec![0.0f32; info.n_params];
-    for seg in &info.segments {
-        let slice = &mut theta[seg.offset..seg.offset + seg.count];
-        match seg.init {
-            InitKind::Normal(std) => {
-                for x in slice.iter_mut() {
-                    *x = (rng.normal() as f32) * std;
-                }
-            }
-            InitKind::Zeros => {}
-            InitKind::Ones => slice.fill(1.0),
-        }
-    }
-    theta
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn tiny_info() -> ModelInfo {
-        use crate::util::manifest::Segment;
-        ModelInfo {
-            name: "t".into(),
-            d_model: 4,
-            n_layers: 1,
-            n_heads: 2,
-            vocab: 8,
-            seq: 4,
-            prompt_len: 2,
-            batch_train: 2,
-            batch_eval: 2,
-            n_params: 10,
-            segments: vec![
-                Segment { name: "a".into(), offset: 0, count: 4,
-                          init: InitKind::Normal(0.5) },
-                Segment { name: "b".into(), offset: 4, count: 3,
-                          init: InitKind::Ones },
-                Segment { name: "c".into(), offset: 7, count: 3,
-                          init: InitKind::Zeros },
-            ],
-            artifacts: Default::default(),
-            theta_path: None,
-        }
-    }
-
-    #[test]
-    fn init_theta_follows_segments() {
-        let theta = init_theta(&tiny_info(), 3);
-        assert_eq!(theta.len(), 10);
-        assert!(theta[0..4].iter().any(|&x| x != 0.0));
-        assert_eq!(&theta[4..7], &[1.0, 1.0, 1.0]);
-        assert_eq!(&theta[7..10], &[0.0, 0.0, 0.0]);
-    }
-
-    #[test]
-    fn init_theta_deterministic() {
-        assert_eq!(init_theta(&tiny_info(), 9), init_theta(&tiny_info(), 9));
-        assert_ne!(init_theta(&tiny_info(), 9)[0], init_theta(&tiny_info(), 10)[0]);
-    }
-
-    #[test]
-    fn tune_state_zero_moments() {
-        let s = TuneState::new(vec![1.0; 8]);
-        assert_eq!(s.m, vec![0.0; 8]);
-        assert_eq!(s.v, vec![0.0; 8]);
-        assert_eq!(s.step, 0.0);
-    }
-}
+// `TuneState` and `init_theta` live in `super::common` (shared with the
+// no-`pjrt` stub).

@@ -1,0 +1,81 @@
+//! Stub [`ModelRuntime`] used when the crate is built without the `pjrt`
+//! feature (the offline default: the `xla` crate is unavailable).
+//!
+//! It exposes the full PJRT API surface so the serving plane, tuning
+//! paths, CLI and benches all compile unchanged; every entry point fails
+//! at `load` time with a clear message. The simulator stack (cluster,
+//! coordinator, baselines, benches of Figs 7/8 and Tables 7/8) never
+//! touches this type and is unaffected.
+
+use anyhow::{bail, Result};
+
+use super::common::TuneState;
+use crate::util::manifest::{Manifest, ModelInfo};
+
+const NO_PJRT: &str =
+    "this build has no PJRT runtime: rebuild with `--features pjrt` \
+     (requires the `xla` crate; see rust/Cargo.toml)";
+
+/// Stand-in for the PJRT-backed model runtime. Never constructible:
+/// [`ModelRuntime::load`] always errors in non-`pjrt` builds.
+pub struct ModelRuntime {
+    pub info: ModelInfo,
+    /// Wall-clock seconds spent loading (always unset in the stub).
+    pub load_time_s: f64,
+}
+
+impl ModelRuntime {
+    pub fn load(manifest: &Manifest, variant: &str) -> Result<ModelRuntime> {
+        let _ = (manifest, variant);
+        bail!(NO_PJRT)
+    }
+
+    pub fn embed_prompt(&self, ptoks: &[i32]) -> Result<Vec<f32>> {
+        let _ = ptoks;
+        bail!(NO_PJRT)
+    }
+
+    pub fn score(&self, ptoks: &[i32], toks: &[i32], tgts: &[i32]) -> Result<f32> {
+        let _ = (ptoks, toks, tgts);
+        bail!(NO_PJRT)
+    }
+
+    pub fn features(&self, ptoks: &[i32]) -> Result<Vec<f32>> {
+        let _ = ptoks;
+        bail!(NO_PJRT)
+    }
+
+    pub fn eval_loss(&self, prompt: &[f32], toks: &[i32], tgts: &[i32]) -> Result<f32> {
+        let _ = (prompt, toks, tgts);
+        bail!(NO_PJRT)
+    }
+
+    pub fn tune_step(&self, state: &mut TuneState, toks: &[i32], tgts: &[i32],
+                     lr: f32) -> Result<f32> {
+        let _ = (state, toks, tgts, lr);
+        bail!(NO_PJRT)
+    }
+
+    pub fn grad_prompt(&self, prompt: &[f32], toks: &[i32], tgts: &[i32])
+                       -> Result<(Vec<f32>, f32)> {
+        let _ = (prompt, toks, tgts);
+        bail!(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let manifest = Manifest {
+            dir: std::path::PathBuf::new(),
+            tasks_path: std::path::PathBuf::new(),
+            universe_seed: 0,
+            models: Default::default(),
+        };
+        let err = ModelRuntime::load(&manifest, "sim-gpt2b").unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

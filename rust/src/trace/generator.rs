@@ -29,6 +29,14 @@ impl Load {
         }
     }
 
+    pub fn name(self) -> &'static str {
+        match self {
+            Load::Low => "low",
+            Load::Medium => "medium",
+            Load::High => "high",
+        }
+    }
+
     /// Paper job counts for (GPT2-B, GPT2-L, V7B) over the 20-min window.
     pub fn main_counts(self) -> [usize; 3] {
         match self {

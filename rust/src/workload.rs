@@ -25,8 +25,12 @@ pub enum Llm {
     Qwen7BR1,
 }
 
+/// Number of LLM variants (dense [`Llm::index`] range), for array-indexed
+/// per-LLM state.
+pub const N_LLM: usize = 5;
+
 impl Llm {
-    pub const ALL: [Llm; 5] =
+    pub const ALL: [Llm; N_LLM] =
         [Llm::Gpt2B, Llm::Gpt2L, Llm::V7B, Llm::Llama30B, Llm::Qwen7BR1];
 
     /// The three LLMs of the paper's main end-to-end experiments (Fig 7/8).

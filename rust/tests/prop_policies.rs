@@ -4,7 +4,8 @@
 //! accounting sanity). Uses the in-crate mini property harness.
 
 use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
-use prompttuner::cluster::{ClusterState, Policy, SimConfig, Simulator};
+use prompttuner::bench::{self, SweepCell, SYSTEMS};
+use prompttuner::cluster::{ClusterState, Policy, SimConfig, Simulator, Wake};
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
 use prompttuner::util::prop::{check, ensure};
@@ -55,6 +56,10 @@ impl<P: Policy> Policy for Checked<P> {
     fn on_tick(&mut self, st: &mut ClusterState) {
         self.inner.on_tick(st);
         self.audit(st, "tick");
+    }
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        // forward so the invariants also run under tick coalescing
+        self.inner.next_timed_action(st)
     }
 }
 
@@ -131,6 +136,107 @@ fn run_checked(system: usize, rng: &mut Rng) -> Result<(), String> {
         ensure(*init >= 0.0 && *bank >= 0.0, "negative wait")?;
     }
     Ok(())
+}
+
+/// Forces the seed's dense 50 ms rounds on any policy by leaving
+/// `next_timed_action` at its `Wake::Dense` default — the reference
+/// behavior the coalescing-equivalence property compares against.
+struct DenseTick(Box<dyn Policy>);
+
+impl Policy for DenseTick {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+    fn tick_interval(&self) -> f64 {
+        self.0.tick_interval()
+    }
+    fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+        self.0.on_arrival(st, id)
+    }
+    fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
+        self.0.on_job_complete(st, id)
+    }
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.0.on_tick(st)
+    }
+    // next_timed_action: default Wake::Dense — never coalesce.
+}
+
+/// Tick coalescing must be a pure wall-clock optimization: for every
+/// policy and seeded Medium/High trace, the optimized simulator yields
+/// the same n_done / n_violations / cost as a dense-tick reference run.
+#[test]
+fn prop_tick_coalescing_matches_dense_reference() {
+    let mut coalesced_total: u64 = 0;
+    check("coalesced run == dense reference (all policies)", 6, |rng| {
+        let seed = rng.next_u64();
+        let gpus = 16 + 16 * rng.below(2); // 16 or 32
+        let load = [Load::Medium, Load::High][rng.below(2)];
+        for system in SYSTEMS {
+            let cell = SweepCell::new(
+                format!("eq/{system}"), system, load, 1.0, gpus, seed);
+            let sim = Simulator::new(
+                SimConfig { max_gpus: gpus, ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut fast = bench::make_policy(&cell);
+            let fast_res = sim.run(fast.as_mut(), bench::gen_jobs(&cell));
+            let mut dense = DenseTick(bench::make_policy(&cell));
+            let dense_res = sim.run(&mut dense, bench::gen_jobs(&cell));
+
+            ensure(dense_res.rounds_coalesced == 0, "reference run coalesced")?;
+            let tag = format!("{system} seed={seed} gpus={gpus} load={load:?}");
+            ensure(
+                fast_res.n_done == dense_res.n_done,
+                format!("{tag}: n_done {} vs {}", fast_res.n_done, dense_res.n_done),
+            )?;
+            ensure(
+                fast_res.n_violations == dense_res.n_violations,
+                format!("{tag}: violations {} vs {}",
+                        fast_res.n_violations, dense_res.n_violations),
+            )?;
+            ensure(
+                (fast_res.cost_usd - dense_res.cost_usd).abs() < 1e-9,
+                format!("{tag}: cost {} vs {}",
+                        fast_res.cost_usd, dense_res.cost_usd),
+            )?;
+            ensure(
+                (fast_res.mean_utilization - dense_res.mean_utilization).abs()
+                    < 1e-9,
+                format!("{tag}: util {} vs {}",
+                        fast_res.mean_utilization, dense_res.mean_utilization),
+            )?;
+            ensure(
+                (fast_res.gpu_seconds_billed - dense_res.gpu_seconds_billed).abs()
+                    < 1e-9,
+                format!("{tag}: billed {} vs {}",
+                        fast_res.gpu_seconds_billed,
+                        dense_res.gpu_seconds_billed),
+            )?;
+            ensure(
+                fast_res.job_latencies.len() == dense_res.job_latencies.len(),
+                format!("{tag}: latency count"),
+            )?;
+            for (a, b) in fast_res.job_latencies.iter()
+                .zip(&dense_res.job_latencies)
+            {
+                ensure((a.0 - b.0).abs() < 1e-9 && (a.2 - b.2).abs() < 1e-9,
+                       format!("{tag}: per-job latency {a:?} vs {b:?}"))?;
+            }
+            // skipped + executed rounds must re-tile the dense tick grid
+            ensure(
+                fast_res.rounds_executed + fast_res.rounds_coalesced
+                    == dense_res.rounds_executed,
+                format!("{tag}: rounds {}+{} vs dense {}",
+                        fast_res.rounds_executed, fast_res.rounds_coalesced,
+                        dense_res.rounds_executed),
+            )?;
+            coalesced_total += fast_res.rounds_coalesced;
+        }
+        Ok(())
+    });
+    // the optimization must actually have engaged somewhere
+    assert!(coalesced_total > 0, "no rounds were ever coalesced");
 }
 
 #[test]

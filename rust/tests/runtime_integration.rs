@@ -14,6 +14,20 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// These tests need both `make artifacts` output and the `pjrt` feature
+/// (the real PJRT runtime); otherwise they skip rather than fail.
+fn runnable() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return false;
+    }
+    true
+}
+
 fn load() -> (Manifest, TaskUniverse, ModelRuntime) {
     let manifest = Manifest::load(artifacts_dir()).expect("run `make artifacts`");
     let uni = TaskUniverse::load(manifest.tasks_path_abs()).unwrap();
@@ -23,6 +37,9 @@ fn load() -> (Manifest, TaskUniverse, ModelRuntime) {
 
 #[test]
 fn manifest_covers_all_variants_and_artifacts() {
+    if !runnable() {
+        return;
+    }
     let manifest = Manifest::load(artifacts_dir()).expect("run `make artifacts`");
     for variant in ["sim-gpt2b", "sim-gpt2l", "sim-v7b", "e2e-90m"] {
         let m = &manifest.models[variant];
@@ -40,6 +57,9 @@ fn manifest_covers_all_variants_and_artifacts() {
 
 #[test]
 fn score_features_and_embed_are_consistent() {
+    if !runnable() {
+        return;
+    }
     let (_m, uni, rt) = load();
     let mut rng = Rng::new(1);
     let (etoks, etgts) = uni.sample_batch(&mut rng, 0, rt.info.batch_eval, rt.info.seq);
@@ -94,6 +114,9 @@ fn score_features_and_embed_are_consistent() {
 
 #[test]
 fn tune_step_learns_and_matches_dp_path() {
+    if !runnable() {
+        return;
+    }
     let (_m, uni, rt) = load();
     let mut rng = Rng::new(2);
     let task = 3usize;
@@ -142,6 +165,9 @@ fn good_initial_prompts_reach_target_in_fewer_iterations() {
     // sensitive to the initial prompt. On the real pretrained model, the
     // task's own tag must reach the target in (far) fewer iterations than
     // a wrong-archetype tag.
+    if !runnable() {
+        return;
+    }
     let (_m, uni, rt) = load();
     let task = 5usize;
     let trainer = Trainer::new(
@@ -170,6 +196,9 @@ fn good_initial_prompts_reach_target_in_fewer_iterations() {
 
 #[test]
 fn two_layer_bank_lookup_with_real_scorer() {
+    if !runnable() {
+        return;
+    }
     use prompttuner::promptbank::{PromptCandidate, TwoLayerBank};
     use prompttuner::runtime::RuntimeScorer;
     let (_m, uni, rt) = load();

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_<suite>.json perf record and gate regressions.
+
+Usage:
+    check_bench.py BENCH_sim.json [--baseline PATH] [--max-regression 2.0]
+
+Exit codes:
+    0 — record well-formed (and within the regression budget, when a
+        baseline exists)
+    1 — malformed record or a cell regressed beyond the budget
+
+The record is emitted by the Rust sweep harness (rust/src/bench). When no
+baseline file exists yet the format is still validated and the script
+suggests committing the fresh record as the baseline.
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED_TOP = ["suite", "created_unix", "total_wall_s", "cells"]
+REQUIRED_CELL = [
+    "label", "system", "gpus", "seed", "load", "slo", "scale", "wall_s",
+    "rounds_executed", "rounds_coalesced", "ticks_per_s", "n_jobs",
+    "n_done", "n_violations", "cost_usd", "mean_utilization",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_record(path: str) -> dict:
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} not found (did the bench run?)")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+    for key in REQUIRED_TOP:
+        if key not in rec:
+            fail(f"{path}: missing top-level key '{key}'")
+    if not isinstance(rec["cells"], list) or not rec["cells"]:
+        fail(f"{path}: 'cells' must be a non-empty list")
+    for i, cell in enumerate(rec["cells"]):
+        for key in REQUIRED_CELL:
+            if key not in cell:
+                fail(f"{path}: cell {i} missing key '{key}'")
+        if cell["wall_s"] < 0:
+            fail(f"{path}: cell {i} has negative wall_s")
+        if cell["n_jobs"] > 0 and cell["n_done"] > cell["n_jobs"]:
+            fail(f"{path}: cell {i} finished more jobs than it has")
+        if cell["rounds_executed"] > 0 and cell["ticks_per_s"] <= 0:
+            fail(f"{path}: cell {i} executed rounds but reports no throughput")
+    return rec
+
+
+def cell_key(cell: dict) -> tuple:
+    return (cell["label"], cell["system"], cell["seed"], cell["gpus"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("record")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when a cell's wall_s exceeds baseline × this")
+    args = ap.parse_args()
+
+    rec = load_record(args.record)
+    n = len(rec["cells"])
+    print(f"check_bench: {args.record}: suite '{rec['suite']}', "
+          f"{n} cells, total {rec['total_wall_s']:.2f}s — format OK")
+
+    if not args.baseline:
+        return
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"check_bench: no baseline at {args.baseline}; consider "
+              f"committing this record as the baseline")
+        return
+    except json.JSONDecodeError as e:
+        fail(f"baseline {args.baseline} is not valid JSON: {e}")
+
+    base_cells = {cell_key(c): c for c in base.get("cells", [])}
+    worst = 0.0
+    for cell in rec["cells"]:
+        ref = base_cells.get(cell_key(cell))
+        if ref is None or ref["wall_s"] <= 0:
+            continue
+        ratio = cell["wall_s"] / ref["wall_s"]
+        worst = max(worst, ratio)
+        status = "OK" if ratio <= args.max_regression else "REGRESSION"
+        print(f"  {cell['label']} / {cell['system']}: "
+              f"{ref['wall_s']:.3f}s -> {cell['wall_s']:.3f}s "
+              f"({ratio:.2f}x) {status}")
+        if ratio > args.max_regression:
+            fail(f"cell {cell_key(cell)} regressed {ratio:.2f}x "
+                 f"(budget {args.max_regression}x)")
+    print(f"check_bench: worst ratio {worst:.2f}x within "
+          f"{args.max_regression}x budget")
+
+
+if __name__ == "__main__":
+    main()
