@@ -1,0 +1,81 @@
+//! Fig 11 (beyond the paper) — the scenario-engine sweep: SLO violation
+//! and cost of all three systems across the named workload families
+//! (diurnal / flash-crowd / heavy-tail / multi-tenant / replay), on the
+//! paper's 32-GPU cluster.
+//!
+//! The paper evaluates one production trace shape at three load levels;
+//! related SLO-serving work (SCOOT, EconoServe) shows scheduler rankings
+//! flip under bursty and heavy-tailed traffic, so this bench tracks the
+//! comparison under every family the scenario engine generates. The
+//! replay family round-trips a Medium paper trace through the binary
+//! serializer first, proving the file path end to end.
+//!
+//! Emits a BENCH_scenarios.json perf record (validated in CI by
+//! tools/check_bench.py, which also requires all families present).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::metrics::{render_table, Row};
+use prompttuner::scenario::{replay, Scenario};
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::workload::PerfModel;
+
+fn main() {
+    let seed = 17u64;
+    let gpus = 32;
+
+    // ---- replay fixture: serialize a Medium paper trace, then replay it
+    let replay_path = std::env::temp_dir().join("pt_fig11_replay.trace.bin");
+    {
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed, ..Default::default() },
+            PerfModel::default(),
+        );
+        let jobs = gen.generate_main(Load::Medium);
+        replay::save(&replay_path, &jobs).expect("writing replay fixture");
+    }
+
+    let mut scenarios = Scenario::catalogue();
+    scenarios.push(Scenario::Replay { path: replay_path.clone() });
+
+    let mut cells = vec![];
+    for sc in &scenarios {
+        for system in SYSTEMS {
+            cells.push(SweepCell::scenario(
+                format!("fig11/{}", sc.name()), system, sc.clone(), 1.0,
+                gpus, seed));
+        }
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    for sc in &scenarios {
+        let label = format!("fig11/{}", sc.name());
+        let rows: Vec<Row> = results
+            .iter()
+            .filter(|r| r.cell.label == label)
+            .map(|r| Row::from(&r.result))
+            .collect();
+        let jobs = results
+            .iter()
+            .find(|r| r.cell.label == label)
+            .map_or(0, |r| r.result.n_jobs);
+        print!("\n{}", render_table(
+            &format!("Fig 11 — {} ({jobs} jobs, {gpus} GPUs, S = 1.0)",
+                     sc.name()),
+            &rows));
+    }
+
+    let report = BenchReport::new("scenarios", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!("\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+                             report.cells.len(), path.display()),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+    let _ = std::fs::remove_file(&replay_path);
+}

@@ -445,4 +445,28 @@ mod tests {
         assert_eq!(res.n_done, res.n_jobs);
         assert!(res.rounds_coalesced > 0, "no rounds coalesced");
     }
+
+    #[test]
+    fn survives_multi_tenant_scenario_under_oracle() {
+        // Four SLO tiers share the fixed cluster: premium deadlines mix
+        // with relaxed ones in the deadline-ordered queue. The collecting
+        // oracle audits every executed round.
+        use crate::cluster::SimOracle;
+        use crate::scenario::Scenario;
+        let sc = Scenario::MultiTenant { tenants: 4, jobs_per_tenant: 45 };
+        let jobs = sc.generate(37, 1.0).unwrap();
+        let n = jobs.len();
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::collecting(ElasticFlow::new(ElasticFlowConfig {
+            cluster_size: 32,
+            seed: 37,
+            ..Default::default()
+        }));
+        let res = sim.run(&mut policy, jobs);
+        assert_eq!(res.n_done, n);
+        assert!(policy.violations().is_empty());
+    }
 }

@@ -374,4 +374,30 @@ mod tests {
         assert_eq!(res.n_done, res.n_jobs);
         assert!(res.rounds_coalesced > 0, "no rounds coalesced");
     }
+
+    #[test]
+    fn survives_heavy_tail_scenario_under_oracle() {
+        // Pareto durations stress keep-alive/autoscale accounting: a few
+        // jobs hold instances for tens of minutes while spikes keep
+        // arriving. The collecting oracle audits every executed round.
+        use crate::cluster::SimOracle;
+        use crate::scenario::Scenario;
+        let sc = Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 50 };
+        let jobs = sc.generate(27, 1.0).unwrap();
+        let n = jobs.len();
+        // widen the horizon: a tail job granted a single GPU can legally
+        // run for hours of simulated time
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, horizon_s: 14400.0, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::collecting(Infless::new(InflessConfig {
+            max_gpus: 32,
+            seed: 27,
+            ..Default::default()
+        }));
+        let res = sim.run(&mut policy, jobs);
+        assert_eq!(res.n_done, n);
+        assert!(policy.violations().is_empty());
+    }
 }

@@ -21,6 +21,7 @@ use std::time::Instant;
 use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use crate::cluster::{Policy, SimConfig, SimResult, Simulator};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
+use crate::scenario::Scenario;
 use crate::trace::{Load, TraceConfig, TraceGenerator};
 use crate::workload::{JobSpec, Llm, PerfModel};
 
@@ -44,6 +45,9 @@ pub struct SweepCell {
     /// Heavy-workload trace (Table 7) for this LLM instead of the main
     /// mixed trace.
     pub heavy: Option<Llm>,
+    /// Scenario-engine workload family (fig11) instead of the paper
+    /// traces; takes precedence over `load`/`scale`/`heavy`.
+    pub scenario: Option<Scenario>,
     /// PromptTuner config override (ablation sweeps); the cell seed is
     /// applied on top.
     pub cfg: Option<PromptTunerConfig>,
@@ -61,8 +65,20 @@ impl SweepCell {
             slo,
             scale: 1.0,
             heavy: None,
+            scenario: None,
             cfg: None,
         }
+    }
+
+    /// A scenario-engine cell (the fig11 sweep): `load`/`scale` are
+    /// inert, the named family generates the trace.
+    pub fn scenario(label: impl Into<String>, system: impl Into<String>,
+                    scenario: Scenario, slo: f64, gpus: usize,
+                    seed: u64) -> Self {
+        let mut cell =
+            SweepCell::new(label, system, Load::Medium, slo, gpus, seed);
+        cell.scenario = Some(scenario);
+        cell
     }
 }
 
@@ -105,6 +121,11 @@ pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
 
 /// Generate the cell's trace (same generator paths as the seed benches).
 pub fn gen_jobs(cell: &SweepCell) -> Vec<JobSpec> {
+    if let Some(sc) = &cell.scenario {
+        return sc
+            .generate(cell.seed, cell.slo)
+            .unwrap_or_else(|e| panic!("scenario '{}': {e:#}", sc.name()));
+    }
     let perf = PerfModel::default();
     let mut gen = TraceGenerator::new(
         TraceConfig {
@@ -127,10 +148,13 @@ pub fn gen_jobs(cell: &SweepCell) -> Vec<JobSpec> {
 pub fn run_cell(cell: &SweepCell) -> CellResult {
     let t0 = Instant::now();
     let jobs = gen_jobs(cell);
-    let sim = Simulator::new(
-        SimConfig { max_gpus: cell.gpus, ..Default::default() },
-        PerfModel::default(),
-    );
+    let mut cfg = SimConfig { max_gpus: cell.gpus, ..Default::default() };
+    // Long-running families (heavy-tail) need a wider horizon or their
+    // tail jobs get cut off and the cell under-reports violations/cost.
+    if let Some(h) = cell.scenario.as_ref().and_then(Scenario::horizon_hint) {
+        cfg.horizon_s = cfg.horizon_s.max(h);
+    }
+    let sim = Simulator::new(cfg, PerfModel::default());
     let mut policy = make_policy(cell);
     let result = sim.run(policy.as_mut(), jobs);
     CellResult {
@@ -235,6 +259,10 @@ impl BenchReport {
             out.push_str(&format!("\"gpus\": {}, ", c.cell.gpus));
             out.push_str(&format!("\"seed\": {}, ", c.cell.seed));
             out.push_str(&format!("\"load\": \"{}\", ", c.cell.load.name()));
+            out.push_str(&format!(
+                "\"scenario\": \"{}\", ",
+                c.cell.scenario.as_ref().map_or("none", |s| s.name())
+            ));
             out.push_str(&format!("\"slo\": {}, ", json_f64(c.cell.slo)));
             out.push_str(&format!("\"scale\": {}, ", json_f64(c.cell.scale)));
             out.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
@@ -328,6 +356,31 @@ mod tests {
         // crude structural checks (no JSON parser offline)
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn scenario_cells_run_all_systems_and_tag_the_record() {
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 8 };
+        let cells: Vec<SweepCell> = SYSTEMS
+            .iter()
+            .map(|s| SweepCell::scenario(
+                format!("t/{s}"), *s, sc.clone(), 1.0, 16, 5))
+            .collect();
+        let results = run_sweep(&cells);
+        for r in &results {
+            assert_eq!(r.result.n_jobs, sc.expected_jobs().unwrap());
+        }
+        let report = BenchReport::new("scenarios", results, 0.1);
+        let json = report.to_json();
+        assert!(json.contains("\"scenario\": \"flash-crowd\""));
+    }
+
+    #[test]
+    fn non_scenario_cells_tag_record_with_none() {
+        let cells = vec![SweepCell::new("p", "prompttuner", Load::Low, 1.0, 8, 7)];
+        let report = BenchReport::new("t", run_sweep(&cells), 0.1);
+        assert!(report.to_json().contains("\"scenario\": \"none\""));
     }
 
     #[test]

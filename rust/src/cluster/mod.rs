@@ -13,4 +13,5 @@ pub mod job;
 pub mod sim;
 
 pub use job::{JobState, JobStatus};
-pub use sim::{ClusterState, Policy, SimConfig, SimResult, Simulator, Wake};
+pub use sim::{ClusterState, Policy, SimConfig, SimOracle, SimResult,
+              Simulator, StateAudit, Wake};

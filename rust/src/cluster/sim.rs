@@ -44,11 +44,24 @@ pub struct SimConfig {
     pub horizon_s: f64,
     /// Sampling period of the utilization timeline (Fig 3a series).
     pub util_sample_s: f64,
+    /// Debug flag: audit the full [`StateAudit`] invariant set after
+    /// every executed round and event, panicking on the first violation.
+    /// Defaults to off; set the `PT_SIM_ORACLE` environment variable to a
+    /// non-empty value other than `0`/`false` to enable globally. Tests
+    /// wrap policies in [`SimOracle`] instead.
+    pub debug_oracle: bool,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { max_gpus: 32, horizon_s: 7200.0, util_sample_s: 10.0 }
+        SimConfig {
+            max_gpus: 32,
+            horizon_s: 7200.0,
+            util_sample_s: 10.0,
+            debug_oracle: std::env::var("PT_SIM_ORACLE").map_or(false, |v| {
+                !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+            }),
+        }
     }
 }
 
@@ -164,6 +177,12 @@ impl ClusterState {
     /// Current simulated time, seconds.
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Last event sequence number consumed (ticks included). Strictly
+    /// monotone over the run; exposed so the oracle can audit it.
+    pub fn event_seq(&self) -> u64 {
+        self.seq
     }
 
     /// Jobs of `llm` currently holding GPUs (Initializing or Running),
@@ -362,6 +381,296 @@ pub trait Policy {
     }
 }
 
+/// Forward [`Policy`] through boxes so trait objects (e.g. the
+/// `Box<dyn Policy>` the bench harness builds) can be wrapped by
+/// [`SimOracle`] and other combinators.
+impl<P: Policy + ?Sized> Policy for Box<P> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn tick_interval(&self) -> f64 {
+        (**self).tick_interval()
+    }
+    fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize) {
+        (**self).on_arrival(st, job_id)
+    }
+    fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
+        (**self).on_job_complete(st, job_id)
+    }
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        (**self).on_tick(st)
+    }
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        (**self).next_timed_action(st)
+    }
+}
+
+// ------------------------------------------------------- simulation oracle
+
+/// Reusable from-scratch invariant auditor — the core of the simulation
+/// oracle. One pass over the cluster per call (scratch buffers reused, so
+/// auditing every round stays cheap), checking:
+///
+/// * **GPU-capacity conservation** — busy and billable levels are
+///   non-negative, within the provider budget (`SimConfig::max_gpus`),
+///   busy never exceeds billable, and the busy level equals a from-scratch
+///   recount over job allocations;
+/// * **no grants to departed jobs** — GPUs are held exactly by
+///   Initializing/Running jobs: Pending and Done jobs hold none, Done jobs
+///   have no work remaining;
+/// * **index agreement** — the incremental per-LLM active-job index
+///   matches a from-scratch recount (membership, LLM, no duplicates);
+/// * **monotone event sequence numbers** and simulated time;
+/// * **non-negative incremental cost** — the billed/busy GPU-second
+///   integrals never decrease between audits and stay finite.
+///
+/// Use one auditor per simulated run (the monotonicity history resets
+/// with it).
+#[derive(Debug, Default)]
+pub struct StateAudit {
+    /// Scratch: whether job i should appear in the active index.
+    mark: Vec<bool>,
+    last_seq: u64,
+    last_now: f64,
+    last_cost_gpu_s: f64,
+    last_busy_gpu_s: f64,
+    /// Number of audits performed (so tests can assert coverage).
+    pub audits: u64,
+}
+
+impl StateAudit {
+    pub fn new() -> Self {
+        StateAudit::default()
+    }
+
+    /// Audit `st`, appending one message per violated invariant to `out`.
+    pub fn check(&mut self, st: &ClusterState, whence: &str,
+                 out: &mut Vec<String>) {
+        self.audits += 1;
+        let eps = 1e-9;
+        let t = st.now();
+        let budget = st.cfg.max_gpus as f64;
+
+        // ---- capacity conservation (levels) ----
+        let busy = st.busy();
+        let billable = st.billable();
+        if busy < -eps {
+            out.push(format!("{whence}@{t:.3}: negative busy level {busy}"));
+        }
+        if billable < -eps {
+            out.push(format!("{whence}@{t:.3}: negative billable level {billable}"));
+        }
+        if billable > budget + eps {
+            out.push(format!(
+                "{whence}@{t:.3}: billable {billable} exceeds provider budget {budget}"
+            ));
+        }
+        if busy > billable + eps {
+            out.push(format!(
+                "{whence}@{t:.3}: busy {busy} exceeds billable {billable} \
+                 (capacity conservation)"
+            ));
+        }
+
+        // ---- per-job grants + busy recount ----
+        let n = st.jobs.len();
+        self.mark.clear();
+        self.mark.resize(n, false);
+        let mut busy_recount = 0.0f64;
+        for (i, job) in st.jobs.iter().enumerate() {
+            let holds = matches!(
+                job.status,
+                JobStatus::Initializing | JobStatus::Running
+            );
+            if holds {
+                if job.gpus == 0 {
+                    out.push(format!(
+                        "{whence}@{t:.3}: job {i} is {:?} with no GPUs",
+                        job.status
+                    ));
+                }
+                busy_recount += job.gpus as f64;
+            } else if job.gpus != 0 {
+                out.push(format!(
+                    "{whence}@{t:.3}: grant to departed job {i} \
+                     ({:?} holding {} GPUs)",
+                    job.status, job.gpus
+                ));
+            }
+            if job.status == JobStatus::Done && job.iters_remaining != 0.0 {
+                out.push(format!(
+                    "{whence}@{t:.3}: done job {i} has {} iters remaining",
+                    job.iters_remaining
+                ));
+            }
+            self.mark[i] = holds;
+        }
+        if (busy_recount - busy).abs() > eps {
+            out.push(format!(
+                "{whence}@{t:.3}: busy level {busy} disagrees with job \
+                 recount {busy_recount}"
+            ));
+        }
+
+        // ---- per-LLM active index vs from-scratch recount ----
+        for llm in Llm::ALL {
+            for &id in st.active_jobs(llm) {
+                if id >= n {
+                    out.push(format!(
+                        "{whence}@{t:.3}: active index of {llm:?} holds bad id {id}"
+                    ));
+                    continue;
+                }
+                if st.jobs[id].spec.llm != llm {
+                    out.push(format!(
+                        "{whence}@{t:.3}: job {id} ({:?}) listed under {llm:?}",
+                        st.jobs[id].spec.llm
+                    ));
+                }
+                if self.mark[id] {
+                    self.mark[id] = false; // seen once
+                } else {
+                    out.push(format!(
+                        "{whence}@{t:.3}: active index of {llm:?} lists job {id}, \
+                         which is {:?} (departed or duplicated)",
+                        st.jobs[id].status
+                    ));
+                }
+            }
+        }
+        for (i, &still_marked) in self.mark.iter().enumerate() {
+            if still_marked {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} ({:?}) missing from the active index",
+                    st.jobs[i].status
+                ));
+            }
+        }
+
+        // ---- monotone sequence numbers / time ----
+        let seq = st.event_seq();
+        if seq < self.last_seq {
+            out.push(format!(
+                "{whence}@{t:.3}: event sequence went backwards \
+                 ({} after {})",
+                seq, self.last_seq
+            ));
+        }
+        if t + eps < self.last_now {
+            out.push(format!(
+                "{whence}: time went backwards ({t} after {})",
+                self.last_now
+            ));
+        }
+
+        // ---- non-negative incremental cost ----
+        for (name, cur, last) in [
+            ("billed", st.cost_gpu_s, self.last_cost_gpu_s),
+            ("busy", st.busy_gpu_s, self.last_busy_gpu_s),
+        ] {
+            if !cur.is_finite() {
+                out.push(format!(
+                    "{whence}@{t:.3}: {name} GPU-second integral is {cur}"
+                ));
+            } else if cur < last - eps {
+                out.push(format!(
+                    "{whence}@{t:.3}: negative incremental {name} cost \
+                     ({cur} after {last})"
+                ));
+            }
+        }
+
+        self.last_seq = seq;
+        self.last_now = t;
+        self.last_cost_gpu_s = st.cost_gpu_s;
+        self.last_busy_gpu_s = st.busy_gpu_s;
+    }
+}
+
+/// The simulation oracle: wraps any [`Policy`] and runs the full
+/// [`StateAudit`] invariant set after every policy callback. Strict mode
+/// ([`SimOracle::new`]) panics on the first violation with the offending
+/// invariant and simulated time; collecting mode ([`SimOracle::collecting`])
+/// records messages for property harnesses to report. The wrapper forwards
+/// `next_timed_action`, so coalescing behavior (and therefore simulated
+/// results) are unchanged — it is a pure observer.
+pub struct SimOracle<P: Policy> {
+    inner: P,
+    audit: StateAudit,
+    violations: Vec<String>,
+    panic_on_violation: bool,
+}
+
+impl<P: Policy> SimOracle<P> {
+    /// Strict oracle: panic on the first violated invariant.
+    pub fn new(inner: P) -> Self {
+        Self::with_mode(inner, true)
+    }
+
+    /// Collecting oracle: record violations in [`SimOracle::violations`].
+    pub fn collecting(inner: P) -> Self {
+        Self::with_mode(inner, false)
+    }
+
+    fn with_mode(inner: P, panic_on_violation: bool) -> Self {
+        SimOracle {
+            inner,
+            audit: StateAudit::new(),
+            violations: vec![],
+            panic_on_violation,
+        }
+    }
+
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    /// Number of audits performed (each checks the full invariant set).
+    pub fn audits(&self) -> u64 {
+        self.audit.audits
+    }
+
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+
+    fn run_audit(&mut self, st: &ClusterState, whence: &str) {
+        let before = self.violations.len();
+        self.audit.check(st, whence, &mut self.violations);
+        if self.panic_on_violation && self.violations.len() > before {
+            panic!(
+                "SimOracle[{}]: {}",
+                self.inner.name(),
+                self.violations[before..].join("; ")
+            );
+        }
+    }
+}
+
+impl<P: Policy> Policy for SimOracle<P> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn tick_interval(&self) -> f64 {
+        self.inner.tick_interval()
+    }
+    fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.inner.on_arrival(st, job_id);
+        self.run_audit(st, "arrival");
+    }
+    fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.inner.on_job_complete(st, job_id);
+        self.run_audit(st, "complete");
+    }
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.inner.on_tick(st);
+        self.run_audit(st, "tick");
+    }
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        self.inner.next_timed_action(st)
+    }
+}
+
 /// Outcome of one simulated experiment.
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -415,6 +724,18 @@ pub struct Simulator {
     pub perf: PerfModel,
 }
 
+/// `SimConfig::debug_oracle` hook: audit and panic on the first violation
+/// (`scratch` stays empty on the happy path, so no per-round allocation).
+fn debug_audit(audit: &mut Option<StateAudit>, scratch: &mut Vec<String>,
+               st: &ClusterState, whence: &str) {
+    if let Some(a) = audit.as_mut() {
+        a.check(st, whence, scratch);
+        if !scratch.is_empty() {
+            panic!("debug sim oracle: {}", scratch.join("; "));
+        }
+    }
+}
+
 impl Simulator {
     pub fn new(cfg: SimConfig, perf: PerfModel) -> Self {
         Simulator { cfg, perf }
@@ -454,6 +775,8 @@ impl Simulator {
         let mut coalesced: u64 = 0;
         let tick = policy.tick_interval();
         let mut wake = Wake::Dense;
+        let mut audit = self.cfg.debug_oracle.then(StateAudit::new);
+        let mut audit_scratch: Vec<String> = vec![];
         loop {
             // Earliest of (pending tick, heap top) by (time, seq).
             let tick_first = match heap.peek() {
@@ -478,6 +801,7 @@ impl Simulator {
                     overhead.add(t0.elapsed().as_secs_f64() * 1e3);
                     rounds += 1;
                     st.drain_queued(&mut heap);
+                    debug_audit(&mut audit, &mut audit_scratch, &st, "tick");
                     wake = policy.next_timed_action(&st);
                     if done == n_jobs {
                         break;
@@ -502,6 +826,8 @@ impl Simulator {
                     EventKind::Arrival(id) => {
                         policy.on_arrival(&mut st, id);
                         st.drain_queued(&mut heap);
+                        debug_audit(&mut audit, &mut audit_scratch, &st,
+                                    "arrival");
                         wake = policy.next_timed_action(&st);
                     }
                     EventKind::JobDone(id, gen) => {
@@ -524,6 +850,8 @@ impl Simulator {
                             policy.on_job_complete(&mut st, id);
                             done += 1;
                             st.drain_queued(&mut heap);
+                            debug_audit(&mut audit, &mut audit_scratch, &st,
+                                        "complete");
                             wake = policy.next_timed_action(&st);
                             if done == n_jobs {
                                 break;
@@ -890,6 +1218,96 @@ mod tests {
         // have executed them all)
         assert!(res.rounds_coalesced >= 15, "{}", res.rounds_coalesced);
         assert!(res.rounds_executed <= 5, "{}", res.rounds_executed);
+    }
+
+    /// Rogue policy for the oracle self-test: bills one GPU but grants
+    /// one GPU to *every* arrival, over-committing the capacity.
+    struct OverCommit;
+    impl Policy for OverCommit {
+        fn name(&self) -> &str {
+            "overcommit"
+        }
+        fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+            st.set_billable(1.0);
+            st.launch(id, 1, 0.0, 0.0, 1.0);
+        }
+        fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+        fn on_tick(&mut self, _st: &mut ClusterState) {}
+    }
+
+    #[test]
+    fn oracle_passes_a_compliant_policy() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::new(Greedy { billable: 0.0 });
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0), spec(1, 3.0, 50.0)]);
+        assert_eq!(res.n_done, 2);
+        assert!(p.violations().is_empty());
+        // every arrival, completion and executed round was audited
+        assert!(p.audits() >= 4, "{}", p.audits());
+    }
+
+    #[test]
+    fn oracle_catches_injected_capacity_violation() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::collecting(OverCommit);
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0), spec(1, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 2); // the rogue run itself still completes
+        assert!(
+            p.violations().iter().any(|v| v.contains("capacity conservation")),
+            "expected a capacity violation, got {:?}",
+            p.violations()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "SimOracle")]
+    fn strict_oracle_panics_on_violation() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::new(OverCommit);
+        sim.run(&mut p, vec![spec(0, 0.0, 100.0), spec(1, 0.0, 100.0)]);
+    }
+
+    #[test]
+    fn oracle_does_not_perturb_results() {
+        let specs = vec![spec(0, 0.0, 100.0), spec(1, 2.0, 50.0)];
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut plain = LazyGreedy { ticks: 0 };
+        let ref_res = sim.run(&mut plain, specs.clone());
+        let mut wrapped = SimOracle::new(LazyGreedy { ticks: 0 });
+        let res = sim.run(&mut wrapped, specs);
+        assert_eq!(res.n_done, ref_res.n_done);
+        assert_eq!(res.cost_usd, ref_res.cost_usd);
+        assert_eq!(res.job_latencies, ref_res.job_latencies);
+        // coalescing hints pass through the wrapper untouched
+        assert_eq!(res.rounds_coalesced, ref_res.rounds_coalesced);
+        assert_eq!(res.rounds_executed, ref_res.rounds_executed);
+    }
+
+    #[test]
+    fn debug_oracle_flag_audits_in_the_run_loop() {
+        let cfg = SimConfig { debug_oracle: true, ..Default::default() };
+        let sim = Simulator::new(cfg, PerfModel::default());
+        let mut p = Greedy { billable: 0.0 };
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1); // clean run: no panic
+    }
+
+    #[test]
+    #[should_panic(expected = "debug sim oracle")]
+    fn debug_oracle_flag_catches_violations() {
+        let cfg = SimConfig { debug_oracle: true, ..Default::default() };
+        let sim = Simulator::new(cfg, PerfModel::default());
+        sim.run(&mut OverCommit, vec![spec(0, 0.0, 100.0), spec(1, 0.0, 100.0)]);
+    }
+
+    #[test]
+    fn boxed_policies_forward_through_the_trait() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let boxed: Box<dyn Policy> = Box::new(Greedy { billable: 0.0 });
+        let mut p = SimOracle::new(boxed);
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+        assert_eq!(res.policy, "greedy");
     }
 
     #[test]

@@ -609,4 +609,30 @@ mod tests {
                 "coalesced {} vs executed {}",
                 res.rounds_coalesced, res.rounds_executed);
     }
+
+    #[test]
+    fn survives_flash_crowd_scenario_under_oracle() {
+        // A correlated spike storm floods every per-LLM queue in the same
+        // minutes — the adversarial case for the warm/cold split. The
+        // collecting oracle audits every round; all jobs must still finish.
+        use crate::cluster::SimOracle;
+        use crate::scenario::Scenario;
+        let sc = Scenario::FlashCrowd { storms: 3, intensity: 25.0,
+                                        jobs_per_llm: 70 };
+        let jobs = sc.generate(19, 1.0).unwrap();
+        let n = jobs.len();
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::collecting(PromptTuner::new(PromptTunerConfig {
+            max_gpus: 32,
+            seed: 19,
+            ..Default::default()
+        }));
+        let res = sim.run(&mut policy, jobs);
+        assert_eq!(res.n_done, n);
+        assert!(policy.violations().is_empty());
+        assert!(policy.audits() > 0);
+    }
 }

@@ -7,9 +7,11 @@
 //!   [`coordinator`] Workload Scheduler (warm/cold GPU pools, Algorithms 1
 //!   and 2, `DelaySchedulable`, latency-budget routing) and the
 //!   [`promptbank`] two-layer query engine; plus every substrate they need:
-//!   a discrete-event GPU [`cluster`] simulator, [`trace`] generation,
-//!   [`baselines`] (INFless-like, ElasticFlow-like), [`metrics`]/cost
-//!   accounting, and a real execution engine ([`serve`], [`tuning`]).
+//!   a discrete-event GPU [`cluster`] simulator (with the [`cluster::SimOracle`]
+//!   invariant layer), [`trace`] generation plus the [`scenario`] engine's
+//!   workload families, [`baselines`] (INFless-like, ElasticFlow-like),
+//!   [`metrics`]/cost accounting, and a real execution engine
+//!   ([`serve`], [`tuning`]).
 //! - **L2/L1 (build-time Python)** — the LPT compute graph (tiny GPT with a
 //!   tunable soft prompt, Pallas prefix-attention kernel) AOT-lowered to
 //!   HLO text artifacts.
@@ -25,6 +27,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod promptbank;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod trace;
 pub mod tuning;

@@ -130,6 +130,58 @@ mod tests {
     }
 
     #[test]
+    fn improvement_handles_zero_cost() {
+        // a zero-cost "ours" must not divide by zero: factor pins to 1.0
+        let mut ours = result("pt", 5, 100, 0.0);
+        let other = result("b", 20, 100, 45.0);
+        let (v, c) = improvement(&ours, &other);
+        assert_eq!(c, 1.0);
+        assert!((v - 4.0).abs() < 1e-9);
+        // both axes degenerate: identity on both
+        ours.n_violations = 0;
+        let (v2, c2) = improvement(&ours, &result("c", 0, 100, 0.0));
+        assert_eq!((v2, c2), (1.0, 1.0));
+    }
+
+    #[test]
+    fn improvement_zero_jobs_is_identity() {
+        // violation_rate() of an empty run is 0 on both sides → 1.0
+        let ours = result("pt", 0, 0, 1.0);
+        let other = result("b", 0, 0, 1.0);
+        assert_eq!(improvement(&ours, &other).0, 1.0);
+    }
+
+    #[test]
+    fn render_table_aligns_columns_and_rounds() {
+        let rows = vec![
+            Row::from(&result("prompttuner", 1, 8, 5.126)),
+            Row::from(&result("x", 0, 8, 0.0)),
+        ];
+        let t = render_table("T", &rows);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4); // title + header + 2 rows
+        assert_eq!(lines[0], "== T ==");
+        // fixed-width columns: every body line is equally long
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(lines[2].starts_with("prompttuner"));
+        assert!(lines[2].contains("12.5")); // 1/8 violations, 1 decimal
+        assert!(lines[2].ends_with("5.13")); // cost, 2 decimals
+        assert!(lines[3].contains("0.0"));
+    }
+
+    #[test]
+    fn render_series_aligns_and_rounds_to_4_decimals() {
+        let s = render_series("S", "x", "y", &[(0.5, 1.0 / 3.0)]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "== S ==");
+        assert!(lines[1].starts_with("x"));
+        assert!(lines[2].starts_with("0.5000"));
+        assert!(lines[2].contains("0.3333"));
+        // empty series: header only
+        assert_eq!(render_series("E", "x", "y", &[]).lines().count(), 2);
+    }
+
+    #[test]
     fn series_renders_points() {
         let s = render_series("Fig 2b", "minute", "arrivals",
                               &[(0.0, 3.0), (1.0, 15.0)]);

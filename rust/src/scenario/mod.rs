@@ -1,0 +1,347 @@
+//! Scenario engine: a catalogue of named workload families beyond the
+//! paper's low/medium/high load levels (§6.1 evaluates one production
+//! trace shape only), so the schedulers can be exercised under the
+//! traffic regimes where related SLO-serving work shows rankings flip.
+//!
+//! Families:
+//! * **diurnal** — sinusoidal arrival rate over a multi-hour window;
+//! * **flash-crowd** — correlated spike storms (all LLMs surge in the
+//!   same minutes) at configurable intensity;
+//! * **heavy-tail** — bounded-Pareto job durations (the paper's
+//!   log-uniform body plus a far tail);
+//! * **multi-tenant** — several tenants with different SLO-emergence
+//!   tiers sharing one cluster;
+//! * **replay** — a trace previously serialized with [`replay::save`]
+//!   (binary, `util::binio`, exact f64 round-trip).
+//!
+//! Every family is produced through the existing
+//! [`TraceGenerator`]/[`JobSpec`] pipeline — same per-job sampling, same
+//! finalize pass — so all three policies run on them unchanged. The
+//! conformance suite (`tests/prop_scenarios.rs`) pins determinism, job
+//! counts, window containment and deadline sanity for each family; the
+//! simulation oracle (`cluster::SimOracle`) audits the runs themselves.
+
+pub mod replay;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::trace::{DurationDist, TraceConfig, TraceGenerator};
+use crate::util::rng::Rng;
+use crate::workload::{JobSpec, Llm, PerfModel};
+
+/// Tenant SLO-emergence tiers (multi-tenant family): tenant t gets
+/// `TIERS[t % 4] × S` — premium (tight) through relaxed.
+pub const TENANT_TIERS: [f64; 4] = [0.5, 1.0, 1.5, 2.0];
+
+/// A named workload family with its parameters.
+#[derive(Clone, Debug)]
+pub enum Scenario {
+    /// Sinusoidal arrival rate over `hours`, trough → peak → trough;
+    /// `peak_to_trough` is the rate ratio between the two.
+    Diurnal { hours: f64, jobs_per_llm: usize, peak_to_trough: f64 },
+    /// `storms` storm minutes shared by *all* LLMs (correlated surges),
+    /// each at `intensity` × the base per-minute rate.
+    FlashCrowd { storms: usize, intensity: f64, jobs_per_llm: usize },
+    /// Bounded-Pareto durations (tail index `alpha`, min 5 s, cap 900 s)
+    /// on the paper's spiky arrival shape.
+    HeavyTail { alpha: f64, jobs_per_llm: usize },
+    /// `tenants` tenants share the cluster; tenant t's SLOs use
+    /// `TENANT_TIERS[t % 4]` × the base emergence S.
+    MultiTenant { tenants: usize, jobs_per_tenant: usize },
+    /// Replay a binary trace file written by [`replay::save`].
+    Replay { path: PathBuf },
+}
+
+impl Scenario {
+    /// The default-parameterized synthetic catalogue (replay needs a
+    /// file, so it is constructed explicitly where one exists).
+    pub fn catalogue() -> Vec<Scenario> {
+        vec![
+            Scenario::Diurnal { hours: 3.0, jobs_per_llm: 80, peak_to_trough: 6.0 },
+            Scenario::FlashCrowd { storms: 3, intensity: 25.0, jobs_per_llm: 70 },
+            Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 60 },
+            Scenario::MultiTenant { tenants: 4, jobs_per_tenant: 45 },
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Diurnal { .. } => "diurnal",
+            Scenario::FlashCrowd { .. } => "flash-crowd",
+            Scenario::HeavyTail { .. } => "heavy-tail",
+            Scenario::MultiTenant { .. } => "multi-tenant",
+            Scenario::Replay { .. } => "replay",
+        }
+    }
+
+    /// Default-parameterized synthetic family by name (replay is
+    /// excluded: it needs a path).
+    pub fn from_name(name: &str) -> Option<Scenario> {
+        Self::catalogue().into_iter().find(|s| s.name() == name)
+    }
+
+    /// Experiment window of the generated trace, seconds (None for
+    /// replay, whose span comes from the file).
+    pub fn window_s(&self) -> Option<f64> {
+        match self {
+            Scenario::Diurnal { hours, .. } => Some(hours * 3600.0),
+            Scenario::FlashCrowd { .. } => Some(1800.0),
+            Scenario::HeavyTail { .. } | Scenario::MultiTenant { .. } => {
+                Some(1200.0)
+            }
+            Scenario::Replay { .. } => None,
+        }
+    }
+
+    /// Minimum experiment horizon (`SimConfig::horizon_s`) the family
+    /// needs for every job to be *able* to finish: a heavy-tail job
+    /// granted a single GPU can legally run for hours of simulated time,
+    /// so the default 7200 s horizon would cut its tail off and
+    /// under-report violations/cost. `bench::run_cell` applies this
+    /// automatically; None means the default horizon suffices.
+    pub fn horizon_hint(&self) -> Option<f64> {
+        match self {
+            Scenario::HeavyTail { .. } => Some(14400.0),
+            _ => None,
+        }
+    }
+
+    /// Exact number of jobs the family generates (None for replay).
+    pub fn expected_jobs(&self) -> Option<usize> {
+        match self {
+            Scenario::Diurnal { jobs_per_llm, .. }
+            | Scenario::FlashCrowd { jobs_per_llm, .. }
+            | Scenario::HeavyTail { jobs_per_llm, .. } => {
+                Some(jobs_per_llm * Llm::MAIN.len())
+            }
+            Scenario::MultiTenant { tenants, jobs_per_tenant } => {
+                Some(tenants * jobs_per_tenant)
+            }
+            Scenario::Replay { .. } => None,
+        }
+    }
+
+    /// Generate the scenario's trace. `seed` drives all randomness (the
+    /// family is bit-deterministic in it); `slo_emergence` scales every
+    /// SLO (multi-tenant applies its per-tier factors on top; replay
+    /// keeps the SLOs recorded in the file).
+    pub fn generate(&self, seed: u64, slo_emergence: f64) -> Result<Vec<JobSpec>> {
+        let base_cfg = |window_s: f64| TraceConfig {
+            seed,
+            window_s,
+            slo_emergence,
+            ..Default::default()
+        };
+        match self {
+            Scenario::Diurnal { hours, jobs_per_llm, peak_to_trough } => {
+                let window_s = hours * 3600.0;
+                let minutes = (window_s / 60.0).ceil() as usize;
+                // rate(m) = 1 + a·sin(2π m/minutes − π/2): trough at the
+                // window edges, peak mid-window, peak/trough = r.
+                let a = (peak_to_trough - 1.0) / (peak_to_trough + 1.0);
+                let weights: Vec<f64> = (0..minutes)
+                    .map(|m| {
+                        let phase = 2.0 * std::f64::consts::PI * m as f64
+                            / minutes as f64
+                            - std::f64::consts::FRAC_PI_2;
+                        1.0 + a * phase.sin()
+                    })
+                    .collect();
+                let mut gen =
+                    TraceGenerator::new(base_cfg(window_s), PerfModel::default());
+                let mut jobs = vec![];
+                for llm in Llm::MAIN {
+                    jobs.extend(gen.generate_weighted(llm, *jobs_per_llm, &weights));
+                }
+                TraceGenerator::finalize(&mut jobs);
+                Ok(jobs)
+            }
+            Scenario::FlashCrowd { storms, intensity, jobs_per_llm } => {
+                let window_s = 1800.0;
+                let minutes = (window_s / 60.0).ceil() as usize;
+                // Storm minutes are drawn once and shared by every LLM —
+                // that correlation is what distinguishes a flash crowd
+                // from the generator's independent per-LLM spikes.
+                let mut storm_rng = Rng::new(seed ^ 0xF1A5_4C40_57A0_0001);
+                let storm_minutes =
+                    storm_rng.choose_k(minutes, (*storms).min(minutes));
+                let mut weights = vec![0.2f64; minutes];
+                for &m in &storm_minutes {
+                    weights[m] = 0.2 * intensity;
+                }
+                let mut gen =
+                    TraceGenerator::new(base_cfg(window_s), PerfModel::default());
+                let mut jobs = vec![];
+                for llm in Llm::MAIN {
+                    jobs.extend(gen.generate_weighted(llm, *jobs_per_llm, &weights));
+                }
+                TraceGenerator::finalize(&mut jobs);
+                Ok(jobs)
+            }
+            Scenario::HeavyTail { alpha, jobs_per_llm } => {
+                let cfg = TraceConfig {
+                    duration: DurationDist::Pareto {
+                        xm: 5.0,
+                        alpha: *alpha,
+                        cap: 900.0,
+                    },
+                    ..base_cfg(1200.0)
+                };
+                let mut gen = TraceGenerator::new(cfg, PerfModel::default());
+                let mut jobs = vec![];
+                for llm in Llm::MAIN {
+                    jobs.extend(gen.generate_for(llm, *jobs_per_llm));
+                }
+                TraceGenerator::finalize(&mut jobs);
+                Ok(jobs)
+            }
+            Scenario::MultiTenant { tenants, jobs_per_tenant } => {
+                let mut jobs = vec![];
+                for t in 0..*tenants {
+                    let tier = TENANT_TIERS[t % TENANT_TIERS.len()];
+                    let cfg = TraceConfig {
+                        seed: seed
+                            ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        slo_emergence: slo_emergence * tier,
+                        ..base_cfg(1200.0)
+                    };
+                    let mut gen = TraceGenerator::new(cfg, PerfModel::default());
+                    for (i, llm) in Llm::MAIN.into_iter().enumerate() {
+                        jobs.extend(gen.generate_for(
+                            llm,
+                            split_count(*jobs_per_tenant, Llm::MAIN.len(), i),
+                        ));
+                    }
+                }
+                TraceGenerator::finalize(&mut jobs);
+                Ok(jobs)
+            }
+            Scenario::Replay { path } => replay::load(path),
+        }
+    }
+}
+
+/// Split `total` jobs across `parts` LLMs: part `i` gets the base share
+/// plus one of the remainder while it lasts, so the parts sum to `total`.
+fn split_count(total: usize, parts: usize, i: usize) -> usize {
+    total / parts + usize::from(i < total % parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_count_sums_to_total() {
+        for total in [0usize, 1, 2, 3, 44, 45, 46, 100] {
+            let sum: usize = (0..3).map(|i| split_count(total, 3, i)).sum();
+            assert_eq!(sum, total, "total {total}");
+        }
+    }
+
+    #[test]
+    fn catalogue_names_are_unique_and_resolvable() {
+        let cat = Scenario::catalogue();
+        assert_eq!(cat.len(), 4);
+        let mut names: Vec<&str> = cat.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+        for s in &cat {
+            assert!(Scenario::from_name(s.name()).is_some(), "{}", s.name());
+        }
+        assert!(Scenario::from_name("replay").is_none());
+        assert!(Scenario::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn families_emit_expected_counts_with_dense_ids() {
+        for sc in Scenario::catalogue() {
+            let jobs = sc.generate(5, 1.0).unwrap();
+            assert_eq!(jobs.len(), sc.expected_jobs().unwrap(), "{}", sc.name());
+            for (i, j) in jobs.iter().enumerate() {
+                assert_eq!(j.id, i, "{}", sc.name());
+            }
+            for w in jobs.windows(2) {
+                assert!(w[0].submit_s <= w[1].submit_s, "{}", sc.name());
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_window() {
+        let sc = Scenario::Diurnal {
+            hours: 2.0,
+            jobs_per_llm: 400,
+            peak_to_trough: 8.0,
+        };
+        let jobs = sc.generate(9, 1.0).unwrap();
+        let window = sc.window_s().unwrap();
+        let mid = jobs
+            .iter()
+            .filter(|j| {
+                (window * 0.25..window * 0.75).contains(&j.submit_s)
+            })
+            .count();
+        // the sinusoid concentrates arrivals around the mid-window peak
+        assert!(
+            mid as f64 > jobs.len() as f64 * 0.6,
+            "{mid}/{} mid-window arrivals",
+            jobs.len()
+        );
+    }
+
+    #[test]
+    fn flash_crowd_storms_are_correlated_across_llms() {
+        let sc = Scenario::FlashCrowd {
+            storms: 2,
+            intensity: 40.0,
+            jobs_per_llm: 120,
+        };
+        let jobs = sc.generate(11, 1.0).unwrap();
+        // per-LLM top minute must coincide (the storms are shared)
+        let top_minute = |llm: Llm| -> usize {
+            let mut counts = vec![0usize; 30];
+            for j in jobs.iter().filter(|j| j.llm == llm) {
+                counts[((j.submit_s / 60.0) as usize).min(29)] += 1;
+            }
+            (0..30).max_by_key(|&m| counts[m]).unwrap()
+        };
+        let tops: Vec<usize> = Llm::MAIN.iter().map(|&l| top_minute(l)).collect();
+        assert!(
+            tops[0] == tops[1] || tops[0] == tops[2] || tops[1] == tops[2],
+            "no shared storm minute: {tops:?}"
+        );
+    }
+
+    #[test]
+    fn heavy_tail_durations_exceed_paper_cap() {
+        let sc = Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 400 };
+        let jobs = sc.generate(13, 1.0).unwrap();
+        let max = jobs.iter().map(|j| j.duration_s).fold(0.0f64, f64::max);
+        assert!(max > 360.0, "tail never realized: max {max}");
+        assert!(max <= 900.0 + 1e-9);
+        let min = jobs.iter().map(|j| j.duration_s).fold(f64::MAX, f64::min);
+        assert!(min >= 5.0 - 1e-9);
+    }
+
+    #[test]
+    fn multi_tenant_spans_slo_tiers() {
+        let sc = Scenario::MultiTenant { tenants: 4, jobs_per_tenant: 40 };
+        let jobs = sc.generate(17, 1.0).unwrap();
+        // implied emergence S = (slo − cold_start) / duration clusters
+        // around the four tier factors
+        let perf = PerfModel::default();
+        let mut implied: Vec<f64> = jobs
+            .iter()
+            .map(|j| (j.slo_s - perf.cold_start(j.llm)) / j.duration_s)
+            .collect();
+        implied.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lo = implied.first().unwrap();
+        let hi = implied.last().unwrap();
+        assert!((lo - 0.5).abs() < 1e-9, "{lo}");
+        assert!((hi - 2.0).abs() < 1e-9, "{hi}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Binary trace (de)serialization for the replay scenario family and the
+//! golden-snapshot fixtures: little-endian via `util::binio`, with exact
+//! f64 round-trips (the plain-text format in `trace::save` rounds to 3–4
+//! decimals, which is fine for inspection but not for bit-deterministic
+//! replay).
+//!
+//! Layout: magic `u32` ("PTR1"), version `u32`, job count `u32`, then per
+//! job `u32` llm index, `u32` task id, `u32` traced GPUs, and f64
+//! submit/duration/base-iters/quality/slo. Job ids are implicit (record
+//! order), re-assigned densely at load.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::binio::{read_all, LeReader, LeWriter};
+use crate::workload::{JobSpec, Llm};
+
+/// File magic: "PTR1" little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PTR1");
+pub const VERSION: u32 = 1;
+
+/// Serialize a trace into bytes.
+pub fn to_bytes(jobs: &[JobSpec]) -> Vec<u8> {
+    let mut w = LeWriter::new();
+    w.u32(MAGIC);
+    w.u32(VERSION);
+    w.u32(jobs.len() as u32);
+    for j in jobs {
+        w.u32(j.llm.index() as u32);
+        w.u32(j.task_id as u32);
+        w.u32(j.traced_gpus as u32);
+        w.f64(j.submit_s);
+        w.f64(j.duration_s);
+        w.f64(j.base_iters);
+        w.f64(j.user_prompt_quality);
+        w.f64(j.slo_s);
+    }
+    w.into_bytes()
+}
+
+/// Parse a trace from bytes written by [`to_bytes`].
+pub fn from_bytes(bytes: &[u8]) -> Result<Vec<JobSpec>> {
+    let mut r = LeReader::new(bytes);
+    let magic = r.u32().map_err(|e| e.context("binary trace: missing magic"))?;
+    if magic != MAGIC {
+        bail!("binary trace: bad magic {magic:#010x} (want {MAGIC:#010x})");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("binary trace: unsupported version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut jobs = Vec::with_capacity(count);
+    for i in 0..count {
+        let llm_idx = r.u32()? as usize;
+        let llm = *Llm::ALL
+            .get(llm_idx)
+            .ok_or_else(|| anyhow::anyhow!("job {i}: bad LLM index {llm_idx}"))?;
+        let task_id = r.u32()? as usize;
+        let traced_gpus = r.u32()? as usize;
+        let submit_s = r.f64()?;
+        let duration_s = r.f64()?;
+        let base_iters = r.f64()?;
+        let user_prompt_quality = r.f64()?;
+        let slo_s = r.f64()?;
+        if !submit_s.is_finite() || submit_s < 0.0 {
+            bail!("job {i}: bad submit time {submit_s}");
+        }
+        if !(duration_s.is_finite() && duration_s > 0.0) {
+            bail!("job {i}: bad duration {duration_s}");
+        }
+        if !(slo_s.is_finite() && slo_s > 0.0) {
+            bail!("job {i}: bad SLO {slo_s}");
+        }
+        if !(base_iters.is_finite() && base_iters > 0.0) {
+            bail!("job {i}: bad base iterations {base_iters}");
+        }
+        if !(0.0..=1.0).contains(&user_prompt_quality) {
+            bail!("job {i}: prompt quality {user_prompt_quality} outside [0, 1]");
+        }
+        if traced_gpus == 0 {
+            bail!("job {i}: zero traced GPUs");
+        }
+        jobs.push(JobSpec {
+            id: i,
+            llm,
+            task_id,
+            submit_s,
+            duration_s,
+            traced_gpus,
+            base_iters,
+            user_prompt_quality,
+            slo_s,
+        });
+    }
+    if r.remaining() != 0 {
+        bail!("binary trace: {} trailing bytes", r.remaining());
+    }
+    // The simulator indexes jobs by position and assumes submit order:
+    // re-sort (stable, so equal-time records keep file order) and re-id.
+    jobs.sort_by(|a, b| a.submit_s.partial_cmp(&b.submit_s).unwrap());
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i;
+    }
+    Ok(jobs)
+}
+
+/// Write a binary trace file.
+pub fn save(path: impl AsRef<Path>, jobs: &[JobSpec]) -> Result<()> {
+    std::fs::write(path.as_ref(), to_bytes(jobs))
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+/// Load a binary trace file written by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
+    let bytes = read_all(path.as_ref())?;
+    from_bytes(&bytes)
+        .map_err(|e| e.context(format!("parsing {}", path.as_ref().display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Load, TraceConfig, TraceGenerator};
+    use crate::workload::PerfModel;
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 3, ..Default::default() },
+            PerfModel::default(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        let back = from_bytes(&to_bytes(&jobs)).unwrap();
+        assert_eq!(back.len(), jobs.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.llm, b.llm);
+            assert_eq!(a.task_id, b.task_id);
+            assert_eq!(a.traced_gpus, b.traced_gpus);
+            assert_eq!(a.submit_s.to_bits(), b.submit_s.to_bits());
+            assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+            assert_eq!(a.base_iters.to_bits(), b.base_iters.to_bits());
+            assert_eq!(
+                a.user_prompt_quality.to_bits(),
+                b.user_prompt_quality.to_bits()
+            );
+            assert_eq!(a.slo_s.to_bits(), b.slo_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_and_replay_scenario() {
+        let dir = std::env::temp_dir().join("pt_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 4, ..Default::default() },
+            PerfModel::default(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        save(&path, &jobs).unwrap();
+        let sc = crate::scenario::Scenario::Replay { path: path.clone() };
+        let back = sc.generate(0, 1.0).unwrap(); // seed/slo ignored by replay
+        assert_eq!(back.len(), jobs.len());
+        assert_eq!(
+            back[7].submit_s.to_bits(),
+            jobs[7].submit_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn rejects_corrupt_inputs() {
+        assert!(from_bytes(&[]).is_err());
+        assert!(from_bytes(&[0u8; 12]).is_err()); // bad magic
+        let mut ok = to_bytes(&[]);
+        assert!(from_bytes(&ok).unwrap().is_empty());
+        ok.push(0); // trailing byte
+        assert!(from_bytes(&ok).is_err());
+        // truncated record
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 5, ..Default::default() },
+            PerfModel::default(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        let bytes = to_bytes(&jobs);
+        assert!(from_bytes(&bytes[..bytes.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn rejects_non_physical_job_values() {
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 6, ..Default::default() },
+            PerfModel::default(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        let patches: [fn(&mut crate::workload::JobSpec); 4] = [
+            |j| j.base_iters = f64::NAN,
+            |j| j.user_prompt_quality = 1.5,
+            |j| j.traced_gpus = 0,
+            |j| j.duration_s = -1.0,
+        ];
+        for patch in patches {
+            let mut bad = jobs.clone();
+            patch(&mut bad[3]);
+            assert!(from_bytes(&to_bytes(&bad)).is_err());
+        }
+    }
+}

@@ -5,7 +5,7 @@
 pub mod generator;
 pub mod tasks;
 
-pub use generator::{Load, TraceConfig, TraceGenerator};
+pub use generator::{DurationDist, Load, TraceConfig, TraceGenerator};
 
 use std::path::Path;
 

@@ -59,6 +59,22 @@ impl<'a> LeReader<'a> {
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// One little-endian f64 (exact bit round-trip with [`LeWriter::f64`];
+    /// the trace/fixture formats depend on that exactness).
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
     pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
         let b = self.take(4 * n)?;
         Ok(b.chunks_exact(4)
@@ -86,6 +102,14 @@ impl LeWriter {
     }
 
     pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -178,5 +202,27 @@ mod tests {
         let mut r = LeReader::new(&[1, 2]);
         assert!(r.u32().is_err());
         assert!(r.f32_vec(1).is_err());
+        assert!(r.u64().is_err());
+        assert!(r.f64().is_err());
+    }
+
+    #[test]
+    fn u64_f64_roundtrip_is_bit_exact() {
+        let mut w = LeWriter::new();
+        w.u64(u64::MAX);
+        w.u64(0x0123_4567_89AB_CDEF);
+        for v in [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, 1e-300,
+                  std::f64::consts::PI] {
+            w.f64(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = LeReader::new(&bytes);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.u64().unwrap(), 0x0123_4567_89AB_CDEF);
+        for v in [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, 1e-300,
+                  std::f64::consts::PI] {
+            assert_eq!(r.f64().unwrap().to_bits(), v.to_bits());
+        }
+        assert_eq!(r.remaining(), 0);
     }
 }

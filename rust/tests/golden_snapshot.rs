@@ -1,0 +1,232 @@
+//! Golden snapshot: a serialized Medium paper trace plus per-policy
+//! `SimResult` summary fixtures (binary, `util::binio`), and a test that
+//! fails with a readable field-by-field diff when either the trace
+//! generator or the simulation metrics drift unintentionally.
+//!
+//! Bootstrap: on a machine where the fixtures don't exist yet (or with
+//! `GOLDEN_UPDATE=1`), the test writes `tests/golden/*.bin` and passes —
+//! commit the generated files to arm the snapshot. Simulation summaries
+//! involve libm calls (`powf` in the iteration-scaling law), so fixtures
+//! are pinned to the CI platform; regenerate with `GOLDEN_UPDATE=1` when
+//! a metric change is *intended*.
+
+use std::path::PathBuf;
+
+use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
+use prompttuner::cluster::{Policy, SimConfig, SimOracle, SimResult, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::scenario::replay;
+use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
+use prompttuner::util::binio::{read_all, LeReader, LeWriter};
+use prompttuner::workload::{JobSpec, PerfModel};
+
+const SEED: u64 = 4242;
+const GPUS: usize = 32;
+const SYSTEMS: [&str; 3] = ["prompttuner", "infless", "elasticflow"];
+const RESULTS_MAGIC: u32 = u32::from_le_bytes(*b"PTG1");
+
+fn golden_dir() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+fn fresh_trace() -> Vec<JobSpec> {
+    let mut gen = TraceGenerator::new(
+        TraceConfig { seed: SEED, ..Default::default() },
+        PerfModel::default(),
+    );
+    gen.generate_main(Load::Medium)
+}
+
+fn make_policy(system: &str) -> Box<dyn Policy> {
+    match system {
+        "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
+            max_gpus: GPUS,
+            seed: SEED,
+            ..Default::default()
+        })),
+        "infless" => Box::new(Infless::new(InflessConfig {
+            max_gpus: GPUS,
+            seed: SEED,
+            ..Default::default()
+        })),
+        _ => Box::new(ElasticFlow::new(ElasticFlowConfig {
+            cluster_size: GPUS,
+            seed: SEED,
+            ..Default::default()
+        })),
+    }
+}
+
+/// The summary fields the snapshot pins (rounds/wall-clock are perf
+/// metrics, free to change; these are the simulation's semantics).
+#[derive(Debug, PartialEq)]
+struct Summary {
+    n_jobs: u32,
+    n_done: u32,
+    n_violations: u32,
+    cost_usd: f64,
+    gpu_seconds_billed: f64,
+    gpu_seconds_busy: f64,
+    mean_utilization: f64,
+}
+
+impl Summary {
+    fn of(r: &SimResult) -> Summary {
+        Summary {
+            n_jobs: r.n_jobs as u32,
+            n_done: r.n_done as u32,
+            n_violations: r.n_violations as u32,
+            cost_usd: r.cost_usd,
+            gpu_seconds_billed: r.gpu_seconds_billed,
+            gpu_seconds_busy: r.gpu_seconds_busy,
+            mean_utilization: r.mean_utilization,
+        }
+    }
+
+    fn diff(&self, golden: &Summary, system: &str, out: &mut Vec<String>) {
+        let mut num = |name: &str, got: f64, want: f64| {
+            // tolerate libm-level noise, catch behavioral drift
+            let tol = 1e-9 * want.abs().max(1.0);
+            if (got - want).abs() > tol {
+                out.push(format!(
+                    "{system}: {name} drifted {want} -> {got} (golden -> current)"
+                ));
+            }
+        };
+        num("n_jobs", self.n_jobs as f64, golden.n_jobs as f64);
+        num("n_done", self.n_done as f64, golden.n_done as f64);
+        num("n_violations", self.n_violations as f64,
+            golden.n_violations as f64);
+        num("cost_usd", self.cost_usd, golden.cost_usd);
+        num("gpu_seconds_billed", self.gpu_seconds_billed,
+            golden.gpu_seconds_billed);
+        num("gpu_seconds_busy", self.gpu_seconds_busy, golden.gpu_seconds_busy);
+        num("mean_utilization", self.mean_utilization, golden.mean_utilization);
+    }
+}
+
+fn run_summaries(jobs: &[JobSpec]) -> Vec<Summary> {
+    SYSTEMS
+        .iter()
+        .map(|s| {
+            let sim = Simulator::new(
+                SimConfig { max_gpus: GPUS, ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut policy = SimOracle::collecting(make_policy(s));
+            let res = sim.run(&mut policy, jobs.to_vec());
+            assert!(policy.violations().is_empty(), "{s}: oracle violations");
+            Summary::of(&res)
+        })
+        .collect()
+}
+
+fn write_results(path: &PathBuf, summaries: &[Summary]) {
+    let mut w = LeWriter::new();
+    w.u32(RESULTS_MAGIC);
+    w.u32(1); // version
+    w.u32(summaries.len() as u32);
+    for s in summaries {
+        w.u32(s.n_jobs);
+        w.u32(s.n_done);
+        w.u32(s.n_violations);
+        w.f64(s.cost_usd);
+        w.f64(s.gpu_seconds_billed);
+        w.f64(s.gpu_seconds_busy);
+        w.f64(s.mean_utilization);
+    }
+    w.write_to(path).expect("writing golden results fixture");
+}
+
+fn read_results(path: &PathBuf) -> Vec<Summary> {
+    let bytes = read_all(path).expect("reading golden results fixture");
+    let mut r = LeReader::new(&bytes);
+    assert_eq!(r.u32().unwrap(), RESULTS_MAGIC, "bad results-fixture magic");
+    assert_eq!(r.u32().unwrap(), 1, "bad results-fixture version");
+    let n = r.u32().unwrap() as usize;
+    assert_eq!(n, SYSTEMS.len(), "results fixture covers {n} systems");
+    (0..n)
+        .map(|_| Summary {
+            n_jobs: r.u32().unwrap(),
+            n_done: r.u32().unwrap(),
+            n_violations: r.u32().unwrap(),
+            cost_usd: r.f64().unwrap(),
+            gpu_seconds_billed: r.f64().unwrap(),
+            gpu_seconds_busy: r.f64().unwrap(),
+            mean_utilization: r.f64().unwrap(),
+        })
+        .collect()
+}
+
+fn diff_traces(golden: &[JobSpec], fresh: &[JobSpec]) -> Vec<String> {
+    let mut out = vec![];
+    if golden.len() != fresh.len() {
+        out.push(format!(
+            "trace length drifted {} -> {} jobs", golden.len(), fresh.len()
+        ));
+        return out;
+    }
+    for (g, f) in golden.iter().zip(fresh) {
+        let same = g.llm == f.llm
+            && g.task_id == f.task_id
+            && g.traced_gpus == f.traced_gpus
+            && g.submit_s.to_bits() == f.submit_s.to_bits()
+            && g.duration_s.to_bits() == f.duration_s.to_bits()
+            && g.base_iters.to_bits() == f.base_iters.to_bits()
+            && g.user_prompt_quality.to_bits() == f.user_prompt_quality.to_bits()
+            && g.slo_s.to_bits() == f.slo_s.to_bits();
+        if !same {
+            out.push(format!(
+                "trace job {} drifted:\n  golden:  {g:?}\n  current: {f:?}",
+                g.id
+            ));
+            if out.len() >= 5 {
+                out.push("... (further trace diffs elided)".into());
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_medium_trace_and_metrics_are_stable() {
+    let dir = golden_dir();
+    let trace_path = dir.join("medium_trace.bin");
+    let results_path = dir.join("medium_results.bin");
+    let update = std::env::var_os("GOLDEN_UPDATE").is_some();
+
+    if update || !trace_path.exists() || !results_path.exists() {
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = fresh_trace();
+        replay::save(&trace_path, &jobs).unwrap();
+        write_results(&results_path, &run_summaries(&jobs));
+        eprintln!(
+            "golden_snapshot: bootstrapped fixtures under {} — commit them \
+             to arm the snapshot",
+            dir.display()
+        );
+        return;
+    }
+
+    let golden_jobs = replay::load(&trace_path).unwrap();
+    let mut diffs = diff_traces(&golden_jobs, &fresh_trace());
+    // Metrics are snapshotted over the *golden* trace so a generator
+    // drift (reported above) doesn't cascade into every metric row.
+    let golden_summaries = read_results(&results_path);
+    for (summary, (golden, system)) in run_summaries(&golden_jobs)
+        .iter()
+        .zip(golden_summaries.iter().zip(SYSTEMS))
+    {
+        summary.diff(golden, system, &mut diffs);
+    }
+    assert!(
+        diffs.is_empty(),
+        "golden snapshot drift ({} diffs) — if intended, regenerate with \
+         GOLDEN_UPDATE=1 and commit:\n{}",
+        diffs.len(),
+        diffs.join("\n")
+    );
+}

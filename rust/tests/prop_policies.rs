@@ -1,67 +1,20 @@
 //! Property-based tests over the full policy stack: randomized workloads
-//! through each scheduler with per-tick invariant checks (GPU
-//! conservation, billable within provider budget, completion, cost
-//! accounting sanity). Uses the in-crate mini property harness.
+//! through each scheduler, audited by the simulation oracle
+//! ([`SimOracle`]: GPU-capacity conservation, no grants to departed jobs,
+//! index agreement, monotone sequence numbers, non-negative incremental
+//! cost) plus completion and cost-floor checks. Uses the in-crate mini
+//! property harness.
 
 use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use prompttuner::bench::{self, SweepCell, SYSTEMS};
-use prompttuner::cluster::{ClusterState, Policy, SimConfig, Simulator, Wake};
+use prompttuner::cluster::{ClusterState, Policy, SimConfig, SimOracle,
+                           Simulator, Wake};
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::scenario::Scenario;
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
-use prompttuner::util::prop::{check, ensure};
+use prompttuner::util::prop::{check, check_sized, ensure};
 use prompttuner::util::rng::Rng;
 use prompttuner::workload::{PerfModel, GPU_PRICE_PER_S};
-
-/// Wraps a policy and asserts cluster-wide invariants on every callback.
-struct Checked<P: Policy> {
-    inner: P,
-    max_gpus: f64,
-    violations: Vec<String>,
-}
-
-impl<P: Policy> Checked<P> {
-    fn new(inner: P, max_gpus: usize) -> Self {
-        Checked { inner, max_gpus: max_gpus as f64, violations: vec![] }
-    }
-
-    fn audit(&mut self, st: &ClusterState, whence: &str) {
-        if st.busy() < -1e-9 {
-            self.violations.push(format!("{whence}: negative busy {}", st.busy()));
-        }
-        if st.billable() > self.max_gpus + 1e-9 {
-            self.violations.push(format!(
-                "{whence}: billable {} exceeds provider budget {}",
-                st.billable(),
-                self.max_gpus
-            ));
-        }
-    }
-}
-
-impl<P: Policy> Policy for Checked<P> {
-    fn name(&self) -> &str {
-        self.inner.name()
-    }
-    fn tick_interval(&self) -> f64 {
-        self.inner.tick_interval()
-    }
-    fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
-        self.inner.on_arrival(st, id);
-        self.audit(st, "arrival");
-    }
-    fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
-        self.inner.on_job_complete(st, id);
-        self.audit(st, "complete");
-    }
-    fn on_tick(&mut self, st: &mut ClusterState) {
-        self.inner.on_tick(st);
-        self.audit(st, "tick");
-    }
-    fn next_timed_action(&self, st: &ClusterState) -> Wake {
-        // forward so the invariants also run under tick coalescing
-        self.inner.next_timed_action(st)
-    }
-}
 
 fn random_load(rng: &mut Rng) -> Load {
     [Load::Low, Load::Medium, Load::High][rng.below(3)]
@@ -81,42 +34,37 @@ fn run_checked(system: usize, rng: &mut Rng) -> Result<(), String> {
     let sim = Simulator::new(SimConfig { max_gpus: gpus, ..Default::default() }, perf);
     let (res, violations) = match system {
         0 => {
-            let mut p = Checked::new(
-                PromptTuner::new(PromptTunerConfig {
-                    max_gpus: gpus,
-                    seed,
-                    // randomize the ablation switches too
-                    use_bank: rng.below(2) == 0,
-                    use_warm_pools: rng.below(2) == 0,
-                    use_warm_allocator: rng.below(2) == 0,
-                    use_delay_schedulable: rng.below(2) == 0,
-                    use_latency_budget: rng.below(2) == 0,
-                    ..Default::default()
-                }),
-                gpus,
-            );
+            let mut p = SimOracle::collecting(PromptTuner::new(PromptTunerConfig {
+                max_gpus: gpus,
+                seed,
+                // randomize the ablation switches too
+                use_bank: rng.below(2) == 0,
+                use_warm_pools: rng.below(2) == 0,
+                use_warm_allocator: rng.below(2) == 0,
+                use_delay_schedulable: rng.below(2) == 0,
+                use_latency_budget: rng.below(2) == 0,
+                ..Default::default()
+            }));
             let r = sim.run(&mut p, jobs);
-            (r, p.violations)
+            (r, p.violations().to_vec())
         }
         1 => {
-            let mut p = Checked::new(
-                Infless::new(InflessConfig { max_gpus: gpus, seed, ..Default::default() }),
-                gpus,
-            );
+            let mut p = SimOracle::collecting(Infless::new(InflessConfig {
+                max_gpus: gpus,
+                seed,
+                ..Default::default()
+            }));
             let r = sim.run(&mut p, jobs);
-            (r, p.violations)
+            (r, p.violations().to_vec())
         }
         _ => {
-            let mut p = Checked::new(
-                ElasticFlow::new(ElasticFlowConfig {
-                    cluster_size: gpus,
-                    seed,
-                    ..Default::default()
-                }),
-                gpus,
-            );
+            let mut p = SimOracle::collecting(ElasticFlow::new(ElasticFlowConfig {
+                cluster_size: gpus,
+                seed,
+                ..Default::default()
+            }));
             let r = sim.run(&mut p, jobs);
-            (r, p.violations)
+            (r, p.violations().to_vec())
         }
     };
     ensure(violations.is_empty(), format!("{:?}", violations.first()))?;
@@ -163,29 +111,60 @@ impl Policy for DenseTick {
 }
 
 /// Tick coalescing must be a pure wall-clock optimization: for every
-/// policy and seeded Medium/High trace, the optimized simulator yields
-/// the same n_done / n_violations / cost as a dense-tick reference run.
+/// policy — over the paper's Medium/High traces AND the scenario engine's
+/// flash-crowd / heavy-tail families (the adversarial cases: correlated
+/// queue floods and durations far past the paper's cap) — the optimized
+/// simulator yields the same n_done / n_violations / cost as a dense-tick
+/// reference run. Both runs execute under the simulation oracle.
 #[test]
 fn prop_tick_coalescing_matches_dense_reference() {
     let mut coalesced_total: u64 = 0;
-    check("coalesced run == dense reference (all policies)", 6, |rng| {
+    check_sized("coalesced run == dense reference (all policies)", 6,
+                |rng, case| {
         let seed = rng.next_u64();
         let gpus = 16 + 16 * rng.below(2); // 16 or 32
         let load = [Load::Medium, Load::High][rng.below(2)];
+        // rotate the workload family with the case index so 6 cases cover
+        // each family twice
+        let scenario: Option<Scenario> = match case % 3 {
+            1 => Some(Scenario::FlashCrowd {
+                storms: 2,
+                intensity: 20.0,
+                jobs_per_llm: 40,
+            }),
+            2 => Some(Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 40 }),
+            _ => None,
+        };
+        let family = scenario.as_ref().map_or("paper", |s| s.name());
         for system in SYSTEMS {
-            let cell = SweepCell::new(
-                format!("eq/{system}"), system, load, 1.0, gpus, seed);
+            let cell = match &scenario {
+                Some(sc) => SweepCell::scenario(
+                    format!("eq/{family}/{system}"), system, sc.clone(), 1.0,
+                    gpus, seed),
+                None => SweepCell::new(
+                    format!("eq/{system}"), system, load, 1.0, gpus, seed),
+            };
             let sim = Simulator::new(
                 SimConfig { max_gpus: gpus, ..Default::default() },
                 PerfModel::default(),
             );
-            let mut fast = bench::make_policy(&cell);
-            let fast_res = sim.run(fast.as_mut(), bench::gen_jobs(&cell));
-            let mut dense = DenseTick(bench::make_policy(&cell));
+            let mut fast = SimOracle::collecting(bench::make_policy(&cell));
+            let fast_res = sim.run(&mut fast, bench::gen_jobs(&cell));
+            let mut dense =
+                SimOracle::collecting(DenseTick(bench::make_policy(&cell)));
             let dense_res = sim.run(&mut dense, bench::gen_jobs(&cell));
 
             ensure(dense_res.rounds_coalesced == 0, "reference run coalesced")?;
-            let tag = format!("{system} seed={seed} gpus={gpus} load={load:?}");
+            let tag = format!(
+                "{system} seed={seed} gpus={gpus} workload={family}/{load:?}");
+            ensure(
+                fast.violations().is_empty(),
+                format!("{tag}: oracle (fast): {:?}", fast.violations().first()),
+            )?;
+            ensure(
+                dense.violations().is_empty(),
+                format!("{tag}: oracle (dense): {:?}", dense.violations().first()),
+            )?;
             ensure(
                 fast_res.n_done == dense_res.n_done,
                 format!("{tag}: n_done {} vs {}", fast_res.n_done, dense_res.n_done),

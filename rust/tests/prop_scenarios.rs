@@ -1,0 +1,143 @@
+//! Conformance suite for the scenario engine: every workload family is
+//! bit-deterministic in its seed, emits the configured job counts, keeps
+//! arrivals inside its window, and never issues a deadline before the
+//! arrival. Scenario runs through the simulator are audited by the
+//! simulation oracle ([`SimOracle`]).
+
+use prompttuner::cluster::{SimConfig, SimOracle, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::scenario::{replay, Scenario};
+use prompttuner::util::prop::{check, ensure};
+use prompttuner::workload::{JobSpec, PerfModel};
+
+/// Compare two generated traces field-by-field, bitwise for floats.
+fn assert_identical(name: &str, a: &[JobSpec], b: &[JobSpec]) -> Result<(), String> {
+    ensure(a.len() == b.len(),
+           format!("{name}: {} vs {} jobs", a.len(), b.len()))?;
+    for (x, y) in a.iter().zip(b) {
+        let same = x.id == y.id
+            && x.llm == y.llm
+            && x.task_id == y.task_id
+            && x.traced_gpus == y.traced_gpus
+            && x.submit_s.to_bits() == y.submit_s.to_bits()
+            && x.duration_s.to_bits() == y.duration_s.to_bits()
+            && x.base_iters.to_bits() == y.base_iters.to_bits()
+            && x.user_prompt_quality.to_bits() == y.user_prompt_quality.to_bits()
+            && x.slo_s.to_bits() == y.slo_s.to_bits();
+        ensure(same, format!("{name}: job {} diverged:\n  {x:?}\n  {y:?}", x.id))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_families_bit_deterministic_per_seed() {
+    check("scenario generation deterministic per seed", 8, |rng| {
+        let seed = rng.next_u64();
+        let slo = [0.5, 1.0, 1.5][rng.below(3)];
+        for sc in Scenario::catalogue() {
+            let a = sc.generate(seed, slo).map_err(|e| e.to_string())?;
+            let b = sc.generate(seed, slo).map_err(|e| e.to_string())?;
+            assert_identical(sc.name(), &a, &b)?;
+            // ... and a different seed must actually change the trace
+            let c = sc.generate(seed ^ 1, slo).map_err(|e| e.to_string())?;
+            ensure(
+                a.len() != c.len()
+                    || a.iter().zip(&c).any(|(x, y)| {
+                        x.submit_s.to_bits() != y.submit_s.to_bits()
+                    }),
+                format!("{}: seed change had no effect", sc.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_families_emit_configured_counts_and_windows() {
+    check("scenario counts / windows / deadlines", 8, |rng| {
+        let seed = rng.next_u64();
+        let slo = [0.5, 1.0, 2.0][rng.below(3)];
+        for sc in Scenario::catalogue() {
+            let jobs = sc.generate(seed, slo).map_err(|e| e.to_string())?;
+            let name = sc.name();
+            ensure(jobs.len() == sc.expected_jobs().unwrap(),
+                   format!("{name}: {} jobs", jobs.len()))?;
+            let window = sc.window_s().unwrap();
+            for (i, j) in jobs.iter().enumerate() {
+                ensure(j.id == i, format!("{name}: non-dense id {}", j.id))?;
+                ensure(
+                    (0.0..window).contains(&j.submit_s),
+                    format!("{name}: job {i} arrives at {} outside [0, {window})",
+                            j.submit_s),
+                )?;
+                ensure(
+                    j.deadline() > j.submit_s,
+                    format!("{name}: job {i} deadline {} before arrival {}",
+                            j.deadline(), j.submit_s),
+                )?;
+                ensure(j.duration_s > 0.0 && j.duration_s.is_finite(),
+                       format!("{name}: job {i} duration {}", j.duration_s))?;
+                ensure(j.base_iters > 0.0,
+                       format!("{name}: job {i} base iters {}", j.base_iters))?;
+                ensure(
+                    j.user_prompt_quality > 0.0 && j.user_prompt_quality < 1.0,
+                    format!("{name}: job {i} quality {}", j.user_prompt_quality),
+                )?;
+            }
+            for w in jobs.windows(2) {
+                ensure(w[0].submit_s <= w[1].submit_s,
+                       format!("{name}: arrivals out of order"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_roundtrip_is_exact() {
+    let dir = std::env::temp_dir().join("pt_prop_replay");
+    std::fs::create_dir_all(&dir).unwrap();
+    check("replay file round-trip bit-exact", 6, |rng| {
+        let seed = rng.next_u64();
+        let sc = Scenario::catalogue()
+            .into_iter()
+            .nth(rng.below(4))
+            .unwrap();
+        let jobs = sc.generate(seed, 1.0).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("t{seed}.bin"));
+        replay::save(&path, &jobs).map_err(|e| e.to_string())?;
+        let re = Scenario::Replay { path: path.clone() };
+        // replay ignores seed and SLO emergence: both draws identical
+        let a = re.generate(1, 0.5).map_err(|e| e.to_string())?;
+        let b = re.generate(2, 2.0).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        assert_identical("replay", &a, &jobs)?;
+        assert_identical("replay-indep", &a, &b)?;
+        Ok(())
+    });
+}
+
+/// Every family must actually run through the scheduler stack — audited
+/// by the collecting oracle — and make progress.
+#[test]
+fn scenarios_run_under_the_oracle() {
+    for sc in Scenario::catalogue() {
+        let jobs = sc.generate(23, 1.0).unwrap();
+        let n = jobs.len();
+        // widen the horizon: a heavy-tail job granted a single GPU can
+        // legally run for hours of simulated time
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, horizon_s: 14400.0, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::collecting(PromptTuner::new(PromptTunerConfig {
+            max_gpus: 32,
+            seed: 23,
+            ..Default::default()
+        }));
+        let res = sim.run(&mut policy, jobs);
+        assert_eq!(res.n_done, n, "{} left jobs unfinished", sc.name());
+        assert!(policy.violations().is_empty(), "{}", sc.name());
+        assert!(policy.audits() > 0, "{}", sc.name());
+    }
+}

@@ -1,10 +1,12 @@
 //! End-to-end scheduler integration: all three systems over the paper's
 //! load levels and SLO emergencies on the discrete-event cluster, checking
 //! the qualitative relationships the paper reports (who wins, and
-//! roughly where). Pure simulation — fast, no artifacts needed.
+//! roughly where). Pure simulation — fast, no artifacts needed. Every run
+//! executes under the strict simulation oracle ([`SimOracle`]), which
+//! panics on any violated cluster invariant.
 
 use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
-use prompttuner::cluster::{Policy, SimConfig, SimResult, Simulator};
+use prompttuner::cluster::{Policy, SimConfig, SimOracle, SimResult, Simulator};
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
 use prompttuner::workload::{Llm, PerfModel};
@@ -17,7 +19,7 @@ fn run_system(system: &str, load: Load, slo: f64, gpus: usize, seed: u64) -> Sim
     );
     let jobs = gen.generate_main(load);
     let sim = Simulator::new(SimConfig { max_gpus: gpus, ..Default::default() }, perf);
-    let mut policy: Box<dyn Policy> = match system {
+    let policy: Box<dyn Policy> = match system {
         "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
             max_gpus: gpus,
             seed,
@@ -35,7 +37,8 @@ fn run_system(system: &str, load: Load, slo: f64, gpus: usize, seed: u64) -> Sim
         })),
         _ => unreachable!(),
     };
-    sim.run(policy.as_mut(), jobs)
+    let mut policy = SimOracle::new(policy);
+    sim.run(&mut policy, jobs)
 }
 
 /// Average over a few seeds to de-noise qualitative comparisons.
@@ -116,7 +119,7 @@ fn heavy_tensor_parallel_workload_table7() {
                 SimConfig { max_gpus: 32, ..Default::default() },
                 perf.clone(),
             );
-            let mut policy: Box<dyn Policy> = match system {
+            let policy: Box<dyn Policy> = match system {
                 "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
                     max_gpus: 32,
                     max_gpus_per_job: 8,
@@ -134,7 +137,8 @@ fn heavy_tensor_parallel_workload_table7() {
                     ..Default::default()
                 })),
             };
-            let res = sim.run(policy.as_mut(), jobs);
+            let mut policy = SimOracle::new(policy);
+            let res = sim.run(&mut policy, jobs);
             assert_eq!(res.n_done, res.n_jobs, "{system} {llm:?}");
             viols.push(res.violation_rate());
         }
@@ -161,7 +165,7 @@ fn scale_to_96_gpus_keeps_ordering() {
             SimConfig { max_gpus: 96, ..Default::default() },
             perf.clone(),
         );
-        let mut policy: Box<dyn Policy> = match system {
+        let policy: Box<dyn Policy> = match system {
             "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
                 max_gpus: 96,
                 seed: 11,
@@ -178,7 +182,8 @@ fn scale_to_96_gpus_keeps_ordering() {
                 ..Default::default()
             })),
         };
-        let res = sim.run(policy.as_mut(), jobs);
+        let mut policy = SimOracle::new(policy);
+        let res = sim.run(&mut policy, jobs);
         assert_eq!(res.n_done, res.n_jobs, "{system}");
         // paper §6.2: avg/max scheduling overhead 13/67 ms — ours must not
         // be the bottleneck either
@@ -205,7 +210,7 @@ fn ablations_match_table8_directions() {
             SimConfig { max_gpus: 32, ..Default::default() },
             perf.clone(),
         );
-        let mut p = PromptTuner::new(cfg);
+        let mut p = SimOracle::new(PromptTuner::new(cfg));
         sim.run(&mut p, jobs)
     };
     let full = run_cfg(PromptTunerConfig { seed: 13, ..Default::default() });

@@ -54,7 +54,42 @@ def load_record(path: str) -> dict:
             fail(f"{path}: cell {i} finished more jobs than it has")
         if cell["rounds_executed"] > 0 and cell["ticks_per_s"] <= 0:
             fail(f"{path}: cell {i} executed rounds but reports no throughput")
+    if rec["suite"] == "scenarios":
+        check_scenarios(path, rec)
     return rec
+
+
+# The scenario-engine families the fig11 sweep must cover (and the
+# systems that must each run every family).
+SCENARIO_FAMILIES = {
+    "diurnal", "flash-crowd", "heavy-tail", "multi-tenant", "replay",
+}
+SCENARIO_SYSTEMS = {"prompttuner", "infless", "elasticflow"}
+
+
+def check_scenarios(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_scenarios.json: every cell is tagged
+    with a scenario family, the full catalogue is present, and every
+    system ran every family (otherwise a comparison row is missing)."""
+    seen = {}
+    for i, cell in enumerate(rec["cells"]):
+        name = cell.get("scenario")
+        if not name or name == "none":
+            fail(f"{path}: scenarios cell {i} has no scenario tag")
+        if cell["n_jobs"] <= 0:
+            fail(f"{path}: scenarios cell {i} ({name}) ran no jobs")
+        seen.setdefault(name, set()).add(cell["system"])
+    missing = SCENARIO_FAMILIES - set(seen)
+    if missing:
+        fail(f"{path}: scenario families missing from the sweep: "
+             f"{sorted(missing)}")
+    for name, systems in sorted(seen.items()):
+        lacking = SCENARIO_SYSTEMS - systems
+        if lacking:
+            fail(f"{path}: scenario '{name}' missing systems: "
+                 f"{sorted(lacking)}")
+    print(f"check_bench: scenarios suite covers {sorted(seen)} "
+          f"x {sorted(SCENARIO_SYSTEMS)}")
 
 
 def cell_key(cell: dict) -> tuple:
