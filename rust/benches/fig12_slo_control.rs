@@ -1,0 +1,127 @@
+//! Fig 12 (beyond the paper) — the SLO control plane sweep: violation and
+//! cost of {governed, ungoverned} × {PromptTuner, INFless, ElasticFlow}
+//! on the multi-tenant and flash-crowd scenarios.
+//!
+//! "Governed" wraps the policy in `slo::Governed`: rolling SLI windows,
+//! error-budget burn rates over fast/slow windows, provable-miss
+//! admission deferral, and a billable-capacity governor with 25 % surge
+//! headroom over the 32-GPU baseline (the simulator budget is widened to
+//! the surge ceiling for governed cells, so surge capacity is billed when
+//! — and only when — the governor claims it).
+//!
+//! Emits a BENCH_slo.json perf record; tools/check_bench.py validates the
+//! full governed/ungoverned × system × scenario coverage and that the
+//! governed PromptTuner flash-crowd run improves on at least one axis.
+//! Run with PT_SIM_ORACLE=1 (CI does) to audit every governed round under
+//! the strict in-loop oracle.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::cluster::{SimConfig, Simulator};
+use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::metrics::{render_attainment, render_table, Row};
+use prompttuner::scenario::Scenario;
+use prompttuner::slo::{Governed, GovernorConfig, SloConfig, SloMonitor};
+use prompttuner::workload::PerfModel;
+
+fn main() {
+    let seed = 29u64;
+    let gpus = 32;
+
+    let scenarios = [
+        Scenario::MultiTenant { tenants: 4, jobs_per_tenant: 45 },
+        Scenario::FlashCrowd { storms: 3, intensity: 25.0, jobs_per_llm: 70 },
+    ];
+
+    let mut cells = vec![];
+    for sc in &scenarios {
+        for system in SYSTEMS {
+            for governed in [false, true] {
+                let mode = if governed { "governed" } else { "ungoverned" };
+                let mut cell = SweepCell::scenario(
+                    format!("fig12/{}/{mode}", sc.name()),
+                    system,
+                    sc.clone(),
+                    1.0,
+                    gpus,
+                    seed,
+                );
+                if governed {
+                    cell = cell.governed();
+                }
+                cells.push(cell);
+            }
+        }
+    }
+
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    for sc in &scenarios {
+        for mode in ["ungoverned", "governed"] {
+            let label = format!("fig12/{}/{mode}", sc.name());
+            let rows: Vec<Row> = results
+                .iter()
+                .filter(|r| r.cell.label == label)
+                .map(|r| Row::from(&r.result))
+                .collect();
+            print!(
+                "\n{}",
+                render_table(
+                    &format!("Fig 12 — {} / {mode} ({gpus}-GPU baseline, \
+                              S = 1.0)", sc.name()),
+                    &rows
+                )
+            );
+        }
+    }
+
+    // Per-class attainment table: one governed PromptTuner flash-crowd
+    // run with the SLO monitor attached to the simulator event stream.
+    let gcfg = GovernorConfig::for_cluster(gpus);
+    let jobs = scenarios[1].generate(seed, 1.0).expect("flash-crowd trace");
+    let sim = Simulator::new(
+        SimConfig { max_gpus: gcfg.ceiling_gpus, ..Default::default() },
+        PerfModel::default(),
+    );
+    let mut policy = Governed::new(
+        PromptTuner::new(PromptTunerConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        }),
+        gcfg,
+    );
+    let mut monitor = SloMonitor::new(SloConfig::default());
+    let _ = sim.run_observed(&mut policy, jobs, &mut monitor);
+    print!(
+        "\n{}",
+        render_attainment(
+            "Fig 12 — per-class SLO attainment (flash-crowd, governed \
+             prompttuner)",
+            &monitor.attainment_table()
+        )
+    );
+    println!(
+        "governor: {} deferred, {} scale-ups, {} scale-downs, peak queue {}",
+        policy.deferred_total(),
+        policy.scale_ups(),
+        policy.scale_downs(),
+        monitor.peak_queue_depth
+    );
+
+    let report = BenchReport::new("slo", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!(
+            "\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+            report.cells.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+}

@@ -369,6 +369,23 @@ impl Policy for ElasticFlow {
             Wake::Idle
         }
     }
+
+    fn capacity(&self) -> Option<usize> {
+        Some(self.cfg.cluster_size)
+    }
+
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        // Statically provisioned cluster (driven by `slo::Governed`): the
+        // resized fleet is billed from now on. GPUs currently running
+        // jobs cannot be released, so the size clamps to the busy level
+        // (preserving busy ≤ billable for the oracle).
+        let new = gpus.max(self.busy_gpus);
+        self.cfg.cluster_size = new;
+        if self.started {
+            st.set_billable(new as f64);
+        }
+        self.needs_round = true;
+    }
 }
 
 #[cfg(test)]

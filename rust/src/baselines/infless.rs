@@ -54,8 +54,8 @@ pub struct Infless {
     rng: Rng,
     /// Per-LLM warm instance pools (keep-alive).
     pools: [WarmPool; N_LLM],
-    /// Per-LLM FCFS queues. Arrivals are delivered in (submit, id)
-    /// order, so the queues are naturally submit-sorted — the seed's
+    /// Per-LLM FCFS queues in delivery order (normally submit order; an
+    /// admission layer may deliver deferred jobs late). The seed's
     /// per-round stable sort was a no-op and has been dropped.
     pending: [Vec<usize>; N_LLM],
     /// (use_bank, bank_latency) per job id.
@@ -166,9 +166,10 @@ impl Policy for Infless {
         let spec = &st.jobs[job_id].spec;
         self.plans[job_id] = self.cfg.bank.route(spec);
         let li = spec.llm.index();
-        debug_assert!(self.pending[li]
-            .last()
-            .map_or(true, |&j| st.jobs[j].spec.submit_s <= spec.submit_s));
+        // FCFS in delivery order. (Deliveries are normally submit-ordered,
+        // but an admission layer — `slo::Governed` — may deliver a
+        // deferred job after its deadline, so no submit-order invariant
+        // is assumed here.)
         self.pending[li].push(job_id);
         self.arrivals[li].push(st.now());
         self.needs_round = true;
@@ -301,6 +302,19 @@ impl Policy for Infless {
         } else {
             Wake::Idle
         }
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        Some(self.cfg.max_gpus)
+    }
+
+    fn set_capacity(&mut self, _st: &mut ClusterState, gpus: usize) {
+        // Instance-budget knob (driven by `slo::Governed`): billing
+        // follows the live pools, so only the ceiling moves; a shrink
+        // takes effect as keep-alive expiry and completions drain
+        // instances below the new budget.
+        self.cfg.max_gpus = gpus;
+        self.needs_round = true;
     }
 }
 

@@ -22,6 +22,7 @@ use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use crate::cluster::{Policy, SimConfig, SimResult, Simulator};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
 use crate::scenario::Scenario;
+use crate::slo::{Governed, GovernorConfig};
 use crate::trace::{Load, TraceConfig, TraceGenerator};
 use crate::workload::{JobSpec, Llm, PerfModel};
 
@@ -48,6 +49,11 @@ pub struct SweepCell {
     /// Scenario-engine workload family (fig11) instead of the paper
     /// traces; takes precedence over `load`/`scale`/`heavy`.
     pub scenario: Option<Scenario>,
+    /// Wrap the policy in the SLO control plane (`slo::Governed`): burn
+    /// telemetry, admission deferral, and a capacity governor with surge
+    /// headroom over the cell's GPU baseline (the simulator budget is
+    /// widened to the surge ceiling by `run_cell`).
+    pub governed: bool,
     /// PromptTuner config override (ablation sweeps); the cell seed is
     /// applied on top.
     pub cfg: Option<PromptTunerConfig>,
@@ -66,8 +72,16 @@ impl SweepCell {
             scale: 1.0,
             heavy: None,
             scenario: None,
+            governed: false,
             cfg: None,
         }
+    }
+
+    /// Mark the cell governed (fig12): the policy is wrapped in
+    /// `slo::Governed` with `GovernorConfig::for_cluster(gpus)`.
+    pub fn governed(mut self) -> Self {
+        self.governed = true;
+        self
     }
 
     /// A scenario-engine cell (the fig11 sweep): `load`/`scale` are
@@ -90,9 +104,10 @@ pub struct CellResult {
     pub wall_s: f64,
 }
 
-/// Build the policy a cell names (ablation override aware).
+/// Build the policy a cell names (ablation override aware; governed
+/// cells are wrapped in the SLO control plane).
 pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
-    match cell.system.as_str() {
+    let inner: Box<dyn Policy> = match cell.system.as_str() {
         "prompttuner" => {
             let base = cell.cfg.clone().unwrap_or_default();
             // The cell's seed and cluster size always win over the
@@ -116,6 +131,11 @@ pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
             ..Default::default()
         })),
         other => panic!("unknown system {other}"),
+    };
+    if cell.governed {
+        Box::new(Governed::new(inner, GovernorConfig::for_cluster(cell.gpus)))
+    } else {
+        inner
     }
 }
 
@@ -153,6 +173,12 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
     // tail jobs get cut off and the cell under-reports violations/cost.
     if let Some(h) = cell.scenario.as_ref().and_then(Scenario::horizon_hint) {
         cfg.horizon_s = cfg.horizon_s.max(h);
+    }
+    // Governed cells may surge above the baseline: widen the provider
+    // budget to the governor's ceiling (the policy still starts at
+    // cell.gpus; only the burn-rate governor may claim the headroom).
+    if cell.governed {
+        cfg.max_gpus = GovernorConfig::for_cluster(cell.gpus).ceiling_gpus;
     }
     let sim = Simulator::new(cfg, PerfModel::default());
     let mut policy = make_policy(cell);
@@ -263,6 +289,7 @@ impl BenchReport {
                 "\"scenario\": \"{}\", ",
                 c.cell.scenario.as_ref().map_or("none", |s| s.name())
             ));
+            out.push_str(&format!("\"governed\": {}, ", c.cell.governed));
             out.push_str(&format!("\"slo\": {}, ", json_f64(c.cell.slo)));
             out.push_str(&format!("\"scale\": {}, ", json_f64(c.cell.scale)));
             out.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
@@ -380,7 +407,22 @@ mod tests {
     fn non_scenario_cells_tag_record_with_none() {
         let cells = vec![SweepCell::new("p", "prompttuner", Load::Low, 1.0, 8, 7)];
         let report = BenchReport::new("t", run_sweep(&cells), 0.1);
-        assert!(report.to_json().contains("\"scenario\": \"none\""));
+        let json = report.to_json();
+        assert!(json.contains("\"scenario\": \"none\""));
+        assert!(json.contains("\"governed\": false"));
+    }
+
+    #[test]
+    fn governed_cells_wrap_policy_and_widen_budget() {
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 8 };
+        let cell = SweepCell::scenario("g", "prompttuner", sc, 1.0, 16, 5)
+            .governed();
+        let r = run_cell(&cell);
+        assert_eq!(r.result.n_done, r.result.n_jobs);
+        assert_eq!(r.result.policy, "prompttuner+slo");
+        let report = BenchReport::new("slo", vec![r], 0.1);
+        assert!(report.to_json().contains("\"governed\": true"));
     }
 
     #[test]

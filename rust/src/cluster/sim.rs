@@ -379,6 +379,22 @@ pub trait Policy {
         let _ = st;
         Wake::Dense
     }
+
+    /// Billable-capacity ceiling this policy currently schedules within
+    /// (None when it has no such knob). Capacity governors
+    /// (`slo::Governed`) read this before scaling.
+    fn capacity(&self) -> Option<usize> {
+        None
+    }
+
+    /// Move the policy's billable-capacity ceiling — the scale-up /
+    /// scale-down hook capacity governors drive. Implementations must
+    /// preserve the cluster invariants (busy ≤ billable ≤ provider
+    /// budget); e.g. a statically-billed policy must clamp the new size
+    /// to its busy level. The default ignores the request.
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        let _ = (st, gpus);
+    }
 }
 
 /// Forward [`Policy`] through boxes so trait objects (e.g. the
@@ -403,7 +419,43 @@ impl<P: Policy + ?Sized> Policy for Box<P> {
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
         (**self).next_timed_action(st)
     }
+    fn capacity(&self) -> Option<usize> {
+        (**self).capacity()
+    }
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        (**self).set_capacity(st, gpus)
+    }
 }
+
+// ------------------------------------------------------ event observers
+
+/// Passive observer of the simulation event stream: called after every
+/// policy callback with the (immutable) post-callback state, so telemetry
+/// layers (`slo::SloMonitor`) can maintain online indicators — rolling
+/// SLO attainment, lateness percentiles, queue depth — without being able
+/// to perturb the run. All hooks default to no-ops; `()` is the null
+/// observer [`Simulator::run`] uses.
+pub trait SimObserver {
+    /// A job arrived (after the policy's `on_arrival`).
+    fn on_arrival(&mut self, st: &ClusterState, job_id: usize) {
+        let _ = (st, job_id);
+    }
+    /// A job completed (after the policy's `on_job_complete`).
+    fn on_job_complete(&mut self, st: &ClusterState, job_id: usize) {
+        let _ = (st, job_id);
+    }
+    /// An executed (non-coalesced) scheduling round finished.
+    fn on_round(&mut self, st: &ClusterState) {
+        let _ = st;
+    }
+    /// The run ended (final integrated state).
+    fn on_end(&mut self, st: &ClusterState) {
+        let _ = st;
+    }
+}
+
+/// The null observer.
+impl SimObserver for () {}
 
 // ------------------------------------------------------- simulation oracle
 
@@ -669,6 +721,13 @@ impl<P: Policy> Policy for SimOracle<P> {
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
         self.inner.next_timed_action(st)
     }
+    fn capacity(&self) -> Option<usize> {
+        self.inner.capacity()
+    }
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        self.inner.set_capacity(st, gpus);
+        self.run_audit(st, "set_capacity");
+    }
 }
 
 /// Outcome of one simulated experiment.
@@ -743,6 +802,15 @@ impl Simulator {
 
     /// Run `policy` over the trace and collect metrics.
     pub fn run(&self, policy: &mut dyn Policy, specs: Vec<JobSpec>) -> SimResult {
+        self.run_observed(policy, specs, &mut ())
+    }
+
+    /// Like [`Simulator::run`], with a passive [`SimObserver`] attached
+    /// to the event stream (online telemetry: SLI windows, burn rates —
+    /// see `slo::SloMonitor`). The observer only ever sees post-callback
+    /// state immutably, so attaching one cannot change simulated results.
+    pub fn run_observed(&self, policy: &mut dyn Policy, specs: Vec<JobSpec>,
+                        observer: &mut dyn SimObserver) -> SimResult {
         let wall0 = Instant::now();
         let n_jobs = specs.len();
         let last_arrival =
@@ -802,6 +870,7 @@ impl Simulator {
                     rounds += 1;
                     st.drain_queued(&mut heap);
                     debug_audit(&mut audit, &mut audit_scratch, &st, "tick");
+                    observer.on_round(&st);
                     wake = policy.next_timed_action(&st);
                     if done == n_jobs {
                         break;
@@ -828,6 +897,7 @@ impl Simulator {
                         st.drain_queued(&mut heap);
                         debug_audit(&mut audit, &mut audit_scratch, &st,
                                     "arrival");
+                        observer.on_arrival(&st, id);
                         wake = policy.next_timed_action(&st);
                     }
                     EventKind::JobDone(id, gen) => {
@@ -852,6 +922,7 @@ impl Simulator {
                             st.drain_queued(&mut heap);
                             debug_audit(&mut audit, &mut audit_scratch, &st,
                                         "complete");
+                            observer.on_job_complete(&st, id);
                             wake = policy.next_timed_action(&st);
                             if done == n_jobs {
                                 break;
@@ -865,6 +936,7 @@ impl Simulator {
             }
         }
         st.integrate_to(st.now());
+        observer.on_end(&st);
 
         let n_done = st.jobs.iter().filter(|j| j.status == JobStatus::Done).count();
         let n_violations = st.jobs.iter().filter(|j| !j.met_slo()).count();
@@ -1308,6 +1380,47 @@ mod tests {
         let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
         assert_eq!(res.n_done, 1);
         assert_eq!(res.policy, "greedy");
+    }
+
+    #[test]
+    fn observer_sees_the_event_stream_without_perturbing_results() {
+        #[derive(Default)]
+        struct Count {
+            arrivals: usize,
+            completions: usize,
+            rounds: usize,
+            ended: usize,
+        }
+        impl SimObserver for Count {
+            fn on_arrival(&mut self, _st: &ClusterState, _id: usize) {
+                self.arrivals += 1;
+            }
+            fn on_job_complete(&mut self, st: &ClusterState, id: usize) {
+                assert_eq!(st.jobs[id].status, JobStatus::Done);
+                self.completions += 1;
+            }
+            fn on_round(&mut self, _st: &ClusterState) {
+                self.rounds += 1;
+            }
+            fn on_end(&mut self, st: &ClusterState) {
+                assert!(st.now() >= 0.0);
+                self.ended += 1;
+            }
+        }
+        let specs = vec![spec(0, 0.0, 100.0), spec(1, 3.0, 50.0)];
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut plain = Greedy { billable: 0.0 };
+        let ref_res = sim.run(&mut plain, specs.clone());
+        let mut obs = Count::default();
+        let mut p = Greedy { billable: 0.0 };
+        let res = sim.run_observed(&mut p, specs, &mut obs);
+        assert_eq!(obs.arrivals, 2);
+        assert_eq!(obs.completions, 2);
+        assert_eq!(obs.rounds as u64, res.rounds_executed);
+        assert_eq!(obs.ended, 1);
+        // attaching an observer cannot change simulated results
+        assert_eq!(res.cost_usd, ref_res.cost_usd);
+        assert_eq!(res.job_latencies, ref_res.job_latencies);
     }
 
     #[test]

@@ -487,6 +487,19 @@ impl Policy for PromptTuner {
             Wake::Idle
         }
     }
+
+    fn capacity(&self) -> Option<usize> {
+        Some(self.cfg.max_gpus)
+    }
+
+    fn set_capacity(&mut self, _st: &mut ClusterState, gpus: usize) {
+        // Cold-pool budget knob (driven by `slo::Governed`): growing it
+        // opens allocation headroom at the next round; shrinking lets the
+        // idle-window drain warm pools back down over time. Billable
+        // capacity tracks the warm pools, so no cluster update is needed.
+        self.cfg.max_gpus = gpus;
+        self.needs_round = true;
+    }
 }
 
 #[cfg(test)]

@@ -3,6 +3,8 @@
 //! figures and tables.
 
 use crate::cluster::SimResult;
+use crate::slo::AttainmentCell;
+use crate::workload::GPU_PRICE_PER_S;
 
 /// One row of a paper-style comparison table.
 #[derive(Clone, Debug)]
@@ -45,20 +47,57 @@ pub fn render_series(title: &str, xlabel: &str, ylabel: &str,
 }
 
 /// Improvement factors of `ours` vs `other` (the paper's "N.N×" numbers).
+///
+/// Degenerate denominators are floored so both factors stay finite: a
+/// violation-free run is credited half a violation (rate `0.5/n`), and a
+/// zero-cost run is floored at one billed GPU-second — a perfect run
+/// yields a large-but-finite factor instead of ∞/NaN, so downstream
+/// tables and JSON stay well-formed. Both axes degenerate → 1.0.
 pub fn improvement(ours: &SimResult, other: &SimResult) -> (f64, f64) {
-    let viol = if ours.violation_rate() > 0.0 {
-        other.violation_rate() / ours.violation_rate()
-    } else if other.violation_rate() > 0.0 {
-        f64::INFINITY
+    let rate_floor = if ours.n_jobs > 0 {
+        0.5 / ours.n_jobs as f64
     } else {
-        1.0
+        0.0
     };
-    let cost = if ours.cost_usd > 0.0 {
-        other.cost_usd / ours.cost_usd
-    } else {
-        1.0
-    };
+    let viol = ratio(other.violation_rate(), ours.violation_rate(), rate_floor);
+    let cost = ratio(other.cost_usd, ours.cost_usd, GPU_PRICE_PER_S);
     (viol, cost)
+}
+
+/// `num / den` with `den` floored at `den_floor`; 1.0 when both sides
+/// (and the floor) are degenerate.
+fn ratio(num: f64, den: f64, den_floor: f64) -> f64 {
+    if num <= 0.0 && den <= 0.0 {
+        return 1.0;
+    }
+    let den = den.max(den_floor);
+    if den <= 0.0 {
+        return 1.0;
+    }
+    num / den
+}
+
+/// Render the per-class × per-LLM SLO attainment table produced by
+/// `slo::SloMonitor::attainment_table` (the online per-tenant view).
+pub fn render_attainment(title: &str, cells: &[AttainmentCell]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!(
+        "{:<8} {:<12} {:>6} {:>13} {:>12} {:>12}\n",
+        "class", "llm", "jobs", "attainment %", "p50 late s", "p99 late s"
+    ));
+    for c in cells {
+        let class_label = format!("S{:.1}", c.tier);
+        out.push_str(&format!(
+            "{:<8} {:<12} {:>6} {:>13.1} {:>12.2} {:>12.2}\n",
+            class_label,
+            c.llm.name(),
+            c.jobs,
+            c.attainment() * 100.0,
+            c.p50_lateness_s,
+            c.p99_lateness_s
+        ));
+    }
+    out
 }
 
 /// A compact one-line summary of a run.
@@ -121,26 +160,50 @@ mod tests {
 
     #[test]
     fn improvement_handles_zero_violations() {
+        // a violation-free run is credited half a violation so the factor
+        // stays finite: 0.2 / (0.5/100) = 40
         let ours = result("pt", 0, 100, 10.0);
         let other = result("b", 20, 100, 45.0);
         let (v, _) = improvement(&ours, &other);
-        assert!(v.is_infinite());
+        assert!(v.is_finite());
+        assert!((v - 40.0).abs() < 1e-9, "{v}");
         let (v2, _) = improvement(&ours, &result("c", 0, 100, 45.0));
         assert_eq!(v2, 1.0);
     }
 
     #[test]
     fn improvement_handles_zero_cost() {
-        // a zero-cost "ours" must not divide by zero: factor pins to 1.0
+        // a zero-cost "ours" is floored at one billed GPU-second: the
+        // factor is huge but finite (no division by zero)
         let mut ours = result("pt", 5, 100, 0.0);
         let other = result("b", 20, 100, 45.0);
         let (v, c) = improvement(&ours, &other);
-        assert_eq!(c, 1.0);
+        assert!(c.is_finite());
+        assert!((c - 45.0 / GPU_PRICE_PER_S).abs() < 1e-6, "{c}");
         assert!((v - 4.0).abs() < 1e-9);
         // both axes degenerate: identity on both
         ours.n_violations = 0;
         let (v2, c2) = improvement(&ours, &result("c", 0, 100, 0.0));
         assert_eq!((v2, c2), (1.0, 1.0));
+    }
+
+    #[test]
+    fn improvement_never_returns_non_finite() {
+        let runs = [
+            result("a", 0, 0, 0.0),
+            result("b", 0, 100, 0.0),
+            result("c", 100, 100, 1e9),
+            result("d", 1, 100, 1e-12),
+        ];
+        for ours in &runs {
+            for other in &runs {
+                let (v, c) = improvement(ours, other);
+                assert!(v.is_finite(), "{} vs {}: viol {v}", ours.policy,
+                        other.policy);
+                assert!(c.is_finite(), "{} vs {}: cost {c}", ours.policy,
+                        other.policy);
+            }
+        }
     }
 
     #[test]
@@ -187,6 +250,28 @@ mod tests {
                               &[(0.0, 3.0), (1.0, 15.0)]);
         assert!(s.contains("minute"));
         assert!(s.contains("15.0"));
+    }
+
+    #[test]
+    fn attainment_table_renders_rows() {
+        use crate::workload::Llm;
+        let cells = vec![AttainmentCell {
+            class: 0,
+            tier: 0.5,
+            llm: Llm::Gpt2B,
+            jobs: 8,
+            met: 6,
+            p50_lateness_s: 0.0,
+            p99_lateness_s: 12.5,
+        }];
+        let t = render_attainment("T", &cells);
+        assert!(t.contains("== T =="));
+        assert!(t.contains("S0.5"));
+        assert!(t.contains("gpt2-base"));
+        assert!(t.contains("75.0"));
+        assert!(t.contains("12.50"));
+        // empty table: title + header only
+        assert_eq!(render_attainment("E", &[]).lines().count(), 2);
     }
 
     #[test]

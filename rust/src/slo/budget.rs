@@ -1,0 +1,192 @@
+//! Error budgets and multi-window burn rates.
+//!
+//! An SLO target of attainment `A` grants an error budget of `1 − A`:
+//! that fraction of jobs may miss their deadline before the objective is
+//! violated. The *burn rate* of a window is its bad fraction divided by
+//! the budget fraction — 1.0 means the budget is being consumed exactly
+//! at the sustainable rate, 10 means it will be gone in a tenth of the
+//! period. [`BurnGauge`] combines a *fast* and a *slow* window (the SRE
+//! multiwindow/multi-burn-rate alerting shape): the fast window reacts to
+//! storms within seconds, the slow window keeps a lone hiccup from
+//! paging, and control actions fire only when both run hot.
+
+use crate::slo::window::SliWindow;
+use crate::slo::SloConfig;
+
+/// Lifetime error-budget accounting for one SLO target.
+#[derive(Clone, Debug)]
+pub struct ErrorBudget {
+    /// Allowed bad fraction (1 − target attainment), floored above zero
+    /// so burn rates stay finite.
+    budget_frac: f64,
+    /// Lifetime SLO-missing observations.
+    pub bad_seen: u64,
+    /// Lifetime observations.
+    pub total_seen: u64,
+}
+
+impl ErrorBudget {
+    pub fn new(target_attainment: f64) -> Self {
+        let target = target_attainment.clamp(0.0, 0.999);
+        ErrorBudget {
+            budget_frac: (1.0 - target).max(1e-3),
+            bad_seen: 0,
+            total_seen: 0,
+        }
+    }
+
+    pub fn budget_frac(&self) -> f64 {
+        self.budget_frac
+    }
+
+    pub fn observe(&mut self, met: bool) {
+        self.total_seen += 1;
+        if !met {
+            self.bad_seen += 1;
+        }
+    }
+
+    /// Fraction of the lifetime error budget consumed (exceeds 1 once the
+    /// objective is violated outright).
+    pub fn consumed(&self) -> f64 {
+        if self.total_seen == 0 {
+            0.0
+        } else {
+            (self.bad_seen as f64 / self.total_seen as f64) / self.budget_frac
+        }
+    }
+
+    /// Remaining lifetime budget fraction, floored at 0.
+    pub fn remaining(&self) -> f64 {
+        (1.0 - self.consumed()).max(0.0)
+    }
+
+    /// Burn rate of `window`: bad fraction ÷ budget fraction.
+    pub fn burn_rate(&self, window: &SliWindow) -> f64 {
+        window.bad_fraction() / self.budget_frac
+    }
+}
+
+/// Multi-window burn-rate gauge: one error budget read through a fast and
+/// a slow rolling window. Fires only when *both* windows burn above the
+/// threshold and the fast window holds enough evidence.
+#[derive(Clone, Debug)]
+pub struct BurnGauge {
+    pub budget: ErrorBudget,
+    pub fast: SliWindow,
+    pub slow: SliWindow,
+    /// Minimum fast-window samples before the gauge may fire.
+    pub min_samples: usize,
+}
+
+impl BurnGauge {
+    pub fn new(cfg: &SloConfig) -> Self {
+        BurnGauge {
+            budget: ErrorBudget::new(cfg.target_attainment),
+            fast: SliWindow::new(cfg.fast_window_s),
+            slow: SliWindow::new(cfg.slow_window_s),
+            min_samples: cfg.min_samples,
+        }
+    }
+
+    pub fn record(&mut self, t: f64, met: bool, lateness_s: f64) {
+        self.budget.observe(met);
+        self.fast.record(t, met, lateness_s);
+        self.slow.record(t, met, lateness_s);
+    }
+
+    /// Advance both windows to `now` (evicts stale samples).
+    pub fn advance(&mut self, now: f64) {
+        self.fast.advance(now);
+        self.slow.advance(now);
+    }
+
+    pub fn fast_burn(&self) -> f64 {
+        self.budget.burn_rate(&self.fast)
+    }
+
+    pub fn slow_burn(&self) -> f64 {
+        self.budget.burn_rate(&self.slow)
+    }
+
+    /// Both windows burning at or above `threshold`, with enough
+    /// fast-window evidence.
+    pub fn firing(&self, threshold: f64) -> bool {
+        self.fast.len() >= self.min_samples
+            && self.fast_burn() >= threshold
+            && self.slow_burn() >= threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burn_rate_is_bad_fraction_over_budget() {
+        let budget = ErrorBudget::new(0.9); // budget fraction 0.1
+        let mut w = SliWindow::new(100.0);
+        for i in 0..10 {
+            w.record(i as f64, i % 5 != 0, 0.0); // 2 bad of 10
+        }
+        assert!((budget.burn_rate(&w) - 2.0).abs() < 1e-9);
+        assert!((budget.budget_frac() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_consumed_and_remaining() {
+        let mut b = ErrorBudget::new(0.9);
+        assert_eq!(b.consumed(), 0.0);
+        assert_eq!(b.remaining(), 1.0);
+        for i in 0..20 {
+            b.observe(i != 0); // 1 bad of 20: 0.05 / 0.1 = half consumed
+        }
+        assert!((b.consumed() - 0.5).abs() < 1e-9);
+        assert!((b.remaining() - 0.5).abs() < 1e-9);
+        for _ in 0..5 {
+            b.observe(false); // 6 bad of 25: burned through
+        }
+        assert!(b.consumed() > 1.0);
+        assert_eq!(b.remaining(), 0.0);
+    }
+
+    #[test]
+    fn multiwindow_gauge_requires_both_windows_hot() {
+        let cfg = SloConfig {
+            fast_window_s: 10.0,
+            slow_window_s: 100.0,
+            ..Default::default()
+        };
+        let mut g = BurnGauge::new(&cfg);
+        // a long healthy stretch fills the slow window with good samples
+        for i in 0..50 {
+            g.record(i as f64, true, 0.0);
+        }
+        assert!(!g.firing(2.0));
+        // a short storm: the fast window goes hot, but the slow window is
+        // still diluted by healthy history — not firing yet
+        for i in 0..6 {
+            g.record(95.0 + i as f64 * 0.5, false, 30.0);
+        }
+        assert!(g.fast_burn() > 2.0);
+        assert!(!g.firing(2.0));
+        // the storm persists: the slow window heats up too and the gauge
+        // fires
+        for i in 0..20 {
+            g.record(110.0 + i as f64, false, 30.0);
+        }
+        assert!(g.firing(2.0));
+    }
+
+    #[test]
+    fn gauge_needs_minimum_evidence() {
+        let cfg = SloConfig { min_samples: 5, ..Default::default() };
+        let mut g = BurnGauge::new(&cfg);
+        for i in 0..4 {
+            g.record(i as f64, false, 1.0); // 100 % bad, but only 4 samples
+        }
+        assert!(!g.firing(2.0));
+        g.record(4.0, false, 1.0);
+        assert!(g.firing(2.0));
+    }
+}

@@ -1,0 +1,134 @@
+//! SLO telemetry & error-budget control plane.
+//!
+//! The simulator computes SLO attainment *after* a run finishes
+//! (`SimResult::violation_rate`); this subsystem observes deadlines
+//! *online* and feeds the signal back into admission and capacity
+//! decisions, turning the offline scheduler comparison into a
+//! serviceable control loop:
+//!
+//! * **SLI windows** ([`window`]) — rolling per-class/per-LLM indicators
+//!   (attainment, p50/p99 lateness, queue depth), fed by the simulator's
+//!   event-stream observer hook ([`crate::cluster::SimObserver`]);
+//! * **error budgets & burn rates** ([`budget`]) — configurable SLO
+//!   targets with fast/slow multi-window burn-rate computation (the SRE
+//!   multiwindow alerting shape);
+//! * **controllers** ([`control`]) — an [`AdmissionController`] that
+//!   defers provably-unmeetable jobs at arrival, and the [`Governed`]
+//!   policy wrapper that scales billable capacity up when the burn rate
+//!   pages and releases it as the budget recovers. Works over PromptTuner
+//!   *and* both baselines through the [`crate::cluster::Policy`] trait's
+//!   `set_capacity` knob, so it can never break the cluster invariants
+//!   (busy ≤ billable ≤ budget) the simulation oracle audits.
+//!
+//! Everything here is deterministic (no RNG, no wall clock) and purely
+//! trait-driven, so governed runs stay bit-reproducible per seed and
+//! oracle-clean.
+
+pub mod budget;
+pub mod control;
+pub mod monitor;
+pub mod window;
+
+pub use budget::{BurnGauge, ErrorBudget};
+pub use control::{Admission, AdmissionController, Governed, GovernorConfig};
+pub use monitor::{AttainmentCell, SloMonitor};
+pub use window::{nearest_rank, SliWindow};
+
+use crate::scenario::TENANT_TIERS;
+use crate::workload::{JobSpec, PerfModel};
+
+/// Number of service classes (SLO tiers) telemetry buckets jobs into.
+pub const N_CLASS: usize = TENANT_TIERS.len();
+
+/// SLO targets and burn-window parameters shared by the monitor and the
+/// controllers.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// Target SLO attainment (fraction of jobs meeting their deadline);
+    /// the error budget is `1 − target_attainment`.
+    pub target_attainment: f64,
+    /// Fast burn window, seconds — reacts to storms quickly.
+    pub fast_window_s: f64,
+    /// Slow burn window, seconds — confirms the burn is sustained.
+    pub slow_window_s: f64,
+    /// Minimum fast-window samples before the burn gauge may fire.
+    pub min_samples: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            target_attainment: 0.9,
+            fast_window_s: 120.0,
+            slow_window_s: 600.0,
+            min_samples: 5,
+        }
+    }
+}
+
+/// Service class of a job: the nearest [`TENANT_TIERS`] SLO tier implied
+/// by its spec (`(slo − cold_start) / duration` recovers the emergence
+/// factor S the generator applied, and the multi-tenant scenario's tier
+/// factors on top of it). Single-tenant traces all map to the S = 1.0
+/// class; multi-tenant traces split cleanly across the four tiers.
+pub fn service_class(spec: &JobSpec, perf: &PerfModel) -> usize {
+    let implied = (spec.slo_s - perf.cold_start(spec.llm)) / spec.duration_s;
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (i, &tier) in TENANT_TIERS.iter().enumerate() {
+        let d = (implied - tier).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Llm;
+
+    fn spec_with_tier(tier: f64, perf: &PerfModel) -> JobSpec {
+        let duration = 100.0;
+        JobSpec {
+            id: 0,
+            llm: Llm::Gpt2B,
+            task_id: 0,
+            submit_s: 0.0,
+            duration_s: duration,
+            traced_gpus: 1,
+            base_iters: 10.0,
+            user_prompt_quality: 0.5,
+            slo_s: duration * tier + perf.cold_start(Llm::Gpt2B),
+        }
+    }
+
+    #[test]
+    fn service_class_recovers_tenant_tiers() {
+        let perf = PerfModel::default();
+        for (i, &tier) in TENANT_TIERS.iter().enumerate() {
+            assert_eq!(service_class(&spec_with_tier(tier, &perf), &perf), i);
+        }
+        // off-grid values snap to the nearest tier
+        assert_eq!(service_class(&spec_with_tier(0.1, &perf), &perf), 0);
+        assert_eq!(
+            service_class(&spec_with_tier(9.0, &perf), &perf),
+            TENANT_TIERS.len() - 1
+        );
+    }
+
+    #[test]
+    fn multi_tenant_scenario_spans_all_classes() {
+        use crate::scenario::Scenario;
+        let sc = Scenario::MultiTenant { tenants: 4, jobs_per_tenant: 40 };
+        let jobs = sc.generate(7, 1.0).unwrap();
+        let perf = PerfModel::default();
+        let mut seen = [false; N_CLASS];
+        for j in &jobs {
+            seen[service_class(j, &perf)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+}

@@ -1,0 +1,268 @@
+//! The SLO monitor: per-class / per-LLM rolling SLI windows plus the
+//! cluster-aggregate burn gauge, fed by the simulator's event-stream
+//! observer hook ([`SimObserver`]) or directly by the control plane
+//! (`slo::Governed`). Purely observational — it never touches cluster
+//! state.
+
+use crate::cluster::{ClusterState, SimObserver};
+use crate::scenario::TENANT_TIERS;
+use crate::slo::budget::BurnGauge;
+use crate::slo::window::{nearest_rank, SliWindow};
+use crate::slo::{service_class, SloConfig, N_CLASS};
+use crate::workload::{Llm, N_LLM};
+
+/// Lifetime stats of one (service class, LLM) cell.
+#[derive(Clone, Debug, Default)]
+struct CellStats {
+    jobs: u64,
+    met: u64,
+    lateness: Vec<f64>,
+}
+
+/// One row of the per-tenant attainment table (see
+/// `metrics::render_attainment`).
+#[derive(Clone, Debug)]
+pub struct AttainmentCell {
+    /// Service-class index (see [`crate::slo::service_class`]).
+    pub class: usize,
+    /// SLO tier factor of the class (`scenario::TENANT_TIERS`).
+    pub tier: f64,
+    pub llm: Llm,
+    pub jobs: u64,
+    pub met: u64,
+    pub p50_lateness_s: f64,
+    pub p99_lateness_s: f64,
+}
+
+impl AttainmentCell {
+    pub fn attainment(&self) -> f64 {
+        if self.jobs == 0 {
+            1.0
+        } else {
+            self.met as f64 / self.jobs as f64
+        }
+    }
+}
+
+/// Online SLO telemetry for one simulated run: arrival/completion
+/// counters, pending-queue depth, rolling per-LLM and per-class SLI
+/// windows, and the aggregate error-budget burn gauge.
+pub struct SloMonitor {
+    pub cfg: SloConfig,
+    /// Cluster-aggregate burn gauge (error budget + fast/slow windows).
+    pub gauge: BurnGauge,
+    per_llm: [SliWindow; N_LLM],
+    per_class: [SliWindow; N_CLASS],
+    cells: [[CellStats; N_LLM]; N_CLASS],
+    arrived: usize,
+    finished: usize,
+    /// Peak pending-queue depth observed across the run.
+    pub peak_queue_depth: usize,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: SloConfig) -> Self {
+        SloMonitor {
+            gauge: BurnGauge::new(&cfg),
+            per_llm: std::array::from_fn(|_| SliWindow::new(cfg.fast_window_s)),
+            per_class: std::array::from_fn(|_| {
+                SliWindow::new(cfg.fast_window_s)
+            }),
+            cells: Default::default(),
+            arrived: 0,
+            finished: 0,
+            peak_queue_depth: 0,
+            cfg,
+        }
+    }
+
+    pub fn arrived(&self) -> usize {
+        self.arrived
+    }
+
+    pub fn finished(&self) -> usize {
+        self.finished
+    }
+
+    /// Jobs submitted but neither holding GPUs nor done.
+    pub fn queue_depth(&self, st: &ClusterState) -> usize {
+        let holding: usize =
+            Llm::ALL.iter().map(|&l| st.active_jobs(l).len()).sum();
+        self.arrived.saturating_sub(self.finished + holding)
+    }
+
+    /// Rolling SLI window of one LLM.
+    pub fn llm_window(&self, llm: Llm) -> &SliWindow {
+        &self.per_llm[llm.index()]
+    }
+
+    /// Rolling SLI window of one service class.
+    pub fn class_window(&self, class: usize) -> &SliWindow {
+        &self.per_class[class]
+    }
+
+    pub fn note_arrival(&mut self, st: &ClusterState) {
+        self.arrived += 1;
+        self.note_depth(st);
+    }
+
+    /// Observe a completion. `already_burned` marks jobs whose budget hit
+    /// was recorded at arrival (`note_doomed`): they still land in the
+    /// attainment table and rolling windows, but not in the burn gauge.
+    pub fn note_completion(&mut self, st: &ClusterState, job_id: usize,
+                           already_burned: bool) {
+        self.finished += 1;
+        let job = &st.jobs[job_id];
+        let met = job.met_slo();
+        let lateness = (job.completed_at - job.spec.deadline()).max(0.0);
+        let t = st.now();
+        let li = job.spec.llm.index();
+        let class = service_class(&job.spec, &st.perf);
+        if !already_burned {
+            self.gauge.record(t, met, lateness);
+        }
+        self.per_llm[li].record(t, met, lateness);
+        self.per_class[class].record(t, met, lateness);
+        let cell = &mut self.cells[class][li];
+        cell.jobs += 1;
+        if met {
+            cell.met += 1;
+        }
+        cell.lateness.push(lateness);
+        self.note_depth(st);
+    }
+
+    /// A job proven unmeetable at arrival: the violation is certain, so
+    /// the budget burns now with the provable minimum lateness (the
+    /// eventual completion fills the table without re-burning).
+    pub fn note_doomed(&mut self, st: &ClusterState, min_lateness_s: f64) {
+        self.gauge.record(st.now(), false, min_lateness_s.max(0.0));
+    }
+
+    /// An executed scheduling round finished.
+    pub fn note_round(&mut self, st: &ClusterState) {
+        self.gauge.advance(st.now());
+        self.note_depth(st);
+    }
+
+    fn note_depth(&mut self, st: &ClusterState) {
+        let depth = self.queue_depth(st);
+        if depth > self.peak_queue_depth {
+            self.peak_queue_depth = depth;
+        }
+    }
+
+    /// Lifetime per-(class, LLM) attainment table; empty cells are
+    /// skipped.
+    pub fn attainment_table(&self) -> Vec<AttainmentCell> {
+        let mut out = vec![];
+        for (c, row) in self.cells.iter().enumerate() {
+            for (li, cell) in row.iter().enumerate() {
+                if cell.jobs == 0 {
+                    continue;
+                }
+                let mut xs = cell.lateness.clone();
+                xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                out.push(AttainmentCell {
+                    class: c,
+                    tier: TENANT_TIERS[c],
+                    llm: Llm::ALL[li],
+                    jobs: cell.jobs,
+                    met: cell.met,
+                    p50_lateness_s: nearest_rank(&xs, 0.5),
+                    p99_lateness_s: nearest_rank(&xs, 0.99),
+                });
+            }
+        }
+        out
+    }
+}
+
+impl SimObserver for SloMonitor {
+    fn on_arrival(&mut self, st: &ClusterState, _job_id: usize) {
+        self.note_arrival(st);
+    }
+    fn on_job_complete(&mut self, st: &ClusterState, job_id: usize) {
+        self.note_completion(st, job_id, false);
+    }
+    fn on_round(&mut self, st: &ClusterState) {
+        self.note_round(st);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{SimConfig, Simulator};
+    use crate::coordinator::{PromptTuner, PromptTunerConfig};
+    use crate::trace::{Load, TraceConfig, TraceGenerator};
+    use crate::workload::PerfModel;
+
+    #[test]
+    fn monitor_counts_every_job_through_the_observer_hook() {
+        let perf = PerfModel::default();
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 51, ..Default::default() },
+            perf.clone(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        let n = jobs.len();
+        let sim = Simulator::new(SimConfig::default(), perf);
+        let mut policy =
+            PromptTuner::new(PromptTunerConfig { seed: 51, ..Default::default() });
+        let mut mon = SloMonitor::new(SloConfig::default());
+        let res = sim.run_observed(&mut policy, jobs, &mut mon);
+        assert_eq!(res.n_done, n);
+        assert_eq!(mon.arrived(), n);
+        assert_eq!(mon.finished(), n);
+        assert_eq!(mon.gauge.budget.total_seen, n as u64);
+        // the attainment table partitions the run exactly
+        let table = mon.attainment_table();
+        let total: u64 = table.iter().map(|c| c.jobs).sum();
+        assert_eq!(total as usize, n);
+        let met: u64 = table.iter().map(|c| c.met).sum();
+        assert_eq!(met as usize, n - res.n_violations);
+        for c in &table {
+            assert!((0.0..=1.0).contains(&c.attainment()));
+            assert!(c.p99_lateness_s >= c.p50_lateness_s);
+        }
+        assert!(mon.peak_queue_depth <= n);
+    }
+
+    #[test]
+    fn doomed_jobs_burn_once() {
+        // doom at arrival + completion with already_burned keeps the
+        // gauge at one bad sample while the table still records the job
+        let perf = PerfModel::default();
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 52, ..Default::default() },
+            perf.clone(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        let n = jobs.len();
+        let sim = Simulator::new(SimConfig::default(), perf);
+        struct Doomer {
+            mon: SloMonitor,
+        }
+        impl SimObserver for Doomer {
+            fn on_arrival(&mut self, st: &ClusterState, _id: usize) {
+                self.mon.note_arrival(st);
+                self.mon.note_doomed(st, 1.0);
+            }
+            fn on_job_complete(&mut self, st: &ClusterState, id: usize) {
+                self.mon.note_completion(st, id, true);
+            }
+        }
+        let mut policy =
+            PromptTuner::new(PromptTunerConfig { seed: 52, ..Default::default() });
+        let mut obs = Doomer { mon: SloMonitor::new(SloConfig::default()) };
+        let res = sim.run_observed(&mut policy, jobs, &mut obs);
+        assert_eq!(res.n_done, n);
+        // every gauge sample came from the doom path, none from completion
+        assert_eq!(obs.mon.gauge.budget.total_seen, n as u64);
+        assert_eq!(obs.mon.gauge.budget.bad_seen, n as u64);
+        let table_jobs: u64 =
+            obs.mon.attainment_table().iter().map(|c| c.jobs).sum();
+        assert_eq!(table_jobs as usize, n);
+    }
+}

@@ -1,0 +1,179 @@
+//! Rolling-window service-level indicators (SLIs): the online
+//! counterpart of `SimResult::violation_rate`. A [`SliWindow`] holds the
+//! recent completion observations of one key (service class, LLM, or the
+//! whole cluster) and answers attainment / bad-fraction /
+//! lateness-quantile queries over a fixed trailing time window.
+
+use std::collections::VecDeque;
+
+/// Nearest-rank quantile over an ascending-sorted slice (q clamped to
+/// [0, 1]); 0 when empty. Shared by the rolling windows and the lifetime
+/// attainment table so both report identical percentile semantics.
+pub fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+/// One observation: a job that finished (or was proven hopeless) at `t`.
+#[derive(Clone, Copy, Debug)]
+struct Sample {
+    t: f64,
+    met: bool,
+    lateness_s: f64,
+}
+
+/// A trailing-time-window SLI accumulator. [`SliWindow::record`] must be
+/// called with non-decreasing timestamps (simulated time is monotone);
+/// samples older than the window are evicted on every record/advance.
+#[derive(Clone, Debug)]
+pub struct SliWindow {
+    window_s: f64,
+    samples: VecDeque<Sample>,
+    met_in_window: usize,
+    /// Lifetime observation count (never evicted).
+    pub total_seen: u64,
+    /// Lifetime SLO-met count.
+    pub total_met: u64,
+}
+
+impl SliWindow {
+    pub fn new(window_s: f64) -> Self {
+        SliWindow {
+            window_s,
+            samples: VecDeque::new(),
+            met_in_window: 0,
+            total_seen: 0,
+            total_met: 0,
+        }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Record one observation at time `t`. `lateness_s` is how far past
+    /// its deadline the job finished (0 when the SLO was met).
+    pub fn record(&mut self, t: f64, met: bool, lateness_s: f64) {
+        debug_assert!(lateness_s >= 0.0);
+        self.evict(t);
+        self.samples.push_back(Sample { t, met, lateness_s });
+        if met {
+            self.met_in_window += 1;
+            self.total_met += 1;
+        }
+        self.total_seen += 1;
+    }
+
+    /// Advance time without recording (evicts stale samples so queries at
+    /// `now` see only the trailing window).
+    pub fn advance(&mut self, now: f64) {
+        self.evict(now);
+    }
+
+    fn evict(&mut self, now: f64) {
+        while let Some(s) = self.samples.front() {
+            if now - s.t > self.window_s {
+                if s.met {
+                    self.met_in_window -= 1;
+                }
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Samples currently inside the window.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// SLO attainment over the window; None when the window is empty
+    /// (no evidence either way).
+    pub fn attainment(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.met_in_window as f64 / self.samples.len() as f64)
+        }
+    }
+
+    /// Fraction of SLO-missing samples in the window (0 when empty — an
+    /// empty window burns no budget).
+    pub fn bad_fraction(&self) -> f64 {
+        match self.attainment() {
+            Some(a) => 1.0 - a,
+            None => 0.0,
+        }
+    }
+
+    /// Nearest-rank lateness quantile (q in [0, 1]) over the window's
+    /// samples; 0 when the window is empty.
+    pub fn lateness_quantile(&self, q: f64) -> f64 {
+        let mut xs: Vec<f64> =
+            self.samples.iter().map(|s| s.lateness_s).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        nearest_rank(&xs, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_attainment_and_eviction() {
+        let mut w = SliWindow::new(10.0);
+        assert!(w.attainment().is_none());
+        assert_eq!(w.bad_fraction(), 0.0);
+        w.record(0.0, true, 0.0);
+        w.record(1.0, false, 5.0);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.attainment(), Some(0.5));
+        assert_eq!(w.bad_fraction(), 0.5);
+        // at t = 10.5 the t = 0 sample ages out, the t = 1 sample stays
+        w.advance(10.5);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.attainment(), Some(0.0));
+        assert_eq!(w.bad_fraction(), 1.0);
+        // lifetime totals are never evicted
+        assert_eq!(w.total_seen, 2);
+        assert_eq!(w.total_met, 1);
+        w.advance(100.0);
+        assert!(w.is_empty());
+        assert!(w.attainment().is_none());
+    }
+
+    #[test]
+    fn lateness_quantiles_nearest_rank() {
+        let mut w = SliWindow::new(100.0);
+        for i in 0..10 {
+            w.record(i as f64, false, i as f64);
+        }
+        assert_eq!(w.lateness_quantile(0.5), 4.0); // rank 5 of 10
+        assert_eq!(w.lateness_quantile(0.99), 9.0); // rank 10
+        assert_eq!(w.lateness_quantile(0.0), 0.0); // rank clamped to 1
+        assert_eq!(w.lateness_quantile(1.0), 9.0);
+        assert_eq!(SliWindow::new(1.0).lateness_quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn record_evicts_as_it_goes() {
+        let mut w = SliWindow::new(5.0);
+        for i in 0..20 {
+            w.record(i as f64, i % 2 == 0, 0.0);
+        }
+        // at t = 19 the window holds t in [14, 19]: 6 samples
+        assert_eq!(w.len(), 6);
+        assert_eq!(w.attainment(), Some(0.5));
+        assert_eq!(w.total_seen, 20);
+    }
+}

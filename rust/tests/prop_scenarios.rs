@@ -8,7 +8,7 @@ use prompttuner::cluster::{SimConfig, SimOracle, Simulator};
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::scenario::{replay, Scenario};
 use prompttuner::util::prop::{check, ensure};
-use prompttuner::workload::{JobSpec, PerfModel};
+use prompttuner::workload::{JobSpec, Llm, PerfModel};
 
 /// Compare two generated traces field-by-field, bitwise for floats.
 fn assert_identical(name: &str, a: &[JobSpec], b: &[JobSpec]) -> Result<(), String> {
@@ -113,6 +113,61 @@ fn prop_replay_roundtrip_is_exact() {
         let _ = std::fs::remove_file(&path);
         assert_identical("replay", &a, &jobs)?;
         assert_identical("replay-indep", &a, &b)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_roundtrip_random_traces() {
+    // Fuzz the binary trace format directly: random (not
+    // generator-shaped) job specs — including boundary qualities 0/1 and
+    // extreme-but-valid durations — must survive a binio write + read
+    // with exact f64 bit equality, both in memory and through a file.
+    let dir = std::env::temp_dir().join("pt_prop_replay_random");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut case = 0u64;
+    check("random trace binio round-trip is bit-exact", 40, |rng| {
+        case += 1;
+        let n = rng.below(60);
+        let mut t = 0.0f64;
+        let mut jobs = Vec::with_capacity(n);
+        for i in 0..n {
+            // non-decreasing arrivals with dense ids, so the loader's
+            // stable re-sort/re-id pass is the identity
+            t += rng.f64() * 90.0;
+            let llm = Llm::ALL[rng.below(Llm::ALL.len())];
+            let duration_s = match rng.below(8) {
+                0 => 5e-3,
+                1 => 1e7,
+                _ => rng.range_f64(1.0, 900.0),
+            };
+            let user_prompt_quality = match rng.below(8) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => rng.f64(),
+            };
+            jobs.push(JobSpec {
+                id: i,
+                llm,
+                task_id: rng.below(1 << 20),
+                submit_s: t,
+                duration_s,
+                traced_gpus: llm.gpus_per_replica() * (1 + rng.below(4)),
+                base_iters: rng.range_f64(1e-3, 1e6),
+                user_prompt_quality,
+                slo_s: rng.range_f64(1e-3, 1e5),
+            });
+        }
+        // in-memory round trip
+        let bytes = replay::to_bytes(&jobs);
+        let back = replay::from_bytes(&bytes).map_err(|e| e.to_string())?;
+        assert_identical("random-roundtrip", &back, &jobs)?;
+        // file round trip
+        let path = dir.join(format!("r{case}.bin"));
+        replay::save(&path, &jobs).map_err(|e| e.to_string())?;
+        let from_file = replay::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        assert_identical("random-roundtrip-file", &from_file, &jobs)?;
         Ok(())
     });
 }

@@ -56,6 +56,8 @@ def load_record(path: str) -> dict:
             fail(f"{path}: cell {i} executed rounds but reports no throughput")
     if rec["suite"] == "scenarios":
         check_scenarios(path, rec)
+    if rec["suite"] == "slo":
+        check_slo(path, rec)
     return rec
 
 
@@ -92,6 +94,57 @@ def check_scenarios(path: str, rec: dict) -> None:
           f"x {sorted(SCENARIO_SYSTEMS)}")
 
 
+# The SLO control-plane sweep (fig12) must cover these scenarios under
+# every system, governed and ungoverned.
+SLO_SCENARIOS = {"multi-tenant", "flash-crowd"}
+
+
+def check_slo(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_slo.json: every cell is tagged with a
+    scenario and a boolean 'governed' flag, coverage spans
+    {governed, ungoverned} x systems x scenarios, and the governed
+    PromptTuner flash-crowd run improves on the ungoverned one on at
+    least one axis (violations or cost) — the control plane's reason to
+    exist."""
+    seen = {}
+    for i, cell in enumerate(rec["cells"]):
+        name = cell.get("scenario")
+        if name not in SLO_SCENARIOS:
+            fail(f"{path}: slo cell {i} has unexpected scenario '{name}'")
+        gov = cell.get("governed")
+        if not isinstance(gov, bool):
+            fail(f"{path}: slo cell {i} has no boolean 'governed' flag")
+        if cell["n_jobs"] <= 0:
+            fail(f"{path}: slo cell {i} ({name}) ran no jobs")
+        seen.setdefault((name, cell["system"]), set()).add(gov)
+    for name in sorted(SLO_SCENARIOS):
+        for system in sorted(SCENARIO_SYSTEMS):
+            if seen.get((name, system), set()) != {False, True}:
+                fail(f"{path}: slo suite missing a governed/ungoverned "
+                     f"pair for ({name}, {system})")
+
+    def pick(governed: bool) -> dict:
+        for cell in rec["cells"]:
+            if (cell["scenario"] == "flash-crowd"
+                    and cell["system"] == "prompttuner"
+                    and cell["governed"] is governed):
+                return cell
+        fail(f"{path}: no flash-crowd prompttuner cell with "
+             f"governed={governed}")
+
+    gov, ungov = pick(True), pick(False)
+    gov_viol = gov["n_violations"] / max(gov["n_jobs"], 1)
+    ungov_viol = ungov["n_violations"] / max(ungov["n_jobs"], 1)
+    print(f"check_bench: slo flash-crowd/prompttuner governed vs "
+          f"ungoverned: violations {gov_viol:.3f} vs {ungov_viol:.3f}, "
+          f"cost {gov['cost_usd']:.2f} vs {ungov['cost_usd']:.2f}")
+    if not (gov_viol < ungov_viol or gov["cost_usd"] < ungov["cost_usd"]):
+        fail(f"{path}: governed prompttuner improves neither violation "
+             f"rate nor cost on flash-crowd")
+    print(f"check_bench: slo suite covers {sorted(SLO_SCENARIOS)} x "
+          f"{sorted(SCENARIO_SYSTEMS)} x {{governed, ungoverned}}")
+
+
 def cell_key(cell: dict) -> tuple:
     return (cell["label"], cell["system"], cell["seed"], cell["gpus"])
 
@@ -120,6 +173,22 @@ def main() -> None:
         return
     except json.JSONDecodeError as e:
         fail(f"baseline {args.baseline} is not valid JSON: {e}")
+
+    # Loud, non-fatal warning: a committed placeholder baseline with
+    # wall_s == 0.0 keeps the wall-clock regression gate silently inert
+    # (zero-wall cells are skipped below). Surface it on every run so the
+    # placeholder eventually gets replaced with a measured record.
+    zero = [cell_key(c) for c in base.get("cells", [])
+            if not c.get("wall_s")]
+    if zero:
+        print("=" * 72, file=sys.stderr)
+        print(f"check_bench: WARNING: baseline {args.baseline} has "
+              f"{len(zero)} cell(s) with wall_s == 0.0 — the wall-clock "
+              f"regression gate is INERT for those cells.\n"
+              f"check_bench: re-run the bench on a toolchain machine and "
+              f"commit the measured record as the baseline.",
+              file=sys.stderr)
+        print("=" * 72, file=sys.stderr)
 
     base_cells = {cell_key(c): c for c in base.get("cells", [])}
     worst = 0.0
