@@ -1,0 +1,90 @@
+//! Fig 13 (beyond the paper) — the fault & preemption sweep: SLO
+//! violation and cost of all three systems under involuntary churn, on
+//! the paper's 32-GPU cluster.
+//!
+//! Two fault families from the scenario engine:
+//! * **spot-market** — three seeded reclaim waves, each taking a quarter
+//!   of the fleet with a 30 s notice (victims checkpoint gracefully) and
+//!   returning ~3 min later;
+//! * **az-outage** — one correlated mass failure of half the fleet
+//!   mid-window (work since the last checkpoint lost), repaired after
+//!   5 min, with straggler slowdowns in the recovery wake.
+//!
+//! Every cell runs through `fault::FaultInjector` with the default
+//! checkpoint/restore cost model (the bench harness wraps automatically
+//! for fault scenarios), so preempted jobs restore from checkpoints
+//! instead of silently restarting. Emits a BENCH_faults.json perf record;
+//! tools/check_bench.py validates family × system coverage, that the
+//! plans actually fired, and that every preempted job still completed.
+//! Run with PT_SIM_ORACLE=1 (CI does) to audit every round — including
+//! the fault invariants (revoked GPUs never re-granted before repair,
+//! lost-work accounting conserved) — under the strict in-loop oracle.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::metrics::{render_table, Row};
+use prompttuner::scenario::Scenario;
+
+fn main() {
+    let seed = 37u64;
+    let gpus = 32;
+
+    let scenarios = [
+        Scenario::SpotMarket { waves: 3, reclaim_frac: 0.25, jobs_per_llm: 60 },
+        Scenario::AzOutage { outage_frac: 0.5, repair_s: 300.0,
+                             jobs_per_llm: 60 },
+    ];
+
+    let mut cells = vec![];
+    for sc in &scenarios {
+        for system in SYSTEMS {
+            cells.push(SweepCell::scenario(
+                format!("fig13/{}", sc.name()), system, sc.clone(), 1.0,
+                gpus, seed));
+        }
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    for sc in &scenarios {
+        let label = format!("fig13/{}", sc.name());
+        let rows: Vec<Row> = results
+            .iter()
+            .filter(|r| r.cell.label == label)
+            .map(|r| Row::from(&r.result))
+            .collect();
+        let jobs = results
+            .iter()
+            .find(|r| r.cell.label == label)
+            .map_or(0, |r| r.result.n_jobs);
+        print!("\n{}", render_table(
+            &format!("Fig 13 — {} ({jobs} jobs, {gpus} GPUs, S = 1.0)",
+                     sc.name()),
+            &rows));
+        for r in results.iter().filter(|r| r.cell.label == label) {
+            println!(
+                "  {:<14} {} revocations, {:.1} iters lost, \
+                 {:.1} straggler iters",
+                r.cell.system,
+                r.result.revocations,
+                r.result.lost_iters,
+                r.result.straggler_iters,
+            );
+        }
+    }
+
+    let report = BenchReport::new("faults", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!(
+            "\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+            report.cells.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+}

@@ -11,7 +11,7 @@
 //!   full cold start (framework + weights load).
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, JobStatus, Policy, Wake};
+use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
 use crate::util::rng::Rng;
 use crate::workload::Llm;
 
@@ -156,7 +156,7 @@ impl ElasticFlow {
             let job = &st.jobs[id];
             let llm = job.spec.llm;
             let replica = llm.gpus_per_replica();
-            let it = st.perf.iter_time(llm, job.gpus);
+            let it = st.eff_iter_time(llm, job.gpus);
             let predicted = job.last_progress_t + job.iters_remaining * it;
             let deadline = job.spec.deadline();
             if predicted <= deadline || deadline < now {
@@ -173,7 +173,7 @@ impl ElasticFlow {
             let mut n = job.gpus + replica;
             let mut found = None;
             while n <= cap {
-                let t = now + cold + job.iters_remaining * st.perf.iter_time(llm, n);
+                let t = now + cold + job.iters_remaining * st.eff_iter_time(llm, n);
                 if t <= deadline {
                     found = Some(n);
                     break;
@@ -199,7 +199,7 @@ impl ElasticFlow {
     }
 
     fn rescaled_recently(&self, id: usize, now: f64, window: f64) -> bool {
-        self.last_rescale.get(id).map_or(false, |&t| now - t < window)
+        self.last_rescale.get(id).is_some_and(|&t| now - t < window)
     }
 
     /// Work-conserving elastic growth: DL training schedulers hand idle
@@ -222,7 +222,7 @@ impl ElasticFlow {
         ranked.clear();
         for &i in ids.iter() {
             let job = &st.jobs[i];
-            let it = st.perf.iter_time(job.spec.llm, job.gpus);
+            let it = st.eff_iter_time(job.spec.llm, job.gpus);
             ranked.push((job.iters_remaining * it, i));
         }
         ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
@@ -293,6 +293,25 @@ impl Policy for ElasticFlow {
         let _ = st;
     }
 
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        for v in &ev.victims {
+            // The victim's whole allocation returns to the fixed
+            // cluster's free capacity; the failed GPUs themselves leave
+            // the fleet through the engine's follow-up `set_capacity`
+            // (a statically billed cluster has no pools to shed, so
+            // `idle_gpus_lost` needs no handling here).
+            self.busy_gpus = self.busy_gpus.saturating_sub(v.held);
+            // Requeue deadline-sorted, like arrival.
+            let dl = st.jobs[v.job_id].spec.deadline();
+            let st_ref: &ClusterState = st;
+            let pos = self
+                .pending
+                .partition_point(|&j| st_ref.jobs[j].spec.deadline() <= dl);
+            self.pending.insert(pos, v.job_id);
+        }
+        self.needs_round = true;
+    }
+
     fn on_tick(&mut self, st: &mut ClusterState) {
         // earliest-deadline-first admission (queue kept deadline-sorted
         // at arrival; launched jobs leave it through one status-based
@@ -347,7 +366,7 @@ impl Policy for ElasticFlow {
                 {
                     continue;
                 }
-                let it = st.perf.iter_time(llm, job.gpus);
+                let it = st.eff_iter_time(llm, job.gpus);
                 if job.iters_remaining * it < 2.0 * st.perf.cold_start(llm) {
                     continue;
                 }

@@ -11,7 +11,7 @@
 //!   schedule, no cross-LLM GPU sharing, no delay-based planning.
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, JobStatus, Policy, Wake};
+use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
 use crate::coordinator::pools::WarmPool;
 use crate::util::rng::Rng;
 use crate::workload::{Llm, N_LLM};
@@ -183,6 +183,34 @@ impl Policy for Infless {
             / (job.completed_at - job.launched_at).max(1e-9))
             .round() as usize;
         self.pools[llm.index()].release(gpus, st.now());
+        self.needs_round = true;
+        self.update_billable(st);
+    }
+
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        let now = st.now();
+        for v in &ev.victims {
+            let li = st.jobs[v.job_id].spec.llm.index();
+            // Failed instances leave the model pool; the victim's
+            // surviving instances return to keep-alive.
+            self.pools[li].lose_busy(v.failed);
+            self.pools[li].release(v.held - v.failed, now);
+            // Re-deliver the preempted job (FCFS in delivery order).
+            self.pending[li].push(v.job_id);
+        }
+        // Failed instances beyond the victims hit idle keep-alive
+        // capacity first, then cancel in-flight pre-warm cold starts
+        // (those GPUs are gone too).
+        let mut need = ev.idle_gpus_lost;
+        for pool in self.pools.iter_mut() {
+            if need == 0 {
+                break;
+            }
+            need -= pool.lose_idle(need);
+        }
+        while need > 0 && self.warming.pop().is_some() {
+            need -= 1;
+        }
         self.needs_round = true;
         self.update_billable(st);
     }

@@ -19,8 +19,9 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
-use crate::cluster::{Policy, SimConfig, SimResult, Simulator};
+use crate::cluster::{CheckpointModel, Policy, SimConfig, SimResult, Simulator};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
+use crate::fault::FaultInjector;
 use crate::scenario::Scenario;
 use crate::slo::{Governed, GovernorConfig};
 use crate::trace::{Load, TraceConfig, TraceGenerator};
@@ -105,7 +106,9 @@ pub struct CellResult {
 }
 
 /// Build the policy a cell names (ablation override aware; governed
-/// cells are wrapped in the SLO control plane).
+/// cells are wrapped in the SLO control plane; cells whose scenario
+/// carries a fault plan — spot-market, az-outage — are wrapped in the
+/// fault engine with the default checkpoint/restore cost model).
 pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
     let inner: Box<dyn Policy> = match cell.system.as_str() {
         "prompttuner" => {
@@ -132,10 +135,22 @@ pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
         })),
         other => panic!("unknown system {other}"),
     };
-    if cell.governed {
+    let policy: Box<dyn Policy> = if cell.governed {
         Box::new(Governed::new(inner, GovernorConfig::for_cluster(cell.gpus)))
     } else {
         inner
+    };
+    match cell
+        .scenario
+        .as_ref()
+        .and_then(|sc| sc.fault_plan(cell.seed, cell.gpus))
+    {
+        Some(plan) => Box::new(FaultInjector::new(
+            policy,
+            plan,
+            CheckpointModel::default(),
+        )),
+        None => policy,
     }
 }
 
@@ -299,6 +314,9 @@ impl BenchReport {
                                   r.rounds_coalesced));
             out.push_str(&format!("\"ticks_per_s\": {}, ",
                                   json_f64(r.ticks_per_s())));
+            out.push_str(&format!("\"revocations\": {}, ", r.revocations));
+            out.push_str(&format!("\"lost_iters\": {}, ",
+                                  json_f64(r.lost_iters)));
             out.push_str(&format!("\"n_jobs\": {}, ", r.n_jobs));
             out.push_str(&format!("\"n_done\": {}, ", r.n_done));
             out.push_str(&format!("\"n_violations\": {}, ", r.n_violations));
@@ -423,6 +441,33 @@ mod tests {
         assert_eq!(r.result.policy, "prompttuner+slo");
         let report = BenchReport::new("slo", vec![r], 0.1);
         assert!(report.to_json().contains("\"governed\": true"));
+    }
+
+    #[test]
+    fn fault_scenario_cells_inject_faults_and_tag_the_record() {
+        let sc = Scenario::AzOutage {
+            outage_frac: 0.5,
+            repair_s: 120.0,
+            jobs_per_llm: 40,
+        };
+        let cells: Vec<SweepCell> = SYSTEMS
+            .iter()
+            .map(|s| SweepCell::scenario(
+                format!("t/{s}"), *s, sc.clone(), 1.0, 16, 5))
+            .collect();
+        let results = run_sweep(&cells);
+        for r in &results {
+            assert_eq!(r.result.n_done, r.result.n_jobs,
+                       "{} stranded revoked jobs", r.cell.system);
+        }
+        let total_revocations: u64 =
+            results.iter().map(|r| r.result.revocations).sum();
+        assert!(total_revocations > 0, "the outage preempted nothing");
+        let report = BenchReport::new("faults", results, 0.1);
+        let json = report.to_json();
+        assert!(json.contains("\"scenario\": \"az-outage\""));
+        assert!(json.contains("\"revocations\""));
+        assert!(json.contains("\"lost_iters\""));
     }
 
     #[test]

@@ -43,7 +43,24 @@ pub struct JobState {
     /// Seconds of initialization the job paid (Fig 3b numerator).
     pub init_wait: f64,
     /// GPU-seconds consumed by this job (including initialization hold).
+    /// Set at completion from the *final* run segment (preempted segments
+    /// are accounted in the cluster-level busy integral).
     pub gpu_seconds: f64,
+    /// Time the current run segment started (or will start) making
+    /// progress: `init_until` at launch/delayed realloc, the realloc
+    /// instant otherwise. Checkpoints are periodic from this origin.
+    pub seg_start_t: f64,
+    /// Involuntary revocations this job suffered (fault engine).
+    pub restarts: u32,
+    /// The next launch must restore from the last checkpoint (pays the
+    /// restore overhead; keeps realized quality + remaining iterations).
+    pub needs_restore: bool,
+    /// Iterations lost to restore-from-last-checkpoint across all
+    /// revocations (conserved against `ClusterState` totals by the
+    /// oracle).
+    pub lost_iters: f64,
+    /// Extra iterations added by straggler slowdowns.
+    pub straggler_iters: f64,
 }
 
 impl JobState {
@@ -63,6 +80,11 @@ impl JobState {
             bank_latency: 0.0,
             init_wait: 0.0,
             gpu_seconds: 0.0,
+            seg_start_t: 0.0,
+            restarts: 0,
+            needs_restore: false,
+            lost_iters: 0.0,
+            straggler_iters: 0.0,
         }
     }
 

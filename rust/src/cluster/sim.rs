@@ -58,11 +58,81 @@ impl Default for SimConfig {
             max_gpus: 32,
             horizon_s: 7200.0,
             util_sample_s: 10.0,
-            debug_oracle: std::env::var("PT_SIM_ORACLE").map_or(false, |v| {
+            debug_oracle: std::env::var("PT_SIM_ORACLE").is_ok_and(|v| {
                 !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
             }),
         }
     }
+}
+
+/// Checkpoint/restore cost model for faulted runs (installed by the
+/// fault engine, `fault::FaultInjector`). While armed, jobs pay a
+/// periodic checkpoint overhead as a uniform slowdown of effective
+/// iteration time (`1 + overhead_s / period_s`), an involuntary
+/// revocation loses the work done since the last periodic checkpoint
+/// (graceful revocations — spot reclaims inside their notice window —
+/// checkpoint on the way out and lose none), and the next launch of a
+/// revoked job pays `restore_s` of restore-from-checkpoint overhead on
+/// top of the policy's own allocation delay. `None` (the default) keeps
+/// every computation bit-identical to the fault-free simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointModel {
+    /// Seconds between periodic checkpoints.
+    pub period_s: f64,
+    /// Seconds of overhead per checkpoint (amortized as a slowdown).
+    pub overhead_s: f64,
+    /// Seconds to restore a revoked job from its last checkpoint.
+    pub restore_s: f64,
+}
+
+impl Default for CheckpointModel {
+    fn default() -> Self {
+        // Defaults sized for LPT jobs: a prompt-state checkpoint is small
+        // (soft prompt + optimizer state), so checkpointing each minute
+        // costs ~2.5 % throughput and a restore reloads in ~12 s.
+        CheckpointModel { period_s: 60.0, overhead_s: 1.5, restore_s: 12.0 }
+    }
+}
+
+impl CheckpointModel {
+    /// Effective iteration-time multiplier from the amortized periodic
+    /// checkpoint overhead.
+    pub fn slowdown(&self) -> f64 {
+        if self.period_s.is_finite() && self.period_s > 0.0 {
+            1.0 + self.overhead_s / self.period_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// One preempted job inside a [`RevokeEvent`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Revoked {
+    pub job_id: usize,
+    /// GPUs the job held when preempted (all returned to Pending).
+    pub held: usize,
+    /// How many of those GPUs actually failed / were reclaimed — they
+    /// leave the policy's footprint entirely; the `held - failed`
+    /// survivors go back to its pools.
+    pub failed: usize,
+}
+
+/// An involuntary revocation delivered to [`Policy::on_revoke`]. The
+/// fault engine has already preempted the victims back to `Pending`
+/// (`ClusterState::revoke_job`) and lowered the provider budget; the
+/// policy must reconcile its own bookkeeping: requeue the victims, drop
+/// each victim's `failed` GPUs from any pools (returning the survivors),
+/// and shed up to `idle_gpus_lost` idle/pre-warming instances.
+#[derive(Clone, Debug)]
+pub struct RevokeEvent {
+    pub victims: Vec<Revoked>,
+    /// Failed GPUs not covered by victim allocations — they hit the
+    /// policy's idle footprint (warm pools, pre-warming instances).
+    pub idle_gpus_lost: usize,
+    /// Graceful revocations (spot reclaims with notice) checkpoint on
+    /// the way out; abrupt ones lose work back to the last checkpoint.
+    pub graceful: bool,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -116,6 +186,18 @@ pub enum Wake {
     Idle,
 }
 
+impl Wake {
+    /// The earlier of two wake hints (used by policy combinators that
+    /// merge their own timed actions with the wrapped policy's).
+    pub fn earliest(a: Wake, b: Wake) -> Wake {
+        match (a, b) {
+            (Wake::Dense, _) | (_, Wake::Dense) => Wake::Dense,
+            (Wake::Idle, w) | (w, Wake::Idle) => w,
+            (Wake::At(x), Wake::At(y)) => Wake::At(x.min(y)),
+        }
+    }
+}
+
 /// Mutable cluster state policies operate on.
 pub struct ClusterState {
     now: f64,
@@ -148,6 +230,20 @@ pub struct ClusterState {
     /// Position of each job in its LLM's `active` list (usize::MAX when
     /// the job holds no GPUs).
     active_pos: Vec<usize>,
+    /// Checkpoint/restore cost model (None = fault-free semantics,
+    /// bit-identical to the pre-fault simulator).
+    ckpt: Option<CheckpointModel>,
+    /// GPUs currently revoked by faults (failed / reclaimed, not yet
+    /// repaired). The effective provider budget is `max_gpus - revoked`;
+    /// the oracle audits that billable capacity never exceeds it.
+    revoked_gpus: f64,
+    /// Lifetime involuntary revocations (`revoke_job` calls).
+    pub revocations: u64,
+    /// Total iterations lost to restore-from-checkpoint (conserved
+    /// against the per-job `lost_iters` sums by the oracle).
+    pub total_lost_iters: f64,
+    /// Total extra iterations added by straggler slowdowns.
+    pub total_straggler_iters: f64,
 }
 
 impl ClusterState {
@@ -171,6 +267,11 @@ impl ClusterState {
             seq: 0,
             active: Default::default(),
             active_pos: vec![usize::MAX; n],
+            ckpt: None,
+            revoked_gpus: 0.0,
+            revocations: 0,
+            total_lost_iters: 0.0,
+            total_straggler_iters: 0.0,
         }
     }
 
@@ -245,6 +346,122 @@ impl ClusterState {
         self.busy_gpus
     }
 
+    /// Install (or clear) the checkpoint/restore cost model. Called once
+    /// at run start by the fault engine; `None` keeps the fault-free
+    /// semantics bit-identical to the pre-fault simulator.
+    pub fn set_checkpoint_model(&mut self, model: Option<CheckpointModel>) {
+        self.ckpt = model;
+    }
+
+    pub fn checkpoint_model(&self) -> Option<&CheckpointModel> {
+        self.ckpt.as_ref()
+    }
+
+    /// Record the current level of revoked (failed / reclaimed, not yet
+    /// repaired) GPUs. Maintained by the fault engine; the oracle audits
+    /// `billable ≤ max_gpus - revoked` against it.
+    pub fn set_revoked(&mut self, gpus: f64) {
+        self.revoked_gpus = gpus;
+    }
+
+    pub fn revoked(&self) -> f64 {
+        self.revoked_gpus
+    }
+
+    /// Effective seconds per iteration: the perf model's time, slowed by
+    /// the amortized periodic-checkpoint overhead when a checkpoint model
+    /// is armed. Without one, this is exactly `PerfModel::iter_time`.
+    pub fn eff_iter_time(&self, llm: Llm, gpus: usize) -> f64 {
+        let base = self.perf.iter_time(llm, gpus);
+        match &self.ckpt {
+            Some(m) => base * m.slowdown(),
+            None => base,
+        }
+    }
+
+    /// Involuntarily preempt a job holding GPUs (fault engine): progress
+    /// is brought up to date, work since the last periodic checkpoint is
+    /// lost (unless `graceful` — spot reclaims checkpoint inside their
+    /// notice window), the in-flight completion event is invalidated, and
+    /// the job returns to `Pending` with `needs_restore` set so its next
+    /// launch resumes from the checkpoint (paying the restore overhead)
+    /// instead of silently restarting from scratch. Returns the GPUs the
+    /// job held.
+    pub fn revoke_job(&mut self, job_id: usize, graceful: bool) -> usize {
+        let now = self.now;
+        let llm = self.jobs[job_id].spec.llm;
+        let it = self.eff_iter_time(llm, self.jobs[job_id].gpus.max(1));
+        let held;
+        {
+            let job = &mut self.jobs[job_id];
+            debug_assert!(
+                matches!(job.status,
+                         JobStatus::Initializing | JobStatus::Running),
+                "revoking job {job_id} in state {:?}",
+                job.status
+            );
+            job.advance_progress(now, it);
+            if job.status == JobStatus::Running && !graceful {
+                if let Some(m) = &self.ckpt {
+                    let ran = (now - job.seg_start_t).max(0.0);
+                    let since_ckpt =
+                        if m.period_s.is_finite() && m.period_s > 0.0 {
+                            ran % m.period_s
+                        } else {
+                            ran // no periodic checkpoints: segment lost
+                        };
+                    let lost = since_ckpt / it;
+                    job.iters_remaining += lost;
+                    job.lost_iters += lost;
+                    self.total_lost_iters += lost;
+                }
+            }
+            held = job.gpus;
+            job.status = JobStatus::Pending;
+            job.gpus = 0;
+            job.gen += 1; // invalidate the in-flight completion event
+            job.needs_restore = true;
+            job.restarts += 1;
+        }
+        self.busy_gpus -= held as f64;
+        self.deactivate(job_id);
+        self.revocations += 1;
+        held
+    }
+
+    /// Straggler slowdown (fault engine): inflate a running job's
+    /// remaining work by `factor` (a slow node stretches its execution)
+    /// and reschedule its completion. The disturbance instant acts as an
+    /// implicit checkpoint boundary.
+    pub fn slow_job(&mut self, job_id: usize, factor: f64) {
+        debug_assert!(factor >= 1.0);
+        let now = self.now;
+        let llm = self.jobs[job_id].spec.llm;
+        let it = self.eff_iter_time(llm, self.jobs[job_id].gpus.max(1));
+        let finish;
+        {
+            let job = &mut self.jobs[job_id];
+            debug_assert!(matches!(
+                job.status,
+                JobStatus::Initializing | JobStatus::Running
+            ));
+            job.advance_progress(now, it);
+            if job.status != JobStatus::Running {
+                return; // still initializing: nothing to slow down yet
+            }
+            let extra = job.iters_remaining * (factor - 1.0);
+            job.iters_remaining += extra;
+            job.straggler_iters += extra;
+            self.total_straggler_iters += extra;
+            job.gen += 1;
+            job.last_progress_t = now;
+            job.seg_start_t = now;
+            finish = now + job.iters_remaining * it;
+        }
+        let gen = self.jobs[job_id].gen;
+        self.push(finish, EventKind::JobDone(job_id, gen));
+    }
+
     /// Launch a pending job on `gpus` GPUs after `init_delay` seconds of
     /// initialization, starting from a prompt of quality `quality` after
     /// `bank_latency` seconds of Prompt-Bank lookup (sequential with the
@@ -259,21 +476,42 @@ impl ClusterState {
     ) {
         debug_assert!(gpus > 0);
         let now = self.now;
-        let (iters, exec, iter_time);
+        let llm = self.jobs[job_id].spec.llm;
+        let iter_time = self.eff_iter_time(llm, gpus);
+        let restore_s = if self.jobs[job_id].needs_restore {
+            self.ckpt.as_ref().map_or(0.0, |m| m.restore_s)
+        } else {
+            0.0
+        };
+        let (iters, exec);
         {
             let job = &mut self.jobs[job_id];
             debug_assert_eq!(job.status, JobStatus::Pending, "job {job_id}");
-            job.quality = quality.max(job.spec.user_prompt_quality);
-            job.bank_latency = bank_latency;
-            job.iters_remaining = job.spec.iters_at(job.quality);
-            job.gpus = gpus;
-            job.status = JobStatus::Initializing;
-            job.launched_at = now;
-            job.init_wait = init_delay;
-            job.init_until = now + init_delay + bank_latency;
+            if job.needs_restore {
+                // Restore from the last checkpoint (after an involuntary
+                // revocation): realized prompt quality and remaining
+                // iterations survive; the job pays the restore overhead
+                // instead of a second Prompt-Bank lookup, so the
+                // quality/bank arguments are ignored.
+                job.needs_restore = false;
+                job.gpus = gpus;
+                job.status = JobStatus::Initializing;
+                job.launched_at = now;
+                job.init_wait += init_delay + restore_s;
+                job.init_until = now + init_delay + restore_s;
+            } else {
+                job.quality = quality.max(job.spec.user_prompt_quality);
+                job.bank_latency = bank_latency;
+                job.iters_remaining = job.spec.iters_at(job.quality);
+                job.gpus = gpus;
+                job.status = JobStatus::Initializing;
+                job.launched_at = now;
+                job.init_wait = init_delay;
+                job.init_until = now + init_delay + bank_latency;
+            }
             job.last_progress_t = job.init_until;
+            job.seg_start_t = job.init_until;
             job.gen += 1;
-            iter_time = self.perf.iter_time(job.spec.llm, gpus);
             iters = job.iters_remaining;
             exec = job.init_until + iters * iter_time;
             // storage cost of the synchronous gradient channel
@@ -296,29 +534,34 @@ impl ClusterState {
     pub fn realloc(&mut self, job_id: usize, new_gpus: usize,
                    extra_delay: f64) -> usize {
         let now = self.now;
+        let llm = self.jobs[job_id].spec.llm;
+        let it_old = self.eff_iter_time(llm, self.jobs[job_id].gpus.max(1));
+        let it_new = self.eff_iter_time(llm, new_gpus.max(1));
         let (old, finish);
         {
             let job = &mut self.jobs[job_id];
             debug_assert!(matches!(job.status,
                 JobStatus::Running | JobStatus::Initializing));
-            let it_old = self.perf.iter_time(job.spec.llm, job.gpus.max(1));
             job.advance_progress(now, it_old);
             old = job.gpus;
             job.gpus = new_gpus;
             job.gen += 1;
-            let it_new = self.perf.iter_time(job.spec.llm, new_gpus.max(1));
             if job.status == JobStatus::Initializing {
                 job.init_until = job.init_until.max(now + extra_delay);
                 job.last_progress_t = job.init_until;
+                job.seg_start_t = job.init_until;
                 finish = job.init_until + job.iters_remaining * it_new;
             } else if extra_delay > 0.0 {
                 job.status = JobStatus::Initializing;
                 job.init_until = now + extra_delay;
                 job.init_wait += extra_delay;
                 job.last_progress_t = job.init_until;
+                job.seg_start_t = job.init_until;
                 finish = job.init_until + job.iters_remaining * it_new;
             } else {
                 job.last_progress_t = now;
+                // reallocation reshards state — an implicit checkpoint
+                job.seg_start_t = now;
                 finish = now + job.iters_remaining * it_new;
             }
         }
@@ -329,14 +572,25 @@ impl ClusterState {
     }
 
     /// Estimated completion time if `job` were launched now on `gpus`
-    /// GPUs with the given delays (the T_i(a) the algorithms reason with).
+    /// GPUs with the given delays (the T_i(a) the algorithms reason
+    /// with). Checkpoint-model aware: iteration time includes the
+    /// amortized checkpoint slowdown, and a revoked job awaiting restore
+    /// is estimated from its preserved remaining iterations plus the
+    /// restore overhead (matching what `launch` will actually do) —
+    /// without a model armed this is bit-identical to the fault-free
+    /// estimator.
     pub fn estimate_completion(&self, job_id: usize, gpus: usize,
                                init_delay: f64, bank_latency: f64,
                                quality: f64) -> f64 {
         let job = &self.jobs[job_id];
+        if job.needs_restore {
+            let restore = self.ckpt.as_ref().map_or(0.0, |m| m.restore_s);
+            return self.now + init_delay + restore
+                + job.iters_remaining * self.eff_iter_time(job.spec.llm, gpus);
+        }
         let iters = job.spec.iters_at(quality.max(job.spec.user_prompt_quality));
         self.now + init_delay + bank_latency
-            + iters * self.perf.iter_time(job.spec.llm, gpus)
+            + iters * self.eff_iter_time(job.spec.llm, gpus)
     }
 
     fn push(&mut self, time: f64, kind: EventKind) {
@@ -380,6 +634,18 @@ pub trait Policy {
         Wake::Dense
     }
 
+    /// Involuntary revocation (fault engine, `fault::FaultInjector`):
+    /// the listed victim jobs have already been preempted back to
+    /// `Pending` ([`ClusterState::revoke_job`]) and the provider budget
+    /// lowered. The policy must reconcile its own bookkeeping — requeue
+    /// the victims, drop each victim's failed GPUs from any pools
+    /// (returning the survivors), and shed up to `ev.idle_gpus_lost`
+    /// idle/pre-warming instances. The default ignores the event (such a
+    /// policy strands its victims; every policy in this crate recovers).
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        let _ = (st, ev);
+    }
+
     /// Billable-capacity ceiling this policy currently schedules within
     /// (None when it has no such knob). Capacity governors
     /// (`slo::Governed`) read this before scaling.
@@ -415,6 +681,9 @@ impl<P: Policy + ?Sized> Policy for Box<P> {
     }
     fn on_tick(&mut self, st: &mut ClusterState) {
         (**self).on_tick(st)
+    }
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        (**self).on_revoke(st, ev)
     }
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
         (**self).next_timed_action(st)
@@ -486,6 +755,9 @@ pub struct StateAudit {
     last_now: f64,
     last_cost_gpu_s: f64,
     last_busy_gpu_s: f64,
+    last_lost_iters: f64,
+    last_straggler_iters: f64,
+    last_revocations: u64,
     /// Number of audits performed (so tests can assert coverage).
     pub audits: u64,
 }
@@ -517,6 +789,21 @@ impl StateAudit {
                 "{whence}@{t:.3}: billable {billable} exceeds provider budget {budget}"
             ));
         }
+        // ---- fault capacity: revoked GPUs never re-granted before repair
+        let revoked = st.revoked();
+        if revoked < -eps || revoked > budget + eps {
+            out.push(format!(
+                "{whence}@{t:.3}: revoked level {revoked} outside [0, {budget}]"
+            ));
+        }
+        if billable > budget - revoked + eps {
+            out.push(format!(
+                "{whence}@{t:.3}: billable {billable} exceeds the effective \
+                 budget {} ({budget} - {revoked} revoked): revoked GPUs \
+                 re-granted before repair",
+                budget - revoked
+            ));
+        }
         if busy > billable + eps {
             out.push(format!(
                 "{whence}@{t:.3}: busy {busy} exceeds billable {billable} \
@@ -529,6 +816,9 @@ impl StateAudit {
         self.mark.clear();
         self.mark.resize(n, false);
         let mut busy_recount = 0.0f64;
+        let mut lost_recount = 0.0f64;
+        let mut straggler_recount = 0.0f64;
+        let mut restarts_recount = 0u64;
         for (i, job) in st.jobs.iter().enumerate() {
             let holds = matches!(
                 job.status,
@@ -555,12 +845,81 @@ impl StateAudit {
                     job.iters_remaining
                 ));
             }
+            // ---- per-job fault accounting ----
+            if job.lost_iters < 0.0 || !job.lost_iters.is_finite() {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} lost_iters is {}",
+                    job.lost_iters
+                ));
+            }
+            if job.straggler_iters < 0.0 || !job.straggler_iters.is_finite() {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} straggler_iters is {}",
+                    job.straggler_iters
+                ));
+            }
+            if job.needs_restore && job.status != JobStatus::Pending {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} ({:?}) awaits restore but is \
+                     not Pending",
+                    job.status
+                ));
+            }
+            lost_recount += job.lost_iters;
+            straggler_recount += job.straggler_iters;
+            restarts_recount += u64::from(job.restarts);
             self.mark[i] = holds;
         }
         if (busy_recount - busy).abs() > eps {
             out.push(format!(
                 "{whence}@{t:.3}: busy level {busy} disagrees with job \
                  recount {busy_recount}"
+            ));
+        }
+
+        // ---- lost-work accounting conserved ----
+        let tol = |x: f64| eps * x.abs().max(1.0);
+        if (lost_recount - st.total_lost_iters).abs() > tol(lost_recount) {
+            out.push(format!(
+                "{whence}@{t:.3}: lost-work accounting diverged: per-job \
+                 sum {lost_recount} vs cluster total {}",
+                st.total_lost_iters
+            ));
+        }
+        if (straggler_recount - st.total_straggler_iters).abs()
+            > tol(straggler_recount)
+        {
+            out.push(format!(
+                "{whence}@{t:.3}: straggler accounting diverged: per-job \
+                 sum {straggler_recount} vs cluster total {}",
+                st.total_straggler_iters
+            ));
+        }
+        if restarts_recount != st.revocations {
+            out.push(format!(
+                "{whence}@{t:.3}: restart accounting diverged: per-job \
+                 sum {restarts_recount} vs {} revocations",
+                st.revocations
+            ));
+        }
+        if st.total_lost_iters < self.last_lost_iters - eps {
+            out.push(format!(
+                "{whence}@{t:.3}: total lost work decreased ({} after {})",
+                st.total_lost_iters, self.last_lost_iters
+            ));
+        }
+        if st.total_straggler_iters < self.last_straggler_iters - eps {
+            out.push(format!(
+                "{whence}@{t:.3}: total straggler work decreased \
+                 ({} after {})",
+                st.total_straggler_iters, self.last_straggler_iters
+            ));
+        }
+        if st.revocations < self.last_revocations {
+            out.push(format!(
+                "{whence}@{t:.3}: revocation count went backwards \
+                 ({} after {})",
+                st.revocations, self.last_revocations
             ));
         }
 
@@ -636,6 +995,9 @@ impl StateAudit {
         self.last_now = t;
         self.last_cost_gpu_s = st.cost_gpu_s;
         self.last_busy_gpu_s = st.busy_gpu_s;
+        self.last_lost_iters = st.total_lost_iters;
+        self.last_straggler_iters = st.total_straggler_iters;
+        self.last_revocations = st.revocations;
     }
 }
 
@@ -718,6 +1080,12 @@ impl<P: Policy> Policy for SimOracle<P> {
         self.inner.on_tick(st);
         self.run_audit(st, "tick");
     }
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        // No audit here: on_revoke runs mid-fault (the engine lowers the
+        // ceiling right after), so the state is legitimately
+        // transitional; the post-round audit covers the settled state.
+        self.inner.on_revoke(st, ev);
+    }
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
         self.inner.next_timed_action(st)
     }
@@ -753,6 +1121,12 @@ pub struct SimResult {
     pub rounds_executed: u64,
     /// Rounds proven idle and skipped by tick coalescing.
     pub rounds_coalesced: u64,
+    /// Involuntary revocations (fault-engine preemptions) over the run.
+    pub revocations: u64,
+    /// Iterations lost to restore-from-last-checkpoint over the run.
+    pub lost_iters: f64,
+    /// Extra iterations added by straggler slowdowns over the run.
+    pub straggler_iters: f64,
     /// Wall-clock seconds for the whole simulated experiment.
     pub wall_s: f64,
 }
@@ -965,6 +1339,9 @@ impl Simulator {
             sched_overhead_ms_max: if overhead.n == 0 { 0.0 } else { overhead.max },
             rounds_executed: rounds,
             rounds_coalesced: coalesced,
+            revocations: st.revocations,
+            lost_iters: st.total_lost_iters,
+            straggler_iters: st.total_straggler_iters,
             wall_s: wall0.elapsed().as_secs_f64(),
         }
     }
@@ -1421,6 +1798,177 @@ mod tests {
         // attaching an observer cannot change simulated results
         assert_eq!(res.cost_usd, ref_res.cost_usd);
         assert_eq!(res.job_latencies, ref_res.job_latencies);
+    }
+
+    /// Test policy for the fault-engine primitives: launches arrivals on
+    /// one GPU, revokes (or slows) job 0 at the first round at/after
+    /// t = 5 s (recording the exact round time — the accumulated 50 ms
+    /// grid does not land on 5.0 exactly), and relaunches revoked jobs
+    /// on the following round.
+    struct FaultDriver {
+        /// revoke graceful flag, or None to apply a straggler slowdown.
+        graceful: Option<bool>,
+        acted_at: Option<f64>,
+        requeued: Vec<usize>,
+    }
+    impl FaultDriver {
+        fn revoke(graceful: bool) -> Self {
+            FaultDriver { graceful: Some(graceful), acted_at: None,
+                          requeued: vec![] }
+        }
+        fn straggle() -> Self {
+            FaultDriver { graceful: None, acted_at: None, requeued: vec![] }
+        }
+    }
+    impl Policy for FaultDriver {
+        fn name(&self) -> &str {
+            "faultdriver"
+        }
+        fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+            st.set_checkpoint_model(Some(CheckpointModel {
+                period_s: 2.0,
+                overhead_s: 0.0, // slowdown 1.0: keep the timing math exact
+                restore_s: 3.0,
+            }));
+            st.set_billable(st.billable() + 1.0);
+            st.launch(id, 1, 0.0, 0.0, 1.0);
+        }
+        fn on_job_complete(&mut self, st: &mut ClusterState, _id: usize) {
+            st.set_billable(st.billable() - 1.0);
+        }
+        fn on_tick(&mut self, st: &mut ClusterState) {
+            if self.acted_at.is_none() && st.now() >= 5.0 {
+                self.acted_at = Some(st.now());
+                match self.graceful {
+                    Some(graceful) => {
+                        st.set_revoked(1.0);
+                        st.revoke_job(0, graceful);
+                        st.set_billable(st.billable() - 1.0);
+                        self.requeued.push(0);
+                    }
+                    None => st.slow_job(0, 2.0),
+                }
+            } else if let Some(id) = self.requeued.pop() {
+                // repaired: the GPU returns and the job restores
+                st.set_revoked(0.0);
+                st.set_billable(st.billable() + 1.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn revoked_job_restores_from_checkpoint_and_completes() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::new(FaultDriver::revoke(false));
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+        assert_eq!(res.revocations, 1);
+        let t = p.into_inner().acted_at.expect("never revoked");
+        assert!((5.0..5.2).contains(&t), "{t}");
+        // 2 s checkpoint period: work past the last checkpoint is lost
+        let ckpt_t = (t / 2.0).floor() * 2.0;
+        assert!((res.lost_iters - (t - ckpt_t) / 0.12).abs() < 1e-6,
+                "{} at t={t}", res.lost_iters);
+        // relaunch one round later + 3 s restore + re-run from the
+        // checkpoint: total latency = (t + 0.05) + 3 + (12 - ckpt_t)
+        let (lat, _, init_wait, _) = res.job_latencies[0];
+        assert!((lat - (t + 0.05 + 3.0 + 12.0 - ckpt_t)).abs() < 1e-6,
+                "{lat} at t={t}");
+        assert!((init_wait - 3.0).abs() < 1e-9, "{init_wait}");
+    }
+
+    #[test]
+    fn graceful_revocation_checkpoints_and_loses_no_work() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::new(FaultDriver::revoke(true));
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+        assert_eq!(res.revocations, 1);
+        assert_eq!(res.lost_iters, 0.0);
+        let t = p.into_inner().acted_at.expect("never revoked");
+        // relaunch one round later + 3 s restore + exactly the work that
+        // was left at t: latency = (t + 0.05) + 3 + (12 - t) = 15.05
+        let (lat, _, _, _) = res.job_latencies[0];
+        assert!((lat - 15.05).abs() < 1e-6, "{lat} at t={t}");
+    }
+
+    #[test]
+    fn straggler_slowdown_inflates_remaining_work() {
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::new(FaultDriver::straggle());
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert_eq!(res.n_done, 1);
+        assert_eq!(res.revocations, 0);
+        let t = p.into_inner().acted_at.expect("never slowed");
+        // at t the job has (12 - t)/0.12 iters left; 2× doubles them
+        let remaining = (12.0 - t) / 0.12;
+        assert!((res.straggler_iters - remaining).abs() < 1e-6,
+                "{} at t={t}", res.straggler_iters);
+        let (lat, _, _, _) = res.job_latencies[0];
+        assert!((lat - (24.0 - t)).abs() < 1e-6, "{lat} at t={t}");
+    }
+
+    #[test]
+    fn checkpoint_slowdown_stretches_execution() {
+        struct Slowed;
+        impl Policy for Slowed {
+            fn name(&self) -> &str {
+                "slowed"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_checkpoint_model(Some(CheckpointModel {
+                    period_s: 10.0,
+                    overhead_s: 1.0, // 10 % amortized overhead
+                    restore_s: 0.0,
+                }));
+                st.set_billable(1.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, _st: &mut ClusterState) {}
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let res = sim.run(&mut Slowed, vec![spec(0, 0.0, 100.0)]);
+        let (lat, _, _, _) = res.job_latencies[0];
+        assert!((lat - 12.0 * 1.1).abs() < 1e-6, "{lat}");
+    }
+
+    #[test]
+    fn audit_catches_regrant_of_revoked_capacity() {
+        // Rogue policy: declares 16 of the 32 budget GPUs revoked but
+        // keeps billing 20 — the "revoked GPUs never re-granted before
+        // repair" invariant must fire.
+        struct Regrant;
+        impl Policy for Regrant {
+            fn name(&self) -> &str {
+                "regrant"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_revoked(16.0);
+                st.set_billable(20.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+            fn on_job_complete(&mut self, _st: &mut ClusterState, _id: usize) {}
+            fn on_tick(&mut self, _st: &mut ClusterState) {}
+        }
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::collecting(Regrant);
+        sim.run(&mut p, vec![spec(0, 0.0, 100.0)]);
+        assert!(
+            p.violations().iter().any(|v| v.contains("re-granted")),
+            "expected a revoked-capacity violation, got {:?}",
+            p.violations()
+        );
+    }
+
+    #[test]
+    fn wake_earliest_combinator() {
+        assert_eq!(Wake::earliest(Wake::Dense, Wake::Idle), Wake::Dense);
+        assert_eq!(Wake::earliest(Wake::At(3.0), Wake::Dense), Wake::Dense);
+        assert_eq!(Wake::earliest(Wake::Idle, Wake::At(2.0)), Wake::At(2.0));
+        assert_eq!(Wake::earliest(Wake::At(5.0), Wake::At(2.0)), Wake::At(2.0));
+        assert_eq!(Wake::earliest(Wake::Idle, Wake::Idle), Wake::Idle);
     }
 
     #[test]

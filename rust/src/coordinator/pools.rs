@@ -90,6 +90,24 @@ impl WarmPool {
         self.total -= n;
         n
     }
+
+    /// Remove `n` busy GPUs from the pool without freeing them: the
+    /// hardware failed or was reclaimed (fault engine), so it leaves the
+    /// pool entirely instead of returning to the idle list.
+    pub fn lose_busy(&mut self, n: usize) {
+        debug_assert!(self.busy() >= n, "losing more GPUs than busy");
+        self.total -= n;
+    }
+
+    /// Drop up to `n` idle GPUs (longest-idle first — the fault engine
+    /// sheds stale capacity before warm capacity). Returns how many were
+    /// actually shed.
+    pub fn lose_idle(&mut self, n: usize) -> usize {
+        let k = n.min(self.free_since.len());
+        self.free_since.drain(..k);
+        self.total -= k;
+        k
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +193,29 @@ mod tests {
         assert_eq!(p.drain_idle(), 2);
         assert_eq!(p.total(), 1);
         assert_eq!(p.busy(), 1);
+    }
+
+    #[test]
+    fn lose_busy_removes_failed_hardware() {
+        let mut p = WarmPool::new();
+        p.add_busy_from_cold(4);
+        p.lose_busy(3);
+        assert_eq!(p.total(), 1);
+        assert_eq!(p.busy(), 1);
+        assert_eq!(p.free(), 0);
+    }
+
+    #[test]
+    fn lose_idle_sheds_oldest_first_and_caps_at_free() {
+        let mut p = WarmPool::new();
+        p.add_idle_from_cold(1, 0.0);
+        p.add_idle_from_cold(1, 10.0);
+        p.add_idle_from_cold(1, 20.0);
+        assert_eq!(p.lose_idle(2), 2); // sheds the t=0 and t=10 GPUs
+        assert_eq!(p.earliest_idle(), Some(20.0));
+        assert_eq!(p.total(), 1);
+        assert_eq!(p.lose_idle(5), 1); // capped at what is free
+        assert_eq!(p.total(), 0);
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! expiry) so the simulator can coalesce idle rounds — see
 //! [`crate::cluster::Wake`].
 
-use crate::cluster::{ClusterState, JobStatus, Policy, Wake};
+use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
 use crate::coordinator::cold_alloc::{allocate_from_cold_pool_into, ColdPlan};
 use crate::coordinator::pools::WarmPool;
 use crate::coordinator::warm_alloc::{allocate_from_warm_pool_into, WarmAllocation};
@@ -222,12 +222,12 @@ impl PromptTuner {
                 JobStatus::Initializing => {
                     job.init_until
                         + job.iters_remaining
-                            * st.perf.iter_time(llm, job.gpus)
+                            * st.eff_iter_time(llm, job.gpus)
                 }
                 JobStatus::Running => {
                     job.last_progress_t
                         + job.iters_remaining
-                            * st.perf.iter_time(llm, job.gpus)
+                            * st.eff_iter_time(llm, job.gpus)
                 }
                 _ => continue,
             };
@@ -321,6 +321,38 @@ impl Policy for PromptTuner {
         self.update_billable(st);
     }
 
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        let now = st.now();
+        for v in &ev.victims {
+            let li = st.jobs[v.job_id].spec.llm.index();
+            // The failed GPUs leave the warm pool entirely (the hardware
+            // is gone); the victim's surviving GPUs return to it idle.
+            self.pools[li].lose_busy(v.failed);
+            self.warm_total -= v.failed;
+            self.pools[li].release(v.held - v.failed, now);
+            // Requeue the preempted job (deadline-sorted, like arrival);
+            // its routing plan from arrival still stands.
+            let dl = st.jobs[v.job_id].spec.deadline();
+            let st_ref: &ClusterState = st;
+            let pos = self.pending[li]
+                .partition_point(|&j| st_ref.jobs[j].spec.deadline() <= dl);
+            self.pending[li].insert(pos, v.job_id);
+        }
+        // Failed GPUs beyond the victims' allocations hit idle warm
+        // capacity: shed it pool by pool.
+        let mut need = ev.idle_gpus_lost;
+        for pool in self.pools.iter_mut() {
+            if need == 0 {
+                break;
+            }
+            let shed = pool.lose_idle(need);
+            self.warm_total -= shed;
+            need -= shed;
+        }
+        self.needs_round = true;
+        self.update_billable(st);
+    }
+
     fn on_tick(&mut self, st: &mut ClusterState) {
         let now = st.now();
         self.needs_round = false;
@@ -406,16 +438,30 @@ impl Policy for PromptTuner {
                     let est_bank_q = self.cfg.est_bank_quality;
                     let st_ref: &ClusterState = st;
                     let exec_dur = |j: usize, g: usize| {
+                        let job = &st_ref.jobs[j];
+                        if job.needs_restore {
+                            // Revoked job awaiting restore: it resumes
+                            // its preserved remaining iterations after
+                            // the restore overhead, with no second bank
+                            // lookup (mirrors `launch`/
+                            // `estimate_completion`).
+                            let restore = st_ref
+                                .checkpoint_model()
+                                .map_or(0.0, |m| m.restore_s);
+                            return restore
+                                + job.iters_remaining
+                                    * st_ref.eff_iter_time(llm, g);
+                        }
                         let plan = plans[j].expect("plan must exist");
-                        let user = st_ref.jobs[j].spec.user_prompt_quality;
+                        let user = job.spec.user_prompt_quality;
                         let q = if plan.use_bank {
                             user.max(est_bank_q)
                         } else {
                             user
                         };
                         plan.bank_latency_if()
-                            + st_ref.jobs[j].spec.iters_at(q)
-                                * st_ref.perf.iter_time(llm, g)
+                            + job.spec.iters_at(q)
+                                * st_ref.eff_iter_time(llm, g)
                     };
                     allocate_from_cold_pool_into(
                         &ids,

@@ -1,0 +1,631 @@
+//! Deterministic fault & preemption engine.
+//!
+//! The simulator's elasticity story was previously all *voluntary*: GPUs
+//! only ever left a policy's footprint when the policy chose to release
+//! them. This module adds involuntary churn — the regime where
+//! ElasticFlow-style scaling plans break and crash-aware SLO budgeting
+//! earns its keep:
+//!
+//! * a [`FaultPlan`] is a seeded, time-sorted schedule of
+//!   [`FaultKind::GpuFailure`] (abrupt, loses work back to the last
+//!   periodic checkpoint), [`FaultKind::SpotReclaim`] (a notice window
+//!   first — the ceiling drops immediately, jobs checkpoint on the way
+//!   out and lose nothing), and [`FaultKind::Straggler`] slowdowns
+//!   (the running job with the most remaining work stretches);
+//! * the [`FaultInjector`] policy wrapper drives the plan against any
+//!   [`Policy`]: it preempts victims through
+//!   [`ClusterState::revoke_job`], notifies the policy through the
+//!   [`Policy::on_revoke`] hook, lowers the scheduling ceiling through
+//!   `Policy::set_capacity`, and returns capacity on repair;
+//! * the checkpoint/restore cost model ([`CheckpointModel`]) is charged
+//!   through the existing cost integration: periodic checkpoints slow
+//!   effective iteration time, lost work re-runs, and restores pay a
+//!   fixed overhead at relaunch — no silent job restarts.
+//!
+//! Everything is deterministic in the plan seed and declared through
+//! [`Wake::At`], so faulted runs stay bit-identical under dense and
+//! coalesced ticking (enforced by
+//! `prop_tick_coalescing_matches_dense_reference`) and oracle-clean
+//! (`StateAudit` audits that revoked GPUs are never re-granted before
+//! repair and that lost-work accounting is conserved).
+
+use crate::cluster::{CheckpointModel, ClusterState, JobStatus, Policy,
+                     Revoked, RevokeEvent, Wake};
+use crate::util::rng::Rng;
+use crate::workload::Llm;
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// `gpus` fail abruptly (no notice): victims lose the work done
+    /// since their last periodic checkpoint. Repaired `repair_s` later
+    /// (`f64::INFINITY` = never).
+    GpuFailure { gpus: usize, repair_s: f64 },
+    /// Spot reclamation: the notice lands now (the scheduling ceiling
+    /// drops immediately so nothing new is provisioned onto doomed
+    /// capacity), the GPUs are revoked `notice_s` later — gracefully, so
+    /// victims checkpoint and lose no work — and the capacity returns
+    /// `repair_s` after the revocation (the reclaim wave ends).
+    SpotReclaim { gpus: usize, notice_s: f64, repair_s: f64 },
+    /// Slow the running job with the most remaining work by `factor`
+    /// (≥ 1): its remaining iterations stretch by that factor.
+    Straggler { factor: f64 },
+}
+
+/// A fault at an absolute simulated time. The injector applies it at the
+/// first scheduling round at or after `at` (declared via [`Wake::At`], so
+/// the round is never coalesced away).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// A time-sorted schedule of faults, bit-deterministic in the seed that
+/// built it.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan from events (sorted by time; ties keep input order).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        FaultPlan { events }
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Spot-market reclaim waves: `waves` reclamations of
+    /// `gpus_per_wave` GPUs spread across the window (seeded ±60 s
+    /// jitter), each with a `notice_s` warning and capacity returning
+    /// `repair_s` after the revocation, plus one mid-window straggler
+    /// (reclaim churn leaves degraded neighbors behind).
+    pub fn spot_market(seed: u64, window_s: f64, waves: usize,
+                       gpus_per_wave: usize, notice_s: f64,
+                       repair_s: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0x5EED_5107_FA17_0001);
+        let mut events = Vec::with_capacity(waves + 1);
+        for i in 0..waves {
+            let base = window_s * (i as f64 + 1.0) / (waves as f64 + 1.0);
+            let at = (base + rng.range_f64(-60.0, 60.0)).max(0.0);
+            events.push(FaultEvent {
+                at,
+                kind: FaultKind::SpotReclaim {
+                    gpus: gpus_per_wave,
+                    notice_s,
+                    repair_s,
+                },
+            });
+        }
+        events.push(FaultEvent {
+            at: (window_s * 0.5 + rng.range_f64(0.0, 30.0)).max(0.0),
+            kind: FaultKind::Straggler { factor: 1.5 },
+        });
+        FaultPlan::new(events)
+    }
+
+    /// Availability-zone outage: one correlated mass failure of `gpus`
+    /// GPUs at ~35 % of the window (seeded ±30 s jitter, no notice),
+    /// repaired after `repair_s`, with `stragglers` slowdown events in
+    /// the recovery wake (nodes come back degraded).
+    pub fn az_outage(seed: u64, window_s: f64, gpus: usize, repair_s: f64,
+                     stragglers: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0x5EED_A207_FA17_0002);
+        let at = (window_s * 0.35 + rng.range_f64(-30.0, 30.0)).max(0.0);
+        let mut events = vec![FaultEvent {
+            at,
+            kind: FaultKind::GpuFailure { gpus, repair_s },
+        }];
+        for k in 0..stragglers {
+            events.push(FaultEvent {
+                at: at + repair_s + 30.0 + 45.0 * k as f64
+                    + rng.range_f64(0.0, 15.0),
+                kind: FaultKind::Straggler { factor: 1.5 },
+            });
+        }
+        FaultPlan::new(events)
+    }
+}
+
+/// Drives a [`FaultPlan`] against any wrapped [`Policy`]. Faults are
+/// applied at the first executed round at/after their scheduled time
+/// (times are declared through [`Wake::At`], so coalescing never skips
+/// them); repairs and reclaim-notice expiries work the same way. The
+/// wrapper is deterministic — no RNG, no wall clock — so faulted runs
+/// stay bit-reproducible per (trace seed, plan).
+pub struct FaultInjector<P: Policy> {
+    inner: P,
+    plan: FaultPlan,
+    ckpt: CheckpointModel,
+    /// Cursor into `plan.events`.
+    next_event: usize,
+    /// Reclaims inside their notice window: (revoke_at, gpus, repair_s).
+    pending_reclaims: Vec<(f64, usize, f64)>,
+    /// Scheduled repairs: (repair_at, gpus).
+    repairs: Vec<(f64, usize)>,
+    /// GPUs currently revoked (failed / reclaimed, not yet repaired).
+    revoked_out: usize,
+    /// The wrapped policy's capacity at start (the fleet the plan
+    /// degrades and repairs back to).
+    base_capacity: usize,
+    started: bool,
+}
+
+impl<P: Policy> FaultInjector<P> {
+    pub fn new(inner: P, plan: FaultPlan, ckpt: CheckpointModel) -> Self {
+        FaultInjector {
+            inner,
+            plan,
+            ckpt,
+            next_event: 0,
+            pending_reclaims: vec![],
+            repairs: vec![],
+            revoked_out: 0,
+            base_capacity: 0,
+            started: false,
+        }
+    }
+
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+
+    /// GPUs currently revoked and awaiting repair.
+    pub fn outstanding_revoked(&self) -> usize {
+        self.revoked_out
+    }
+
+    fn ensure_started(&mut self, st: &mut ClusterState) {
+        if !self.started {
+            self.started = true;
+            self.base_capacity = self
+                .inner
+                .capacity()
+                .unwrap_or(st.cfg.max_gpus)
+                .min(st.cfg.max_gpus);
+            st.set_checkpoint_model(Some(self.ckpt.clone()));
+        }
+    }
+
+    /// The ceiling the wrapped policy may schedule within: the base
+    /// fleet minus revoked GPUs minus capacity already under a reclaim
+    /// notice (doomed — nothing new should be provisioned onto it).
+    fn ceiling(&self) -> usize {
+        let noticed: usize =
+            self.pending_reclaims.iter().map(|&(_, g, _)| g).sum();
+        self.base_capacity
+            .saturating_sub(self.revoked_out + noticed)
+    }
+
+    /// Apply every timeline item due at/before now: repairs first (the
+    /// fleet heals before it degrades further), then reclaim-notice
+    /// expiries, then plan events, in deterministic order.
+    fn apply_due(&mut self, st: &mut ClusterState) {
+        let now = st.now();
+        let mut repaired = 0usize;
+        self.repairs.retain(|&(t, g)| {
+            if t <= now {
+                repaired += g;
+                false
+            } else {
+                true
+            }
+        });
+        if repaired > 0 {
+            self.revoked_out -= repaired;
+            st.set_revoked(self.revoked_out as f64);
+            self.inner.set_capacity(st, self.ceiling());
+        }
+        let mut due: Vec<(usize, f64)> = vec![];
+        self.pending_reclaims.retain(|&(t, g, r)| {
+            if t <= now {
+                due.push((g, r));
+                false
+            } else {
+                true
+            }
+        });
+        for (gpus, repair_s) in due {
+            self.revoke(st, gpus, true, repair_s);
+        }
+        while self.next_event < self.plan.events.len()
+            && self.plan.events[self.next_event].at <= now
+        {
+            let ev = self.plan.events[self.next_event];
+            self.next_event += 1;
+            match ev.kind {
+                FaultKind::GpuFailure { gpus, repair_s } => {
+                    self.revoke(st, gpus, false, repair_s);
+                }
+                FaultKind::SpotReclaim { gpus, notice_s, repair_s } => {
+                    if notice_s <= 0.0 {
+                        self.revoke(st, gpus, true, repair_s);
+                    } else {
+                        self.pending_reclaims
+                            .push((now + notice_s, gpus, repair_s));
+                        // the doomed capacity is off-limits immediately
+                        self.inner.set_capacity(st, self.ceiling());
+                    }
+                }
+                FaultKind::Straggler { factor } => self.straggle(st, factor),
+            }
+        }
+    }
+
+    /// Whether the wrapped policy's capacity exceeds the degraded
+    /// ceiling while faults are outstanding — the condition both the
+    /// post-callback re-clamp and the coalescing guard key on (one
+    /// definition, so the two can never silently diverge).
+    fn governor_over_ceiling(&self) -> bool {
+        self.started
+            && (self.revoked_out > 0 || !self.pending_reclaims.is_empty())
+            && self.inner.capacity().is_some_and(|c| c > self.ceiling())
+    }
+
+    /// Re-clamp the wrapped policy's capacity to the degraded ceiling.
+    /// Called after every forwarded callback while faults are
+    /// outstanding, so a wrapped governor (`slo::Governed`) that surged
+    /// inside the callback can never leave an audited post-callback
+    /// state with `billable > budget - revoked`.
+    fn clamp_to_ceiling(&mut self, st: &mut ClusterState) {
+        if self.governor_over_ceiling() {
+            self.inner.set_capacity(st, self.ceiling());
+        }
+    }
+
+    /// Revoke `gpus` GPUs now: preempt victims (ascending job id) until
+    /// their allocations cover the failed count, notify the policy once
+    /// with the full event, and lower the scheduling ceiling.
+    fn revoke(&mut self, st: &mut ClusterState, gpus: usize, graceful: bool,
+              repair_s: f64) {
+        let headroom = self.base_capacity.saturating_sub(self.revoked_out);
+        let n = gpus.min(headroom);
+        if n == 0 {
+            return;
+        }
+        self.revoked_out += n;
+        st.set_revoked(self.revoked_out as f64);
+        if repair_s.is_finite() {
+            self.repairs.push((st.now() + repair_s, n));
+        }
+        let mut ids: Vec<usize> = vec![];
+        for llm in Llm::ALL {
+            ids.extend_from_slice(st.active_jobs(llm));
+        }
+        ids.sort_unstable();
+        let mut victims = vec![];
+        let mut need = n;
+        for id in ids {
+            if need == 0 {
+                break;
+            }
+            let held = st.jobs[id].gpus;
+            let failed = held.min(need);
+            st.revoke_job(id, graceful);
+            victims.push(Revoked { job_id: id, held, failed });
+            need -= failed;
+        }
+        let ev = RevokeEvent { victims, idle_gpus_lost: need, graceful };
+        self.inner.on_revoke(st, &ev);
+        self.inner.set_capacity(st, self.ceiling());
+    }
+
+    /// Straggler victim: the effectively-running job (Running, or past
+    /// its init point) with the most remaining work, ties to the lowest
+    /// id — deterministic given the cluster state.
+    fn straggle(&mut self, st: &mut ClusterState, factor: f64) {
+        let now = st.now();
+        let mut best: Option<(f64, usize)> = None;
+        for llm in Llm::ALL {
+            for &id in st.active_jobs(llm) {
+                let job = &st.jobs[id];
+                let running = job.status == JobStatus::Running
+                    || (job.status == JobStatus::Initializing
+                        && job.init_until <= now);
+                if !running {
+                    continue;
+                }
+                // `iters_remaining` is advanced lazily (launch/realloc/
+                // revoke), so subtract the progress made since
+                // `last_progress_t` to rank by *actual* remaining work.
+                let it = st.eff_iter_time(llm, job.gpus.max(1));
+                let done = (now - job.last_progress_t).max(0.0) / it;
+                let rem = (job.iters_remaining - done).max(0.0) * it;
+                let better = match best {
+                    None => true,
+                    Some((b_rem, b_id)) => {
+                        rem > b_rem || (rem == b_rem && id < b_id)
+                    }
+                };
+                if better {
+                    best = Some((rem, id));
+                }
+            }
+        }
+        if let Some((_, id)) = best {
+            st.slow_job(id, factor);
+        }
+    }
+}
+
+impl<P: Policy> Policy for FaultInjector<P> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn tick_interval(&self) -> f64 {
+        self.inner.tick_interval()
+    }
+
+    fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.ensure_started(st);
+        self.inner.on_arrival(st, job_id);
+        self.clamp_to_ceiling(st);
+    }
+
+    fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.inner.on_job_complete(st, job_id);
+        self.clamp_to_ceiling(st);
+    }
+
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.ensure_started(st);
+        self.apply_due(st);
+        self.inner.on_tick(st);
+        self.clamp_to_ceiling(st);
+    }
+
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        self.inner.on_revoke(st, ev);
+    }
+
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        // Belt-and-braces with `clamp_to_ceiling`: if a wrapped governor
+        // somehow left capacity above the degraded ceiling, the next
+        // round must execute so the re-clamp cannot land in a round
+        // dense ticking runs but coalescing skips.
+        if self.governor_over_ceiling() {
+            return Wake::Dense;
+        }
+        let wake = self.inner.next_timed_action(st);
+        let mut next = f64::INFINITY;
+        if let Some(ev) = self.plan.events.get(self.next_event) {
+            next = next.min(ev.at);
+        }
+        for &(t, _, _) in &self.pending_reclaims {
+            next = next.min(t);
+        }
+        for &(t, _) in &self.repairs {
+            next = next.min(t);
+        }
+        if next.is_finite() {
+            Wake::earliest(wake, Wake::At(next))
+        } else {
+            wake
+        }
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        self.inner.capacity()
+    }
+
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        // External capacity requests may not exceed the degraded fleet.
+        let clamped = if self.started { gpus.min(self.ceiling()) } else { gpus };
+        self.inner.set_capacity(st, clamped);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless,
+                           InflessConfig};
+    use crate::cluster::{SimConfig, SimOracle, SimResult, Simulator};
+    use crate::coordinator::{PromptTuner, PromptTunerConfig};
+    use crate::trace::{Load, TraceConfig, TraceGenerator};
+    use crate::workload::{JobSpec, PerfModel};
+
+    fn spec(id: usize, submit: f64, iters: f64) -> JobSpec {
+        JobSpec {
+            id,
+            llm: Llm::Gpt2B,
+            task_id: 0,
+            submit_s: submit,
+            duration_s: iters * 0.12,
+            traced_gpus: 1,
+            base_iters: iters,
+            user_prompt_quality: 1.0,
+            // Tight enough that DelaySchedulable cannot serialize the
+            // batch onto one GPU (each job launches on its own GPU),
+            // loose enough that a cold start + bank lookup still fits.
+            slo_s: 100.0,
+        }
+    }
+
+    fn pt(gpus: usize, seed: u64) -> PromptTuner {
+        PromptTuner::new(PromptTunerConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    fn medium_trace(seed: u64) -> Vec<JobSpec> {
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed, ..Default::default() },
+            PerfModel::default(),
+        );
+        gen.generate_main(Load::Medium)
+    }
+
+    #[test]
+    fn plan_builders_are_deterministic_and_sorted() {
+        for plan in [
+            FaultPlan::spot_market(7, 1800.0, 3, 8, 30.0, 180.0),
+            FaultPlan::az_outage(7, 1200.0, 16, 300.0, 2),
+        ] {
+            assert!(!plan.is_empty());
+            for w in plan.events().windows(2) {
+                assert!(w[0].at <= w[1].at, "{:?}", plan.events());
+            }
+            for ev in plan.events() {
+                assert!(ev.at >= 0.0);
+            }
+        }
+        let a = FaultPlan::spot_market(9, 1800.0, 3, 8, 30.0, 180.0);
+        let b = FaultPlan::spot_market(9, 1800.0, 3, 8, 30.0, 180.0);
+        assert_eq!(a.events(), b.events());
+        let c = FaultPlan::spot_market(10, 1800.0, 3, 8, 30.0, 180.0);
+        assert_ne!(a.events(), c.events());
+    }
+
+    /// Eight 60 s single-GPU jobs on an 8-GPU PromptTuner cluster (all
+    /// running in parallel by t = 30 s, past the ~23 s cold start + bank
+    /// lookup); the plan disturbs half the fleet.
+    fn run_small(plan: FaultPlan) -> (SimResult, Vec<String>, usize) {
+        let jobs: Vec<JobSpec> = (0..8).map(|i| spec(i, 0.0, 500.0)).collect();
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 8, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::collecting(FaultInjector::new(
+            pt(8, 3),
+            plan,
+            CheckpointModel::default(),
+        ));
+        let res = sim.run(&mut policy, jobs);
+        let violations = policy.violations().to_vec();
+        let outstanding = policy.into_inner().outstanding_revoked();
+        (res, violations, outstanding)
+    }
+
+    #[test]
+    fn spot_reclaim_preempts_gracefully_and_repairs() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at: 30.0,
+            kind: FaultKind::SpotReclaim {
+                gpus: 4,
+                notice_s: 5.0,
+                repair_s: 60.0,
+            },
+        }]);
+        let (res, violations, outstanding) = run_small(plan);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, 8);
+        assert_eq!(res.revocations, 4, "one victim per reclaimed GPU");
+        // graceful: victims checkpointed inside the notice window
+        assert_eq!(res.lost_iters, 0.0);
+        assert_eq!(outstanding, 0, "capacity repaired before the end");
+    }
+
+    #[test]
+    fn gpu_failure_loses_work_back_to_the_checkpoint() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at: 30.0,
+            kind: FaultKind::GpuFailure { gpus: 4, repair_s: 60.0 },
+        }]);
+        let (res, violations, outstanding) = run_small(plan);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, 8);
+        assert_eq!(res.revocations, 4);
+        assert!(res.lost_iters > 0.0, "abrupt failure must lose work");
+        assert_eq!(outstanding, 0);
+    }
+
+    #[test]
+    fn straggler_stretches_the_longest_running_job() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at: 30.0,
+            kind: FaultKind::Straggler { factor: 2.0 },
+        }]);
+        let (res, violations, _) = run_small(plan);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, 8);
+        assert_eq!(res.revocations, 0);
+        assert!(res.straggler_iters > 0.0, "no straggler realized");
+    }
+
+    #[test]
+    fn unrepaired_failure_keeps_capacity_revoked() {
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at: 30.0,
+            kind: FaultKind::GpuFailure { gpus: 4, repair_s: f64::INFINITY },
+        }]);
+        let (res, violations, outstanding) = run_small(plan);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, 8, "jobs still finish on the degraded fleet");
+        assert_eq!(outstanding, 4);
+    }
+
+    #[test]
+    fn faulted_runs_are_bit_deterministic() {
+        let run = || {
+            let sim = Simulator::new(
+                SimConfig { max_gpus: 32, ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut policy = FaultInjector::new(
+                pt(32, 11),
+                FaultPlan::az_outage(11, 1200.0, 16, 300.0, 2),
+                CheckpointModel::default(),
+            );
+            sim.run(&mut policy, medium_trace(11))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.cost_usd, b.cost_usd);
+        assert_eq!(a.n_violations, b.n_violations);
+        assert_eq!(a.revocations, b.revocations);
+        assert_eq!(a.job_latencies, b.job_latencies);
+    }
+
+    #[test]
+    fn all_three_systems_recover_from_an_az_outage_under_oracle() {
+        let jobs = medium_trace(13);
+        let n = jobs.len();
+        let plan = || FaultPlan::az_outage(13, 1200.0, 16, 300.0, 2);
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(pt(32, 13)),
+            Box::new(Infless::new(InflessConfig {
+                max_gpus: 32,
+                seed: 13,
+                ..Default::default()
+            })),
+            Box::new(ElasticFlow::new(ElasticFlowConfig {
+                cluster_size: 32,
+                seed: 13,
+                ..Default::default()
+            })),
+        ];
+        for inner in policies {
+            let name = inner.name().to_string();
+            let sim = Simulator::new(
+                SimConfig { max_gpus: 32, ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut policy = SimOracle::collecting(FaultInjector::new(
+                inner,
+                plan(),
+                CheckpointModel::default(),
+            ));
+            let res = sim.run(&mut policy, jobs.clone());
+            assert!(
+                policy.violations().is_empty(),
+                "{name}: {:?}",
+                policy.violations().first()
+            );
+            assert_eq!(res.n_done, n, "{name} stranded revoked jobs");
+            assert!(res.revocations > 0,
+                    "{name}: the outage preempted nothing");
+        }
+    }
+}

@@ -20,6 +20,10 @@
 //!   the request path.
 //! - **[`slo`]** — the online SLO telemetry & error-budget control plane
 //!   (SLI windows, burn rates, admission control, capacity governor).
+//! - **[`fault`]** — the deterministic fault & preemption engine
+//!   (seeded GPU-failure / spot-reclaim / straggler plans, the
+//!   checkpoint/restore cost model, and the `FaultInjector` policy
+//!   wrapper driving involuntary churn through `Policy::on_revoke`).
 
 // Style-lint policy for CI's `cargo clippy -- -D warnings` gate: the
 // numeric simulation code deliberately keeps a few patterns clippy's
@@ -37,6 +41,7 @@ pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod metrics;
 pub mod promptbank;
 pub mod runtime;

@@ -136,6 +136,9 @@ mod tests {
             sched_overhead_ms_max: 2.0,
             rounds_executed: 0,
             rounds_coalesced: 0,
+            revocations: 0,
+            lost_iters: 0.0,
+            straggler_iters: 0.0,
             wall_s: 0.0,
         }
     }

@@ -12,7 +12,17 @@
 //! * **multi-tenant** — several tenants with different SLO-emergence
 //!   tiers sharing one cluster;
 //! * **replay** — a trace previously serialized with [`replay::save`]
-//!   (binary, `util::binio`, exact f64 round-trip).
+//!   (binary, `util::binio`, exact f64 round-trip);
+//! * **spot-market** — the paper's spiky arrivals on a cluster losing
+//!   capacity to seeded spot-reclaim waves (notice window, graceful
+//!   checkpoints) — see [`Scenario::fault_plan`];
+//! * **az-outage** — one correlated mass GPU failure mid-window (lost
+//!   work back to the last checkpoint) with straggler slowdowns in the
+//!   recovery wake.
+//!
+//! The fault families pair a workload with a [`FaultPlan`]
+//! ([`Scenario::fault_plan`]); `bench::make_policy` wraps the policy in
+//! the `fault::FaultInjector` automatically for such cells.
 //!
 //! Every family is produced through the existing
 //! [`TraceGenerator`]/[`JobSpec`] pipeline — same per-job sampling, same
@@ -27,6 +37,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::fault::FaultPlan;
 use crate::trace::{DurationDist, TraceConfig, TraceGenerator};
 use crate::util::rng::Rng;
 use crate::workload::{JobSpec, Llm, PerfModel};
@@ -52,6 +63,16 @@ pub enum Scenario {
     MultiTenant { tenants: usize, jobs_per_tenant: usize },
     /// Replay a binary trace file written by [`replay::save`].
     Replay { path: PathBuf },
+    /// Spot-instance market: the paper's spiky arrivals while `waves`
+    /// reclaim waves each revoke `reclaim_frac` of the cluster with a
+    /// 30 s notice (graceful checkpoints, capacity returns ~3 min
+    /// later). The fault schedule comes from [`Scenario::fault_plan`].
+    SpotMarket { waves: usize, reclaim_frac: f64, jobs_per_llm: usize },
+    /// Availability-zone outage: one correlated mass failure of
+    /// `outage_frac` of the cluster mid-window (no notice, work since
+    /// the last checkpoint lost), repaired after `repair_s`, with
+    /// straggler slowdowns in the recovery wake.
+    AzOutage { outage_frac: f64, repair_s: f64, jobs_per_llm: usize },
 }
 
 impl Scenario {
@@ -63,6 +84,10 @@ impl Scenario {
             Scenario::FlashCrowd { storms: 3, intensity: 25.0, jobs_per_llm: 70 },
             Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 60 },
             Scenario::MultiTenant { tenants: 4, jobs_per_tenant: 45 },
+            Scenario::SpotMarket { waves: 3, reclaim_frac: 0.25,
+                                   jobs_per_llm: 60 },
+            Scenario::AzOutage { outage_frac: 0.5, repair_s: 300.0,
+                                 jobs_per_llm: 60 },
         ]
     }
 
@@ -73,6 +98,8 @@ impl Scenario {
             Scenario::HeavyTail { .. } => "heavy-tail",
             Scenario::MultiTenant { .. } => "multi-tenant",
             Scenario::Replay { .. } => "replay",
+            Scenario::SpotMarket { .. } => "spot-market",
+            Scenario::AzOutage { .. } => "az-outage",
         }
     }
 
@@ -87,10 +114,12 @@ impl Scenario {
     pub fn window_s(&self) -> Option<f64> {
         match self {
             Scenario::Diurnal { hours, .. } => Some(hours * 3600.0),
-            Scenario::FlashCrowd { .. } => Some(1800.0),
-            Scenario::HeavyTail { .. } | Scenario::MultiTenant { .. } => {
-                Some(1200.0)
+            Scenario::FlashCrowd { .. } | Scenario::SpotMarket { .. } => {
+                Some(1800.0)
             }
+            Scenario::HeavyTail { .. }
+            | Scenario::MultiTenant { .. }
+            | Scenario::AzOutage { .. } => Some(1200.0),
             Scenario::Replay { .. } => None,
         }
     }
@@ -113,13 +142,48 @@ impl Scenario {
         match self {
             Scenario::Diurnal { jobs_per_llm, .. }
             | Scenario::FlashCrowd { jobs_per_llm, .. }
-            | Scenario::HeavyTail { jobs_per_llm, .. } => {
+            | Scenario::HeavyTail { jobs_per_llm, .. }
+            | Scenario::SpotMarket { jobs_per_llm, .. }
+            | Scenario::AzOutage { jobs_per_llm, .. } => {
                 Some(jobs_per_llm * Llm::MAIN.len())
             }
             Scenario::MultiTenant { tenants, jobs_per_tenant } => {
                 Some(tenants * jobs_per_tenant)
             }
             Scenario::Replay { .. } => None,
+        }
+    }
+
+    /// The family's involuntary-churn schedule, sized for a cluster of
+    /// `cluster_gpus`, bit-deterministic in `seed` (None for the
+    /// fault-free families). `bench::make_policy` wraps cells whose
+    /// scenario returns a plan in the `fault::FaultInjector`.
+    pub fn fault_plan(&self, seed: u64, cluster_gpus: usize) -> Option<FaultPlan> {
+        let frac_gpus = |frac: f64| -> usize {
+            ((cluster_gpus as f64 * frac).round() as usize)
+                .clamp(1, cluster_gpus.max(1))
+        };
+        match self {
+            Scenario::SpotMarket { waves, reclaim_frac, .. } => {
+                Some(FaultPlan::spot_market(
+                    seed,
+                    self.window_s().unwrap(),
+                    *waves,
+                    frac_gpus(*reclaim_frac),
+                    30.0,
+                    180.0,
+                ))
+            }
+            Scenario::AzOutage { outage_frac, repair_s, .. } => {
+                Some(FaultPlan::az_outage(
+                    seed,
+                    self.window_s().unwrap(),
+                    frac_gpus(*outage_frac),
+                    *repair_s,
+                    2,
+                ))
+            }
+            _ => None,
         }
     }
 
@@ -219,6 +283,21 @@ impl Scenario {
                 Ok(jobs)
             }
             Scenario::Replay { path } => replay::load(path),
+            Scenario::SpotMarket { jobs_per_llm, .. }
+            | Scenario::AzOutage { jobs_per_llm, .. } => {
+                // The workload itself is the paper's spiky arrival shape;
+                // the churn comes from the family's fault plan
+                // (`Scenario::fault_plan`), applied by the bench harness.
+                let window_s = self.window_s().unwrap();
+                let mut gen =
+                    TraceGenerator::new(base_cfg(window_s), PerfModel::default());
+                let mut jobs = vec![];
+                for llm in Llm::MAIN {
+                    jobs.extend(gen.generate_for(llm, *jobs_per_llm));
+                }
+                TraceGenerator::finalize(&mut jobs);
+                Ok(jobs)
+            }
         }
     }
 }
@@ -244,16 +323,39 @@ mod tests {
     #[test]
     fn catalogue_names_are_unique_and_resolvable() {
         let cat = Scenario::catalogue();
-        assert_eq!(cat.len(), 4);
+        assert_eq!(cat.len(), 6);
         let mut names: Vec<&str> = cat.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 4);
+        assert_eq!(names.len(), 6);
         for s in &cat {
             assert!(Scenario::from_name(s.name()).is_some(), "{}", s.name());
         }
         assert!(Scenario::from_name("replay").is_none());
         assert!(Scenario::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn fault_plans_exist_exactly_for_fault_families() {
+        for sc in Scenario::catalogue() {
+            let faulted = matches!(
+                sc,
+                Scenario::SpotMarket { .. } | Scenario::AzOutage { .. }
+            );
+            let plan = sc.fault_plan(3, 32);
+            assert_eq!(plan.is_some(), faulted, "{}", sc.name());
+            if let Some(plan) = plan {
+                assert!(!plan.is_empty(), "{}", sc.name());
+                // deterministic in the seed and inside the window
+                let again = sc.fault_plan(3, 32).unwrap();
+                assert_eq!(plan.events(), again.events(), "{}", sc.name());
+                let window = sc.window_s().unwrap();
+                for ev in plan.events() {
+                    assert!((0.0..window * 1.5).contains(&ev.at),
+                            "{}: fault at {}", sc.name(), ev.at);
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! invariant the oracle audits (busy ≤ billable ≤ budget) is preserved by
 //! construction.
 
-use crate::cluster::{ClusterState, Policy, Wake};
+use crate::cluster::{ClusterState, Policy, RevokeEvent, Wake};
 use crate::slo::monitor::SloMonitor;
 use crate::slo::SloConfig;
 
@@ -317,6 +317,14 @@ impl<P: Policy> Policy for Governed<P> {
         let burned = self.doomed.get(job_id).copied().unwrap_or(false);
         self.monitor.note_completion(st, job_id, burned);
         self.govern(st);
+    }
+
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        // Revocations are the wrapped policy's to recover from; the
+        // governor only needs to re-evaluate at the next round (the
+        // fault engine re-clamps any surged capacity itself).
+        self.inner.on_revoke(st, ev);
+        self.needs_round = true;
     }
 
     fn on_tick(&mut self, st: &mut ClusterState) {

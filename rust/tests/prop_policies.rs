@@ -7,8 +7,8 @@
 
 use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use prompttuner::bench::{self, SweepCell, SYSTEMS};
-use prompttuner::cluster::{ClusterState, Policy, SimConfig, SimOracle,
-                           Simulator, Wake};
+use prompttuner::cluster::{ClusterState, Policy, RevokeEvent, SimConfig,
+                           SimOracle, Simulator, Wake};
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::scenario::Scenario;
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
@@ -107,32 +107,55 @@ impl Policy for DenseTick {
     fn on_tick(&mut self, st: &mut ClusterState) {
         self.0.on_tick(st)
     }
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        self.0.on_revoke(st, ev)
+    }
+    fn capacity(&self) -> Option<usize> {
+        self.0.capacity()
+    }
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        self.0.set_capacity(st, gpus)
+    }
     // next_timed_action: default Wake::Dense — never coalesce.
 }
 
 /// Tick coalescing must be a pure wall-clock optimization: for every
 /// policy — over the paper's Medium/High traces AND the scenario engine's
 /// flash-crowd / heavy-tail families (the adversarial cases: correlated
-/// queue floods and durations far past the paper's cap) — the optimized
-/// simulator yields the same n_done / n_violations / cost as a dense-tick
-/// reference run. Both runs execute under the simulation oracle.
+/// queue floods and durations far past the paper's cap) AND the faulted
+/// spot-market / az-outage families (involuntary revocations, repairs and
+/// stragglers applied through the fault engine's `Wake::At` grid) — the
+/// optimized simulator yields the same n_done / n_violations / cost as a
+/// dense-tick reference run. Both runs execute under the simulation
+/// oracle.
 #[test]
 fn prop_tick_coalescing_matches_dense_reference() {
     let mut coalesced_total: u64 = 0;
-    check_sized("coalesced run == dense reference (all policies)", 6,
+    check_sized("coalesced run == dense reference (all policies)", 8,
                 |rng, case| {
         let seed = rng.next_u64();
         let gpus = 16 + 16 * rng.below(2); // 16 or 32
         let load = [Load::Medium, Load::High][rng.below(2)];
-        // rotate the workload family with the case index so 6 cases cover
-        // each family twice
-        let scenario: Option<Scenario> = match case % 3 {
+        // rotate the workload family with the case index: 8 cases cover
+        // paper/flash-crowd/heavy-tail twice each, and the case%4==3
+        // slot alternates the two fault families (once each per run)
+        let scenario: Option<Scenario> = match case % 4 {
             1 => Some(Scenario::FlashCrowd {
                 storms: 2,
                 intensity: 20.0,
                 jobs_per_llm: 40,
             }),
             2 => Some(Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 40 }),
+            3 if case < 4 => Some(Scenario::SpotMarket {
+                waves: 2,
+                reclaim_frac: 0.25,
+                jobs_per_llm: 30,
+            }),
+            3 => Some(Scenario::AzOutage {
+                outage_frac: 0.5,
+                repair_s: 240.0,
+                jobs_per_llm: 30,
+            }),
             _ => None,
         };
         let family = scenario.as_ref().map_or("paper", |s| s.name());
@@ -191,6 +214,14 @@ fn prop_tick_coalescing_matches_dense_reference() {
                 format!("{tag}: billed {} vs {}",
                         fast_res.gpu_seconds_billed,
                         dense_res.gpu_seconds_billed),
+            )?;
+            ensure(
+                fast_res.revocations == dense_res.revocations
+                    && (fast_res.lost_iters - dense_res.lost_iters).abs() < 1e-9,
+                format!("{tag}: faults diverged: {} rev / {} lost vs \
+                         {} rev / {} lost",
+                        fast_res.revocations, fast_res.lost_iters,
+                        dense_res.revocations, dense_res.lost_iters),
             )?;
             ensure(
                 fast_res.job_latencies.len() == dense_res.job_latencies.len(),

@@ -7,7 +7,14 @@ Usage:
 Exit codes:
     0 — record well-formed (and within the regression budget, when a
         baseline exists)
-    1 — malformed record or a cell regressed beyond the budget
+    1 — malformed record, failed per-suite coverage/sanity check, or a
+        cell regressed beyond the budget
+    2 — the bench record file itself is missing (the bench never ran or
+        wrote elsewhere) — distinct from a malformed record so CI logs
+        and callers can tell the two apart
+
+Cell-level failures name the suite and the offending cell
+(label/system), so a red CI run points at the exact sweep cell.
 
 The record is emitted by the Rust sweep harness (rust/src/bench). When no
 baseline file exists yet the format is still validated and the script
@@ -25,10 +32,21 @@ REQUIRED_CELL = [
     "n_done", "n_violations", "cost_usd", "mean_utilization",
 ]
 
+EXIT_FAIL = 1
+EXIT_MISSING_RECORD = 2
 
-def fail(msg: str) -> None:
+
+def fail(msg: str, code: int = EXIT_FAIL) -> None:
     print(f"check_bench: FAIL: {msg}", file=sys.stderr)
-    sys.exit(1)
+    sys.exit(code)
+
+
+def cell_name(suite: str, i: int, cell) -> str:
+    """Human-readable cell reference for failure messages."""
+    if isinstance(cell, dict) and ("label" in cell or "system" in cell):
+        return (f"suite '{suite}' cell {i} "
+                f"({cell.get('label', '?')}/{cell.get('system', '?')})")
+    return f"suite '{suite}' cell {i}"
 
 
 def load_record(path: str) -> dict:
@@ -36,28 +54,33 @@ def load_record(path: str) -> dict:
         with open(path) as f:
             rec = json.load(f)
     except FileNotFoundError:
-        fail(f"{path} not found (did the bench run?)")
+        fail(f"{path} not found (did the bench run, or write to a "
+             f"different BENCH_OUT_DIR?)", EXIT_MISSING_RECORD)
     except json.JSONDecodeError as e:
         fail(f"{path} is not valid JSON: {e}")
     for key in REQUIRED_TOP:
         if key not in rec:
             fail(f"{path}: missing top-level key '{key}'")
+    suite = rec["suite"]
     if not isinstance(rec["cells"], list) or not rec["cells"]:
-        fail(f"{path}: 'cells' must be a non-empty list")
+        fail(f"{path}: suite '{suite}': 'cells' must be a non-empty list")
     for i, cell in enumerate(rec["cells"]):
+        where = cell_name(suite, i, cell)
         for key in REQUIRED_CELL:
             if key not in cell:
-                fail(f"{path}: cell {i} missing key '{key}'")
+                fail(f"{path}: {where} missing key '{key}'")
         if cell["wall_s"] < 0:
-            fail(f"{path}: cell {i} has negative wall_s")
+            fail(f"{path}: {where} has negative wall_s")
         if cell["n_jobs"] > 0 and cell["n_done"] > cell["n_jobs"]:
-            fail(f"{path}: cell {i} finished more jobs than it has")
+            fail(f"{path}: {where} finished more jobs than it has")
         if cell["rounds_executed"] > 0 and cell["ticks_per_s"] <= 0:
-            fail(f"{path}: cell {i} executed rounds but reports no throughput")
-    if rec["suite"] == "scenarios":
+            fail(f"{path}: {where} executed rounds but reports no throughput")
+    if suite == "scenarios":
         check_scenarios(path, rec)
-    if rec["suite"] == "slo":
+    if suite == "slo":
         check_slo(path, rec)
+    if suite == "faults":
+        check_faults(path, rec)
     return rec
 
 
@@ -65,6 +88,7 @@ def load_record(path: str) -> dict:
 # systems that must each run every family).
 SCENARIO_FAMILIES = {
     "diurnal", "flash-crowd", "heavy-tail", "multi-tenant", "replay",
+    "spot-market", "az-outage",
 }
 SCENARIO_SYSTEMS = {"prompttuner", "infless", "elasticflow"}
 
@@ -76,10 +100,11 @@ def check_scenarios(path: str, rec: dict) -> None:
     seen = {}
     for i, cell in enumerate(rec["cells"]):
         name = cell.get("scenario")
+        where = cell_name("scenarios", i, cell)
         if not name or name == "none":
-            fail(f"{path}: scenarios cell {i} has no scenario tag")
+            fail(f"{path}: {where} has no scenario tag")
         if cell["n_jobs"] <= 0:
-            fail(f"{path}: scenarios cell {i} ({name}) ran no jobs")
+            fail(f"{path}: {where} ({name}) ran no jobs")
         seen.setdefault(name, set()).add(cell["system"])
     missing = SCENARIO_FAMILIES - set(seen)
     if missing:
@@ -109,13 +134,14 @@ def check_slo(path: str, rec: dict) -> None:
     seen = {}
     for i, cell in enumerate(rec["cells"]):
         name = cell.get("scenario")
+        where = cell_name("slo", i, cell)
         if name not in SLO_SCENARIOS:
-            fail(f"{path}: slo cell {i} has unexpected scenario '{name}'")
+            fail(f"{path}: {where} has unexpected scenario '{name}'")
         gov = cell.get("governed")
         if not isinstance(gov, bool):
-            fail(f"{path}: slo cell {i} has no boolean 'governed' flag")
+            fail(f"{path}: {where} has no boolean 'governed' flag")
         if cell["n_jobs"] <= 0:
-            fail(f"{path}: slo cell {i} ({name}) ran no jobs")
+            fail(f"{path}: {where} ({name}) ran no jobs")
         seen.setdefault((name, cell["system"]), set()).add(gov)
     for name in sorted(SLO_SCENARIOS):
         for system in sorted(SCENARIO_SYSTEMS):
@@ -143,6 +169,66 @@ def check_slo(path: str, rec: dict) -> None:
              f"rate nor cost on flash-crowd")
     print(f"check_bench: slo suite covers {sorted(SLO_SCENARIOS)} x "
           f"{sorted(SCENARIO_SYSTEMS)} x {{governed, ungoverned}}")
+
+
+# The fault & preemption sweep (fig13) must cover these scenario families
+# under every system.
+FAULT_SCENARIOS = {"spot-market", "az-outage"}
+
+
+def check_faults(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_faults.json: every cell is tagged with
+    a fault scenario and carries fault telemetry (revocations,
+    lost_iters), coverage spans families x systems, the fault plans
+    actually fired somewhere (involuntary preemptions happened), every
+    preempted job still completed (recovery is mandatory — revoked jobs
+    must not be stranded), and PromptTuner keeps a sane violation rate
+    under churn."""
+    seen = {}
+    total_revocations = 0
+    for i, cell in enumerate(rec["cells"]):
+        where = cell_name("faults", i, cell)
+        name = cell.get("scenario")
+        if name not in FAULT_SCENARIOS:
+            fail(f"{path}: {where} has unexpected scenario '{name}'")
+        for key in ("revocations", "lost_iters"):
+            if key not in cell:
+                fail(f"{path}: {where} missing fault telemetry '{key}'")
+        if cell["revocations"] < 0 or cell["lost_iters"] < 0:
+            fail(f"{path}: {where} has negative fault telemetry")
+        if cell["n_done"] != cell["n_jobs"]:
+            fail(f"{path}: {where} stranded revoked jobs "
+                 f"({cell['n_done']}/{cell['n_jobs']} done) — recovery "
+                 f"must relaunch every preempted job")
+        total_revocations += cell["revocations"]
+        seen.setdefault(name, set()).add(cell["system"])
+    missing = FAULT_SCENARIOS - set(seen)
+    if missing:
+        fail(f"{path}: fault scenarios missing from the sweep: "
+             f"{sorted(missing)}")
+    for name, systems in sorted(seen.items()):
+        lacking = SCENARIO_SYSTEMS - systems
+        if lacking:
+            fail(f"{path}: fault scenario '{name}' missing systems: "
+                 f"{sorted(lacking)}")
+    if total_revocations == 0:
+        fail(f"{path}: no cell recorded a revocation — the fault plans "
+             f"never fired")
+    for name in sorted(FAULT_SCENARIOS):
+        for i, cell in enumerate(rec["cells"]):
+            if cell["scenario"] == name and cell["system"] == "prompttuner":
+                viol = cell["n_violations"] / max(cell["n_jobs"], 1)
+                print(f"check_bench: faults {name}/prompttuner: "
+                      f"{cell['revocations']} revocations, "
+                      f"{cell['lost_iters']:.1f} iters lost, "
+                      f"violation rate {viol:.3f}")
+                if viol >= 0.9:
+                    fail(f"{path}: {cell_name('faults', i, cell)}: "
+                         f"PromptTuner violates {viol:.0%} of SLOs under "
+                         f"churn — elasticity under faults is broken")
+    print(f"check_bench: faults suite covers {sorted(seen)} x "
+          f"{sorted(SCENARIO_SYSTEMS)}, "
+          f"{total_revocations} total revocations")
 
 
 def cell_key(cell: dict) -> tuple:
@@ -203,7 +289,8 @@ def main() -> None:
               f"{ref['wall_s']:.3f}s -> {cell['wall_s']:.3f}s "
               f"({ratio:.2f}x) {status}")
         if ratio > args.max_regression:
-            fail(f"cell {cell_key(cell)} regressed {ratio:.2f}x "
+            fail(f"suite '{rec['suite']}' cell "
+                 f"{cell['label']}/{cell['system']} regressed {ratio:.2f}x "
                  f"(budget {args.max_regression}x)")
     print(f"check_bench: worst ratio {worst:.2f}x within "
           f"{args.max_regression}x budget")

@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Self-test for check_bench.py (run in CI before the bench gates).
+
+Covers the paths the gates rely on: the wall_s == 0 inert-baseline
+warning, per-suite coverage failures (scenarios / slo / faults), the >2x
+wall-clock regression trip, and the exit-code split between a missing
+record file (exit 2) and a malformed record (exit 1).
+
+Pure stdlib — no pytest in the CI image. Each test_* function either
+returns normally (pass) or raises AssertionError (fail).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+CHECK = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "check_bench.py")
+
+
+def run_check(*args):
+    return subprocess.run(
+        [sys.executable, CHECK, *args],
+        capture_output=True, text=True, timeout=60,
+    )
+
+
+def make_cell(**over):
+    cell = {
+        "label": "t/cell", "system": "prompttuner", "gpus": 32, "seed": 1,
+        "load": "medium", "scenario": "none", "governed": False,
+        "slo": 1.0, "scale": 1.0, "wall_s": 0.5,
+        "rounds_executed": 100, "rounds_coalesced": 50,
+        "ticks_per_s": 200.0, "revocations": 0, "lost_iters": 0.0,
+        "n_jobs": 10, "n_done": 10, "n_violations": 1,
+        "cost_usd": 5.0, "mean_utilization": 0.8,
+        "sched_overhead_ms_mean": 0.1, "sched_overhead_ms_max": 0.4,
+    }
+    cell.update(over)
+    return cell
+
+
+def make_record(suite="sim", cells=None, **over):
+    rec = {
+        "suite": suite,
+        "created_unix": 1700000000,
+        "total_wall_s": 1.0,
+        "cells": cells if cells is not None else [make_cell()],
+    }
+    rec.update(over)
+    return rec
+
+
+def write_tmp(dirname, name, obj):
+    path = os.path.join(dirname, name)
+    with open(path, "w") as f:
+        if isinstance(obj, str):
+            f.write(obj)
+        else:
+            json.dump(obj, f)
+    return path
+
+
+def faults_cells(revocations=3, n_done=None):
+    cells = []
+    for scenario in ("spot-market", "az-outage"):
+        for system in ("prompttuner", "infless", "elasticflow"):
+            cells.append(make_cell(
+                label=f"fig13/{scenario}", system=system, scenario=scenario,
+                revocations=revocations, lost_iters=12.5,
+                n_done=10 if n_done is None else n_done,
+            ))
+    return cells
+
+
+# --------------------------------------------------------------- tests
+
+def test_well_formed_record_passes(tmp):
+    path = write_tmp(tmp, "ok.json", make_record())
+    r = run_check(path)
+    assert r.returncode == 0, r.stderr
+    assert "format OK" in r.stdout
+
+
+def test_missing_record_exits_2(tmp):
+    r = run_check(os.path.join(tmp, "never_written.json"))
+    assert r.returncode == 2, (r.returncode, r.stderr)
+    assert "not found" in r.stderr
+
+
+def test_malformed_json_exits_1(tmp):
+    path = write_tmp(tmp, "bad.json", "{not json")
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "not valid JSON" in r.stderr
+
+
+def test_missing_cell_key_names_the_cell(tmp):
+    cell = make_cell()
+    del cell["ticks_per_s"]
+    path = write_tmp(tmp, "mk.json", make_record(cells=[cell]))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "t/cell" in r.stderr and "prompttuner" in r.stderr, r.stderr
+    assert "ticks_per_s" in r.stderr
+
+
+def test_zero_wall_baseline_warns_but_passes(tmp):
+    rec = write_tmp(tmp, "rec.json", make_record())
+    base = write_tmp(tmp, "base.json",
+                     make_record(cells=[make_cell(wall_s=0.0)]))
+    r = run_check(rec, "--baseline", base)
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "INERT" in r.stderr, r.stderr
+
+
+def test_missing_baseline_is_not_fatal(tmp):
+    rec = write_tmp(tmp, "rec.json", make_record())
+    r = run_check(rec, "--baseline", os.path.join(tmp, "no_base.json"))
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "no baseline" in r.stdout
+
+
+def test_regression_beyond_budget_trips(tmp):
+    rec = write_tmp(tmp, "rec.json", make_record(cells=[make_cell(wall_s=1.0)]))
+    base = write_tmp(tmp, "base.json",
+                     make_record(cells=[make_cell(wall_s=0.4)]))
+    r = run_check(rec, "--baseline", base, "--max-regression", "2.0")
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "regressed" in r.stderr and "t/cell" in r.stderr, r.stderr
+
+
+def test_regression_within_budget_passes(tmp):
+    rec = write_tmp(tmp, "rec.json", make_record(cells=[make_cell(wall_s=0.6)]))
+    base = write_tmp(tmp, "base.json",
+                     make_record(cells=[make_cell(wall_s=0.4)]))
+    r = run_check(rec, "--baseline", base, "--max-regression", "2.0")
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "worst ratio" in r.stdout
+
+
+def test_scenarios_coverage_failure(tmp):
+    # one family missing entirely
+    cells = [make_cell(label="fig11/diurnal", system=s, scenario="diurnal")
+             for s in ("prompttuner", "infless", "elasticflow")]
+    path = write_tmp(tmp, "sc.json", make_record(suite="scenarios",
+                                                 cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "missing from the sweep" in r.stderr
+
+
+def test_slo_requires_governed_pairs(tmp):
+    cells = []
+    for scenario in ("multi-tenant", "flash-crowd"):
+        for system in ("prompttuner", "infless", "elasticflow"):
+            # ungoverned only: the governed half of each pair is missing
+            cells.append(make_cell(label=f"fig12/{scenario}", system=system,
+                                   scenario=scenario, governed=False))
+    path = write_tmp(tmp, "slo.json", make_record(suite="slo", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "governed/ungoverned" in r.stderr
+
+
+def test_faults_suite_passes_when_covered(tmp):
+    path = write_tmp(tmp, "f.json",
+                     make_record(suite="faults", cells=faults_cells()))
+    r = run_check(path)
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "faults suite covers" in r.stdout
+
+
+def test_faults_suite_rejects_stranded_jobs(tmp):
+    path = write_tmp(tmp, "f.json",
+                     make_record(suite="faults",
+                                 cells=faults_cells(n_done=9)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "stranded" in r.stderr
+
+
+def test_faults_suite_rejects_inert_plans(tmp):
+    path = write_tmp(tmp, "f.json",
+                     make_record(suite="faults",
+                                 cells=faults_cells(revocations=0)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "never fired" in r.stderr
+
+
+def test_faults_suite_requires_full_coverage(tmp):
+    cells = [c for c in faults_cells() if c["scenario"] != "az-outage"]
+    path = write_tmp(tmp, "f.json", make_record(suite="faults", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "az-outage" in r.stderr
+
+
+def test_faults_suite_requires_fault_telemetry(tmp):
+    cells = faults_cells()
+    del cells[0]["revocations"]
+    path = write_tmp(tmp, "f.json", make_record(suite="faults", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "revocations" in r.stderr
+
+
+def main():
+    tests = sorted(
+        (name, fn) for name, fn in globals().items()
+        if name.startswith("test_") and callable(fn)
+    )
+    failures = 0
+    for name, fn in tests:
+        with tempfile.TemporaryDirectory() as tmp:
+            try:
+                fn(tmp)
+                print(f"PASS {name}")
+            except AssertionError as e:
+                failures += 1
+                print(f"FAIL {name}: {e}")
+    print(f"{len(tests) - failures}/{len(tests)} passed")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()
