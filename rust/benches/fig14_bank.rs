@@ -1,0 +1,93 @@
+//! Fig 14 (beyond the paper) — the Prompt-Bank state sweep: SLO
+//! violation, cost and realized prompt quality of all three systems with
+//! {cold, warm, drifting} banks on the paper's 32-GPU cluster.
+//!
+//! The stateful `promptbank::SimBank` makes bank quality *emerge* from
+//! bank state instead of a fixed statistical draw, so these regimes are
+//! now distinguishable:
+//! * **cold** — empty banks at t = 0: early jobs launch from user
+//!   prompts; completions feed tuned prompts back and the bank warms
+//!   over the run (the convergence flywheel);
+//! * **warm** — the default seeded corpus (3000 candidates per LLM);
+//! * **drifting** — warm banks, but the `task-drift` scenario switches
+//!   the arrival stream to never-seen tasks mid-run: coverage dips cold
+//!   for them and recovers through feedback.
+//!
+//! Emits a BENCH_bank.json perf record; tools/check_bench.py validates
+//! state × system coverage and that warm-bank PromptTuner beats
+//! cold-bank on attainment and quality. Run with PT_SIM_ORACLE=1 (CI
+//! does) to audit every round under the strict in-loop oracle.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::metrics::{render_table, Row};
+use prompttuner::promptbank::SimBankConfig;
+use prompttuner::scenario::Scenario;
+use prompttuner::trace::Load;
+
+fn main() {
+    let seed = 42u64;
+    let gpus = 32;
+    let cold = SimBankConfig::cold();
+    let warm = SimBankConfig::default();
+    let drift = Scenario::TaskDrift {
+        drift_at_frac: 0.4,
+        novel_tasks: 8,
+        jobs_per_llm: 60,
+    };
+
+    let mut cells = vec![];
+    for system in SYSTEMS {
+        cells.push(
+            SweepCell::new("fig14/cold", system, Load::Medium, 1.0, gpus, seed)
+                .with_bank(cold.clone()),
+        );
+        cells.push(
+            SweepCell::new("fig14/warm", system, Load::Medium, 1.0, gpus, seed)
+                .with_bank(warm.clone()),
+        );
+        cells.push(
+            SweepCell::scenario("fig14/drifting", system, drift.clone(), 1.0,
+                                gpus, seed)
+                .with_bank(warm.clone()),
+        );
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    for state in ["cold", "warm", "drifting"] {
+        let label = format!("fig14/{state}");
+        let rows: Vec<Row> = results
+            .iter()
+            .filter(|r| r.cell.label == label)
+            .map(|r| Row::from(&r.result))
+            .collect();
+        let jobs = results
+            .iter()
+            .find(|r| r.cell.label == label)
+            .map_or(0, |r| r.result.n_jobs);
+        print!("\n{}", render_table(
+            &format!("Fig 14 — {state} bank ({jobs} jobs, {gpus} GPUs, \
+                      S = 1.0)"),
+            &rows));
+        for r in results.iter().filter(|r| r.cell.label == label) {
+            println!("  {:<14} mean prompt quality {:.3}",
+                     r.cell.system, r.result.mean_prompt_quality);
+        }
+    }
+
+    let report = BenchReport::new("bank", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!(
+            "\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+            report.cells.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+}

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use common::*;
 use prompttuner::coordinator::PromptTunerConfig;
-use prompttuner::promptbank::BankModel;
+use prompttuner::promptbank::SimBankConfig;
 use prompttuner::trace::Load;
 
 fn ablation_cell(label: String, cfg: PromptTunerConfig, slo: f64,
@@ -64,7 +64,13 @@ fn main() {
     }
     for &size in &sizes {
         for &seed in &seeds {
-            let bank = BankModel { bank_size: size, ..Default::default() };
+            // A size-capped stateful bank: fewer seeded candidates cover
+            // fewer tasks, and the ceiling caps feedback growth (Fig 8d).
+            let bank = SimBankConfig {
+                initial_size: size,
+                max_size: size,
+                ..Default::default()
+            };
             cells.push(ablation_cell(
                 format!("fig8d/c{size}"),
                 PromptTunerConfig { bank, ..Default::default() },

@@ -12,7 +12,7 @@
 
 use crate::baselines::BankRouter;
 use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
-use crate::util::rng::Rng;
+use crate::promptbank::SimBankSet;
 use crate::workload::Llm;
 
 /// ElasticFlow configuration.
@@ -39,7 +39,10 @@ impl Default for ElasticFlowConfig {
 /// The ElasticFlow-like policy.
 pub struct ElasticFlow {
     pub cfg: ElasticFlowConfig,
-    rng: Rng,
+    /// Stateful per-LLM Prompt Banks (the paper grafts the bank onto the
+    /// baselines for fairness) — same coverage-driven quality and
+    /// completion feedback as PromptTuner's, routed by `cfg.bank`.
+    banks: SimBankSet,
     /// Admission queue, kept sorted by absolute deadline (ties in
     /// arrival order) — deadlines are static, so sorting at arrival
     /// replaces the seed's per-round sort.
@@ -60,10 +63,10 @@ pub struct ElasticFlow {
 
 impl ElasticFlow {
     pub fn new(cfg: ElasticFlowConfig) -> Self {
-        let rng = Rng::new(cfg.seed);
+        let banks = cfg.bank.build(cfg.seed);
         ElasticFlow {
             cfg,
-            rng,
+            banks,
             pending: vec![],
             busy_gpus: 0,
             plans: vec![],
@@ -86,7 +89,9 @@ impl ElasticFlow {
         let llm = spec.llm;
         let replica = llm.gpus_per_replica();
         let (use_bank, bank_lat) = self.plans[job];
-        let q_est = self.cfg.bank.estimate(spec, use_bank);
+        // Deterministic coverage-state quality: the admission prediction
+        // and the launch use the same value.
+        let q = self.cfg.bank.quality(&self.banks, spec, use_bank);
         let deadline = spec.deadline();
         let cap = self.cfg.max_gpus_per_job.min(self.free()) / replica * replica;
         if cap == 0 {
@@ -94,13 +99,13 @@ impl ElasticFlow {
         }
         let cold = st.perf.cold_start(llm);
         let mut n = replica;
-        while st.estimate_completion(job, n, cold, bank_lat, q_est) > deadline
+        while st.estimate_completion(job, n, cold, bank_lat, q) > deadline
             && n + replica <= cap
         {
             n += replica;
         }
         let meets =
-            st.estimate_completion(job, n, cold, bank_lat, q_est) <= deadline;
+            st.estimate_completion(job, n, cold, bank_lat, q) <= deadline;
         let expired = deadline < st.now();
         if !meets && !expired {
             // deadline-ordered admission: hold the job, hoping GPUs free
@@ -108,8 +113,6 @@ impl ElasticFlow {
             return false;
         }
         let n = if expired { replica } else { n };
-        let spec = &st.jobs[job].spec;
-        let q = self.cfg.bank.realize(spec, use_bank, &mut self.rng);
         self.busy_gpus += n;
         st.launch(job, n, cold, bank_lat, q);
         true
@@ -271,7 +274,7 @@ impl Policy for ElasticFlow {
             self.started = true;
         }
         let spec = &st.jobs[job_id].spec;
-        self.plans[job_id] = self.cfg.bank.route(spec);
+        self.plans[job_id] = self.cfg.bank.route(&self.banks, spec);
         // Sorted insert by deadline; equal deadlines keep arrival order
         // (matches the stable per-round sort this replaces).
         let dl = spec.deadline();
@@ -285,10 +288,14 @@ impl Policy for ElasticFlow {
 
     fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
         let job = &st.jobs[job_id];
+        let llm = job.spec.llm;
+        let task_id = job.spec.task_id;
         let gpus = (job.gpu_seconds
             / (job.completed_at - job.launched_at).max(1e-9))
             .round() as usize;
         self.busy_gpus = self.busy_gpus.saturating_sub(gpus);
+        // Completion feedback: the tuned prompt flows back into the bank.
+        self.cfg.bank.complete(&mut self.banks, llm, task_id);
         self.needs_round = true;
         let _ = st;
     }

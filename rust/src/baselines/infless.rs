@@ -13,6 +13,7 @@
 use crate::baselines::BankRouter;
 use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
 use crate::coordinator::pools::WarmPool;
+use crate::promptbank::SimBankSet;
 use crate::util::rng::Rng;
 use crate::workload::{Llm, N_LLM};
 
@@ -52,6 +53,10 @@ impl Default for InflessConfig {
 pub struct Infless {
     pub cfg: InflessConfig,
     rng: Rng,
+    /// Stateful per-LLM Prompt Banks (the paper grafts the bank onto the
+    /// baselines for fairness) — same coverage-driven quality and
+    /// completion feedback as PromptTuner's, routed by `cfg.bank`.
+    banks: SimBankSet,
     /// Per-LLM warm instance pools (keep-alive).
     pools: [WarmPool; N_LLM],
     /// Per-LLM FCFS queues in delivery order (normally submit order; an
@@ -77,9 +82,11 @@ pub struct Infless {
 impl Infless {
     pub fn new(cfg: InflessConfig) -> Self {
         let rng = Rng::new(cfg.seed);
+        let banks = cfg.bank.build(cfg.seed);
         Infless {
             cfg,
             rng,
+            banks,
             pools: Default::default(),
             pending: Default::default(),
             plans: vec![],
@@ -111,7 +118,9 @@ impl Infless {
         let replica = llm.gpus_per_replica();
         let (use_bank, bank_lat) = self.plans[job];
         let spec = &st.jobs[job].spec;
-        let q_est = self.cfg.bank.estimate(spec, use_bank);
+        // Deterministic coverage-state quality: the prediction below and
+        // the launch use the same value.
+        let q = self.cfg.bank.quality(&self.banks, spec, use_bank);
         let deadline = spec.deadline();
         let warm_free = self.pools[li].free();
         let budget = self.free_budget() + warm_free;
@@ -123,7 +132,7 @@ impl Infless {
         let mut n = replica;
         loop {
             let est = st.estimate_completion(
-                job, n, st.perf.warm_connect_s, bank_lat, q_est);
+                job, n, st.perf.warm_connect_s, bank_lat, q);
             if est <= deadline || n + replica > cap {
                 break;
             }
@@ -147,8 +156,6 @@ impl Infless {
         if from_cold > 0 {
             self.pools[li].add_busy_from_cold(from_cold);
         }
-        let spec = &st.jobs[job].spec;
-        let q = self.cfg.bank.realize(spec, use_bank, &mut self.rng);
         st.launch(job, n, init, bank_lat, q);
         true
     }
@@ -164,7 +171,7 @@ impl Policy for Infless {
             self.plans.push((false, 0.0));
         }
         let spec = &st.jobs[job_id].spec;
-        self.plans[job_id] = self.cfg.bank.route(spec);
+        self.plans[job_id] = self.cfg.bank.route(&self.banks, spec);
         let li = spec.llm.index();
         // FCFS in delivery order. (Deliveries are normally submit-ordered,
         // but an admission layer — `slo::Governed` — may deliver a
@@ -179,10 +186,13 @@ impl Policy for Infless {
     fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
         let job = &st.jobs[job_id];
         let llm = job.spec.llm;
+        let task_id = job.spec.task_id;
         let gpus = (job.gpu_seconds
             / (job.completed_at - job.launched_at).max(1e-9))
             .round() as usize;
         self.pools[llm.index()].release(gpus, st.now());
+        // Completion feedback: the tuned prompt flows back into the bank.
+        self.cfg.bank.complete(&mut self.banks, llm, task_id);
         self.needs_round = true;
         self.update_billable(st);
     }

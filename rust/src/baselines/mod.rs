@@ -20,18 +20,23 @@ pub mod infless;
 pub use elasticflow::{ElasticFlow, ElasticFlowConfig};
 pub use infless::{Infless, InflessConfig};
 
-use crate::promptbank::BankModel;
-use crate::util::rng::Rng;
-use crate::workload::JobSpec;
+use crate::promptbank::{SimBankConfig, SimBankSet, TUNED_PROMPT_QUALITY};
+use crate::workload::{JobSpec, Llm};
 
 /// Prompt-Bank routing shared by the baselines (the paper reinforces both
 /// baselines with the bank; they inherit the same 20 % latency budget).
+/// The router is pure policy math over a [`SimBankSet`] the baseline
+/// owns — the same stateful per-LLM banks (built through
+/// [`BankRouter::build`]) the PromptTuner scheduler uses, so quality is a
+/// deterministic function of coverage state and completed jobs feed tuned
+/// prompts back through [`BankRouter::complete`].
 #[derive(Clone, Debug)]
 pub struct BankRouter {
     pub enabled: bool,
     pub budget_frac: f64,
-    pub model: BankModel,
-    pub est_quality: f64,
+    /// Bank construction parameters (`induction: true` swaps in the
+    /// induction baseline behind the same interface).
+    pub cfg: SimBankConfig,
 }
 
 impl Default for BankRouter {
@@ -39,19 +44,25 @@ impl Default for BankRouter {
         BankRouter {
             enabled: true,
             budget_frac: 0.2,
-            model: BankModel::default(),
-            est_quality: 0.85,
+            cfg: SimBankConfig::default(),
         }
     }
 }
 
 impl BankRouter {
-    /// Decide at arrival: (use_bank, bank_latency).
-    pub fn route(&self, spec: &JobSpec) -> (bool, f64) {
+    /// Build the per-LLM bank state this router routes over
+    /// (bit-deterministic in `seed`).
+    pub fn build(&self, seed: u64) -> SimBankSet {
+        SimBankSet::new(&self.cfg, seed)
+    }
+
+    /// Decide at arrival: (use_bank, bank_latency). Latency follows the
+    /// live two-layer shape, so it responds to bank growth/shrinking.
+    pub fn route(&self, banks: &SimBankSet, spec: &JobSpec) -> (bool, f64) {
         if !self.enabled {
             return (false, 0.0);
         }
-        let lat = self.model.lookup_latency(spec.llm);
+        let lat = banks.lookup_latency(spec.llm);
         if lat <= self.budget_frac * spec.slo_s {
             (true, lat)
         } else {
@@ -59,21 +70,26 @@ impl BankRouter {
         }
     }
 
-    /// Realize quality at launch.
-    pub fn realize(&self, spec: &JobSpec, use_bank: bool, rng: &mut Rng) -> f64 {
+    /// Quality the bank delivers for this job *right now* — used both in
+    /// completion-time predictions and at launch (the coverage state is
+    /// the realized quality; there is no draw, so estimates and launches
+    /// agree by construction).
+    pub fn quality(&self, banks: &SimBankSet, spec: &JobSpec,
+                   use_bank: bool) -> f64 {
         if use_bank {
-            self.model.draw_quality(rng).max(spec.user_prompt_quality)
+            banks
+                .quality_for(spec.llm, spec.task_id)
+                .max(spec.user_prompt_quality)
         } else {
             spec.user_prompt_quality
         }
     }
 
-    /// Quality to assume in completion-time predictions.
-    pub fn estimate(&self, spec: &JobSpec, use_bank: bool) -> f64 {
-        if use_bank {
-            spec.user_prompt_quality.max(self.est_quality)
-        } else {
-            spec.user_prompt_quality
+    /// Completion feedback (Fig 5b): the finished job's tuned prompt
+    /// flows back into its LLM's bank.
+    pub fn complete(&self, banks: &mut SimBankSet, llm: Llm, task_id: usize) {
+        if self.enabled {
+            banks.insert_tuned(llm, task_id, TUNED_PROMPT_QUALITY);
         }
     }
 }
@@ -81,7 +97,6 @@ impl BankRouter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::Llm;
 
     fn spec(slo: f64) -> JobSpec {
         JobSpec {
@@ -100,10 +115,11 @@ mod tests {
     #[test]
     fn router_respects_budget() {
         let r = BankRouter::default();
+        let banks = r.build(1);
         // gpt2-base lookup ≈ 5.3 s; budget 20 % => SLO must be ≥ ~26.4 s
-        let (use_short, _) = r.route(&spec(10.0));
+        let (use_short, _) = r.route(&banks, &spec(10.0));
         assert!(!use_short);
-        let (use_long, lat) = r.route(&spec(120.0));
+        let (use_long, lat) = r.route(&banks, &spec(120.0));
         assert!(use_long);
         assert!(lat > 1.0);
     }
@@ -111,26 +127,32 @@ mod tests {
     #[test]
     fn disabled_router_never_uses_bank() {
         let r = BankRouter { enabled: false, ..Default::default() };
-        assert_eq!(r.route(&spec(1e9)), (false, 0.0));
+        let banks = r.build(1);
+        assert_eq!(r.route(&banks, &spec(1e9)), (false, 0.0));
     }
 
     #[test]
-    fn realize_respects_user_floor() {
+    fn quality_respects_user_floor_and_skip() {
         let r = BankRouter::default();
-        let mut rng = Rng::new(1);
+        let banks = r.build(2);
         let mut s = spec(100.0);
-        s.user_prompt_quality = 0.97;
-        for _ in 0..100 {
-            assert!(r.realize(&s, true, &mut rng) >= 0.97);
-        }
-        assert_eq!(r.realize(&s, false, &mut rng), 0.97);
+        s.user_prompt_quality = 0.99;
+        assert!(r.quality(&banks, &s, true) >= 0.99);
+        assert_eq!(r.quality(&banks, &s, false), 0.99);
     }
 
     #[test]
-    fn estimate_is_conservative() {
-        let r = BankRouter::default();
+    fn completion_feedback_raises_quality() {
+        let r = BankRouter {
+            cfg: SimBankConfig::cold(),
+            ..Default::default()
+        };
+        let mut banks = r.build(3);
         let s = spec(100.0);
-        assert_eq!(r.estimate(&s, true), 0.85);
-        assert_eq!(r.estimate(&s, false), 0.5);
+        let before = r.quality(&banks, &s, true);
+        assert_eq!(before, s.user_prompt_quality); // cold bank: user floor
+        r.complete(&mut banks, s.llm, s.task_id);
+        let after = r.quality(&banks, &s, true);
+        assert!(after > 0.9, "feedback did not warm the bank: {after}");
     }
 }

@@ -22,6 +22,7 @@ use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use crate::cluster::{CheckpointModel, Policy, SimConfig, SimResult, Simulator};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
 use crate::fault::FaultInjector;
+use crate::promptbank::SimBankConfig;
 use crate::scenario::Scenario;
 use crate::slo::{Governed, GovernorConfig};
 use crate::trace::{Load, TraceConfig, TraceGenerator};
@@ -58,6 +59,10 @@ pub struct SweepCell {
     /// PromptTuner config override (ablation sweeps); the cell seed is
     /// applied on top.
     pub cfg: Option<PromptTunerConfig>,
+    /// Prompt-Bank construction override applied to *every* system's
+    /// bank (the fig14 cold/warm sweep); None keeps each system's
+    /// default (warm) bank.
+    pub bank: Option<SimBankConfig>,
 }
 
 impl SweepCell {
@@ -75,7 +80,14 @@ impl SweepCell {
             scenario: None,
             governed: false,
             cfg: None,
+            bank: None,
         }
+    }
+
+    /// Override every system's bank construction (fig14: cold vs warm).
+    pub fn with_bank(mut self, bank: SimBankConfig) -> Self {
+        self.bank = Some(bank);
+        self
     }
 
     /// Mark the cell governed (fig12): the policy is wrapped in
@@ -112,7 +124,10 @@ pub struct CellResult {
 pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
     let inner: Box<dyn Policy> = match cell.system.as_str() {
         "prompttuner" => {
-            let base = cell.cfg.clone().unwrap_or_default();
+            let mut base = cell.cfg.clone().unwrap_or_default();
+            if let Some(bank) = &cell.bank {
+                base.bank = bank.clone();
+            }
             // The cell's seed and cluster size always win over the
             // override: the simulator is sized by cell.gpus, and a policy
             // silently capped at the override's max_gpus would simulate a
@@ -123,16 +138,28 @@ pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
                 ..base
             }))
         }
-        "infless" => Box::new(Infless::new(InflessConfig {
-            max_gpus: cell.gpus,
-            seed: cell.seed,
-            ..Default::default()
-        })),
-        "elasticflow" => Box::new(ElasticFlow::new(ElasticFlowConfig {
-            cluster_size: cell.gpus,
-            seed: cell.seed,
-            ..Default::default()
-        })),
+        "infless" => {
+            let mut cfg = InflessConfig {
+                max_gpus: cell.gpus,
+                seed: cell.seed,
+                ..Default::default()
+            };
+            if let Some(bank) = &cell.bank {
+                cfg.bank.cfg = bank.clone();
+            }
+            Box::new(Infless::new(cfg))
+        }
+        "elasticflow" => {
+            let mut cfg = ElasticFlowConfig {
+                cluster_size: cell.gpus,
+                seed: cell.seed,
+                ..Default::default()
+            };
+            if let Some(bank) = &cell.bank {
+                cfg.bank.cfg = bank.clone();
+            }
+            Box::new(ElasticFlow::new(cfg))
+        }
         other => panic!("unknown system {other}"),
     };
     let policy: Box<dyn Policy> = if cell.governed {
@@ -305,6 +332,20 @@ impl BenchReport {
                 c.cell.scenario.as_ref().map_or("none", |s| s.name())
             ));
             out.push_str(&format!("\"governed\": {}, ", c.cell.governed));
+            // Bank construction tag: "cold" / "warm:<seeded>" carries the
+            // override's seeded-corpus size so size-capped sweeps stay
+            // distinguishable; drift shows through the scenario tag.
+            out.push_str(&format!(
+                "\"bank\": \"{}\", ",
+                c.cell.bank.as_ref().map_or_else(
+                    || "default".to_string(),
+                    |b| if b.initial_size == 0 {
+                        "cold".to_string()
+                    } else {
+                        format!("warm:{}", b.initial_size)
+                    },
+                )
+            ));
             out.push_str(&format!("\"slo\": {}, ", json_f64(c.cell.slo)));
             out.push_str(&format!("\"scale\": {}, ", json_f64(c.cell.scale)));
             out.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
@@ -321,6 +362,8 @@ impl BenchReport {
             out.push_str(&format!("\"n_done\": {}, ", r.n_done));
             out.push_str(&format!("\"n_violations\": {}, ", r.n_violations));
             out.push_str(&format!("\"cost_usd\": {}, ", json_f64(r.cost_usd)));
+            out.push_str(&format!("\"mean_quality\": {}, ",
+                                  json_f64(r.mean_prompt_quality)));
             out.push_str(&format!("\"mean_utilization\": {}, ",
                                   json_f64(r.mean_utilization)));
             out.push_str(&format!("\"sched_overhead_ms_mean\": {}, ",
@@ -468,6 +511,27 @@ mod tests {
         assert!(json.contains("\"scenario\": \"az-outage\""));
         assert!(json.contains("\"revocations\""));
         assert!(json.contains("\"lost_iters\""));
+    }
+
+    #[test]
+    fn bank_override_reaches_every_system_and_tags_the_record() {
+        let cold = SimBankConfig::cold();
+        let cells: Vec<SweepCell> = SYSTEMS
+            .iter()
+            .map(|s| {
+                SweepCell::new(format!("b/{s}"), *s, Load::Low, 1.0, 16, 5)
+                    .with_bank(cold.clone())
+            })
+            .collect();
+        let results = run_sweep(&cells);
+        for r in &results {
+            assert_eq!(r.result.n_done, r.result.n_jobs);
+            assert!(r.result.mean_prompt_quality > 0.0);
+        }
+        let report = BenchReport::new("bank", results, 0.1);
+        let json = report.to_json();
+        assert!(json.contains("\"bank\": \"cold\""));
+        assert!(json.contains("\"mean_quality\""));
     }
 
     #[test]

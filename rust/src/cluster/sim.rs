@@ -1114,6 +1114,13 @@ pub struct SimResult {
     pub util_timeline: Vec<(f64, f64)>,
     /// Per-job (latency, slo, init_wait, bank_latency) for CDFs.
     pub job_latencies: Vec<(f64, f64, f64, f64)>,
+    /// Per-job realized initial-prompt quality, indexed by job id (the
+    /// user's own quality for jobs that skipped or never reached the
+    /// bank). With the stateful bank this reflects coverage at launch
+    /// time, so it exposes warm-up and task-drift recovery curves.
+    pub job_quality: Vec<f64>,
+    /// Mean realized prompt quality over completed jobs (0 when none).
+    pub mean_prompt_quality: f64,
     /// Wall-clock scheduler decision overhead (paper §6.2: 13/67 ms).
     pub sched_overhead_ms_mean: f64,
     pub sched_overhead_ms_max: f64,
@@ -1314,6 +1321,21 @@ impl Simulator {
 
         let n_done = st.jobs.iter().filter(|j| j.status == JobStatus::Done).count();
         let n_violations = st.jobs.iter().filter(|j| !j.met_slo()).count();
+        // Bank-state telemetry: realized prompt quality per job. Bank
+        // mutation itself happens inside policy callbacks at discrete
+        // events (lookups realized at launch, tuned prompts inserted at
+        // completion), never in coalesced rounds, so these series are
+        // bit-identical under dense and coalesced ticking.
+        let mean_prompt_quality = if n_done > 0 {
+            st.jobs
+                .iter()
+                .filter(|j| j.status == JobStatus::Done)
+                .map(|j| j.quality)
+                .sum::<f64>()
+                / n_done as f64
+        } else {
+            0.0
+        };
         let cost_usd = st.cost_gpu_s * GPU_PRICE_PER_S + st.storage_cost;
         let mean_utilization = if st.billable_gpu_s > 0.0 {
             st.busy_gpu_s / st.billable_gpu_s
@@ -1335,6 +1357,8 @@ impl Simulator {
                 .iter()
                 .map(|j| (j.latency(), j.spec.slo_s, j.init_wait, j.bank_latency))
                 .collect(),
+            job_quality: st.jobs.iter().map(|j| j.quality).collect(),
+            mean_prompt_quality,
             sched_overhead_ms_mean: overhead.mean(),
             sched_overhead_ms_max: if overhead.n == 0 { 0.0 } else { overhead.max },
             rounds_executed: rounds,

@@ -33,9 +33,15 @@ use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
 use crate::coordinator::cold_alloc::{allocate_from_cold_pool_into, ColdPlan};
 use crate::coordinator::pools::WarmPool;
 use crate::coordinator::warm_alloc::{allocate_from_warm_pool_into, WarmAllocation};
-use crate::promptbank::BankModel;
+use crate::promptbank::{SimBankConfig, SimBankSet, TUNED_PROMPT_QUALITY};
 use crate::util::rng::Rng;
 use crate::workload::{Llm, N_LLM};
+
+/// Planning decisions between bank-pressure evaluations: the latency
+/// budget's deny rate over this many routed arrivals drives the §4.4.3
+/// bank shrink/grow step. Event-driven (arrivals, not wall-clock), so
+/// dense and coalesced runs evaluate at identical points.
+const BANK_PRESSURE_WINDOW: u32 = 16;
 
 /// Configuration (defaults = the full PromptTuner system of the paper).
 #[derive(Clone, Debug)]
@@ -58,11 +64,16 @@ pub struct PromptTunerConfig {
     pub use_latency_budget: bool,
     /// Fraction of the SLO budgeted for the bank (§4.4.3: 20 %).
     pub latency_budget_frac: f64,
-    /// Measured-behaviour model of the Prompt Bank.
-    pub bank: BankModel,
-    /// Conservative quality estimate used for completion-time prediction
-    /// before the bank has actually run.
-    pub est_bank_quality: f64,
+    /// The stateful per-LLM simulation bank (§4.3): real two-layer state,
+    /// coverage-driven quality, fed by completed jobs.
+    pub bank: SimBankConfig,
+    /// Elastic bank sizing (§4.4.3): when the latency budget keeps
+    /// denying lookups, shrink the bank ceiling (shorter lookups fit more
+    /// budgets); grow back toward the configured size once pressure
+    /// clears.
+    pub bank_autoscale: bool,
+    /// Floor of the autoscaled bank ceiling.
+    pub bank_min_size: usize,
     /// Per-job allocation cap.
     pub max_gpus_per_job: usize,
     pub seed: u64,
@@ -79,8 +90,9 @@ impl Default for PromptTunerConfig {
             use_delay_schedulable: true,
             use_latency_budget: true,
             latency_budget_frac: 0.2,
-            bank: BankModel::default(),
-            est_bank_quality: 0.85,
+            bank: SimBankConfig::default(),
+            bank_autoscale: true,
+            bank_min_size: 500,
             max_gpus_per_job: 8,
             seed: 1,
         }
@@ -108,12 +120,27 @@ impl Plan {
 pub struct PromptTuner {
     pub cfg: PromptTunerConfig,
     rng: Rng,
+    /// Stateful per-LLM Prompt Banks (consumed through the
+    /// `promptbank::Bank` trait): routing latency, deterministic
+    /// coverage-driven quality, and the completion-feedback edge.
+    banks: SimBankSet,
     /// Per-LLM pending queues, kept sorted by absolute deadline (ties in
     /// arrival order) — deadlines are static, so sorting once at arrival
     /// replaces the per-round sort.
     pending: [Vec<usize>; N_LLM],
     pools: [WarmPool; N_LLM],
     plans: Vec<Option<Plan>>,
+    /// Per-job bank-quality estimate, refreshed from live bank state at
+    /// the top of each round for the queued jobs (so Algorithms 1/2 read
+    /// an O(1) value instead of re-scanning the bank per candidate
+    /// allocation).
+    est_q: Vec<f64>,
+    /// Current autoscaled bank ceiling (≤ cfg.bank.max_size).
+    bank_ceiling: usize,
+    /// Latency-budget pressure counters since the last autoscale step
+    /// (arrival-driven — see [`BANK_PRESSURE_WINDOW`]).
+    bank_planned: u32,
+    bank_denied: u32,
     /// Cached Σ pools[l].total() — the warm GPUs currently drawn from the
     /// shared cold pool (kept incrementally; asserts against the pools in
     /// debug builds).
@@ -131,12 +158,19 @@ pub struct PromptTuner {
 impl PromptTuner {
     pub fn new(cfg: PromptTunerConfig) -> Self {
         let rng = Rng::new(cfg.seed);
+        let banks = SimBankSet::new(&cfg.bank, cfg.seed);
+        let bank_ceiling = cfg.bank.max_size;
         PromptTuner {
             cfg,
             rng,
+            banks,
             pending: Default::default(),
             pools: Default::default(),
             plans: vec![],
+            est_q: vec![],
+            bank_ceiling,
+            bank_planned: 0,
+            bank_denied: 0,
             warm_total: 0,
             needs_round: true,
             scratch_ids: vec![],
@@ -144,6 +178,11 @@ impl PromptTuner {
             scratch_warm: vec![],
             scratch_cold: vec![],
         }
+    }
+
+    /// Read access to the live bank state (tests/benches).
+    pub fn banks(&self) -> &SimBankSet {
+        &self.banks
     }
 
     fn plan(&self, job: usize) -> Plan {
@@ -178,15 +217,55 @@ impl PromptTuner {
         worst
     }
 
-    /// Realized prompt quality + bank latency at launch.
+    /// Realized prompt quality + bank latency at launch: the quality is
+    /// the bank's *current coverage* of the job's task — a deterministic
+    /// function of bank state (no draw), so completed jobs that fed
+    /// tuned prompts back demonstrably raise later launches' quality.
     fn realize_bank(&mut self, st: &ClusterState, job: usize) -> (f64, f64) {
-        let user = st.jobs[job].spec.user_prompt_quality;
+        let spec = &st.jobs[job].spec;
+        let user = spec.user_prompt_quality;
         let plan = self.plan(job);
         if plan.use_bank {
-            let q = self.cfg.bank.draw_quality(&mut self.rng).max(user);
+            let q = self.banks.quality_for(spec.llm, spec.task_id).max(user);
             (q, plan.bank_latency)
         } else {
             (user, 0.0)
+        }
+    }
+
+    /// Lookup latency this LLM would pay at the autoscale floor — the
+    /// best a shrink can achieve. Denials that exceed even this are
+    /// *hopeless* (the SLO is simply too tight for any bank) and must
+    /// not drive elasticity either way.
+    fn floor_latency(&self, llm: Llm) -> f64 {
+        let target = self.cfg.bank.max_size;
+        let floor = self.cfg.bank_min_size.min(target).max(1);
+        let k = self.cfg.bank.k.max(1);
+        (k + floor / k) as f64 * self.cfg.bank.eval_cost_s[llm.index()]
+    }
+
+    /// One §4.4.3 bank-elasticity step, taken every
+    /// [`BANK_PRESSURE_WINDOW`] routed arrivals: a majority of *fixable*
+    /// latency-budget denials shrinks the ceiling (evicting redundant
+    /// candidates ⇒ fewer evals ⇒ more SLOs fit the budget); a
+    /// mostly-clean window (≤ 25 % denials — hysteresis against
+    /// shrink/grow flapping) grows it back toward the configured size
+    /// (candidates return through completion feedback). Arrival-driven,
+    /// so coalesced and dense runs take identical steps.
+    fn bank_autoscale_step(&mut self) {
+        let denied = self.bank_denied;
+        let total = self.bank_planned.max(1);
+        self.bank_planned = 0;
+        self.bank_denied = 0;
+        let target = self.cfg.bank.max_size;
+        let floor = self.cfg.bank_min_size.min(target).max(1);
+        if 2 * denied >= total && self.bank_ceiling > floor {
+            self.bank_ceiling = (self.bank_ceiling * 3 / 4).max(floor);
+            self.banks.set_max_size_all(self.bank_ceiling);
+        } else if 4 * denied <= total && self.bank_ceiling < target {
+            self.bank_ceiling =
+                (self.bank_ceiling + (target / 4).max(1)).min(target);
+            self.banks.set_max_size_all(self.bank_ceiling);
         }
     }
 
@@ -283,14 +362,37 @@ impl Policy for PromptTuner {
     fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize) {
         while self.plans.len() <= job_id {
             self.plans.push(None);
+            self.est_q.push(0.0);
         }
         let spec = &st.jobs[job_id].spec;
-        let bank_latency = self.cfg.bank.lookup_latency(spec.llm);
+        // Routing reads the *live* bank: lookup latency follows the
+        // current two-layer shape (a cold bank is near-free to query, a
+        // shrunk one cheaper than a full one).
+        let bank_latency = self.banks.lookup_latency(spec.llm);
         let within_budget = bank_latency
             <= self.cfg.latency_budget_frac * spec.slo_s;
         let use_bank = self.cfg.use_bank
             && (!self.cfg.use_latency_budget || within_budget);
         self.plans[job_id] = Some(Plan { use_bank, bank_latency });
+        // §4.4.3 pressure tracking (only the budget can deny a lookup).
+        // Hopeless denials — SLOs too tight for even a floor-size bank —
+        // are excluded entirely: shrinking cannot rescue them, and they
+        // must not hold the ceiling down once real pressure clears.
+        if self.cfg.use_bank && self.cfg.use_latency_budget
+            && self.cfg.bank_autoscale
+        {
+            let budget = self.cfg.latency_budget_frac * spec.slo_s;
+            let fixable = self.floor_latency(spec.llm) <= budget;
+            if within_budget || fixable {
+                self.bank_planned += 1;
+                if !within_budget {
+                    self.bank_denied += 1;
+                }
+            }
+            if self.bank_planned >= BANK_PRESSURE_WINDOW {
+                self.bank_autoscale_step();
+            }
+        }
         // Sorted insert by deadline; equal deadlines keep arrival order
         // (matches the stable per-round sort this replaces).
         let li = spec.llm.index();
@@ -306,6 +408,7 @@ impl Policy for PromptTuner {
     fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
         let job = &st.jobs[job_id];
         let llm = job.spec.llm;
+        let task_id = job.spec.task_id;
         // the simulator has already zeroed job.gpus; recover from spec of
         // gpu_seconds bookkeeping
         let gpus = (job.gpu_seconds
@@ -316,6 +419,14 @@ impl Policy for PromptTuner {
         if !self.cfg.use_warm_pools {
             let drained = pool.drain_idle();
             self.warm_total -= drained;
+        }
+        // Feedback edge (Fig 5b): the completed job's tuned prompt flows
+        // back into its LLM's bank, raising subsequent lookup quality for
+        // this task (redundant candidates are evicted over the ceiling).
+        // Completion is a discrete event, executed identically under
+        // dense and coalesced ticking, so bank state stays bit-equal.
+        if self.cfg.use_bank {
+            self.banks.insert_tuned(llm, task_id, TUNED_PROMPT_QUALITY);
         }
         self.needs_round = true;
         self.update_billable(st);
@@ -383,18 +494,28 @@ impl Policy for PromptTuner {
             let mut ids = std::mem::take(&mut self.scratch_ids);
             ids.clear();
             ids.extend_from_slice(&self.pending[li][cut..]);
+            // Refresh the queued jobs' quality estimates from *live* bank
+            // state once per round (a deterministic coverage scan), so
+            // Algorithms 1/2 read an O(1) value however often they
+            // re-cost a job. Planning and launch agree by construction:
+            // both evaluate the same bank state.
+            for &j in ids.iter() {
+                let spec = &st.jobs[j].spec;
+                let user = spec.user_prompt_quality;
+                let q = if self.plans[j].expect("plan").use_bank {
+                    user.max(self.banks.quality_for(llm, spec.task_id))
+                } else {
+                    user
+                };
+                self.est_q[j] = q;
+            }
             let mut grants = std::mem::take(&mut self.scratch_warm);
             grants.clear();
             let warm_free = self.pools[li].free();
             {
                 let plans = &self.plans;
-                let est_bank_q = self.cfg.est_bank_quality;
+                let est_q = &self.est_q;
                 let st_ref: &ClusterState = st;
-                let est_quality = |j: usize| {
-                    let user = st_ref.jobs[j].spec.user_prompt_quality;
-                    let plan = plans[j].expect("plan must exist");
-                    if plan.use_bank { user.max(est_bank_q) } else { user }
-                };
                 allocate_from_warm_pool_into(
                     &ids,
                     warm_free,
@@ -404,7 +525,7 @@ impl Policy for PromptTuner {
                     |j, g| {
                         let bl = plans[j].expect("plan").bank_latency_if();
                         st_ref.estimate_completion(j, g, connect, bl,
-                                                   est_quality(j))
+                                                   est_q[j])
                     },
                     &mut grants,
                 );
@@ -435,7 +556,7 @@ impl Policy for PromptTuner {
                 cold_plans.clear();
                 {
                     let plans = &self.plans;
-                    let est_bank_q = self.cfg.est_bank_quality;
+                    let est_q = &self.est_q;
                     let st_ref: &ClusterState = st;
                     let exec_dur = |j: usize, g: usize| {
                         let job = &st_ref.jobs[j];
@@ -453,14 +574,8 @@ impl Policy for PromptTuner {
                                     * st_ref.eff_iter_time(llm, g);
                         }
                         let plan = plans[j].expect("plan must exist");
-                        let user = job.spec.user_prompt_quality;
-                        let q = if plan.use_bank {
-                            user.max(est_bank_q)
-                        } else {
-                            user
-                        };
                         plan.bank_latency_if()
-                            + job.spec.iters_at(q)
+                            + job.spec.iters_at(est_q[j])
                                 * st_ref.eff_iter_time(llm, g)
                     };
                     allocate_from_cold_pool_into(
@@ -656,6 +771,51 @@ mod tests {
         let b = run(PromptTunerConfig::default(), Load::Low, 17);
         assert_eq!(a.n_violations, b.n_violations);
         assert!((a.cost_usd - b.cost_usd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completion_feedback_warms_a_cold_bank() {
+        use crate::promptbank::SimBankConfig;
+        let perf = PerfModel::default();
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 20, ..Default::default() },
+            perf.clone(),
+        );
+        let jobs = gen.generate_main(Load::Low);
+        let first = (jobs[0].llm, jobs[0].task_id);
+        let sim = Simulator::new(SimConfig::default(), perf);
+        let mut policy = PromptTuner::new(PromptTunerConfig {
+            bank: SimBankConfig::cold(),
+            seed: 20,
+            ..Default::default()
+        });
+        let res = sim.run(&mut policy, jobs);
+        assert_eq!(res.n_done, res.n_jobs);
+        // every completion fed a tuned prompt back into its LLM's bank...
+        assert!(policy.banks().total_len() > 0, "cold bank never warmed");
+        // ...so a task that ran is now covered near the tuned ceiling
+        let q = policy.banks().quality_for(first.0, first.1);
+        assert!(q > 0.9, "bank not warmed for completed task: {q}");
+    }
+
+    #[test]
+    fn warm_bank_beats_cold_bank_on_quality() {
+        use crate::promptbank::SimBankConfig;
+        let warm = run(PromptTunerConfig::default(), Load::Medium, 21);
+        let cold = run(
+            PromptTunerConfig {
+                bank: SimBankConfig::cold(),
+                ..Default::default()
+            },
+            Load::Medium,
+            21,
+        );
+        assert!(warm.mean_prompt_quality > cold.mean_prompt_quality,
+                "warm {} vs cold {}",
+                warm.mean_prompt_quality, cold.mean_prompt_quality);
+        assert!(warm.n_violations <= cold.n_violations,
+                "warm {} vs cold {} violations",
+                warm.n_violations, cold.n_violations);
     }
 
     #[test]

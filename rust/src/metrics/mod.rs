@@ -132,6 +132,8 @@ mod tests {
             mean_utilization: 0.5,
             util_timeline: vec![],
             job_latencies: vec![],
+            job_quality: vec![],
+            mean_prompt_quality: 0.0,
             sched_overhead_ms_mean: 1.0,
             sched_overhead_ms_max: 2.0,
             rounds_executed: 0,

@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::promptbank::bankapi::{task_feature, Bank, COVERED_TASK_QUALITY};
 use crate::promptbank::kmedoid::{cosine_distance, kmedoids};
 use crate::util::rng::Rng;
 
@@ -169,6 +170,15 @@ impl TwoLayerBank {
         if self.prompts.len() > self.max_size {
             self.replace_within(best_c, idx);
         }
+        // replace_within is cluster-local and finds no victim when the
+        // receiving cluster holds nothing evictable (e.g. a singleton
+        // representative): fall back to the global eviction so the
+        // `len ≤ max_size` ceiling always holds.
+        while self.prompts.len() > self.max_size {
+            if !self.evict_most_redundant() {
+                break;
+            }
+        }
         idx
     }
 
@@ -265,6 +275,125 @@ impl TwoLayerBank {
             .iter()
             .map(|c| (c.medoid, c.members.as_slice()))
             .collect()
+    }
+
+    /// Evict the globally most redundant candidate: the non-representative
+    /// member closest to its own representative (maximizing remaining
+    /// diversity). When only lone representatives remain, the one nearest
+    /// to another representative is dissolved with its (empty) cluster,
+    /// so shrinking always makes progress. Returns false only when a
+    /// single candidate is left. (Kept in behavioral lockstep with
+    /// `SimBank::evict_redundant` — change both together.)
+    fn evict_most_redundant(&mut self) -> bool {
+        let mut victim: Option<usize> = None;
+        let mut victim_d = f32::INFINITY;
+        for cl in &self.clusters {
+            for &m in &cl.members {
+                if m == cl.medoid {
+                    continue;
+                }
+                let d = cosine_distance(&self.prompts[m].feature,
+                                        &self.prompts[cl.medoid].feature);
+                if d < victim_d {
+                    victim_d = d;
+                    victim = Some(m);
+                }
+            }
+        }
+        if let Some(v) = victim {
+            self.remove_candidate(v);
+            return true;
+        }
+        // Only lone representatives left: dissolve the most redundant.
+        if self.clusters.len() < 2 {
+            return false;
+        }
+        let mut victim_c = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (a, ca) in self.clusters.iter().enumerate() {
+            for cb in &self.clusters {
+                if ca.medoid == cb.medoid {
+                    continue;
+                }
+                let d = cosine_distance(&self.prompts[ca.medoid].feature,
+                                        &self.prompts[cb.medoid].feature);
+                if d < best_d {
+                    best_d = d;
+                    victim_c = a;
+                }
+            }
+        }
+        let m = self.clusters[victim_c].medoid;
+        self.clusters.remove(victim_c);
+        self.remove_candidate(m);
+        true
+    }
+}
+
+/// The serve plane's real bank behind the shared [`Bank`] interface.
+/// Real selection quality comes from Eqn.-1 scoring ([`TwoLayerBank::lookup`]
+/// with a [`Scorer`]); `quality_for` reports the structural-coverage
+/// estimate the trait's planning consumers need (does the bank hold
+/// candidates sourced from this task?), and `insert_tuned` synthesizes the
+/// tuned prompt's entry next to its task's existing candidates.
+impl Bank for TwoLayerBank {
+    fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    fn set_max_size(&mut self, max_size: usize) {
+        self.max_size = max_size.max(1);
+        while self.prompts.len() > self.max_size {
+            if !self.evict_most_redundant() {
+                break; // only representatives left
+            }
+        }
+    }
+
+    fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    fn lookup_evals(&self) -> usize {
+        if self.prompts.is_empty() {
+            return 0;
+        }
+        let k = self.clusters.len().max(1);
+        k + self.prompts.len() / k
+    }
+
+    fn quality_for(&self, task_id: usize) -> f64 {
+        let covered = self
+            .prompts
+            .iter()
+            .any(|p| p.source_task == Some(task_id));
+        if covered {
+            COVERED_TASK_QUALITY
+        } else {
+            0.0
+        }
+    }
+
+    fn insert_tuned(&mut self, task_id: usize, _quality: f64) {
+        // Place the tuned prompt's feature next to the task's existing
+        // candidates (same activation neighborhood); a never-seen task
+        // gets a deterministic synthetic direction.
+        let dims = self.prompts.first().map_or(8, |p| p.feature.len());
+        let feature = self
+            .prompts
+            .iter()
+            .find(|p| p.source_task == Some(task_id))
+            .map(|p| p.feature.clone())
+            .unwrap_or_else(|| task_feature(0x7A5C_FEA7, task_id, dims));
+        self.insert(PromptCandidate {
+            tokens: vec![task_id as i32],
+            feature,
+            source_task: Some(task_id),
+        });
     }
 }
 
@@ -461,6 +590,33 @@ mod tests {
                    "returned score mismatch")?;
             Ok(())
         });
+    }
+
+    #[test]
+    fn trait_feedback_and_shrink_keep_invariants() {
+        let mut rng = Rng::new(7);
+        let cands = make_candidates(&mut rng, 60, 6);
+        let mut bank = TwoLayerBank::build(cands, 6, 60, &mut rng).unwrap();
+        // structural coverage: a sourced task is covered, a novel one not
+        assert!(bank.quality_for(2) > 0.0);
+        assert_eq!(bank.quality_for(999), 0.0);
+        // feedback: the tuned prompt makes the novel task covered
+        bank.insert_tuned(999, 0.97);
+        assert!(bank.quality_for(999) > 0.0);
+        // elastic shrink evicts down to the ceiling, keeping the partition
+        bank.set_max_size(30);
+        assert!(bank.len() <= 30, "len {}", bank.len());
+        assert_eq!(bank.member_count(), bank.len());
+        assert!(bank.lookup_evals() > 0);
+        assert!(bank.lookup_evals() < 60);
+        // insertion after a deep shrink cannot leak past the ceiling,
+        // even when the receiving cluster has nothing cluster-local to
+        // evict (the global fallback must fire)
+        for t in 0usize..10 {
+            bank.insert_tuned(2000 + t, 0.97);
+            assert!(bank.len() <= 30, "ceiling leaked to {}", bank.len());
+            assert_eq!(bank.member_count(), bank.len());
+        }
     }
 
     #[test]

@@ -7,17 +7,28 @@
 //! the best cluster and scores its members — `K + C/K` score evaluations
 //! instead of `C` (paper: up to 40× cheaper at <10 % ITA loss).
 //!
-//! The bank is generic over a [`Scorer`] (paper Eqn. 1) so it runs both
-//! against the real PJRT runtime (`runtime::scorer`) and against synthetic
-//! scorers in tests/simulation.
+//! One stateful [`Bank`] interface (lookup cost, quality-for-task,
+//! insertion/replacement feedback, elastic sizing) is shared by every
+//! consumer:
+//! * [`TwoLayerBank`] — the serve plane's real bank: activation features
+//!   extracted by the base LLM, Eqn.-1 scoring through a [`Scorer`];
+//! * [`SimBank`] — the simulator's deterministic bank: synthetic
+//!   per-task features, coverage-driven quality, fed by completed jobs
+//!   (replacing the retired memoryless `BankModel` Beta stand-in);
+//! * [`InductionBank`] — the induction baseline [88] behind the same
+//!   interface (the LLM prompts itself; nothing shared, nothing learned).
 
 pub mod bank;
+pub mod bankapi;
 pub mod kmedoid;
 pub mod offline;
 pub mod simmodel;
 pub mod store;
 
 pub use bank::{LookupResult, PromptCandidate, Scorer, TwoLayerBank};
+pub use bankapi::{task_feature, Bank, COVERED_TASK_QUALITY,
+                  TUNED_PROMPT_QUALITY};
 pub use kmedoid::{cosine_distance, kmedoids};
 pub use offline::{build_bank, build_corpus};
-pub use simmodel::BankModel;
+pub use simmodel::{induction_quality, InductionBank, SimBank, SimBankConfig,
+                   SimBankSet, BANK_DIMS};

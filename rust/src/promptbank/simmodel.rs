@@ -1,92 +1,558 @@
-//! Simulation-facing Prompt Bank model.
+//! Simulation-facing Prompt Bank: real two-layer state per LLM.
 //!
-//! The scheduler experiments (Figs 7/8, Tables 7/8) run on the
-//! discrete-event simulator, where running a real PJRT lookup per
-//! simulated job would conflate simulated and wall-clock time. This model
-//! captures the bank's *measured* behaviour — lookup latency (paper §6.3:
-//! 5.3/6.1/9.2 s for the three LLMs at K = 50) and the quality of the
-//! selected prompt (Fig 9a: ≥90 % of ideal for most jobs) — with the
-//! latency scaling law of the two-layer structure (evals × per-eval cost).
+//! The scheduler experiments (Figs 7/8/14, Tables 7/8) run on the
+//! discrete-event simulator, where a real PJRT lookup per simulated job
+//! would conflate simulated and wall-clock time. Earlier revisions used a
+//! memoryless statistical stand-in (`BankModel`, a fixed Beta draw);
+//! [`SimBank`] replaces it with *actual bank state*: synthetic per-task
+//! feature vectors ([`task_feature`]), a maintained two-layer structure
+//! (cluster representatives + members, as in Fig 5), insertion of newly
+//! tuned prompts at job completion and redundancy-driven replacement —
+//! so a cold bank warms up over a run, lookup quality is a deterministic
+//! function of cluster coverage of the querying job's task, and both
+//! quality and lookup latency respond to bank-size changes dynamically
+//! (Fig 8d).
+//!
+//! Latency keeps the calibrated two-layer scaling law (evals × per-eval
+//! cost; paper §6.3: 5.3/6.1/9.2 s for the three LLMs at K = 50,
+//! C = 3000). Everything is bit-deterministic in the construction seed:
+//! no RNG is consumed at lookup or insertion time beyond counters hashed
+//! into jitter, so dense and coalesced simulator runs stay identical.
 
+use crate::promptbank::bankapi::{task_feature, Bank};
+use crate::promptbank::kmedoid::cosine_distance;
 use crate::util::rng::Rng;
 use crate::workload::Llm;
 
-/// Measured-behaviour model of the Prompt Bank for the simulator.
+/// Feature dimensionality of the synthetic task space.
+pub const BANK_DIMS: usize = 8;
+
+/// Cosine-distance radius inside which a candidate transfers to a query
+/// task (beyond it the candidate contributes nothing): same-task
+/// candidates sit at jitter distance (≈ full transfer); distinct random
+/// task directions sit near distance 1 (no transfer).
+const COVER_RADIUS: f32 = 0.35;
+
+/// A candidate further than this from every representative seeds a new
+/// cluster while fewer than K exist.
+const NEW_CLUSTER_DIST: f32 = 0.30;
+
+/// Per-dimension feature jitter of a stored candidate around its task's
+/// direction (keeps same-task candidates distinct but tightly clustered).
+const JITTER: f32 = 0.02;
+
+/// Configuration of the simulator-facing bank (one bank per LLM is built
+/// from this by [`SimBankSet::new`]).
 #[derive(Clone, Debug)]
-pub struct BankModel {
-    /// Candidate count C.
-    pub bank_size: usize,
-    /// Cluster count K.
+pub struct SimBankConfig {
+    /// Candidates seeded at construction (0 = cold start). The paper's
+    /// warm bank holds thousands of public prompts.
+    pub initial_size: usize,
+    /// Replacement ceiling C (paper default 3000).
+    pub max_size: usize,
+    /// Cluster count K (paper default 50).
     pub k: usize,
+    /// Task universe the *seeded corpus* draws from. Wider than any one
+    /// trace's task set: most public prompts are irrelevant to a given
+    /// job, so shrinking the bank visibly loses per-task coverage
+    /// (Fig 8d) instead of staying saturated.
+    pub corpus_tasks: usize,
     /// Seconds per Eqn.-1 score evaluation, per LLM (calibrated from the
-    /// real runtime; defaults reproduce the paper's 5.3–9.2 s at K=50,
-    /// C=3000).
-    pub eval_cost_s: [f64; 5],
-    /// Quality (fraction of ideal ITA performance) of the selected prompt:
-    /// Beta-distributed near 1 (Fig 9a: most candidates ≥ 0.9 of ideal).
-    pub quality_alpha: f64,
-    pub quality_beta: f64,
+    /// real runtime; defaults reproduce the paper's 5.3–9.2 s at K = 50,
+    /// C = 3000).
+    pub eval_cost_s: [f64; Llm::COUNT],
+    /// Build [`InductionBank`]s instead (the induction baseline [88]:
+    /// the LLM writes its own initial prompt, no shared state, nothing
+    /// learned) — same interface, for apples-to-apples ablations.
+    pub induction: bool,
 }
 
-impl Default for BankModel {
+impl Default for SimBankConfig {
     fn default() -> Self {
-        BankModel {
-            bank_size: 3000,
+        SimBankConfig {
+            initial_size: 3000,
+            max_size: 3000,
             k: 50,
+            corpus_tasks: 256,
             // 5.3 s / (50 + 3000/50) evals ≈ 48 ms per eval for gpt2-base…
             eval_cost_s: [0.048, 0.055, 0.084, 0.30, 0.12],
-            quality_alpha: 14.0,
-            quality_beta: 1.2,
+            induction: false,
         }
     }
 }
 
-impl BankModel {
-    /// Number of Eqn.-1 evaluations of a two-layer lookup: K + C/K.
-    pub fn lookup_evals(&self) -> usize {
-        self.k + self.bank_size / self.k.max(1)
+impl SimBankConfig {
+    /// A cold-start bank (empty until completed jobs feed it).
+    pub fn cold() -> Self {
+        SimBankConfig { initial_size: 0, ..Default::default() }
     }
+}
 
-    /// Lookup latency for one LLM (seconds).
-    pub fn lookup_latency(&self, llm: Llm) -> f64 {
-        self.lookup_evals() as f64 * self.eval_cost_s[llm.index()]
-    }
+/// One stored candidate: the task it originated from, its quality for
+/// that task, and its (jittered) synthetic activation feature.
+#[derive(Clone, Debug)]
+struct SimCandidate {
+    task_id: usize,
+    quality: f64,
+    feature: Vec<f32>,
+}
 
-    /// Draw the prompt quality produced by a bank lookup. Shrinking the
-    /// bank below ~3000 candidates loses coverage (paper Fig 8d): quality
-    /// degrades with the coverage ratio.
-    pub fn draw_quality(&self, rng: &mut Rng) -> f64 {
-        let q = rng.beta(self.quality_alpha, self.quality_beta);
-        let coverage = (self.bank_size as f64 / 3000.0).min(1.0).powf(0.35);
-        (q * coverage).clamp(0.0, 1.0)
-    }
+/// One cluster of the two-layer structure (representative + members;
+/// the representative is a member of its own cluster).
+#[derive(Clone, Debug)]
+struct SimCluster {
+    medoid: usize,
+    members: Vec<usize>,
+}
 
-    /// Quality of the *induction* baseline [88]: an LLM generating its own
-    /// initial prompt — quality tracks the base model's capability
-    /// (paper Fig 9b: weakest for GPT2-Base, best for Vicuna-7B).
-    pub fn draw_induction_quality(&self, llm: Llm, rng: &mut Rng) -> f64 {
-        let cap = match llm {
-            Llm::Gpt2B => 0.30,
-            Llm::Gpt2L => 0.45,
-            Llm::V7B => 0.62,
-            Llm::Llama30B => 0.68,
-            Llm::Qwen7BR1 => 0.66,
+/// Deterministic stateful bank for one LLM inside the simulator.
+#[derive(Clone, Debug)]
+pub struct SimBank {
+    feat_seed: u64,
+    k: usize,
+    max_size: usize,
+    cands: Vec<SimCandidate>,
+    clusters: Vec<SimCluster>,
+    /// Lifetime insertions (jitter stream position + telemetry).
+    inserted: u64,
+}
+
+impl SimBank {
+    /// Build the bank for `llm`, seeding `cfg.initial_size` corpus
+    /// candidates (0 = cold). Bit-deterministic in `seed`.
+    pub fn new(cfg: &SimBankConfig, llm: Llm, seed: u64) -> SimBank {
+        let mut bank = SimBank {
+            // Task features are a property of the task space, shared by
+            // every per-LLM bank of the run.
+            feat_seed: seed ^ 0x7A5C_FEA7_0000_0001,
+            k: cfg.k.max(1),
+            max_size: cfg.max_size.max(1),
+            cands: vec![],
+            clusters: vec![],
+            inserted: 0,
         };
-        (cap + 0.12 * rng.normal()).clamp(0.02, 0.95)
+        let mut rng = Rng::new(
+            seed ^ 0x5EED_BA4C_0000_0000
+                ^ (llm.index() as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let n = cfg.initial_size.min(cfg.max_size);
+        for _ in 0..n {
+            // Public corpus prompts: random tasks from the wide universe,
+            // decent but not tuned quality.
+            let task = rng.below(cfg.corpus_tasks.max(1));
+            let quality = rng.range_f64(0.55, 0.90);
+            bank.insert_candidate(task, quality);
+        }
+        bank
+    }
+
+    /// The synthetic activation feature of a task (any id is valid).
+    fn feature_of(&self, task_id: usize) -> Vec<f32> {
+        task_feature(self.feat_seed, task_id, BANK_DIMS)
+    }
+
+    /// Lifetime insertions (seeded + fed back).
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    /// Quality × coverage contribution of candidate `idx` at cosine
+    /// distance `d` from the query task's feature.
+    fn contrib(&self, idx: usize, d: f32) -> f64 {
+        let coverage = (1.0 - d / COVER_RADIUS).clamp(0.0, 1.0) as f64;
+        self.cands[idx].quality * coverage
+    }
+
+    /// Nearest representative to `feature`: (cluster index, distance).
+    fn nearest_cluster(&self, feature: &[f32]) -> Option<(usize, f32)> {
+        if self.clusters.is_empty() {
+            return None;
+        }
+        let mut best_c = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (c, cl) in self.clusters.iter().enumerate() {
+            let d = cosine_distance(&self.cands[cl.medoid].feature, feature);
+            if d < best_d {
+                best_d = d;
+                best_c = c;
+            }
+        }
+        Some((best_c, best_d))
+    }
+
+    /// Insert one candidate: attach to the nearest representative's
+    /// cluster (or seed a new cluster while fewer than K exist and the
+    /// candidate is far from all of them), then evict the most redundant
+    /// member if the ceiling is exceeded. Deterministic — the only
+    /// "randomness" is jitter hashed from the insertion counter.
+    fn insert_candidate(&mut self, task_id: usize, quality: f64) {
+        let mut feature = self.feature_of(task_id);
+        let mut jr = Rng::new(
+            self.feat_seed
+                ^ 0xA11C_E000_0000_0000
+                ^ self.inserted.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        for x in feature.iter_mut() {
+            *x += JITTER * jr.normal() as f32;
+        }
+        self.inserted += 1;
+        let idx = self.cands.len();
+        let nearest = self.nearest_cluster(&feature);
+        self.cands.push(SimCandidate {
+            task_id,
+            quality: quality.clamp(0.0, 1.0),
+            feature,
+        });
+        match nearest {
+            Some((c, d))
+                if self.clusters.len() >= self.k || d <= NEW_CLUSTER_DIST =>
+            {
+                self.clusters[c].members.push(idx);
+            }
+            _ => {
+                // New representative; re-home members so every candidate
+                // stays assigned to its nearest representative.
+                self.clusters
+                    .push(SimCluster { medoid: idx, members: vec![idx] });
+                self.reassign_members();
+            }
+        }
+        if self.cands.len() > self.max_size {
+            self.evict_redundant(idx);
+        }
+    }
+
+    /// Reassign every non-representative member to its nearest
+    /// representative (called when a new cluster is seeded).
+    fn reassign_members(&mut self) {
+        let medoids: Vec<usize> =
+            self.clusters.iter().map(|c| c.medoid).collect();
+        for cl in self.clusters.iter_mut() {
+            cl.members.clear();
+            cl.members.push(cl.medoid);
+        }
+        for i in 0..self.cands.len() {
+            if medoids.contains(&i) {
+                continue;
+            }
+            let mut best_c = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (c, &m) in medoids.iter().enumerate() {
+                let d = cosine_distance(&self.cands[i].feature,
+                                        &self.cands[m].feature);
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+            self.clusters[best_c].members.push(i);
+        }
+    }
+
+    /// Evict the most redundant candidate: the non-representative member
+    /// closest to its own representative (maximizing remaining
+    /// diversity), preferring any victim other than `keep`. When only
+    /// representatives remain (every cluster a singleton — possible when
+    /// the ceiling sits below the cluster count), the most redundant
+    /// *representative* (nearest to another one) is dissolved with its
+    /// cluster, so the `len ≤ max_size` invariant always makes progress.
+    fn evict_redundant(&mut self, keep: usize) {
+        let mut best: Option<usize> = None;
+        let mut best_d = f32::INFINITY;
+        let mut keep_only: Option<usize> = None;
+        for cl in &self.clusters {
+            for &m in &cl.members {
+                if m == cl.medoid {
+                    continue;
+                }
+                let d = cosine_distance(&self.cands[m].feature,
+                                        &self.cands[cl.medoid].feature);
+                if m == keep {
+                    keep_only = Some(m);
+                    continue;
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = Some(m);
+                }
+            }
+        }
+        if let Some(v) = best.or(keep_only) {
+            self.remove_candidate(v);
+            return;
+        }
+        // Only lone representatives left: dissolve the one nearest to
+        // another representative (its cluster has no members to re-home).
+        if self.clusters.len() < 2 {
+            return;
+        }
+        let mut victim_c = 0usize;
+        let mut victim_d = f32::INFINITY;
+        for (a, ca) in self.clusters.iter().enumerate() {
+            for cb in &self.clusters {
+                if ca.medoid == cb.medoid {
+                    continue;
+                }
+                let d = cosine_distance(&self.cands[ca.medoid].feature,
+                                        &self.cands[cb.medoid].feature);
+                if d < victim_d {
+                    victim_d = d;
+                    victim_c = a;
+                }
+            }
+        }
+        let m = self.clusters[victim_c].medoid;
+        self.clusters.remove(victim_c);
+        self.remove_candidate(m);
+    }
+
+    /// Remove a candidate by index (swap-remove with index fix-ups,
+    /// mirroring `TwoLayerBank::remove_candidate`).
+    fn remove_candidate(&mut self, idx: usize) {
+        let last = self.cands.len() - 1;
+        self.cands.swap_remove(idx);
+        for cl in self.clusters.iter_mut() {
+            cl.members.retain(|&m| m != idx);
+            for m in cl.members.iter_mut() {
+                if *m == last {
+                    *m = idx;
+                }
+            }
+            if cl.medoid == last {
+                cl.medoid = idx;
+            }
+        }
+    }
+
+    /// Total members across clusters (== len(); structural invariant).
+    pub fn member_count(&self) -> usize {
+        self.clusters.iter().map(|c| c.members.len()).sum()
+    }
+
+    /// (representative, members) view for invariant checks.
+    pub fn clusters_view(&self) -> Vec<(usize, &[usize])> {
+        self.clusters
+            .iter()
+            .map(|c| (c.medoid, c.members.as_slice()))
+            .collect()
+    }
+
+    /// Cosine distance between candidate `i`'s feature and candidate
+    /// `j`'s feature (test/invariant helper).
+    pub fn candidate_distance(&self, i: usize, j: usize) -> f32 {
+        cosine_distance(&self.cands[i].feature, &self.cands[j].feature)
+    }
+}
+
+impl Bank for SimBank {
+    fn len(&self) -> usize {
+        self.cands.len()
+    }
+
+    fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    fn set_max_size(&mut self, max_size: usize) {
+        self.max_size = max_size.max(1);
+        while self.cands.len() > self.max_size {
+            let before = self.cands.len();
+            self.evict_redundant(usize::MAX);
+            if self.cands.len() == before {
+                break; // single lone representative: nothing evictable
+            }
+        }
+    }
+
+    fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    fn lookup_evals(&self) -> usize {
+        if self.cands.is_empty() {
+            return 0;
+        }
+        let k = self.clusters.len().max(1);
+        k + self.cands.len() / k
+    }
+
+    /// Two-layer lookup quality (Fig 5a), deterministically from state:
+    /// score the K representatives against the task's feature, descend
+    /// into the nearest cluster, take the best quality × coverage over
+    /// everything evaluated. An empty bank covers nothing (0.0 — callers
+    /// floor at the user's own prompt quality).
+    fn quality_for(&self, task_id: usize) -> f64 {
+        if self.clusters.is_empty() {
+            return 0.0;
+        }
+        let f = self.feature_of(task_id);
+        let mut best_c = 0usize;
+        let mut best_d = f32::INFINITY;
+        let mut q = 0.0f64;
+        for (c, cl) in self.clusters.iter().enumerate() {
+            let d = cosine_distance(&self.cands[cl.medoid].feature, &f);
+            q = q.max(self.contrib(cl.medoid, d));
+            if d < best_d {
+                best_d = d;
+                best_c = c;
+            }
+        }
+        for &m in &self.clusters[best_c].members {
+            if m == self.clusters[best_c].medoid {
+                continue;
+            }
+            let d = cosine_distance(&self.cands[m].feature, &f);
+            q = q.max(self.contrib(m, d));
+        }
+        q
+    }
+
+    fn insert_tuned(&mut self, task_id: usize, quality: f64) {
+        self.insert_candidate(task_id, quality);
+    }
+}
+
+// ------------------------------------------------------ induction baseline
+
+/// The induction baseline [88] behind the same [`Bank`] interface: the
+/// base LLM writes its own initial prompt. No lookup cost, no shared
+/// state, nothing learned — quality is a fixed deterministic draw per
+/// (LLM, task) tracking the base model's capability (paper Fig 9b:
+/// weakest for GPT2-Base, best for Vicuna-7B).
+#[derive(Clone, Debug)]
+pub struct InductionBank {
+    llm: Llm,
+    seed: u64,
+}
+
+impl InductionBank {
+    pub fn new(llm: Llm, seed: u64) -> InductionBank {
+        InductionBank { llm, seed }
+    }
+}
+
+/// Deterministic induction-prompt quality for one (LLM, task, seed).
+pub fn induction_quality(llm: Llm, task_id: usize, seed: u64) -> f64 {
+    let cap = match llm {
+        Llm::Gpt2B => 0.30,
+        Llm::Gpt2L => 0.45,
+        Llm::V7B => 0.62,
+        Llm::Llama30B => 0.68,
+        Llm::Qwen7BR1 => 0.66,
+    };
+    let mut rng = Rng::new(
+        seed ^ 0x1BDC_7104_0000_0000
+            ^ (task_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ ((llm.index() as u64 + 1) << 56),
+    );
+    (cap + 0.12 * rng.normal()).clamp(0.02, 0.95)
+}
+
+impl Bank for InductionBank {
+    fn len(&self) -> usize {
+        0
+    }
+    fn max_size(&self) -> usize {
+        0
+    }
+    fn set_max_size(&mut self, _max_size: usize) {}
+    fn n_clusters(&self) -> usize {
+        0
+    }
+    fn lookup_evals(&self) -> usize {
+        0 // the model prompts itself: no bank scan, no added latency
+    }
+    fn quality_for(&self, task_id: usize) -> f64 {
+        induction_quality(self.llm, task_id, self.seed)
+    }
+    fn insert_tuned(&mut self, _task_id: usize, _quality: f64) {}
+}
+
+// ----------------------------------------------------------- per-LLM set
+
+/// The per-LLM bank set a policy owns: one [`Bank`] per LLM behind the
+/// trait, plus the calibrated per-eval cost that turns `lookup_evals`
+/// into lookup latency.
+pub struct SimBankSet {
+    banks: [Box<dyn Bank>; Llm::COUNT],
+    eval_cost_s: [f64; Llm::COUNT],
+}
+
+impl SimBankSet {
+    /// Build one bank per LLM (bit-deterministic in `seed`; an
+    /// `induction` config builds [`InductionBank`]s instead).
+    pub fn new(cfg: &SimBankConfig, seed: u64) -> SimBankSet {
+        let banks = Llm::ALL.map(|llm| -> Box<dyn Bank> {
+            if cfg.induction {
+                Box::new(InductionBank::new(llm, seed))
+            } else {
+                Box::new(SimBank::new(cfg, llm, seed))
+            }
+        });
+        SimBankSet { banks, eval_cost_s: cfg.eval_cost_s }
+    }
+
+    pub fn bank(&self, llm: Llm) -> &dyn Bank {
+        self.banks[llm.index()].as_ref()
+    }
+
+    pub fn bank_mut(&mut self, llm: Llm) -> &mut dyn Bank {
+        self.banks[llm.index()].as_mut()
+    }
+
+    /// Lookup latency for one LLM right now (seconds): evals of the
+    /// current two-layer structure × the calibrated per-eval cost.
+    pub fn lookup_latency(&self, llm: Llm) -> f64 {
+        self.bank(llm).lookup_evals() as f64 * self.eval_cost_s[llm.index()]
+    }
+
+    pub fn quality_for(&self, llm: Llm, task_id: usize) -> f64 {
+        self.bank(llm).quality_for(task_id)
+    }
+
+    pub fn insert_tuned(&mut self, llm: Llm, task_id: usize, quality: f64) {
+        self.bank_mut(llm).insert_tuned(task_id, quality);
+    }
+
+    /// Move every per-LLM ceiling (§4.4.3 shrink/grow under pressure).
+    pub fn set_max_size_all(&mut self, max_size: usize) {
+        for bank in self.banks.iter_mut() {
+            bank.set_max_size(max_size);
+        }
+    }
+
+    /// Total candidates across all per-LLM banks.
+    pub fn total_len(&self) -> usize {
+        self.banks.iter().map(|b| b.len()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, ensure};
+
+    fn warm(size: usize, seed: u64) -> SimBank {
+        let cfg = SimBankConfig {
+            initial_size: size,
+            max_size: size.max(1),
+            ..Default::default()
+        };
+        SimBank::new(&cfg, Llm::Gpt2B, seed)
+    }
+
+    /// Mean delivered quality over the default trace task range.
+    fn mean_quality(bank: &SimBank, tasks: usize) -> f64 {
+        (0..tasks).map(|t| bank.quality_for(t)).sum::<f64>() / tasks as f64
+    }
 
     #[test]
     fn default_latency_matches_paper_range() {
-        let m = BankModel::default();
+        let set = SimBankSet::new(&SimBankConfig::default(), 1);
         // paper §6.3: 5.3 s (GPT2-B), 6.1 s (GPT2-L), 9.2 s (V7B) at K=50
-        let lat_b = m.lookup_latency(Llm::Gpt2B);
-        let lat_l = m.lookup_latency(Llm::Gpt2L);
-        let lat_v = m.lookup_latency(Llm::V7B);
+        let lat_b = set.lookup_latency(Llm::Gpt2B);
+        let lat_l = set.lookup_latency(Llm::Gpt2L);
+        let lat_v = set.lookup_latency(Llm::V7B);
         assert!((4.5..6.5).contains(&lat_b), "{lat_b}");
         assert!((5.0..7.5).contains(&lat_l), "{lat_l}");
         assert!((8.0..10.5).contains(&lat_v), "{lat_v}");
@@ -95,64 +561,236 @@ mod tests {
 
     #[test]
     fn evals_follow_k_plus_c_over_k() {
-        let m = BankModel { bank_size: 3000, k: 50, ..Default::default() };
-        assert_eq!(m.lookup_evals(), 50 + 60);
-        let brute = BankModel { bank_size: 3000, k: 1, ..Default::default() };
-        // K=1 degenerates to brute force (paper: hours)
-        assert_eq!(brute.lookup_evals(), 1 + 3000);
-        assert!(brute.lookup_latency(Llm::Gpt2B) / m.lookup_latency(Llm::Gpt2B) > 20.0);
+        let bank = warm(3000, 2);
+        assert_eq!(bank.n_clusters(), 50, "clusters reach K");
+        assert_eq!(bank.lookup_evals(), 50 + 3000 / 50);
+        // an empty bank has nothing to scan
+        let cold = warm(0, 2);
+        assert_eq!(cold.lookup_evals(), 0);
+        assert_eq!(cold.quality_for(5), 0.0);
     }
 
     #[test]
-    fn bank_quality_beats_induction() {
-        let m = BankModel::default();
-        let mut rng = Rng::new(1);
-        let n = 2000;
-        let bank: f64 =
-            (0..n).map(|_| m.draw_quality(&mut rng)).sum::<f64>() / n as f64;
+    fn warm_bank_covers_trace_tasks() {
+        let bank = warm(3000, 3);
+        let mean = mean_quality(&bank, 64);
+        assert!(mean > 0.75, "warm coverage too weak: {mean}");
+    }
+
+    #[test]
+    fn smaller_bank_loses_coverage() {
+        // Fig 8d: shrinking the corpus loses per-task coverage.
+        let big = mean_quality(&warm(3000, 4), 64);
+        let small = mean_quality(&warm(150, 4), 64);
+        assert!(small < big - 0.05, "big {big} vs small {small}");
+    }
+
+    #[test]
+    fn shrinking_ceiling_evicts_and_cuts_lookup_cost() {
+        let mut bank = warm(3000, 5);
+        let evals_before = bank.lookup_evals();
+        let q_before = mean_quality(&bank, 64);
+        bank.set_max_size(500);
+        assert!(bank.len() <= 500, "len {}", bank.len());
+        assert_eq!(bank.member_count(), bank.len());
+        assert!(bank.lookup_evals() < evals_before,
+                "{} !< {evals_before}", bank.lookup_evals());
+        // eviction keeps the most diverse members, so quality degrades
+        // gracefully (never improves)
+        assert!(mean_quality(&bank, 64) <= q_before + 1e-9);
+    }
+
+    #[test]
+    fn cold_bank_warms_up_through_feedback() {
+        let mut bank = warm(0, 6);
+        let before = bank.quality_for(7);
+        assert_eq!(before, 0.0);
+        bank.insert_tuned(7, 0.97);
+        let after = bank.quality_for(7);
+        assert!(after > 0.9, "tuned insert did not raise quality: {after}");
+        // the neighbor task is a different random direction: no transfer
+        assert!(bank.quality_for(8) < 0.2);
+    }
+
+    #[test]
+    fn bank_beats_induction_on_covered_tasks() {
+        let bank = warm(3000, 8);
         for llm in Llm::MAIN {
-            let ind: f64 = (0..n)
-                .map(|_| m.draw_induction_quality(llm, &mut rng))
-                .sum::<f64>()
-                / n as f64;
-            assert!(bank > ind + 0.15, "{llm:?}: bank {bank} vs induction {ind}");
+            let ind = InductionBank::new(llm, 8);
+            let n = 64;
+            let bank_mean = mean_quality(&bank, n);
+            let ind_mean: f64 =
+                (0..n).map(|t| ind.quality_for(t)).sum::<f64>() / n as f64;
+            assert!(bank_mean > ind_mean + 0.1,
+                    "{llm:?}: bank {bank_mean} vs induction {ind_mean}");
         }
     }
 
     #[test]
     fn induction_tracks_model_capability() {
-        let m = BankModel::default();
-        let mut rng = Rng::new(2);
-        let n = 3000;
-        let mean = |llm| {
-            let mut r = Rng::new(2);
-            (0..n).map(|_| m.draw_induction_quality(llm, &mut r)).sum::<f64>() / n as f64
+        let mean = |llm| -> f64 {
+            let b = InductionBank::new(llm, 9);
+            (0..500).map(|t| b.quality_for(t)).sum::<f64>() / 500.0
         };
         assert!(mean(Llm::Gpt2B) < mean(Llm::Gpt2L));
         assert!(mean(Llm::Gpt2L) < mean(Llm::V7B));
-        let _ = &mut rng;
     }
 
     #[test]
-    fn smaller_bank_degrades_quality() {
-        let big = BankModel::default();
-        let small = BankModel { bank_size: 500, ..Default::default() };
-        let mean = |m: &BankModel| {
-            let mut r = Rng::new(3);
-            (0..2000).map(|_| m.draw_quality(&mut r)).sum::<f64>() / 2000.0
+    fn deterministic_per_seed_and_insert_sequence() {
+        let mk = || {
+            let mut b = warm(300, 11);
+            for t in [3usize, 70, 3, 900, 12] {
+                b.insert_tuned(t, 0.97);
+            }
+            b
         };
-        assert!(mean(&big) > mean(&small) + 0.1);
+        let a = mk();
+        let b = mk();
+        for t in 0..80 {
+            assert_eq!(a.quality_for(t).to_bits(), b.quality_for(t).to_bits());
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.lookup_evals(), b.lookup_evals());
+        // a different seed actually changes the bank
+        let c = warm(300, 12);
+        assert!((0..80).any(|t| {
+            a.quality_for(t).to_bits() != c.quality_for(t).to_bits()
+        }));
     }
 
     #[test]
-    fn qualities_in_unit_interval() {
-        let m = BankModel::default();
-        let mut rng = Rng::new(4);
-        for _ in 0..1000 {
-            let q = m.draw_quality(&mut rng);
-            assert!((0.0..=1.0).contains(&q));
-            let i = m.draw_induction_quality(Llm::V7B, &mut rng);
-            assert!((0.0..=1.0).contains(&i));
+    fn qualities_stay_in_unit_interval() {
+        let mut bank = warm(500, 13);
+        bank.insert_tuned(1 << 20, 5.0); // clamped
+        for t in 0..200 {
+            let q = bank.quality_for(t);
+            assert!((0.0..=1.0).contains(&q), "{q}");
         }
+    }
+
+    #[test]
+    fn ceiling_holds_even_when_k_exceeds_max_size() {
+        // Every insert of a mutually-distant task seeds a singleton
+        // cluster; with k > max_size the only evictable candidates are
+        // representatives, which must be dissolved rather than letting
+        // the bank exceed its ceiling.
+        let cfg = SimBankConfig {
+            initial_size: 0,
+            max_size: 2,
+            k: 50,
+            ..Default::default()
+        };
+        let mut bank = SimBank::new(&cfg, Llm::Gpt2B, 14);
+        for t in 0..6 {
+            bank.insert_tuned(t, 0.97);
+            assert!(bank.len() <= 2, "len {} after task {t}", bank.len());
+            assert_eq!(bank.member_count(), bank.len());
+        }
+        let mut shrunk = warm(3000, 14);
+        shrunk.set_max_size(10);
+        assert!(shrunk.len() <= 10, "len {}", shrunk.len());
+        assert_eq!(shrunk.member_count(), shrunk.len());
+    }
+
+    #[test]
+    fn prop_two_layer_invariants_under_insert_and_replacement() {
+        check("SimBank two-layer invariants", 20, |rng| {
+            let initial = rng.below(400);
+            let max = 20 + rng.below(400);
+            let cfg = SimBankConfig {
+                initial_size: initial,
+                max_size: max,
+                k: 1 + rng.below(30),
+                ..Default::default()
+            };
+            let mut bank = SimBank::new(&cfg, Llm::V7B, rng.next_u64());
+            for _ in 0..rng.below(120) {
+                bank.insert_tuned(rng.below(400), 0.5 + 0.5 * rng.f64());
+            }
+            ensure(bank.len() <= bank.max_size(), "size over ceiling")?;
+            ensure(bank.member_count() == bank.len(),
+                   format!("{} members vs {} candidates",
+                           bank.member_count(), bank.len()))?;
+            ensure(bank.n_clusters() <= cfg.k.max(1), "too many clusters")?;
+            // every index appears exactly once; medoid in own cluster;
+            // every member assigned to (one of) its nearest representatives
+            let view = bank.clusters_view();
+            let medoids: Vec<usize> = view.iter().map(|(m, _)| *m).collect();
+            let mut seen = vec![0usize; bank.len()];
+            for (medoid, members) in &view {
+                ensure(members.contains(medoid),
+                       "medoid missing from own cluster")?;
+                for &m in *members {
+                    ensure(m < bank.len(), "member out of range")?;
+                    seen[m] += 1;
+                    let mine = bank.candidate_distance(m, *medoid);
+                    for &other in &medoids {
+                        ensure(
+                            mine <= bank.candidate_distance(m, other) + 1e-5,
+                            format!("member {m} not at nearest medoid"),
+                        )?;
+                    }
+                }
+            }
+            ensure(seen.iter().all(|&c| c == 1), "index seen != once")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quality_monotone_in_task_coverage() {
+        // Feeding a tuned prompt for task t back never lowers the bank's
+        // delivered quality for t while capacity remains (the flywheel is
+        // monotone in coverage) — and with full clusters it strictly
+        // improves an uncovered task.
+        check("SimBank quality monotone under feedback", 20, |rng| {
+            let cfg = SimBankConfig {
+                initial_size: 50 + rng.below(200),
+                max_size: 5000,
+                ..Default::default()
+            };
+            let mut bank = SimBank::new(&cfg, Llm::Gpt2L, rng.next_u64());
+            for _ in 0..20 {
+                let t = rng.below(600);
+                let before = bank.quality_for(t);
+                bank.insert_tuned(t, 0.97);
+                let after = bank.quality_for(t);
+                ensure(after + 1e-9 >= before,
+                       format!("task {t}: {before} -> {after}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_quality_monotone_in_seeded_size() {
+        // Aggregate coverage grows with the seeded corpus.
+        for seed in [21u64, 22, 23] {
+            let m50 = mean_quality(&warm(50, seed), 64);
+            let m500 = mean_quality(&warm(500, seed), 64);
+            let m3000 = mean_quality(&warm(3000, seed), 64);
+            assert!(m50 <= m500 + 0.02, "seed {seed}: {m50} vs {m500}");
+            assert!(m500 <= m3000 + 0.02, "seed {seed}: {m500} vs {m3000}");
+            assert!(m3000 > m50 + 0.1, "seed {seed}: no coverage growth");
+        }
+    }
+
+    #[test]
+    fn bank_set_routes_per_llm_and_replacement_caps_growth() {
+        let cfg = SimBankConfig {
+            initial_size: 60,
+            max_size: 60,
+            ..Default::default()
+        };
+        let mut set = SimBankSet::new(&cfg, 31);
+        let before_v7b = set.bank(Llm::V7B).len();
+        for i in 0..40 {
+            set.insert_tuned(Llm::Gpt2B, i, 0.97);
+        }
+        // replacement holds the ceiling; the other LLM's bank is untouched
+        assert_eq!(set.bank(Llm::Gpt2B).len(), 60);
+        assert_eq!(set.bank(Llm::V7B).len(), before_v7b);
+        assert_eq!(set.total_len(), 60 * Llm::COUNT);
     }
 }

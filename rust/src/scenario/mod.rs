@@ -18,7 +18,12 @@
 //!   checkpoints) — see [`Scenario::fault_plan`];
 //! * **az-outage** — one correlated mass GPU failure mid-window (lost
 //!   work back to the last checkpoint) with straggler slowdowns in the
-//!   recovery wake.
+//!   recovery wake;
+//! * **task-drift** — novel tasks (ids from [`NOVEL_TASK_BASE`] up,
+//!   outside every bank's seeded corpus) take over the arrival stream
+//!   mid-run: a warm Prompt Bank's coverage dips cold for them and
+//!   recovers as completed jobs feed tuned prompts back — only
+//!   expressible with the stateful bank (`promptbank::SimBank`).
 //!
 //! The fault families pair a workload with a [`FaultPlan`]
 //! ([`Scenario::fault_plan`]); `bench::make_policy` wraps the policy in
@@ -45,6 +50,12 @@ use crate::workload::{JobSpec, Llm, PerfModel};
 /// Tenant SLO-emergence tiers (multi-tenant family): tenant t gets
 /// `TIERS[t % 4] × S` — premium (tight) through relaxed.
 pub const TENANT_TIERS: [f64; 4] = [0.5, 1.0, 1.5, 2.0];
+
+/// First task id of the task-drift family's novel range — safely beyond
+/// both the trace generator's default universe and the Prompt Bank's
+/// seeded corpus (`SimBankConfig::corpus_tasks`), so a warm bank holds no
+/// candidates for drifted tasks until completions feed them back.
+pub const NOVEL_TASK_BASE: usize = 4096;
 
 /// A named workload family with its parameters.
 #[derive(Clone, Debug)]
@@ -73,6 +84,12 @@ pub enum Scenario {
     /// the last checkpoint lost), repaired after `repair_s`, with
     /// straggler slowdowns in the recovery wake.
     AzOutage { outage_frac: f64, repair_s: f64, jobs_per_llm: usize },
+    /// Task drift: jobs arriving after `drift_at_frac` of the window
+    /// draw their task ids from a previously-unseen range of
+    /// `novel_tasks` tasks (starting at [`NOVEL_TASK_BASE`]), so a warm
+    /// bank goes cold for them mid-run and must recover through the
+    /// completion-feedback flywheel.
+    TaskDrift { drift_at_frac: f64, novel_tasks: usize, jobs_per_llm: usize },
 }
 
 impl Scenario {
@@ -88,6 +105,8 @@ impl Scenario {
                                    jobs_per_llm: 60 },
             Scenario::AzOutage { outage_frac: 0.5, repair_s: 300.0,
                                  jobs_per_llm: 60 },
+            Scenario::TaskDrift { drift_at_frac: 0.4, novel_tasks: 8,
+                                  jobs_per_llm: 60 },
         ]
     }
 
@@ -100,6 +119,7 @@ impl Scenario {
             Scenario::Replay { .. } => "replay",
             Scenario::SpotMarket { .. } => "spot-market",
             Scenario::AzOutage { .. } => "az-outage",
+            Scenario::TaskDrift { .. } => "task-drift",
         }
     }
 
@@ -119,7 +139,8 @@ impl Scenario {
             }
             Scenario::HeavyTail { .. }
             | Scenario::MultiTenant { .. }
-            | Scenario::AzOutage { .. } => Some(1200.0),
+            | Scenario::AzOutage { .. }
+            | Scenario::TaskDrift { .. } => Some(1200.0),
             Scenario::Replay { .. } => None,
         }
     }
@@ -144,7 +165,8 @@ impl Scenario {
             | Scenario::FlashCrowd { jobs_per_llm, .. }
             | Scenario::HeavyTail { jobs_per_llm, .. }
             | Scenario::SpotMarket { jobs_per_llm, .. }
-            | Scenario::AzOutage { jobs_per_llm, .. } => {
+            | Scenario::AzOutage { jobs_per_llm, .. }
+            | Scenario::TaskDrift { jobs_per_llm, .. } => {
                 Some(jobs_per_llm * Llm::MAIN.len())
             }
             Scenario::MultiTenant { tenants, jobs_per_tenant } => {
@@ -283,6 +305,29 @@ impl Scenario {
                 Ok(jobs)
             }
             Scenario::Replay { path } => replay::load(path),
+            Scenario::TaskDrift { drift_at_frac, novel_tasks, jobs_per_llm } => {
+                // The paper's spiky arrival shape; after the drift point
+                // the stream switches to never-before-seen tasks, drawn
+                // deterministically over the finalized (submit-sorted)
+                // order so the remap is bit-stable.
+                let window_s = self.window_s().unwrap();
+                let mut gen =
+                    TraceGenerator::new(base_cfg(window_s), PerfModel::default());
+                let mut jobs = vec![];
+                for llm in Llm::MAIN {
+                    jobs.extend(gen.generate_for(llm, *jobs_per_llm));
+                }
+                TraceGenerator::finalize(&mut jobs);
+                let drift_at = window_s * drift_at_frac.clamp(0.0, 1.0);
+                let n = (*novel_tasks).max(1);
+                let mut drift_rng = Rng::new(seed ^ 0xD41F_7D41_F7D4_1F70);
+                for j in jobs.iter_mut() {
+                    if j.submit_s >= drift_at {
+                        j.task_id = NOVEL_TASK_BASE + drift_rng.below(n);
+                    }
+                }
+                Ok(jobs)
+            }
             Scenario::SpotMarket { jobs_per_llm, .. }
             | Scenario::AzOutage { jobs_per_llm, .. } => {
                 // The workload itself is the paper's spiky arrival shape;
@@ -323,11 +368,11 @@ mod tests {
     #[test]
     fn catalogue_names_are_unique_and_resolvable() {
         let cat = Scenario::catalogue();
-        assert_eq!(cat.len(), 6);
+        assert_eq!(cat.len(), 7);
         let mut names: Vec<&str> = cat.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 6);
+        assert_eq!(names.len(), 7);
         for s in &cat {
             assert!(Scenario::from_name(s.name()).is_some(), "{}", s.name());
         }
@@ -427,6 +472,39 @@ mod tests {
         assert!(max <= 900.0 + 1e-9);
         let min = jobs.iter().map(|j| j.duration_s).fold(f64::MAX, f64::min);
         assert!(min >= 5.0 - 1e-9);
+    }
+
+    #[test]
+    fn task_drift_switches_to_novel_tasks_mid_run() {
+        let sc = Scenario::TaskDrift {
+            drift_at_frac: 0.4,
+            novel_tasks: 8,
+            jobs_per_llm: 60,
+        };
+        let jobs = sc.generate(19, 1.0).unwrap();
+        let drift_at = sc.window_s().unwrap() * 0.4;
+        let mut pre = 0usize;
+        let mut post = 0usize;
+        let mut novel_seen = std::collections::BTreeSet::new();
+        for j in &jobs {
+            if j.submit_s >= drift_at {
+                post += 1;
+                assert!(j.task_id >= NOVEL_TASK_BASE,
+                        "post-drift job {} kept old task {}", j.id, j.task_id);
+                assert!(j.task_id < NOVEL_TASK_BASE + 8);
+                novel_seen.insert(j.task_id);
+            } else {
+                pre += 1;
+                assert!(j.task_id < NOVEL_TASK_BASE,
+                        "pre-drift job {} has novel task {}", j.id, j.task_id);
+            }
+        }
+        // both regimes are populated, and the novel range is exercised
+        assert!(pre > 20 && post > 20, "pre {pre} post {post}");
+        assert!(novel_seen.len() >= 4, "novel tasks {novel_seen:?}");
+        // drifted jobs repeat novel tasks (the recovery flywheel needs
+        // same-task repeats within each LLM's bank)
+        assert!(post > novel_seen.len() * 3);
     }
 
     #[test]

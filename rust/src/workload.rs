@@ -26,11 +26,17 @@ pub enum Llm {
 }
 
 /// Number of LLM variants (dense [`Llm::index`] range), for array-indexed
-/// per-LLM state.
-pub const N_LLM: usize = 5;
+/// per-LLM state. Alias of [`Llm::COUNT`], kept for existing call sites.
+pub const N_LLM: usize = Llm::COUNT;
 
 impl Llm {
-    pub const ALL: [Llm; N_LLM] =
+    /// Number of variants. Every per-LLM lookup table in the crate is
+    /// sized `[T; Llm::COUNT]`, so adding a variant (which forces this
+    /// constant and the `index` match to grow) fails to compile at each
+    /// stale table instead of panicking at runtime on the new index.
+    pub const COUNT: usize = 5;
+
+    pub const ALL: [Llm; Llm::COUNT] =
         [Llm::Gpt2B, Llm::Gpt2L, Llm::V7B, Llm::Llama30B, Llm::Qwen7BR1];
 
     /// The three LLMs of the paper's main end-to-end experiments (Fig 7/8).
@@ -91,10 +97,10 @@ impl Llm {
 #[derive(Clone, Debug)]
 pub struct PerfModel {
     /// Seconds per tuning iteration on one replica (indexed by Llm).
-    pub iter_time_1: [f64; 5],
+    pub iter_time_1: [f64; Llm::COUNT],
     /// Cold allocation overhead: container + framework + GPU runtime +
     /// weight load (37–41 % of mean exec time per Fig 2a).
-    pub cold_start_s: [f64; 5],
+    pub cold_start_s: [f64; Llm::COUNT],
     /// Warm allocation: rendezvous/IP-connect per multi-GPU group (§5.1).
     pub warm_connect_s: f64,
     /// Synchronous-communication overhead fraction per extra replica
@@ -196,11 +202,12 @@ mod tests {
 
     #[test]
     fn indices_are_dense_and_unique() {
-        let mut seen = [false; 5];
+        let mut seen = [false; Llm::COUNT];
         for llm in Llm::ALL {
             assert!(!seen[llm.index()]);
             seen[llm.index()] = true;
         }
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

@@ -137,9 +137,18 @@ fn prop_tick_coalescing_matches_dense_reference() {
         let gpus = 16 + 16 * rng.below(2); // 16 or 32
         let load = [Load::Medium, Load::High][rng.below(2)];
         // rotate the workload family with the case index: 8 cases cover
-        // paper/flash-crowd/heavy-tail twice each, and the case%4==3
-        // slot alternates the two fault families (once each per run)
+        // paper/flash-crowd/heavy-tail and the stateful-bank task-drift
+        // family, and the case%4==3 slot alternates the two fault
+        // families (once each per run)
         let scenario: Option<Scenario> = match case % 4 {
+            // the second case%4==0 slot exercises mid-run bank mutation
+            // (novel-task insertions at completion events) under the
+            // dense-vs-coalesced bit-equality check
+            0 if case >= 4 => Some(Scenario::TaskDrift {
+                drift_at_frac: 0.4,
+                novel_tasks: 8,
+                jobs_per_llm: 40,
+            }),
             1 => Some(Scenario::FlashCrowd {
                 storms: 2,
                 intensity: 20.0,

@@ -29,7 +29,8 @@ REQUIRED_TOP = ["suite", "created_unix", "total_wall_s", "cells"]
 REQUIRED_CELL = [
     "label", "system", "gpus", "seed", "load", "slo", "scale", "wall_s",
     "rounds_executed", "rounds_coalesced", "ticks_per_s", "n_jobs",
-    "n_done", "n_violations", "cost_usd", "mean_utilization",
+    "n_done", "n_violations", "cost_usd", "mean_quality",
+    "mean_utilization",
 ]
 
 EXIT_FAIL = 1
@@ -81,6 +82,8 @@ def load_record(path: str) -> dict:
         check_slo(path, rec)
     if suite == "faults":
         check_faults(path, rec)
+    if suite == "bank":
+        check_bank(path, rec)
     return rec
 
 
@@ -88,7 +91,7 @@ def load_record(path: str) -> dict:
 # systems that must each run every family).
 SCENARIO_FAMILIES = {
     "diurnal", "flash-crowd", "heavy-tail", "multi-tenant", "replay",
-    "spot-market", "az-outage",
+    "spot-market", "az-outage", "task-drift",
 }
 SCENARIO_SYSTEMS = {"prompttuner", "infless", "elasticflow"}
 
@@ -229,6 +232,70 @@ def check_faults(path: str, rec: dict) -> None:
     print(f"check_bench: faults suite covers {sorted(seen)} x "
           f"{sorted(SCENARIO_SYSTEMS)}, "
           f"{total_revocations} total revocations")
+
+
+# The Prompt-Bank state sweep (fig14) must cover these bank regimes
+# under every system.
+BANK_STATES = {"cold", "warm", "drifting"}
+
+
+def check_bank(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_bank.json: every cell's label names a
+    bank state (fig14/<state>), coverage spans states x systems, no cell
+    strands jobs, and the warm-bank PromptTuner run beats the cold-bank
+    one on SLO attainment and realized prompt quality — the stateful
+    bank's reason to exist (a memoryless bank model cannot distinguish
+    the regimes at all)."""
+    seen = {}
+    for i, cell in enumerate(rec["cells"]):
+        where = cell_name("bank", i, cell)
+        parts = cell.get("label", "").split("/")
+        state = parts[1] if len(parts) > 1 else ""
+        if state not in BANK_STATES:
+            fail(f"{path}: {where} label names no bank state "
+                 f"(want fig14/<{'|'.join(sorted(BANK_STATES))}>)")
+        if cell["n_jobs"] <= 0:
+            fail(f"{path}: {where} ({state}) ran no jobs")
+        if cell["n_done"] != cell["n_jobs"]:
+            fail(f"{path}: {where} ({state}) stranded jobs "
+                 f"({cell['n_done']}/{cell['n_jobs']} done)")
+        if not 0.0 <= cell["mean_quality"] <= 1.0:
+            fail(f"{path}: {where} mean_quality {cell['mean_quality']} "
+                 f"outside [0, 1]")
+        seen.setdefault(state, set()).add(cell["system"])
+    missing = BANK_STATES - set(seen)
+    if missing:
+        fail(f"{path}: bank states missing from the sweep: "
+             f"{sorted(missing)}")
+    for state, systems in sorted(seen.items()):
+        lacking = SCENARIO_SYSTEMS - systems
+        if lacking:
+            fail(f"{path}: bank state '{state}' missing systems: "
+                 f"{sorted(lacking)}")
+
+    def pick(state: str) -> dict:
+        for cell in rec["cells"]:
+            if (cell["label"].split("/")[1] == state
+                    and cell["system"] == "prompttuner"):
+                return cell
+        fail(f"{path}: no prompttuner cell for bank state '{state}'")
+
+    warm, cold = pick("warm"), pick("cold")
+    warm_viol = warm["n_violations"] / max(warm["n_jobs"], 1)
+    cold_viol = cold["n_violations"] / max(cold["n_jobs"], 1)
+    print(f"check_bench: bank prompttuner warm vs cold: violations "
+          f"{warm_viol:.3f} vs {cold_viol:.3f}, quality "
+          f"{warm['mean_quality']:.3f} vs {cold['mean_quality']:.3f}")
+    if warm_viol > cold_viol:
+        fail(f"{path}: warm-bank prompttuner violates more SLOs than "
+             f"cold-bank ({warm_viol:.3f} vs {cold_viol:.3f}) — warm "
+             f"coverage must not hurt attainment")
+    if warm["mean_quality"] <= cold["mean_quality"]:
+        fail(f"{path}: warm-bank prompttuner quality "
+             f"{warm['mean_quality']:.3f} does not beat cold-bank "
+             f"{cold['mean_quality']:.3f}")
+    print(f"check_bench: bank suite covers {sorted(seen)} x "
+          f"{sorted(SCENARIO_SYSTEMS)}")
 
 
 def cell_key(cell: dict) -> tuple:

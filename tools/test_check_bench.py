@@ -35,7 +35,7 @@ def make_cell(**over):
         "rounds_executed": 100, "rounds_coalesced": 50,
         "ticks_per_s": 200.0, "revocations": 0, "lost_iters": 0.0,
         "n_jobs": 10, "n_done": 10, "n_violations": 1,
-        "cost_usd": 5.0, "mean_utilization": 0.8,
+        "cost_usd": 5.0, "mean_quality": 0.85, "mean_utilization": 0.8,
         "sched_overhead_ms_mean": 0.1, "sched_overhead_ms_max": 0.4,
     }
     cell.update(over)
@@ -71,6 +71,18 @@ def faults_cells(revocations=3, n_done=None):
                 label=f"fig13/{scenario}", system=system, scenario=scenario,
                 revocations=revocations, lost_iters=12.5,
                 n_done=10 if n_done is None else n_done,
+            ))
+    return cells
+
+
+def bank_cells(warm_q=0.9, cold_q=0.6, warm_viol=1, cold_viol=3):
+    cells = []
+    for state in ("cold", "warm", "drifting"):
+        for system in ("prompttuner", "infless", "elasticflow"):
+            cells.append(make_cell(
+                label=f"fig14/{state}", system=system,
+                mean_quality=cold_q if state == "cold" else warm_q,
+                n_violations=cold_viol if state == "cold" else warm_viol,
             ))
     return cells
 
@@ -206,6 +218,58 @@ def test_faults_suite_requires_fault_telemetry(tmp):
     r = run_check(path)
     assert r.returncode == 1, (r.returncode, r.stderr)
     assert "revocations" in r.stderr
+
+
+def test_bank_suite_passes_when_covered(tmp):
+    path = write_tmp(tmp, "b.json",
+                     make_record(suite="bank", cells=bank_cells()))
+    r = run_check(path)
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "bank suite covers" in r.stdout
+
+
+def test_bank_suite_requires_full_coverage(tmp):
+    cells = [c for c in bank_cells() if not c["label"].endswith("/cold")]
+    path = write_tmp(tmp, "b.json", make_record(suite="bank", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "cold" in r.stderr
+
+
+def test_bank_suite_rejects_warm_not_beating_cold(tmp):
+    path = write_tmp(tmp, "b.json",
+                     make_record(suite="bank",
+                                 cells=bank_cells(warm_q=0.5, cold_q=0.6)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "does not beat cold-bank" in r.stderr
+
+
+def test_bank_suite_rejects_warm_violating_more(tmp):
+    path = write_tmp(tmp, "b.json",
+                     make_record(suite="bank",
+                                 cells=bank_cells(warm_viol=5, cold_viol=1)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "warm coverage must not hurt attainment" in r.stderr
+
+
+def test_bank_suite_rejects_stranded_jobs(tmp):
+    cells = bank_cells()
+    cells[0]["n_done"] = cells[0]["n_jobs"] - 1
+    path = write_tmp(tmp, "b.json", make_record(suite="bank", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "stranded" in r.stderr
+
+
+def test_missing_mean_quality_names_the_cell(tmp):
+    cell = make_cell()
+    del cell["mean_quality"]
+    path = write_tmp(tmp, "mq.json", make_record(cells=[cell]))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "mean_quality" in r.stderr
 
 
 def main():
