@@ -1,0 +1,94 @@
+//! Fig 15 (beyond the paper) — the chaos & latency-realism sweep: SLO
+//! violation and cost of all three systems under continuous misbehavior,
+//! on the paper's 32-GPU cluster.
+//!
+//! Three chaos families from the scenario engine
+//! (`fault::ChaosProfile` presets):
+//! * **chaos-latency** — heavy launch/bank latency tails, no failures:
+//!   30 % of launches stretch up to 4×, 30 % of bank lookups up to 3×;
+//! * **chaos-flaky** — mild tails plus failed completions: 12 % of
+//!   finishing runs are rejected and re-enter the queue with half their
+//!   work redone, a 2-retry budget and 15 s ×2 exponential backoff;
+//! * **chaos-storm** — flaky completions while three rolling hard
+//!   failures each fan out to a whole rack of the 4-domain topology.
+//!
+//! Every cell runs through `fault::FaultInjector` with a
+//! `fault::ChaosEngine` (the bench harness wraps automatically for chaos
+//! scenarios). Emits a BENCH_chaos.json perf record; tools/check_bench.py
+//! validates family × system coverage, that the profiles actually fired
+//! (retries under flaky/storm, revocations under storm), that every
+//! retried job still completed, and that attainment stays above the
+//! per-profile floors. Run with PT_SIM_ORACLE=1 (CI does) to audit every
+//! round — including the chaos invariants (retry conservation, backoff
+//! monotonicity, no billable capacity inside a dead domain) — under the
+//! strict in-loop oracle.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::fault::ChaosKind;
+use prompttuner::metrics::{render_table, Row};
+use prompttuner::scenario::Scenario;
+
+fn main() {
+    let seed = 41u64;
+    let gpus = 32;
+
+    let scenarios: Vec<Scenario> = ChaosKind::ALL
+        .into_iter()
+        .map(|kind| Scenario::Chaos { kind, jobs_per_llm: 60 })
+        .collect();
+
+    let mut cells = vec![];
+    for sc in &scenarios {
+        for system in SYSTEMS {
+            cells.push(SweepCell::scenario(
+                format!("fig15/{}", sc.name()), system, sc.clone(), 1.0,
+                gpus, seed));
+        }
+    }
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    for sc in &scenarios {
+        let label = format!("fig15/{}", sc.name());
+        let rows: Vec<Row> = results
+            .iter()
+            .filter(|r| r.cell.label == label)
+            .map(|r| Row::from(&r.result))
+            .collect();
+        let jobs = results
+            .iter()
+            .find(|r| r.cell.label == label)
+            .map_or(0, |r| r.result.n_jobs);
+        print!("\n{}", render_table(
+            &format!("Fig 15 — {} ({jobs} jobs, {gpus} GPUs, S = 1.0)",
+                     sc.name()),
+            &rows));
+        for r in results.iter().filter(|r| r.cell.label == label) {
+            println!(
+                "  {:<14} {} retries, {:.1} retry iters, \
+                 {:.1}s chaos delay, {} revocations",
+                r.cell.system,
+                r.result.retries,
+                r.result.retry_iters,
+                r.result.chaos_delay_s,
+                r.result.revocations,
+            );
+        }
+    }
+
+    let report = BenchReport::new("chaos", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!(
+            "\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+            report.cells.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+}

@@ -11,7 +11,8 @@
 //!   full cold start (framework + weights load).
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
+use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
+                     RevokeEvent, Wake};
 use crate::promptbank::SimBankSet;
 use crate::workload::Llm;
 
@@ -53,6 +54,11 @@ pub struct ElasticFlow {
     /// Last elastic-rescale time per job (throttles the frequent
     /// reallocation the training scheduler performs, §3.1).
     last_rescale: Vec<f64>,
+    /// Failed runs held back until their retry backoff expires:
+    /// (not_before, job). Requeued deadline-sorted by `on_tick`; the
+    /// earliest entry is declared through `next_timed_action` so
+    /// coalesced runs wake exactly when a backoff expires.
+    retry_holdback: Vec<(f64, usize)>,
     /// State changed since the last round — the next round must run
     /// densely before idle-round coalescing may resume.
     needs_round: bool,
@@ -72,6 +78,7 @@ impl ElasticFlow {
             plans: vec![],
             started: false,
             last_rescale: vec![],
+            retry_holdback: vec![],
             needs_round: true,
             scratch_ids: vec![],
             scratch_rank: vec![],
@@ -300,6 +307,17 @@ impl Policy for ElasticFlow {
         let _ = st;
     }
 
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        // The attempt's GPUs return to the fixed cluster's free capacity
+        // — the hardware is fine, only the tuning result was rejected.
+        // No bank feedback: the failed run produced no usable prompt.
+        self.busy_gpus = self.busy_gpus.saturating_sub(ev.gpus);
+        // Hold the job back until its backoff expires, then requeue.
+        self.retry_holdback.push((ev.not_before, ev.job_id));
+        self.needs_round = true;
+        let _ = st;
+    }
+
     fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
         for v in &ev.victims {
             // The victim's whole allocation returns to the fixed
@@ -320,10 +338,31 @@ impl Policy for ElasticFlow {
     }
 
     fn on_tick(&mut self, st: &mut ClusterState) {
+        let now = st.now();
         // earliest-deadline-first admission (queue kept deadline-sorted
         // at arrival; launched jobs leave it through one status-based
         // compaction pass instead of one retain per launch)
         let mut changed = false;
+        // release held-back retries whose backoff expired (deadline-
+        // sorted requeue, like arrival/revocation)
+        if !self.retry_holdback.is_empty() {
+            let mut i = 0;
+            while i < self.retry_holdback.len() {
+                let (t, j) = self.retry_holdback[i];
+                if t <= now {
+                    self.retry_holdback.swap_remove(i);
+                    let dl = st.jobs[j].spec.deadline();
+                    let st_ref: &ClusterState = st;
+                    let pos = self.pending.partition_point(|&k| {
+                        st_ref.jobs[k].spec.deadline() <= dl
+                    });
+                    self.pending.insert(pos, j);
+                    changed = true;
+                } else {
+                    i += 1;
+                }
+            }
+        }
         let mut i = 0;
         while i < self.pending.len() {
             let job = self.pending[i];
@@ -349,10 +388,20 @@ impl Policy for ElasticFlow {
         if !self.pending.is_empty() {
             return Wake::Dense;
         }
+        // A held-back retry re-enters the queue at its backoff expiry —
+        // even on a fully busy cluster, so the requeue order (and hence
+        // coalesced/dense bit-equality) does not depend on when capacity
+        // next frees up.
+        let mut next = f64::INFINITY;
+        for &(t, _) in &self.retry_holdback {
+            if t < next {
+                next = t;
+            }
+        }
         if self.free() == 0 {
             // No admission, rescale or growth without free capacity;
             // capacity only returns through a completion event.
-            return Wake::Idle;
+            return if next.is_finite() { Wake::At(next) } else { Wake::Idle };
         }
         // Free capacity, empty queue, and the round that just ran proved
         // itself a no-op: rescale decisions are monotone in time (a plan
@@ -360,7 +409,6 @@ impl Policy for ElasticFlow {
         // action is greedy growth currently suppressed by the 60 s
         // rescale window.
         let now = st.now();
-        let mut next = f64::INFINITY;
         for llm in Llm::ALL {
             let replica = llm.gpus_per_replica();
             for &i in st.active_jobs(llm) {

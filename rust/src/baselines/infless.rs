@@ -11,7 +11,8 @@
 //!   schedule, no cross-LLM GPU sharing, no delay-based planning.
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
+use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
+                     RevokeEvent, Wake};
 use crate::coordinator::pools::WarmPool;
 use crate::promptbank::SimBankSet;
 use crate::util::rng::Rng;
@@ -71,6 +72,11 @@ pub struct Infless {
     /// Instances currently cold-starting for the pre-warm pool:
     /// (ready_time, llm index).
     warming: Vec<(f64, usize)>,
+    /// Failed runs held back until their retry backoff expires:
+    /// (not_before, job). Re-delivered FCFS by `on_tick`; the earliest
+    /// entry is declared through `next_timed_action` so coalesced runs
+    /// wake exactly when a backoff expires.
+    retry_holdback: Vec<(f64, usize)>,
     /// State changed since the last round — the next round must run
     /// densely before idle-round coalescing may resume.
     needs_round: bool,
@@ -92,6 +98,7 @@ impl Infless {
             plans: vec![],
             arrivals: Default::default(),
             warming: vec![],
+            retry_holdback: vec![],
             needs_round: true,
             scratch_ready: vec![],
         }
@@ -197,6 +204,18 @@ impl Policy for Infless {
         self.update_billable(st);
     }
 
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        // The attempt's instances return to keep-alive — the hardware is
+        // fine, only the tuning result was rejected. No bank feedback:
+        // the failed run produced no usable tuned prompt.
+        let li = st.jobs[ev.job_id].spec.llm.index();
+        self.pools[li].release(ev.gpus, st.now());
+        // Hold the job back until its backoff expires, then re-deliver.
+        self.retry_holdback.push((ev.not_before, ev.job_id));
+        self.needs_round = true;
+        self.update_billable(st);
+    }
+
     fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
         let now = st.now();
         for v in &ev.victims {
@@ -232,6 +251,22 @@ impl Policy for Infless {
         // `free` below the autoscale target), so coalescing only resumes
         // after a round that proves itself a no-op.
         let mut changed = false;
+        // release held-back retries whose backoff expired (FCFS
+        // re-delivery, like a fresh arrival)
+        if !self.retry_holdback.is_empty() {
+            let mut i = 0;
+            while i < self.retry_holdback.len() {
+                let (t, j) = self.retry_holdback[i];
+                if t <= now {
+                    self.retry_holdback.swap_remove(i);
+                    let li = st.jobs[j].spec.llm.index();
+                    self.pending[li].push(j);
+                    changed = true;
+                } else {
+                    i += 1;
+                }
+            }
+        }
         // keep-alive expiry (independent per model pool)
         for pool in self.pools.iter_mut() {
             if pool.expire_idle(now, self.cfg.keep_alive_s) > 0 {
@@ -331,6 +366,11 @@ impl Policy for Infless {
             }
         }
         for &(t, _) in &self.warming {
+            if t < next {
+                next = t;
+            }
+        }
+        for &(t, _) in &self.retry_holdback {
             if t < next {
                 next = t;
             }

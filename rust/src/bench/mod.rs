@@ -21,7 +21,7 @@ use std::time::Instant;
 use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use crate::cluster::{CheckpointModel, Policy, SimConfig, SimResult, Simulator};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
-use crate::fault::FaultInjector;
+use crate::fault::{ChaosEngine, FaultInjector, FaultPlan};
 use crate::promptbank::SimBankConfig;
 use crate::scenario::Scenario;
 use crate::slo::{Governed, GovernorConfig};
@@ -119,8 +119,10 @@ pub struct CellResult {
 
 /// Build the policy a cell names (ablation override aware; governed
 /// cells are wrapped in the SLO control plane; cells whose scenario
-/// carries a fault plan — spot-market, az-outage — are wrapped in the
-/// fault engine with the default checkpoint/restore cost model).
+/// carries a fault plan — spot-market, az-outage, chaos-storm — are
+/// wrapped in the fault engine with the default checkpoint/restore cost
+/// model; cells whose scenario carries a chaos profile additionally get
+/// a `fault::ChaosEngine` in the same wrapper).
 pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
     let inner: Box<dyn Policy> = match cell.system.as_str() {
         "prompttuner" => {
@@ -167,17 +169,24 @@ pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
     } else {
         inner
     };
-    match cell
+    let plan = cell
         .scenario
         .as_ref()
-        .and_then(|sc| sc.fault_plan(cell.seed, cell.gpus))
-    {
-        Some(plan) => Box::new(FaultInjector::new(
+        .and_then(|sc| sc.fault_plan(cell.seed, cell.gpus));
+    let chaos = cell.scenario.as_ref().and_then(Scenario::chaos_profile);
+    match (plan, chaos) {
+        (plan, Some(profile)) => Box::new(FaultInjector::with_chaos(
+            policy,
+            plan.unwrap_or_else(|| FaultPlan::new(vec![])),
+            CheckpointModel::default(),
+            ChaosEngine::new(profile, cell.seed, cell.gpus),
+        )),
+        (Some(plan), None) => Box::new(FaultInjector::new(
             policy,
             plan,
             CheckpointModel::default(),
         )),
-        None => policy,
+        (None, None) => policy,
     }
 }
 
@@ -358,6 +367,11 @@ impl BenchReport {
             out.push_str(&format!("\"revocations\": {}, ", r.revocations));
             out.push_str(&format!("\"lost_iters\": {}, ",
                                   json_f64(r.lost_iters)));
+            out.push_str(&format!("\"retries\": {}, ", r.retries));
+            out.push_str(&format!("\"retry_iters\": {}, ",
+                                  json_f64(r.retry_iters)));
+            out.push_str(&format!("\"chaos_delay_s\": {}, ",
+                                  json_f64(r.chaos_delay_s)));
             out.push_str(&format!("\"n_jobs\": {}, ", r.n_jobs));
             out.push_str(&format!("\"n_done\": {}, ", r.n_done));
             out.push_str(&format!("\"n_violations\": {}, ", r.n_violations));
@@ -511,6 +525,31 @@ mod tests {
         assert!(json.contains("\"scenario\": \"az-outage\""));
         assert!(json.contains("\"revocations\""));
         assert!(json.contains("\"lost_iters\""));
+    }
+
+    #[test]
+    fn chaos_scenario_cells_inject_chaos_and_tag_the_record() {
+        use crate::fault::ChaosKind;
+        let sc = Scenario::Chaos { kind: ChaosKind::Flaky, jobs_per_llm: 15 };
+        let cells: Vec<SweepCell> = SYSTEMS
+            .iter()
+            .map(|s| SweepCell::scenario(
+                format!("t/{s}"), *s, sc.clone(), 1.0, 16, 5))
+            .collect();
+        let results = run_sweep(&cells);
+        for r in &results {
+            assert_eq!(r.result.n_done, r.result.n_jobs,
+                       "{} stranded retried jobs", r.cell.system);
+        }
+        let total_retries: u64 =
+            results.iter().map(|r| r.result.retries).sum();
+        assert!(total_retries > 0, "the flaky profile failed nothing");
+        let report = BenchReport::new("chaos", results, 0.1);
+        let json = report.to_json();
+        assert!(json.contains("\"scenario\": \"chaos-flaky\""));
+        assert!(json.contains("\"retries\""));
+        assert!(json.contains("\"retry_iters\""));
+        assert!(json.contains("\"chaos_delay_s\""));
     }
 
     #[test]

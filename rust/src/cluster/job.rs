@@ -61,6 +61,14 @@ pub struct JobState {
     pub lost_iters: f64,
     /// Extra iterations added by straggler slowdowns.
     pub straggler_iters: f64,
+    /// Failed completions this job suffered (chaos engine, conserved
+    /// against `ClusterState` totals by the oracle).
+    pub retries: u32,
+    /// Iterations re-queued by those failed completions.
+    pub retry_iters: f64,
+    /// Last retry backoff applied (seconds). The oracle audits that it
+    /// never shrinks — exponential backoff is monotone per job.
+    pub retry_backoff_s: f64,
 }
 
 impl JobState {
@@ -85,6 +93,9 @@ impl JobState {
             needs_restore: false,
             lost_iters: 0.0,
             straggler_iters: 0.0,
+            retries: 0,
+            retry_iters: 0.0,
+            retry_backoff_s: 0.0,
         }
     }
 

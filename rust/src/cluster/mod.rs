@@ -13,6 +13,6 @@ pub mod job;
 pub mod sim;
 
 pub use job::{JobState, JobStatus};
-pub use sim::{CheckpointModel, ClusterState, Policy, Revoked, RevokeEvent,
-              SimConfig, SimObserver, SimOracle, SimResult, Simulator,
-              StateAudit, Wake};
+pub use sim::{ChaosInjection, CheckpointModel, ClusterState, Policy,
+              RetryEvent, Revoked, RevokeEvent, SimConfig, SimObserver,
+              SimOracle, SimResult, Simulator, StateAudit, Wake};

@@ -30,6 +30,7 @@ use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use crate::cluster::job::{JobState, JobStatus};
+use crate::util::rng::Rng;
 use crate::util::stats::Accum;
 use crate::workload::{JobSpec, Llm, PerfModel, COMM_PAYLOAD_GB, GPU_PRICE_PER_S,
                       N_LLM, STORAGE_PRICE_PER_GB_H};
@@ -106,6 +107,67 @@ impl CheckpointModel {
     }
 }
 
+/// Chaos latency-injection model (installed by the chaos engine,
+/// `fault::ChaosEngine`). While armed, a deterministic hash-derived
+/// fraction of launches pays a stretched initialization delay and a
+/// stretched Prompt-Bank lookup — the latency tails real fleets see on
+/// cold container starts and overloaded bank replicas. Draws are keyed
+/// on `(salt, stream, job, generation)` and computed at the launch call
+/// itself — no RNG state persists between rounds, so coalesced and
+/// dense ticking make exactly the same draws and runs stay bit-identical.
+/// `None` (the default) keeps every computation bit-identical to the
+/// chaos-free simulator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosInjection {
+    /// Hash salt (derived from the run seed by the chaos engine).
+    pub salt: u64,
+    /// Fraction of launches whose initialization delay is stretched.
+    pub launch_tail_frac: f64,
+    /// Maximum initialization-delay multiplier (tail position is a
+    /// second hash draw in `[1, factor]`).
+    pub launch_tail_factor: f64,
+    /// Fraction of Prompt-Bank lookups whose latency is stretched.
+    pub lookup_tail_frac: f64,
+    /// Maximum bank-lookup latency multiplier.
+    pub lookup_tail_factor: f64,
+}
+
+impl ChaosInjection {
+    /// One uniform draw in `[0, 1)` from the keyed hash stream. A fresh
+    /// generator per call keeps the model stateless (lookup-order
+    /// independent), the same discipline `promptbank::task_feature` uses.
+    fn u01(&self, stream: u64, job_id: usize, gen: u64) -> f64 {
+        Rng::new(
+            self.salt
+                ^ stream
+                ^ (job_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (gen + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        )
+        .f64()
+    }
+
+    fn stretch(&self, frac: f64, factor: f64, gate: u64, pos: u64,
+               job_id: usize, gen: u64) -> f64 {
+        if self.u01(gate, job_id, gen) < frac {
+            1.0 + self.u01(pos, job_id, gen) * (factor - 1.0).max(0.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Initialization-delay multiplier for this (job, generation) launch.
+    pub fn launch_stretch(&self, job_id: usize, gen: u64) -> f64 {
+        self.stretch(self.launch_tail_frac, self.launch_tail_factor,
+                     0x11, 0x12, job_id, gen)
+    }
+
+    /// Prompt-Bank lookup-latency multiplier for this launch.
+    pub fn lookup_stretch(&self, job_id: usize, gen: u64) -> f64 {
+        self.stretch(self.lookup_tail_frac, self.lookup_tail_factor,
+                     0x21, 0x22, job_id, gen)
+    }
+}
+
 /// One preempted job inside a [`RevokeEvent`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Revoked {
@@ -133,6 +195,25 @@ pub struct RevokeEvent {
     /// Graceful revocations (spot reclaims with notice) checkpoint on
     /// the way out; abrupt ones lose work back to the last checkpoint.
     pub graceful: bool,
+}
+
+/// A failed tuning run delivered to [`Policy::on_retry`]. The chaos
+/// engine has already failed the completion back to `Pending`
+/// ([`ClusterState::fail_completion`]): the job keeps its realized
+/// prompt quality and carries the redo iterations, and its next launch
+/// restores from the last checkpoint. The policy must reconcile its own
+/// bookkeeping — return the attempt's GPUs to its pools and requeue the
+/// job no earlier than `not_before` (exponential backoff).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryEvent {
+    pub job_id: usize,
+    /// GPUs the failed attempt held (already released by the simulator;
+    /// the policy folds them back into its own pools).
+    pub gpus: usize,
+    /// 1-based retry attempt this event starts.
+    pub attempt: u32,
+    /// Earliest relaunch time (absolute seconds): `now + backoff`.
+    pub not_before: f64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -244,6 +325,22 @@ pub struct ClusterState {
     pub total_lost_iters: f64,
     /// Total extra iterations added by straggler slowdowns.
     pub total_straggler_iters: f64,
+    /// Chaos latency-injection model (None = chaos-free semantics,
+    /// bit-identical to the pre-chaos simulator).
+    chaos: Option<ChaosInjection>,
+    /// GPUs currently inside dead failure domains (chaos topology).
+    /// Always covered by the revoked level: the oracle audits
+    /// `revoked ≥ dead_domain`, so `billable ≤ budget - revoked` implies
+    /// no billable capacity sits inside a dead domain.
+    dead_domain_gpus: f64,
+    /// Lifetime failed completions (`fail_completion` calls, conserved
+    /// against the per-job `retries` sums by the oracle).
+    pub total_retries: u64,
+    /// Total iterations re-queued by failed completions (conserved
+    /// against the per-job `retry_iters` sums by the oracle).
+    pub total_retry_iters: f64,
+    /// Total extra seconds injected by chaos latency tails.
+    pub total_chaos_delay_s: f64,
 }
 
 impl ClusterState {
@@ -272,6 +369,11 @@ impl ClusterState {
             revocations: 0,
             total_lost_iters: 0.0,
             total_straggler_iters: 0.0,
+            chaos: None,
+            dead_domain_gpus: 0.0,
+            total_retries: 0,
+            total_retry_iters: 0.0,
+            total_chaos_delay_s: 0.0,
         }
     }
 
@@ -366,6 +468,56 @@ impl ClusterState {
 
     pub fn revoked(&self) -> f64 {
         self.revoked_gpus
+    }
+
+    /// Install (or clear) the chaos latency-injection model. Called once
+    /// at run start by the chaos engine; `None` keeps the chaos-free
+    /// semantics bit-identical to the pre-chaos simulator.
+    pub fn set_chaos(&mut self, model: Option<ChaosInjection>) {
+        self.chaos = model;
+    }
+
+    pub fn chaos_model(&self) -> Option<&ChaosInjection> {
+        self.chaos.as_ref()
+    }
+
+    /// Record the GPU count currently inside dead failure domains.
+    /// Maintained by the chaos engine alongside the revoked level; the
+    /// oracle audits `revoked ≥ dead_domain` against it.
+    pub fn set_dead_domain(&mut self, gpus: f64) {
+        self.dead_domain_gpus = gpus;
+    }
+
+    pub fn dead_domain(&self) -> f64 {
+        self.dead_domain_gpus
+    }
+
+    /// Fail a just-completed tuning run back to the queue (chaos
+    /// engine): the job returns to `Pending` carrying `redo_iters` of
+    /// rework, its in-flight state is invalidated, and `needs_restore`
+    /// is set so the relaunch resumes from the last checkpoint (keeping
+    /// the realized prompt quality) instead of paying a second bank
+    /// lookup. Must be called while the job is `Done` with no GPUs —
+    /// i.e. from inside the completion callback, after the simulator has
+    /// released the allocation. `backoff_s` is recorded for the oracle's
+    /// backoff-monotonicity audit.
+    pub fn fail_completion(&mut self, job_id: usize, redo_iters: f64,
+                           backoff_s: f64) {
+        let job = &mut self.jobs[job_id];
+        debug_assert_eq!(job.status, JobStatus::Done, "job {job_id}");
+        debug_assert_eq!(job.gpus, 0, "job {job_id}");
+        debug_assert!(redo_iters > 0.0 && redo_iters.is_finite());
+        debug_assert!(backoff_s >= job.retry_backoff_s);
+        job.status = JobStatus::Pending;
+        job.completed_at = f64::INFINITY;
+        job.iters_remaining = redo_iters;
+        job.needs_restore = true;
+        job.gen += 1; // invalidate any stale completion event
+        job.retries += 1;
+        job.retry_iters += redo_iters;
+        job.retry_backoff_s = backoff_s;
+        self.total_retries += 1;
+        self.total_retry_iters += redo_iters;
     }
 
     /// Effective seconds per iteration: the perf model's time, slowed by
@@ -478,10 +630,30 @@ impl ClusterState {
         let now = self.now;
         let llm = self.jobs[job_id].spec.llm;
         let iter_time = self.eff_iter_time(llm, gpus);
-        let restore_s = if self.jobs[job_id].needs_restore {
+        let needs_restore = self.jobs[job_id].needs_restore;
+        let restore_s = if needs_restore {
             self.ckpt.as_ref().map_or(0.0, |m| m.restore_s)
         } else {
             0.0
+        };
+        // Chaos latency tails: stretch the delays this launch will
+        // actually pay (a restore launch skips the bank, so its lookup
+        // draw is skipped too). Policies estimated with the nominal
+        // delays — the tail is unpredicted, exactly like production.
+        let (init_delay, bank_latency) = match &self.chaos {
+            Some(c) => {
+                let gen = self.jobs[job_id].gen;
+                let ls = c.launch_stretch(job_id, gen);
+                let bs = if needs_restore {
+                    1.0
+                } else {
+                    c.lookup_stretch(job_id, gen)
+                };
+                self.total_chaos_delay_s +=
+                    init_delay * (ls - 1.0) + bank_latency * (bs - 1.0);
+                (init_delay * ls, bank_latency * bs)
+            }
+            None => (init_delay, bank_latency),
         };
         let (iters, exec);
         {
@@ -646,6 +818,18 @@ pub trait Policy {
         let _ = (st, ev);
     }
 
+    /// Failed tuning run (chaos engine, `fault::ChaosEngine`): the job's
+    /// completion was rejected and it is back in `Pending`
+    /// ([`ClusterState::fail_completion`]) carrying redo work. The policy
+    /// must reconcile its own bookkeeping — fold the attempt's
+    /// `ev.gpus` back into its pools and requeue the job no earlier than
+    /// `ev.not_before` (the engine's exponential backoff). The default
+    /// ignores the event (such a policy strands the retried job; every
+    /// policy in this crate recovers).
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        let _ = (st, ev);
+    }
+
     /// Billable-capacity ceiling this policy currently schedules within
     /// (None when it has no such knob). Capacity governors
     /// (`slo::Governed`) read this before scaling.
@@ -684,6 +868,9 @@ impl<P: Policy + ?Sized> Policy for Box<P> {
     }
     fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
         (**self).on_revoke(st, ev)
+    }
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        (**self).on_retry(st, ev)
     }
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
         (**self).next_timed_action(st)
@@ -743,7 +930,12 @@ impl SimObserver for () {}
 ///   matches a from-scratch recount (membership, LLM, no duplicates);
 /// * **monotone event sequence numbers** and simulated time;
 /// * **non-negative incremental cost** — the billed/busy GPU-second
-///   integrals never decrease between audits and stay finite.
+///   integrals never decrease between audits and stay finite;
+/// * **chaos accounting** — retries are conserved (per-job `retries` /
+///   `retry_iters` sums match the cluster totals, monotone over the
+///   run), per-job retry backoff never shrinks, and dead failure
+///   domains are fully covered by the revoked level (so no billable
+///   capacity sits inside a dead domain).
 ///
 /// Use one auditor per simulated run (the monotonicity history resets
 /// with it).
@@ -758,6 +950,9 @@ pub struct StateAudit {
     last_lost_iters: f64,
     last_straggler_iters: f64,
     last_revocations: u64,
+    last_retries: u64,
+    /// Per-job last observed retry backoff (monotonicity history).
+    backoff: Vec<f64>,
     /// Number of audits performed (so tests can assert coverage).
     pub audits: u64,
 }
@@ -796,6 +991,21 @@ impl StateAudit {
                 "{whence}@{t:.3}: revoked level {revoked} outside [0, {budget}]"
             ));
         }
+        // ---- chaos domains: a dead rack's GPUs are all revoked, so
+        // `billable ≤ budget - revoked ≤ budget - dead` and no billable
+        // capacity sits inside a dead domain.
+        let dead = st.dead_domain();
+        if dead < -eps || dead > budget + eps {
+            out.push(format!(
+                "{whence}@{t:.3}: dead-domain level {dead} outside [0, {budget}]"
+            ));
+        }
+        if revoked + eps < dead {
+            out.push(format!(
+                "{whence}@{t:.3}: dead-domain GPUs {dead} exceed the revoked \
+                 level {revoked}: capacity inside a dead domain is billable"
+            ));
+        }
         if billable > budget - revoked + eps {
             out.push(format!(
                 "{whence}@{t:.3}: billable {billable} exceeds the effective \
@@ -815,10 +1025,15 @@ impl StateAudit {
         let n = st.jobs.len();
         self.mark.clear();
         self.mark.resize(n, false);
+        if self.backoff.len() < n {
+            self.backoff.resize(n, 0.0);
+        }
         let mut busy_recount = 0.0f64;
         let mut lost_recount = 0.0f64;
         let mut straggler_recount = 0.0f64;
         let mut restarts_recount = 0u64;
+        let mut retries_recount = 0u64;
+        let mut retry_iters_recount = 0.0f64;
         for (i, job) in st.jobs.iter().enumerate() {
             let holds = matches!(
                 job.status,
@@ -865,9 +1080,31 @@ impl StateAudit {
                     job.status
                 ));
             }
+            // ---- per-job retry accounting ----
+            if job.retry_iters < 0.0 || !job.retry_iters.is_finite() {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} retry_iters is {}",
+                    job.retry_iters
+                ));
+            }
+            if job.retry_backoff_s < 0.0 || !job.retry_backoff_s.is_finite() {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} retry backoff is {}",
+                    job.retry_backoff_s
+                ));
+            } else if job.retry_backoff_s + eps < self.backoff[i] {
+                out.push(format!(
+                    "{whence}@{t:.3}: job {i} retry backoff shrank \
+                     ({} after {}): backoff must be monotone per job",
+                    job.retry_backoff_s, self.backoff[i]
+                ));
+            }
+            self.backoff[i] = self.backoff[i].max(job.retry_backoff_s);
             lost_recount += job.lost_iters;
             straggler_recount += job.straggler_iters;
             restarts_recount += u64::from(job.restarts);
+            retries_recount += u64::from(job.retries);
+            retry_iters_recount += job.retry_iters;
             self.mark[i] = holds;
         }
         if (busy_recount - busy).abs() > eps {
@@ -900,6 +1137,37 @@ impl StateAudit {
                 "{whence}@{t:.3}: restart accounting diverged: per-job \
                  sum {restarts_recount} vs {} revocations",
                 st.revocations
+            ));
+        }
+        // ---- retry conservation ----
+        if retries_recount != st.total_retries {
+            out.push(format!(
+                "{whence}@{t:.3}: retry accounting diverged: per-job \
+                 sum {retries_recount} vs {} total retries",
+                st.total_retries
+            ));
+        }
+        if (retry_iters_recount - st.total_retry_iters).abs()
+            > tol(retry_iters_recount)
+        {
+            out.push(format!(
+                "{whence}@{t:.3}: retry-work accounting diverged: per-job \
+                 sum {retry_iters_recount} vs cluster total {}",
+                st.total_retry_iters
+            ));
+        }
+        if st.total_retries < self.last_retries {
+            out.push(format!(
+                "{whence}@{t:.3}: retry count went backwards \
+                 ({} after {})",
+                st.total_retries, self.last_retries
+            ));
+        }
+        if st.total_chaos_delay_s < -eps || !st.total_chaos_delay_s.is_finite()
+        {
+            out.push(format!(
+                "{whence}@{t:.3}: chaos delay accumulator is {}",
+                st.total_chaos_delay_s
             ));
         }
         if st.total_lost_iters < self.last_lost_iters - eps {
@@ -998,6 +1266,7 @@ impl StateAudit {
         self.last_lost_iters = st.total_lost_iters;
         self.last_straggler_iters = st.total_straggler_iters;
         self.last_revocations = st.revocations;
+        self.last_retries = st.total_retries;
     }
 }
 
@@ -1086,6 +1355,10 @@ impl<P: Policy> Policy for SimOracle<P> {
         // transitional; the post-round audit covers the settled state.
         self.inner.on_revoke(st, ev);
     }
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        self.inner.on_retry(st, ev);
+        self.run_audit(st, "retry");
+    }
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
         self.inner.next_timed_action(st)
     }
@@ -1134,6 +1407,12 @@ pub struct SimResult {
     pub lost_iters: f64,
     /// Extra iterations added by straggler slowdowns over the run.
     pub straggler_iters: f64,
+    /// Failed completions injected by the chaos engine over the run.
+    pub retries: u64,
+    /// Iterations re-queued by those failed completions.
+    pub retry_iters: f64,
+    /// Extra seconds of chaos-injected launch / bank-lookup latency.
+    pub chaos_delay_s: f64,
     /// Wall-clock seconds for the whole simulated experiment.
     pub wall_s: f64,
 }
@@ -1299,11 +1578,19 @@ impl Simulator {
                             st.busy_gpus -= gpus as f64;
                             st.deactivate(id);
                             policy.on_job_complete(&mut st, id);
-                            done += 1;
                             st.drain_queued(&mut heap);
                             debug_audit(&mut audit, &mut audit_scratch, &st,
                                         "complete");
-                            observer.on_job_complete(&st, id);
+                            // The chaos engine may fail the completion
+                            // back to Pending inside the callback; the
+                            // job then isn't done, and observers (SLO
+                            // burn gauges) never see the failed attempt
+                            // — each job is sampled exactly once, at its
+                            // accepted completion.
+                            if st.jobs[id].status == JobStatus::Done {
+                                done += 1;
+                                observer.on_job_complete(&st, id);
+                            }
                             wake = policy.next_timed_action(&st);
                             if done == n_jobs {
                                 break;
@@ -1366,6 +1653,9 @@ impl Simulator {
             revocations: st.revocations,
             lost_iters: st.total_lost_iters,
             straggler_iters: st.total_straggler_iters,
+            retries: st.total_retries,
+            retry_iters: st.total_retry_iters,
+            chaos_delay_s: st.total_chaos_delay_s,
             wall_s: wall0.elapsed().as_secs_f64(),
         }
     }

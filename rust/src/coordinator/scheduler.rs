@@ -29,7 +29,8 @@
 //! expiry) so the simulator can coalesce idle rounds — see
 //! [`crate::cluster::Wake`].
 
-use crate::cluster::{ClusterState, JobStatus, Policy, RevokeEvent, Wake};
+use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
+                     RevokeEvent, Wake};
 use crate::coordinator::cold_alloc::{allocate_from_cold_pool_into, ColdPlan};
 use crate::coordinator::pools::WarmPool;
 use crate::coordinator::warm_alloc::{allocate_from_warm_pool_into, WarmAllocation};
@@ -148,6 +149,11 @@ pub struct PromptTuner {
     /// An arrival/completion happened since the last round: the next
     /// round must run before idle-round coalescing may resume.
     needs_round: bool,
+    /// Failed runs held back until their retry backoff expires:
+    /// (not_before, job). Drained into the pending queues by `on_tick`;
+    /// the earliest entry is declared through `next_timed_action` so
+    /// coalesced runs wake exactly when a backoff expires.
+    retry_holdback: Vec<(f64, usize)>,
     // ---- reusable scratch buffers (steady-state rounds allocate nothing)
     scratch_ids: Vec<usize>,
     scratch_el: Vec<f64>,
@@ -173,6 +179,7 @@ impl PromptTuner {
             bank_denied: 0,
             warm_total: 0,
             needs_round: true,
+            retry_holdback: vec![],
             scratch_ids: vec![],
             scratch_el: vec![],
             scratch_warm: vec![],
@@ -464,9 +471,47 @@ impl Policy for PromptTuner {
         self.update_billable(st);
     }
 
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        // The attempt's GPUs come home warm — the hardware is fine, only
+        // the tuning result was rejected; without runtime reuse they
+        // drain exactly as at completion. No bank feedback: the failed
+        // run produced no usable tuned prompt.
+        let li = st.jobs[ev.job_id].spec.llm.index();
+        let pool = &mut self.pools[li];
+        pool.release(ev.gpus, st.now());
+        if !self.cfg.use_warm_pools {
+            let drained = pool.drain_idle();
+            self.warm_total -= drained;
+        }
+        // Hold the job back until its backoff expires, then requeue.
+        self.retry_holdback.push((ev.not_before, ev.job_id));
+        self.needs_round = true;
+        self.update_billable(st);
+    }
+
     fn on_tick(&mut self, st: &mut ClusterState) {
         let now = st.now();
         self.needs_round = false;
+        // ---- release held-back retries whose backoff expired ------------
+        if !self.retry_holdback.is_empty() {
+            let mut i = 0;
+            while i < self.retry_holdback.len() {
+                let (t, j) = self.retry_holdback[i];
+                if t <= now {
+                    self.retry_holdback.swap_remove(i);
+                    // deadline-sorted requeue, like arrival/revocation
+                    let li = st.jobs[j].spec.llm.index();
+                    let dl = st.jobs[j].spec.deadline();
+                    let st_ref: &ClusterState = st;
+                    let pos = self.pending[li].partition_point(|&k| {
+                        st_ref.jobs[k].spec.deadline() <= dl
+                    });
+                    self.pending[li].insert(pos, j);
+                } else {
+                    i += 1;
+                }
+            }
+        }
         // ---- idle-window shrink (or immediate drain w/o runtime reuse) --
         for pool in self.pools.iter_mut() {
             let expired = if self.cfg.use_warm_pools {
@@ -627,18 +672,23 @@ impl Policy for PromptTuner {
         if self.pending.iter().any(|q| !q.is_empty()) {
             return Wake::Dense;
         }
-        if !self.cfg.use_warm_pools {
-            // Idle GPUs are drained eagerly — no window can expire.
-            return Wake::Idle;
-        }
-        // Empty queues: the only time-driven work left is the idle-window
-        // shrink of the earliest-idle warm GPU.
+        // Time-driven work left: held-back retries re-entering the queue
+        // at their backoff expiry, and (with runtime reuse) the
+        // idle-window shrink of the earliest-idle warm GPU. Without
+        // warm pools idle GPUs are drained eagerly — no window expires.
         let mut next = f64::INFINITY;
-        for pool in &self.pools {
-            if let Some(t) = pool.earliest_idle() {
-                let expiry = t + self.cfg.window_s;
-                if expiry < next {
-                    next = expiry;
+        for &(t, _) in &self.retry_holdback {
+            if t < next {
+                next = t;
+            }
+        }
+        if self.cfg.use_warm_pools {
+            for pool in &self.pools {
+                if let Some(t) = pool.earliest_idle() {
+                    let expiry = t + self.cfg.window_s;
+                    if expiry < next {
+                        next = expiry;
+                    }
                 }
             }
         }

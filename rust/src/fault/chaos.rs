@@ -1,0 +1,544 @@
+//! Config-driven chaos engine: continuous misbehavior layered on the
+//! seeded fault plans.
+//!
+//! The fault engine models *discrete* capacity events; real fleets also
+//! degrade continuously. This module adds three such regimes, all
+//! deterministic in the run seed (hash-derived draws, no RNG state at
+//! lookup time — the `promptbank::task_feature` discipline — so chaos
+//! runs stay bit-identical under dense and coalesced ticking):
+//!
+//! * **latency tails** — a [`ChaosProfile`] configures tail fractions
+//!   and stretch factors for the job-launch and bank-lookup paths; the
+//!   profile compiles to a [`ChaosInjection`] the simulator applies
+//!   inside `ClusterState::launch` (profile/injection split: the
+//!   profile is config, the injection is the armed sampling model);
+//! * **correlated failure domains** — a [`DomainTopology`] partitions
+//!   the fleet into racks, and `FaultInjector` fans every
+//!   `GpuFailure`/`SpotReclaim` revocation out to whole racks instead
+//!   of independent GPUs, keeping each rack dead until its repair;
+//! * **completion errors** — [`ChaosEngine::try_fail`] rejects a
+//!   hash-selected fraction of completions back into the queue
+//!   ([`ClusterState::fail_completion`]) with a retry budget and
+//!   exponential backoff, delivered to policies through
+//!   [`Policy::on_retry`](crate::cluster::Policy::on_retry); once the
+//!   budget is spent the run is accepted best-effort (a give-up, not a
+//!   stranded job).
+
+use crate::cluster::{ChaosInjection, ClusterState, RetryEvent};
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+/// The built-in chaos profiles (the scenario catalogue's chaos families
+/// map onto these 1:1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Latency tails only: slow launches and bank lookups, no failures.
+    LatencyTail,
+    /// Flaky completions: mild tails plus completion errors with
+    /// retry-and-backoff recovery.
+    Flaky,
+    /// Rack storm: completion errors and tails on top of correlated
+    /// whole-rack failures (pair with a `FaultPlan` of failure waves).
+    RackStorm,
+}
+
+impl ChaosKind {
+    pub const ALL: [ChaosKind; 3] =
+        [ChaosKind::LatencyTail, ChaosKind::Flaky, ChaosKind::RackStorm];
+
+    pub fn profile(self) -> ChaosProfile {
+        match self {
+            ChaosKind::LatencyTail => ChaosProfile::latency_tail(),
+            ChaosKind::Flaky => ChaosProfile::flaky(),
+            ChaosKind::RackStorm => ChaosProfile::rack_storm(),
+        }
+    }
+}
+
+/// Chaos configuration: what misbehavior a run injects and how hard.
+/// Pure data — building one does nothing until it is compiled into a
+/// [`ChaosEngine`] (and its latency part into a [`ChaosInjection`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosProfile {
+    /// Profile name (bench labels, config round-trips).
+    pub name: String,
+    /// Fraction of launches whose initialization delay is stretched.
+    pub launch_tail_frac: f64,
+    /// Maximum initialization-delay multiplier (≥ 1).
+    pub launch_tail_factor: f64,
+    /// Fraction of bank lookups whose latency is stretched.
+    pub lookup_tail_frac: f64,
+    /// Maximum bank-lookup latency multiplier (≥ 1).
+    pub lookup_tail_factor: f64,
+    /// Fraction of completions rejected back into the queue.
+    pub completion_error_frac: f64,
+    /// Fraction of the job's full iteration count re-run per retry.
+    pub redo_frac: f64,
+    /// Failed completions a job may retry before the engine gives up
+    /// and accepts the run best-effort.
+    pub retry_budget: u32,
+    /// First retry backoff, seconds.
+    pub backoff_base_s: f64,
+    /// Backoff growth per retry (≥ 1: exponential, monotone per job).
+    pub backoff_factor: f64,
+    /// Failure domains (racks) the fleet is partitioned into; 0 keeps
+    /// today's independent per-GPU revocations.
+    pub domains: usize,
+}
+
+impl ChaosProfile {
+    /// Latency tails only — no failures, no topology.
+    pub fn latency_tail() -> ChaosProfile {
+        ChaosProfile {
+            name: "latency-tail".into(),
+            launch_tail_frac: 0.30,
+            launch_tail_factor: 4.0,
+            lookup_tail_frac: 0.30,
+            lookup_tail_factor: 3.0,
+            completion_error_frac: 0.0,
+            redo_frac: 0.5,
+            retry_budget: 0,
+            backoff_base_s: 0.0,
+            backoff_factor: 1.0,
+            domains: 0,
+        }
+    }
+
+    /// Flaky completions with retry/backoff recovery plus mild tails.
+    pub fn flaky() -> ChaosProfile {
+        ChaosProfile {
+            name: "flaky".into(),
+            launch_tail_frac: 0.10,
+            launch_tail_factor: 2.0,
+            lookup_tail_frac: 0.10,
+            lookup_tail_factor: 2.0,
+            completion_error_frac: 0.12,
+            redo_frac: 0.5,
+            retry_budget: 2,
+            backoff_base_s: 15.0,
+            backoff_factor: 2.0,
+            domains: 0,
+        }
+    }
+
+    /// Correlated rack failures plus flaky completions and tails.
+    pub fn rack_storm() -> ChaosProfile {
+        ChaosProfile {
+            name: "rack-storm".into(),
+            launch_tail_frac: 0.15,
+            launch_tail_factor: 3.0,
+            lookup_tail_frac: 0.15,
+            lookup_tail_factor: 3.0,
+            completion_error_frac: 0.08,
+            redo_frac: 0.5,
+            retry_budget: 2,
+            backoff_base_s: 20.0,
+            backoff_factor: 2.0,
+            domains: 4,
+        }
+    }
+
+    /// Resolve a built-in profile by name.
+    pub fn by_name(name: &str) -> Option<ChaosProfile> {
+        match name {
+            "latency-tail" => Some(ChaosProfile::latency_tail()),
+            "flaky" => Some(ChaosProfile::flaky()),
+            "rack-storm" => Some(ChaosProfile::rack_storm()),
+            _ => None,
+        }
+    }
+
+    /// Build a profile from a `[chaos]` config section: `chaos.profile`
+    /// names the built-in base, every numeric knob can be overridden
+    /// individually. Validated before returning.
+    ///
+    /// ```text
+    /// [chaos]
+    /// profile = "flaky"
+    /// completion_error_frac = 0.2
+    /// retry_budget = 3
+    /// ```
+    pub fn from_config(cfg: &Config) -> Result<ChaosProfile, String> {
+        let base = cfg.str_or("chaos.profile", "latency-tail");
+        let mut p = ChaosProfile::by_name(base)
+            .ok_or_else(|| format!("unknown chaos profile '{base}'"))?;
+        p.launch_tail_frac =
+            cfg.f64_or("chaos.launch_tail_frac", p.launch_tail_frac);
+        p.launch_tail_factor =
+            cfg.f64_or("chaos.launch_tail_factor", p.launch_tail_factor);
+        p.lookup_tail_frac =
+            cfg.f64_or("chaos.lookup_tail_frac", p.lookup_tail_frac);
+        p.lookup_tail_factor =
+            cfg.f64_or("chaos.lookup_tail_factor", p.lookup_tail_factor);
+        p.completion_error_frac =
+            cfg.f64_or("chaos.completion_error_frac", p.completion_error_frac);
+        p.redo_frac = cfg.f64_or("chaos.redo_frac", p.redo_frac);
+        p.retry_budget =
+            cfg.usize_or("chaos.retry_budget", p.retry_budget as usize) as u32;
+        p.backoff_base_s =
+            cfg.f64_or("chaos.backoff_base_s", p.backoff_base_s);
+        p.backoff_factor =
+            cfg.f64_or("chaos.backoff_factor", p.backoff_factor);
+        p.domains = cfg.usize_or("chaos.domains", p.domains);
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Check every knob is in its sane range.
+    pub fn validate(&self) -> Result<(), String> {
+        let frac = |name: &str, v: f64| {
+            if (0.0..=1.0).contains(&v) && v.is_finite() {
+                Ok(())
+            } else {
+                Err(format!("chaos.{name} = {v} outside [0, 1]"))
+            }
+        };
+        frac("launch_tail_frac", self.launch_tail_frac)?;
+        frac("lookup_tail_frac", self.lookup_tail_frac)?;
+        frac("completion_error_frac", self.completion_error_frac)?;
+        let factor = |name: &str, v: f64| {
+            if v >= 1.0 && v.is_finite() {
+                Ok(())
+            } else {
+                Err(format!("chaos.{name} = {v} must be ≥ 1"))
+            }
+        };
+        factor("launch_tail_factor", self.launch_tail_factor)?;
+        factor("lookup_tail_factor", self.lookup_tail_factor)?;
+        factor("backoff_factor", self.backoff_factor)?;
+        if !(self.redo_frac > 0.0 && self.redo_frac.is_finite()) {
+            return Err(format!(
+                "chaos.redo_frac = {} must be positive",
+                self.redo_frac
+            ));
+        }
+        if !(self.backoff_base_s >= 0.0 && self.backoff_base_s.is_finite()) {
+            return Err(format!(
+                "chaos.backoff_base_s = {} must be non-negative",
+                self.backoff_base_s
+            ));
+        }
+        Ok(())
+    }
+
+    /// Compile the latency part into the model the simulator arms
+    /// (`ClusterState::set_chaos`); `None` when no tails are configured.
+    pub fn injection(&self, salt: u64) -> Option<ChaosInjection> {
+        if self.launch_tail_frac > 0.0 || self.lookup_tail_frac > 0.0 {
+            Some(ChaosInjection {
+                salt,
+                launch_tail_frac: self.launch_tail_frac,
+                launch_tail_factor: self.launch_tail_factor,
+                lookup_tail_frac: self.lookup_tail_frac,
+                lookup_tail_factor: self.lookup_tail_factor,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// A rack/AZ topology over the fleet: `domains` equal racks of
+/// `cluster_gpus / domains` GPUs (leftover GPUs sit outside any rack).
+/// A revocation request fans out to whole alive racks — one failure
+/// event takes its entire domain down until repair — chosen by a
+/// deterministic rotation so repeated events spread across racks.
+#[derive(Clone, Debug)]
+pub struct DomainTopology {
+    domain_size: usize,
+    /// Per-rack absolute time the rack is dead until.
+    dead_until: Vec<f64>,
+    /// Rotation cursor (deterministic rack choice across events).
+    cursor: usize,
+}
+
+impl DomainTopology {
+    pub fn new(cluster_gpus: usize, domains: usize) -> DomainTopology {
+        let domains = domains.clamp(1, cluster_gpus.max(1));
+        DomainTopology {
+            domain_size: (cluster_gpus / domains).max(1),
+            dead_until: vec![f64::NEG_INFINITY; domains],
+            cursor: 0,
+        }
+    }
+
+    pub fn domains(&self) -> usize {
+        self.dead_until.len()
+    }
+
+    pub fn domain_size(&self) -> usize {
+        self.domain_size
+    }
+
+    /// Expand a `requested`-GPU revocation to whole alive racks: racks
+    /// are marked dead until `now + repair_s` (starting at the rotation
+    /// cursor) until they cover the request, never claiming more than
+    /// `headroom` (what the injector can actually revoke — keeping the
+    /// oracle's `revoked ≥ dead-domain` invariant). Returns the fanned
+    /// GPU count; when no whole rack fits the headroom the request
+    /// passes through unfanned (and nothing is marked dead).
+    pub fn fan_out(&mut self, now: f64, requested: usize, repair_s: f64,
+                   headroom: usize) -> usize {
+        let target = requested.min(headroom);
+        if target == 0 {
+            return 0;
+        }
+        let n = self.dead_until.len();
+        let mut covered = 0usize;
+        for k in 0..n {
+            if covered >= target || covered + self.domain_size > headroom {
+                break;
+            }
+            let d = (self.cursor + k) % n;
+            if self.dead_until[d] > now {
+                continue; // already dead
+            }
+            self.dead_until[d] = now + repair_s;
+            covered += self.domain_size;
+        }
+        self.cursor = (self.cursor + 1) % n;
+        if covered == 0 {
+            requested
+        } else {
+            covered
+        }
+    }
+
+    /// GPUs inside dead racks at `now`.
+    pub fn dead_gpus(&self, now: f64) -> usize {
+        self.dead_until.iter().filter(|&&t| t > now).count()
+            * self.domain_size
+    }
+}
+
+/// The runtime chaos engine `FaultInjector` drives: completion-error
+/// draws, the failure-domain topology, and give-up accounting. The
+/// latency part lives in the simulator as the armed [`ChaosInjection`].
+pub struct ChaosEngine {
+    profile: ChaosProfile,
+    salt: u64,
+    topology: Option<DomainTopology>,
+    giveups: u64,
+}
+
+impl ChaosEngine {
+    pub fn new(profile: ChaosProfile, seed: u64,
+               cluster_gpus: usize) -> ChaosEngine {
+        debug_assert!(profile.validate().is_ok());
+        let topology = if profile.domains > 0 && cluster_gpus > 0 {
+            Some(DomainTopology::new(cluster_gpus, profile.domains))
+        } else {
+            None
+        };
+        ChaosEngine {
+            salt: seed ^ 0x5EED_C4A0_5107_0003,
+            profile,
+            topology,
+            giveups: 0,
+        }
+    }
+
+    pub fn profile(&self) -> &ChaosProfile {
+        &self.profile
+    }
+
+    pub fn topology(&self) -> Option<&DomainTopology> {
+        self.topology.as_ref()
+    }
+
+    /// Completed runs accepted best-effort after their retry budget was
+    /// exhausted (the give-up path).
+    pub fn giveups(&self) -> u64 {
+        self.giveups
+    }
+
+    /// The armed latency-injection model (None = no tails configured).
+    pub fn injection(&self) -> Option<ChaosInjection> {
+        self.profile.injection(self.salt)
+    }
+
+    /// Completion-error draw for a just-completed job. On failure the
+    /// job is already back in `Pending` ([`ClusterState::fail_completion`])
+    /// and the returned event must be delivered to the policy's
+    /// `on_retry`. `None` accepts the completion — either the draw
+    /// passed, or the retry budget is exhausted (a give-up: the run is
+    /// kept best-effort rather than stranded).
+    pub fn try_fail(&mut self, st: &mut ClusterState,
+                    job_id: usize) -> Option<RetryEvent> {
+        let p = &self.profile;
+        if p.completion_error_frac <= 0.0 {
+            return None;
+        }
+        let job = &st.jobs[job_id];
+        let attempt = job.retries; // completed attempts so far
+        let u = Rng::new(
+            self.salt
+                ^ 0x31
+                ^ (job_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (u64::from(attempt) + 1)
+                    .wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        )
+        .f64();
+        if u >= p.completion_error_frac {
+            return None;
+        }
+        if attempt >= p.retry_budget {
+            self.giveups += 1;
+            return None;
+        }
+        let now = st.now();
+        let gpus = (job.gpu_seconds
+            / (job.completed_at - job.launched_at).max(1e-9))
+        .round() as usize;
+        let redo = (job.spec.iters_at(job.quality) * p.redo_frac).max(1.0);
+        let backoff =
+            p.backoff_base_s * p.backoff_factor.powi(attempt as i32);
+        st.fail_completion(job_id, redo, backoff);
+        Some(RetryEvent {
+            job_id,
+            gpus,
+            attempt: attempt + 1,
+            not_before: now + backoff,
+        })
+    }
+
+    /// Fan a revocation out to its failure domains (identity without a
+    /// topology). See [`DomainTopology::fan_out`].
+    pub fn fan_out(&mut self, now: f64, requested: usize, repair_s: f64,
+                   headroom: usize) -> usize {
+        match &mut self.topology {
+            Some(t) => t.fan_out(now, requested, repair_s, headroom),
+            None => requested,
+        }
+    }
+
+    /// GPUs inside dead domains at `now` (0 without a topology).
+    pub fn dead_gpus(&self, now: f64) -> usize {
+        self.topology.as_ref().map_or(0, |t| t.dead_gpus(now))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_profiles_validate_and_resolve_by_name() {
+        for kind in ChaosKind::ALL {
+            let p = kind.profile();
+            p.validate().unwrap();
+            assert_eq!(ChaosProfile::by_name(&p.name), Some(p));
+        }
+        assert_eq!(ChaosProfile::by_name("no-such-profile"), None);
+    }
+
+    #[test]
+    fn from_config_overrides_the_base_profile() {
+        let cfg = Config::parse(
+            "[chaos]\n\
+             profile = \"flaky\"\n\
+             completion_error_frac = 0.25\n\
+             retry_budget = 3\n\
+             domains = 8\n",
+        )
+        .unwrap();
+        let p = ChaosProfile::from_config(&cfg).unwrap();
+        assert_eq!(p.name, "flaky");
+        assert_eq!(p.completion_error_frac, 0.25);
+        assert_eq!(p.retry_budget, 3);
+        assert_eq!(p.domains, 8);
+        // untouched knobs keep the base profile's values
+        assert_eq!(p.backoff_base_s, ChaosProfile::flaky().backoff_base_s);
+    }
+
+    #[test]
+    fn from_config_rejects_unknown_profiles_and_bad_knobs() {
+        let cfg = Config::parse("[chaos]\nprofile = \"nope\"\n").unwrap();
+        assert!(ChaosProfile::from_config(&cfg).is_err());
+        let cfg = Config::parse(
+            "[chaos]\nprofile = \"flaky\"\ncompletion_error_frac = 1.5\n",
+        )
+        .unwrap();
+        let err = ChaosProfile::from_config(&cfg).unwrap_err();
+        assert!(err.contains("completion_error_frac"), "{err}");
+        let cfg = Config::parse(
+            "[chaos]\nprofile = \"flaky\"\nbackoff_factor = 0.5\n",
+        )
+        .unwrap();
+        assert!(ChaosProfile::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn injection_draws_are_deterministic_and_bounded() {
+        let p = ChaosProfile::latency_tail();
+        let inj = p.injection(42).expect("tails configured");
+        for job in 0..200usize {
+            for gen in 0..3u64 {
+                let a = inj.launch_stretch(job, gen);
+                let b = inj.launch_stretch(job, gen);
+                assert_eq!(a.to_bits(), b.to_bits());
+                assert!((1.0..=p.launch_tail_factor).contains(&a), "{a}");
+                let l = inj.lookup_stretch(job, gen);
+                assert!((1.0..=p.lookup_tail_factor).contains(&l), "{l}");
+            }
+        }
+        // the configured fraction of launches is actually stretched
+        let stretched = (0..1000usize)
+            .filter(|&j| inj.launch_stretch(j, 0) > 1.0)
+            .count();
+        assert!((150..450).contains(&stretched), "{stretched}/1000");
+        // no tails configured → no injection model at all
+        let mut quiet = p.clone();
+        quiet.launch_tail_frac = 0.0;
+        quiet.lookup_tail_frac = 0.0;
+        assert!(quiet.injection(42).is_none());
+    }
+
+    #[test]
+    fn topology_fans_small_requests_to_whole_racks() {
+        let mut t = DomainTopology::new(32, 4);
+        assert_eq!(t.domain_size(), 8);
+        let fanned = t.fan_out(100.0, 3, 300.0, 32);
+        assert_eq!(fanned, 8, "one whole rack");
+        assert_eq!(t.dead_gpus(100.0), 8);
+        assert_eq!(t.dead_gpus(399.0), 8);
+        assert_eq!(t.dead_gpus(400.0), 0, "repaired at now + repair_s");
+        // a bigger request takes several racks
+        let fanned = t.fan_out(100.0, 12, 300.0, 24);
+        assert_eq!(fanned, 16);
+        assert_eq!(t.dead_gpus(100.0), 24);
+    }
+
+    #[test]
+    fn topology_never_exceeds_headroom() {
+        let mut t = DomainTopology::new(32, 4);
+        // headroom below one rack: the request passes through unfanned
+        // and no rack is marked dead
+        let fanned = t.fan_out(0.0, 6, 300.0, 4);
+        assert_eq!(fanned, 6);
+        assert_eq!(t.dead_gpus(0.0), 0);
+        // headroom fits exactly one rack even though the request wants 2
+        let fanned = t.fan_out(0.0, 16, 300.0, 8);
+        assert_eq!(fanned, 8);
+        assert_eq!(t.dead_gpus(0.0), 8);
+    }
+
+    #[test]
+    fn topology_rotation_spreads_events_across_racks() {
+        let mut t = DomainTopology::new(32, 4);
+        assert_eq!(t.fan_out(0.0, 1, 1e9, 32), 8);
+        assert_eq!(t.fan_out(1.0, 1, 1e9, 32), 8);
+        assert_eq!(t.fan_out(2.0, 1, 1e9, 32), 8);
+        assert_eq!(t.dead_gpus(3.0), 24, "three distinct racks dead");
+    }
+
+    #[test]
+    fn engine_without_topology_passes_revocations_through() {
+        let mut e = ChaosEngine::new(ChaosProfile::flaky(), 7, 32);
+        assert!(e.topology().is_none());
+        assert_eq!(e.fan_out(0.0, 5, 60.0, 32), 5);
+        assert_eq!(e.dead_gpus(0.0), 0);
+        let e = ChaosEngine::new(ChaosProfile::rack_storm(), 7, 32);
+        assert_eq!(e.topology().unwrap().domains(), 4);
+    }
+}

@@ -22,15 +22,27 @@
 //!   effective iteration time, lost work re-runs, and restores pay a
 //!   fixed overhead at relaunch — no silent job restarts.
 //!
+//! The [`chaos`] submodule layers *continuous* misbehavior on top of the
+//! discrete plans: hash-derived latency tails on launch/bank-lookup
+//! paths, correlated failure domains (one event takes whole racks down),
+//! and completion errors with retry-budget/backoff recovery delivered
+//! through `Policy::on_retry` — see [`ChaosProfile`] / [`ChaosEngine`]
+//! and [`FaultInjector::with_chaos`].
+//!
 //! Everything is deterministic in the plan seed and declared through
 //! [`Wake::At`], so faulted runs stay bit-identical under dense and
 //! coalesced ticking (enforced by
 //! `prop_tick_coalescing_matches_dense_reference`) and oracle-clean
 //! (`StateAudit` audits that revoked GPUs are never re-granted before
-//! repair and that lost-work accounting is conserved).
+//! repair and that lost-work, retry, and dead-domain accounting is
+//! conserved).
+
+pub mod chaos;
+
+pub use chaos::{ChaosEngine, ChaosKind, ChaosProfile, DomainTopology};
 
 use crate::cluster::{CheckpointModel, ClusterState, JobStatus, Policy,
-                     Revoked, RevokeEvent, Wake};
+                     RetryEvent, Revoked, RevokeEvent, Wake};
 use crate::util::rng::Rng;
 use crate::workload::Llm;
 
@@ -133,6 +145,26 @@ impl FaultPlan {
         }
         FaultPlan::new(events)
     }
+
+    /// Rolling correlated failures: `waves` abrupt GPU-failure events of
+    /// `gpus_per_wave` spread across the window (seeded ±45 s jitter),
+    /// each repaired `repair_s` later. Built for the chaos engine's rack
+    /// topology — each wave fans out to whole failure domains.
+    pub fn rolling_failures(seed: u64, window_s: f64, waves: usize,
+                            gpus_per_wave: usize,
+                            repair_s: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0x5EED_9077_FA17_0004);
+        let mut events = Vec::with_capacity(waves);
+        for i in 0..waves {
+            let base = window_s * (i as f64 + 1.0) / (waves as f64 + 1.0);
+            let at = (base + rng.range_f64(-45.0, 45.0)).max(0.0);
+            events.push(FaultEvent {
+                at,
+                kind: FaultKind::GpuFailure { gpus: gpus_per_wave, repair_s },
+            });
+        }
+        FaultPlan::new(events)
+    }
 }
 
 /// Drives a [`FaultPlan`] against any wrapped [`Policy`]. Faults are
@@ -157,6 +189,9 @@ pub struct FaultInjector<P: Policy> {
     /// degrades and repairs back to).
     base_capacity: usize,
     started: bool,
+    /// Chaos engine (latency tails, failure domains, completion
+    /// errors). `None` keeps the plain fault-engine semantics.
+    chaos: Option<ChaosEngine>,
 }
 
 impl<P: Policy> FaultInjector<P> {
@@ -171,7 +206,21 @@ impl<P: Policy> FaultInjector<P> {
             revoked_out: 0,
             base_capacity: 0,
             started: false,
+            chaos: None,
         }
+    }
+
+    /// Like [`FaultInjector::new`], with a [`ChaosEngine`] layered on:
+    /// latency tails are armed in the simulator at run start, plan
+    /// revocations fan out to the engine's failure domains, and
+    /// completions pass through its completion-error draw (failures are
+    /// delivered to the policy's `on_retry` instead of
+    /// `on_job_complete`). The plan may be empty for pure-chaos runs.
+    pub fn with_chaos(inner: P, plan: FaultPlan, ckpt: CheckpointModel,
+                      chaos: ChaosEngine) -> Self {
+        let mut this = FaultInjector::new(inner, plan, ckpt);
+        this.chaos = Some(chaos);
+        this
     }
 
     pub fn into_inner(self) -> P {
@@ -183,6 +232,11 @@ impl<P: Policy> FaultInjector<P> {
         self.revoked_out
     }
 
+    /// The layered chaos engine, if any (telemetry: give-up counts).
+    pub fn chaos(&self) -> Option<&ChaosEngine> {
+        self.chaos.as_ref()
+    }
+
     fn ensure_started(&mut self, st: &mut ClusterState) {
         if !self.started {
             self.started = true;
@@ -192,6 +246,9 @@ impl<P: Policy> FaultInjector<P> {
                 .unwrap_or(st.cfg.max_gpus)
                 .min(st.cfg.max_gpus);
             st.set_checkpoint_model(Some(self.ckpt.clone()));
+            if let Some(ch) = &self.chaos {
+                st.set_chaos(ch.injection());
+            }
         }
     }
 
@@ -222,6 +279,12 @@ impl<P: Policy> FaultInjector<P> {
         if repaired > 0 {
             self.revoked_out -= repaired;
             st.set_revoked(self.revoked_out as f64);
+            // a repair brings its whole rack back: refresh the
+            // dead-domain level alongside the revoked level, so the
+            // oracle's `revoked ≥ dead-domain` invariant holds
+            if let Some(ch) = &self.chaos {
+                st.set_dead_domain(ch.dead_gpus(now) as f64);
+            }
             self.inner.set_capacity(st, self.ceiling());
         }
         let mut due: Vec<(usize, f64)> = vec![];
@@ -281,18 +344,27 @@ impl<P: Policy> FaultInjector<P> {
         }
     }
 
-    /// Revoke `gpus` GPUs now: preempt victims (ascending job id) until
-    /// their allocations cover the failed count, notify the policy once
-    /// with the full event, and lower the scheduling ceiling.
+    /// Revoke `gpus` GPUs now: fan the request out to its failure
+    /// domains (chaos topology — one event takes whole racks down),
+    /// preempt victims (ascending job id) until their allocations cover
+    /// the failed count, notify the policy once with the full event, and
+    /// lower the scheduling ceiling.
     fn revoke(&mut self, st: &mut ClusterState, gpus: usize, graceful: bool,
               repair_s: f64) {
         let headroom = self.base_capacity.saturating_sub(self.revoked_out);
-        let n = gpus.min(headroom);
+        let want = match &mut self.chaos {
+            Some(ch) => ch.fan_out(st.now(), gpus, repair_s, headroom),
+            None => gpus,
+        };
+        let n = want.min(headroom);
         if n == 0 {
             return;
         }
         self.revoked_out += n;
         st.set_revoked(self.revoked_out as f64);
+        if let Some(ch) = &self.chaos {
+            st.set_dead_domain(ch.dead_gpus(st.now()) as f64);
+        }
         if repair_s.is_finite() {
             self.repairs.push((st.now() + repair_s, n));
         }
@@ -372,6 +444,17 @@ impl<P: Policy> Policy for FaultInjector<P> {
     }
 
     fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
+        // Chaos completion-error draw: a failed run re-enters the queue
+        // through `on_retry` and never reaches the policy's (or any
+        // observer's) completion path — only the accepted completion is
+        // sampled.
+        if let Some(ch) = &mut self.chaos {
+            if let Some(ev) = ch.try_fail(st, job_id) {
+                self.inner.on_retry(st, &ev);
+                self.clamp_to_ceiling(st);
+                return;
+            }
+        }
         self.inner.on_job_complete(st, job_id);
         self.clamp_to_ceiling(st);
     }
@@ -385,6 +468,10 @@ impl<P: Policy> Policy for FaultInjector<P> {
 
     fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
         self.inner.on_revoke(st, ev);
+    }
+
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        self.inner.on_retry(st, ev);
     }
 
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
@@ -626,6 +713,135 @@ mod tests {
             assert_eq!(res.n_done, n, "{name} stranded revoked jobs");
             assert!(res.revocations > 0,
                     "{name}: the outage preempted nothing");
+        }
+    }
+
+    // ------------------------------------------------------ chaos engine
+
+    fn chaos_run(profile: ChaosProfile, plan: FaultPlan, seed: u64)
+                 -> (SimResult, Vec<String>, u64) {
+        let jobs = medium_trace(seed);
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::collecting(FaultInjector::with_chaos(
+            pt(32, seed),
+            plan,
+            CheckpointModel::default(),
+            ChaosEngine::new(profile, seed, 32),
+        ));
+        let res = sim.run(&mut policy, jobs);
+        let violations = policy.violations().to_vec();
+        let giveups = policy.into_inner().chaos().unwrap().giveups();
+        (res, violations, giveups)
+    }
+
+    #[test]
+    fn latency_tails_delay_launches_without_failing_anything() {
+        let (res, violations, _) =
+            chaos_run(ChaosProfile::latency_tail(), FaultPlan::default(), 17);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, res.n_jobs);
+        assert!(res.chaos_delay_s > 0.0, "no tail ever fired");
+        assert_eq!(res.retries, 0);
+        assert_eq!(res.revocations, 0);
+    }
+
+    #[test]
+    fn flaky_completions_retry_with_backoff_and_all_jobs_finish() {
+        let (res, violations, _) =
+            chaos_run(ChaosProfile::flaky(), FaultPlan::default(), 19);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, res.n_jobs, "retried jobs were stranded");
+        assert!(res.retries > 0, "completion errors never fired");
+        assert!(res.retry_iters > 0.0);
+    }
+
+    #[test]
+    fn exhausted_retry_budgets_give_up_instead_of_looping() {
+        // error fraction 1: every completion draw fails, so each job
+        // burns its full budget and is then accepted best-effort
+        let mut p = ChaosProfile::flaky();
+        p.completion_error_frac = 1.0;
+        p.retry_budget = 1;
+        let (res, violations, giveups) =
+            chaos_run(p, FaultPlan::default(), 23);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, res.n_jobs);
+        assert_eq!(res.retries as usize, res.n_jobs,
+                   "every job retries exactly its budget");
+        assert_eq!(giveups as usize, res.n_jobs,
+                   "every job then gives up once");
+    }
+
+    #[test]
+    fn rack_storm_fans_failures_out_to_whole_domains() {
+        let plan = FaultPlan::rolling_failures(29, 1200.0, 3, 6, 240.0);
+        let (res, violations, _) =
+            chaos_run(ChaosProfile::rack_storm(), plan, 29);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(res.n_done, res.n_jobs);
+        // 32 GPUs / 4 domains: each 6-GPU wave fans to a whole 8-GPU
+        // rack, so victims cover at least one rack's worth of GPUs
+        assert!(res.revocations > 0, "the storm preempted nothing");
+    }
+
+    #[test]
+    fn chaos_runs_are_bit_deterministic() {
+        let run = || {
+            chaos_run(
+                ChaosProfile::rack_storm(),
+                FaultPlan::rolling_failures(31, 1200.0, 3, 6, 240.0),
+                31,
+            )
+        };
+        let (a, _, ga) = run();
+        let (b, _, gb) = run();
+        assert_eq!(a.cost_usd, b.cost_usd);
+        assert_eq!(a.job_latencies, b.job_latencies);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.chaos_delay_s.to_bits(), b.chaos_delay_s.to_bits());
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn all_three_systems_recover_from_flaky_completions_under_oracle() {
+        let jobs = medium_trace(37);
+        let n = jobs.len();
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(pt(32, 37)),
+            Box::new(Infless::new(InflessConfig {
+                max_gpus: 32,
+                seed: 37,
+                ..Default::default()
+            })),
+            Box::new(ElasticFlow::new(ElasticFlowConfig {
+                cluster_size: 32,
+                seed: 37,
+                ..Default::default()
+            })),
+        ];
+        for inner in policies {
+            let name = inner.name().to_string();
+            let sim = Simulator::new(
+                SimConfig { max_gpus: 32, ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut policy = SimOracle::collecting(FaultInjector::with_chaos(
+                inner,
+                FaultPlan::default(),
+                CheckpointModel::default(),
+                ChaosEngine::new(ChaosProfile::flaky(), 37, 32),
+            ));
+            let res = sim.run(&mut policy, jobs.clone());
+            assert!(
+                policy.violations().is_empty(),
+                "{name}: {:?}",
+                policy.violations().first()
+            );
+            assert_eq!(res.n_done, n, "{name} stranded retried jobs");
+            assert!(res.retries > 0, "{name}: no completion error fired");
         }
     }
 }

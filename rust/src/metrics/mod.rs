@@ -141,6 +141,9 @@ mod tests {
             revocations: 0,
             lost_iters: 0.0,
             straggler_iters: 0.0,
+            retries: 0,
+            retry_iters: 0.0,
+            chaos_delay_s: 0.0,
             wall_s: 0.0,
         }
     }

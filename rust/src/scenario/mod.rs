@@ -23,11 +23,19 @@
 //!   outside every bank's seeded corpus) take over the arrival stream
 //!   mid-run: a warm Prompt Bank's coverage dips cold for them and
 //!   recovers as completed jobs feed tuned prompts back — only
-//!   expressible with the stateful bank (`promptbank::SimBank`).
+//!   expressible with the stateful bank (`promptbank::SimBank`);
+//! * **chaos-latency / chaos-flaky / chaos-storm** — the paper's spiky
+//!   arrivals under a continuous-misbehavior profile
+//!   ([`fault::ChaosProfile`](crate::fault::ChaosProfile)): launch/bank
+//!   latency tails, failed completions that re-enter the queue with
+//!   retry budgets and exponential backoff, and (storm only) rolling
+//!   correlated rack failures — see [`Scenario::chaos_profile`].
 //!
 //! The fault families pair a workload with a [`FaultPlan`]
 //! ([`Scenario::fault_plan`]); `bench::make_policy` wraps the policy in
-//! the `fault::FaultInjector` automatically for such cells.
+//! the `fault::FaultInjector` automatically for such cells. The chaos
+//! families additionally return a [`Scenario::chaos_profile`], which the
+//! harness hands to the injector as a `fault::ChaosEngine`.
 //!
 //! Every family is produced through the existing
 //! [`TraceGenerator`]/[`JobSpec`] pipeline — same per-job sampling, same
@@ -42,7 +50,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::fault::FaultPlan;
+use crate::fault::{ChaosKind, ChaosProfile, FaultPlan};
 use crate::trace::{DurationDist, TraceConfig, TraceGenerator};
 use crate::util::rng::Rng;
 use crate::workload::{JobSpec, Llm, PerfModel};
@@ -90,6 +98,12 @@ pub enum Scenario {
     /// bank goes cold for them mid-run and must recover through the
     /// completion-feedback flywheel.
     TaskDrift { drift_at_frac: f64, novel_tasks: usize, jobs_per_llm: usize },
+    /// Continuous misbehavior: the paper's spiky arrivals while a
+    /// [`ChaosProfile`] stretches launch/bank latencies, fails
+    /// completions into retry-with-backoff, and (for
+    /// [`ChaosKind::RackStorm`]) pairs with rolling correlated rack
+    /// failures from [`Scenario::fault_plan`].
+    Chaos { kind: ChaosKind, jobs_per_llm: usize },
 }
 
 impl Scenario {
@@ -107,6 +121,9 @@ impl Scenario {
                                  jobs_per_llm: 60 },
             Scenario::TaskDrift { drift_at_frac: 0.4, novel_tasks: 8,
                                   jobs_per_llm: 60 },
+            Scenario::Chaos { kind: ChaosKind::LatencyTail, jobs_per_llm: 60 },
+            Scenario::Chaos { kind: ChaosKind::Flaky, jobs_per_llm: 60 },
+            Scenario::Chaos { kind: ChaosKind::RackStorm, jobs_per_llm: 60 },
         ]
     }
 
@@ -120,6 +137,11 @@ impl Scenario {
             Scenario::SpotMarket { .. } => "spot-market",
             Scenario::AzOutage { .. } => "az-outage",
             Scenario::TaskDrift { .. } => "task-drift",
+            Scenario::Chaos { kind: ChaosKind::LatencyTail, .. } => {
+                "chaos-latency"
+            }
+            Scenario::Chaos { kind: ChaosKind::Flaky, .. } => "chaos-flaky",
+            Scenario::Chaos { kind: ChaosKind::RackStorm, .. } => "chaos-storm",
         }
     }
 
@@ -140,7 +162,8 @@ impl Scenario {
             Scenario::HeavyTail { .. }
             | Scenario::MultiTenant { .. }
             | Scenario::AzOutage { .. }
-            | Scenario::TaskDrift { .. } => Some(1200.0),
+            | Scenario::TaskDrift { .. }
+            | Scenario::Chaos { .. } => Some(1200.0),
             Scenario::Replay { .. } => None,
         }
     }
@@ -166,7 +189,8 @@ impl Scenario {
             | Scenario::HeavyTail { jobs_per_llm, .. }
             | Scenario::SpotMarket { jobs_per_llm, .. }
             | Scenario::AzOutage { jobs_per_llm, .. }
-            | Scenario::TaskDrift { jobs_per_llm, .. } => {
+            | Scenario::TaskDrift { jobs_per_llm, .. }
+            | Scenario::Chaos { jobs_per_llm, .. } => {
                 Some(jobs_per_llm * Llm::MAIN.len())
             }
             Scenario::MultiTenant { tenants, jobs_per_tenant } => {
@@ -205,6 +229,27 @@ impl Scenario {
                     2,
                 ))
             }
+            Scenario::Chaos { kind: ChaosKind::RackStorm, .. } => {
+                // Rolling hard failures; the chaos engine's domain
+                // topology fans each one out to a whole rack.
+                Some(FaultPlan::rolling_failures(
+                    seed,
+                    self.window_s().unwrap(),
+                    3,
+                    frac_gpus(0.2),
+                    240.0,
+                ))
+            }
+            _ => None,
+        }
+    }
+
+    /// The family's continuous-misbehavior profile (None for the
+    /// chaos-free families). `bench::make_policy` hands it to the
+    /// `fault::FaultInjector` as a `fault::ChaosEngine` for such cells.
+    pub fn chaos_profile(&self) -> Option<ChaosProfile> {
+        match self {
+            Scenario::Chaos { kind, .. } => Some(kind.profile()),
             _ => None,
         }
     }
@@ -329,10 +374,13 @@ impl Scenario {
                 Ok(jobs)
             }
             Scenario::SpotMarket { jobs_per_llm, .. }
-            | Scenario::AzOutage { jobs_per_llm, .. } => {
+            | Scenario::AzOutage { jobs_per_llm, .. }
+            | Scenario::Chaos { jobs_per_llm, .. } => {
                 // The workload itself is the paper's spiky arrival shape;
-                // the churn comes from the family's fault plan
-                // (`Scenario::fault_plan`), applied by the bench harness.
+                // the churn comes from the family's fault plan and/or
+                // chaos profile (`Scenario::fault_plan`,
+                // `Scenario::chaos_profile`), applied by the bench
+                // harness.
                 let window_s = self.window_s().unwrap();
                 let mut gen =
                     TraceGenerator::new(base_cfg(window_s), PerfModel::default());
@@ -368,11 +416,11 @@ mod tests {
     #[test]
     fn catalogue_names_are_unique_and_resolvable() {
         let cat = Scenario::catalogue();
-        assert_eq!(cat.len(), 7);
+        assert_eq!(cat.len(), 10);
         let mut names: Vec<&str> = cat.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 7);
+        assert_eq!(names.len(), 10);
         for s in &cat {
             assert!(Scenario::from_name(s.name()).is_some(), "{}", s.name());
         }
@@ -385,7 +433,9 @@ mod tests {
         for sc in Scenario::catalogue() {
             let faulted = matches!(
                 sc,
-                Scenario::SpotMarket { .. } | Scenario::AzOutage { .. }
+                Scenario::SpotMarket { .. }
+                    | Scenario::AzOutage { .. }
+                    | Scenario::Chaos { kind: ChaosKind::RackStorm, .. }
             );
             let plan = sc.fault_plan(3, 32);
             assert_eq!(plan.is_some(), faulted, "{}", sc.name());
@@ -505,6 +555,24 @@ mod tests {
         // drifted jobs repeat novel tasks (the recovery flywheel needs
         // same-task repeats within each LLM's bank)
         assert!(post > novel_seen.len() * 3);
+    }
+
+    #[test]
+    fn chaos_profiles_exist_exactly_for_chaos_families() {
+        let mut chaos_names = vec![];
+        for sc in Scenario::catalogue() {
+            let is_chaos = matches!(sc, Scenario::Chaos { .. });
+            let profile = sc.chaos_profile();
+            assert_eq!(profile.is_some(), is_chaos, "{}", sc.name());
+            if let Some(p) = profile {
+                p.validate().unwrap_or_else(|e| {
+                    panic!("{}: invalid profile: {e}", sc.name())
+                });
+                chaos_names.push(sc.name());
+            }
+        }
+        assert_eq!(chaos_names,
+                   vec!["chaos-latency", "chaos-flaky", "chaos-storm"]);
     }
 
     #[test]

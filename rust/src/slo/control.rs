@@ -6,7 +6,7 @@
 //! invariant the oracle audits (busy ≤ billable ≤ budget) is preserved by
 //! construction.
 
-use crate::cluster::{ClusterState, Policy, RevokeEvent, Wake};
+use crate::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent, Wake};
 use crate::slo::monitor::SloMonitor;
 use crate::slo::SloConfig;
 
@@ -324,6 +324,16 @@ impl<P: Policy> Policy for Governed<P> {
         // governor only needs to re-evaluate at the next round (the
         // fault engine re-clamps any surged capacity itself).
         self.inner.on_revoke(st, ev);
+        self.needs_round = true;
+    }
+
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        // A failed completion is not a completion: the burn gauge only
+        // samples a job's final outcome (the chaos engine intercepts the
+        // completion before it reaches this wrapper), so no monitor feed
+        // here — just let the wrapped policy recover and re-evaluate.
+        self.inner.on_retry(st, ev);
+        self.govern(st);
         self.needs_round = true;
     }
 

@@ -265,4 +265,39 @@ mod tests {
             obs.mon.attainment_table().iter().map(|c| c.jobs).sum();
         assert_eq!(table_jobs as usize, n);
     }
+
+    #[test]
+    fn burn_gauge_counts_each_job_once_under_flaky_chaos() {
+        // Failed completions re-enter the queue through the chaos
+        // engine's retry path; the simulator only fires the observer on
+        // the attempt that sticks, so the gauge must see exactly one
+        // sample per job no matter how many attempts it took.
+        use crate::cluster::CheckpointModel;
+        use crate::fault::{ChaosEngine, ChaosProfile, FaultInjector,
+                           FaultPlan};
+        let perf = PerfModel::default();
+        let mut gen = TraceGenerator::new(
+            TraceConfig { seed: 53, ..Default::default() },
+            perf.clone(),
+        );
+        let jobs = gen.generate_main(Load::Medium);
+        let n = jobs.len();
+        let sim = Simulator::new(SimConfig::default(), perf);
+        let mut policy = FaultInjector::with_chaos(
+            PromptTuner::new(PromptTunerConfig { seed: 53, ..Default::default() }),
+            FaultPlan::new(vec![]),
+            CheckpointModel::default(),
+            ChaosEngine::new(ChaosProfile::flaky(), 53, 32),
+        );
+        let mut mon = SloMonitor::new(SloConfig::default());
+        let res = sim.run_observed(&mut policy, jobs, &mut mon);
+        assert_eq!(res.n_done, n);
+        assert!(res.retries > 0, "flaky profile injected no failures");
+        assert_eq!(mon.arrived(), n);
+        assert_eq!(mon.finished(), n);
+        assert_eq!(mon.gauge.budget.total_seen, n as u64);
+        let table_jobs: u64 =
+            mon.attainment_table().iter().map(|c| c.jobs).sum();
+        assert_eq!(table_jobs as usize, n);
+    }
 }

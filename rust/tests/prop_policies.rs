@@ -7,8 +7,9 @@
 
 use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use prompttuner::bench::{self, SweepCell, SYSTEMS};
-use prompttuner::cluster::{ClusterState, Policy, RevokeEvent, SimConfig,
-                           SimOracle, Simulator, Wake};
+use prompttuner::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
+                           SimConfig, SimOracle, Simulator, Wake};
+use prompttuner::fault::ChaosKind;
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::scenario::Scenario;
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
@@ -110,6 +111,9 @@ impl Policy for DenseTick {
     fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
         self.0.on_revoke(st, ev)
     }
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        self.0.on_retry(st, ev)
+    }
     fn capacity(&self) -> Option<usize> {
         self.0.capacity()
     }
@@ -126,8 +130,10 @@ impl Policy for DenseTick {
 /// spot-market / az-outage families (involuntary revocations, repairs and
 /// stragglers applied through the fault engine's `Wake::At` grid) — the
 /// optimized simulator yields the same n_done / n_violations / cost as a
-/// dense-tick reference run. Both runs execute under the simulation
-/// oracle.
+/// dense-tick reference run. The chaos-storm family rides the rotation
+/// too: latency tails, retry-with-backoff and correlated rack fan-out
+/// all hit the same bit-equality bar. Both runs execute under the
+/// simulation oracle.
 #[test]
 fn prop_tick_coalescing_matches_dense_reference() {
     let mut coalesced_total: u64 = 0;
@@ -153,6 +159,13 @@ fn prop_tick_coalescing_matches_dense_reference() {
                 storms: 2,
                 intensity: 20.0,
                 jobs_per_llm: 40,
+            }),
+            // the second case%4==2 slot runs the full chaos stack —
+            // latency tails, failed completions with backoff holdbacks,
+            // and rolling rack storms — through the same bit-equality bar
+            2 if case >= 4 => Some(Scenario::Chaos {
+                kind: ChaosKind::RackStorm,
+                jobs_per_llm: 30,
             }),
             2 => Some(Scenario::HeavyTail { alpha: 1.1, jobs_per_llm: 40 }),
             3 if case < 4 => Some(Scenario::SpotMarket {
@@ -231,6 +244,18 @@ fn prop_tick_coalescing_matches_dense_reference() {
                          {} rev / {} lost",
                         fast_res.revocations, fast_res.lost_iters,
                         dense_res.revocations, dense_res.lost_iters),
+            )?;
+            ensure(
+                fast_res.retries == dense_res.retries
+                    && fast_res.retry_iters.to_bits()
+                        == dense_res.retry_iters.to_bits()
+                    && fast_res.chaos_delay_s.to_bits()
+                        == dense_res.chaos_delay_s.to_bits(),
+                format!("{tag}: chaos diverged: {} retries / {} iters / \
+                         {} delay vs {} / {} / {}",
+                        fast_res.retries, fast_res.retry_iters,
+                        fast_res.chaos_delay_s, dense_res.retries,
+                        dense_res.retry_iters, dense_res.chaos_delay_s),
             )?;
             ensure(
                 fast_res.job_latencies.len() == dense_res.job_latencies.len(),

@@ -4,10 +4,13 @@
 //! arrival. Scenario runs through the simulator are audited by the
 //! simulation oracle ([`SimOracle`]).
 
-use prompttuner::cluster::{SimConfig, SimOracle, Simulator};
+use prompttuner::bench::{self, SweepCell, SYSTEMS};
+use prompttuner::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
+                           SimConfig, SimOracle, Simulator};
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
+use prompttuner::fault::ChaosKind;
 use prompttuner::scenario::{replay, Scenario};
-use prompttuner::util::prop::{check, ensure};
+use prompttuner::util::prop::{check, check_sized, ensure};
 use prompttuner::workload::{JobSpec, Llm, PerfModel};
 
 /// Compare two generated traces field-by-field, bitwise for floats.
@@ -170,6 +173,121 @@ fn prop_replay_roundtrip_random_traces() {
         assert_identical("random-roundtrip-file", &from_file, &jobs)?;
         Ok(())
     });
+}
+
+/// Forces dense 50 ms rounds on any policy by leaving
+/// `next_timed_action` at its `Wake::Dense` default — the reference for
+/// the chaos coalescing-equality property below.
+struct DenseTick(Box<dyn Policy>);
+
+impl Policy for DenseTick {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+    fn tick_interval(&self) -> f64 {
+        self.0.tick_interval()
+    }
+    fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+        self.0.on_arrival(st, id)
+    }
+    fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
+        self.0.on_job_complete(st, id)
+    }
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.0.on_tick(st)
+    }
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        self.0.on_revoke(st, ev)
+    }
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        self.0.on_retry(st, ev)
+    }
+    fn capacity(&self) -> Option<usize> {
+        self.0.capacity()
+    }
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        self.0.set_capacity(st, gpus)
+    }
+    // next_timed_action: default Wake::Dense — never coalesce.
+}
+
+/// Chaos injection is hash-derived, never RNG-state-derived, so a
+/// chaos-wrapped run must be bit-identical across repeated same-seed
+/// runs AND across dense vs coalesced ticking — for every profile and
+/// every system (the full `bench::make_policy` wiring: FaultInjector +
+/// ChaosEngine, rolling rack storms included).
+#[test]
+fn prop_chaos_runs_bit_identical_across_ticking_and_repeats() {
+    let mut retries_total: u64 = 0;
+    let mut delay_total: f64 = 0.0;
+    check_sized("chaos runs identical dense/coalesced/repeated", 6,
+                |rng, case| {
+        let seed = rng.next_u64();
+        let kind = ChaosKind::ALL[(case % 3) as usize];
+        let sc = Scenario::Chaos { kind, jobs_per_llm: 16 };
+        for system in SYSTEMS {
+            let cell = SweepCell::scenario(
+                format!("chaos-eq/{}/{system}", sc.name()), system,
+                sc.clone(), 1.0, 32, seed);
+            let sim = Simulator::new(
+                SimConfig { max_gpus: 32, ..Default::default() },
+                PerfModel::default(),
+            );
+            let run = |dense: bool| {
+                let mut p: Box<dyn Policy> = if dense {
+                    Box::new(DenseTick(bench::make_policy(&cell)))
+                } else {
+                    bench::make_policy(&cell)
+                };
+                sim.run(p.as_mut(), bench::gen_jobs(&cell))
+            };
+            let a = run(false);
+            let b = run(false);
+            let d = run(true);
+            let tag = format!("{}/{system} seed={seed}", sc.name());
+            for (what, o) in [("repeat", &b), ("dense", &d)] {
+                ensure(a.n_done == o.n_done && a.n_violations == o.n_violations,
+                       format!("{tag}: {what}: done/violations diverged"))?;
+                ensure(a.cost_usd.to_bits() == o.cost_usd.to_bits(),
+                       format!("{tag}: {what}: cost {} vs {}",
+                               a.cost_usd, o.cost_usd))?;
+                ensure(
+                    a.retries == o.retries
+                        && a.retry_iters.to_bits() == o.retry_iters.to_bits()
+                        && a.chaos_delay_s.to_bits()
+                            == o.chaos_delay_s.to_bits(),
+                    format!("{tag}: {what}: chaos telemetry diverged: \
+                             {} retries / {} iters / {} delay vs \
+                             {} / {} / {}",
+                            a.retries, a.retry_iters, a.chaos_delay_s,
+                            o.retries, o.retry_iters, o.chaos_delay_s),
+                )?;
+                ensure(
+                    a.revocations == o.revocations
+                        && a.lost_iters.to_bits() == o.lost_iters.to_bits(),
+                    format!("{tag}: {what}: fault telemetry diverged"),
+                )?;
+                ensure(a.job_latencies.len() == o.job_latencies.len(),
+                       format!("{tag}: {what}: latency count"))?;
+                for (x, y) in a.job_latencies.iter().zip(&o.job_latencies) {
+                    ensure(
+                        x.0.to_bits() == y.0.to_bits()
+                            && x.1.to_bits() == y.1.to_bits()
+                            && x.2.to_bits() == y.2.to_bits()
+                            && x.3.to_bits() == y.3.to_bits(),
+                        format!("{tag}: {what}: per-job latency \
+                                 {x:?} vs {y:?}"),
+                    )?;
+                }
+            }
+            retries_total += a.retries;
+            delay_total += a.chaos_delay_s;
+        }
+        Ok(())
+    });
+    // the profiles must actually have misbehaved somewhere
+    assert!(delay_total > 0.0, "no chaos latency was ever injected");
+    assert!(retries_total > 0, "no completion was ever failed");
 }
 
 /// Every family must actually run through the scheduler stack — audited

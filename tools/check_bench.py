@@ -12,6 +12,10 @@ Exit codes:
     2 — the bench record file itself is missing (the bench never ran or
         wrote elsewhere) — distinct from a malformed record so CI logs
         and callers can tell the two apart
+    3 — the record is structurally valid but its suite has zero cells
+        (the sweep built an empty grid and ran nothing) — distinct from
+        a malformed record so a silently-empty sweep can't masquerade as
+        a formatting bug
 
 Cell-level failures name the suite and the offending cell
 (label/system), so a red CI run points at the exact sweep cell.
@@ -35,6 +39,7 @@ REQUIRED_CELL = [
 
 EXIT_FAIL = 1
 EXIT_MISSING_RECORD = 2
+EXIT_EMPTY_SUITE = 3
 
 
 def fail(msg: str, code: int = EXIT_FAIL) -> None:
@@ -63,8 +68,11 @@ def load_record(path: str) -> dict:
         if key not in rec:
             fail(f"{path}: missing top-level key '{key}'")
     suite = rec["suite"]
-    if not isinstance(rec["cells"], list) or not rec["cells"]:
-        fail(f"{path}: suite '{suite}': 'cells' must be a non-empty list")
+    if not isinstance(rec["cells"], list):
+        fail(f"{path}: suite '{suite}': 'cells' must be a list")
+    if not rec["cells"]:
+        fail(f"{path}: suite '{suite}': record is structurally valid but "
+             f"has zero cells — the sweep ran nothing", EXIT_EMPTY_SUITE)
     for i, cell in enumerate(rec["cells"]):
         where = cell_name(suite, i, cell)
         for key in REQUIRED_CELL:
@@ -84,6 +92,8 @@ def load_record(path: str) -> dict:
         check_faults(path, rec)
     if suite == "bank":
         check_bank(path, rec)
+    if suite == "chaos":
+        check_chaos(path, rec)
     return rec
 
 
@@ -92,6 +102,7 @@ def load_record(path: str) -> dict:
 SCENARIO_FAMILIES = {
     "diurnal", "flash-crowd", "heavy-tail", "multi-tenant", "replay",
     "spot-market", "az-outage", "task-drift",
+    "chaos-latency", "chaos-flaky", "chaos-storm",
 }
 SCENARIO_SYSTEMS = {"prompttuner", "infless", "elasticflow"}
 
@@ -296,6 +307,98 @@ def check_bank(path: str, rec: dict) -> None:
              f"{cold['mean_quality']:.3f}")
     print(f"check_bench: bank suite covers {sorted(seen)} x "
           f"{sorted(SCENARIO_SYSTEMS)}")
+
+
+# The chaos & latency-realism sweep (fig15) must cover these scenario
+# families under every system.
+CHAOS_SCENARIOS = {"chaos-latency", "chaos-flaky", "chaos-storm"}
+
+# Conservative per-profile SLO-attainment floors (fraction of jobs
+# meeting their SLO). Chaos degrades attainment by design, so the floors
+# sit well below fault-free levels — but above zero, so a system that
+# collapses under misbehavior (stranded retries, livelocked backoff,
+# capacity leaked into dead domains) cannot pass the gate.
+CHAOS_ATTAINMENT_FLOOR = {
+    "chaos-latency": 0.25,
+    "chaos-flaky": 0.20,
+    "chaos-storm": 0.10,
+}
+
+
+def check_chaos(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_chaos.json: every cell is tagged with a
+    chaos scenario and carries chaos telemetry (retries, retry_iters,
+    chaos_delay_s), coverage spans families x systems, the profiles
+    actually fired (retries under flaky/storm, revocations under storm,
+    injected delay under every profile), every retried job still
+    completed (give-up lands best-effort, never stranded), and each
+    system keeps SLO attainment above the per-profile floor."""
+    seen = {}
+    total_retries = 0
+    total_delay = 0.0
+    storm_revocations = 0
+    for i, cell in enumerate(rec["cells"]):
+        where = cell_name("chaos", i, cell)
+        name = cell.get("scenario")
+        if name not in CHAOS_SCENARIOS:
+            fail(f"{path}: {where} has unexpected scenario '{name}'")
+        for key in ("retries", "retry_iters", "chaos_delay_s",
+                    "revocations"):
+            if key not in cell:
+                fail(f"{path}: {where} missing chaos telemetry '{key}'")
+        if (cell["retries"] < 0 or cell["retry_iters"] < 0
+                or cell["chaos_delay_s"] < 0):
+            fail(f"{path}: {where} has negative chaos telemetry")
+        if cell["n_jobs"] <= 0:
+            fail(f"{path}: {where} ({name}) ran no jobs")
+        if cell["n_done"] != cell["n_jobs"]:
+            fail(f"{path}: {where} stranded retried jobs "
+                 f"({cell['n_done']}/{cell['n_jobs']} done) — recovery "
+                 f"must finish every failed run, by retry or by give-up")
+        if name == "chaos-latency" and cell["retries"] != 0:
+            fail(f"{path}: {where} recorded {cell['retries']} retries "
+                 f"under the failure-free latency profile")
+        if name in ("chaos-flaky", "chaos-storm") and cell["retries"] == 0:
+            fail(f"{path}: {where} recorded no retries — the '{name}' "
+                 f"completion-error injection never fired")
+        attain = (cell["n_jobs"] - cell["n_violations"]) / cell["n_jobs"]
+        floor = CHAOS_ATTAINMENT_FLOOR[name]
+        if attain < floor:
+            fail(f"{path}: {where} attainment {attain:.3f} below the "
+                 f"'{name}' floor {floor} — the system collapsed under "
+                 f"chaos")
+        total_retries += cell["retries"]
+        total_delay += cell["chaos_delay_s"]
+        if name == "chaos-storm":
+            storm_revocations += cell["revocations"]
+        seen.setdefault(name, set()).add(cell["system"])
+    missing = CHAOS_SCENARIOS - set(seen)
+    if missing:
+        fail(f"{path}: chaos scenarios missing from the sweep: "
+             f"{sorted(missing)}")
+    for name, systems in sorted(seen.items()):
+        lacking = SCENARIO_SYSTEMS - systems
+        if lacking:
+            fail(f"{path}: chaos scenario '{name}' missing systems: "
+                 f"{sorted(lacking)}")
+    if total_delay <= 0:
+        fail(f"{path}: no cell recorded injected chaos delay — the "
+             f"latency tails never fired")
+    if storm_revocations == 0:
+        fail(f"{path}: chaos-storm recorded no revocations — the rolling "
+             f"rack failures never fired")
+    for name in sorted(CHAOS_SCENARIOS):
+        for cell in rec["cells"]:
+            if cell["scenario"] == name and cell["system"] == "prompttuner":
+                attain = ((cell["n_jobs"] - cell["n_violations"])
+                          / max(cell["n_jobs"], 1))
+                print(f"check_bench: chaos {name}/prompttuner: "
+                      f"{cell['retries']} retries, "
+                      f"{cell['chaos_delay_s']:.1f}s injected delay, "
+                      f"attainment {attain:.3f} "
+                      f"(floor {CHAOS_ATTAINMENT_FLOOR[name]})")
+    print(f"check_bench: chaos suite covers {sorted(seen)} x "
+          f"{sorted(SCENARIO_SYSTEMS)}, {total_retries} total retries")
 
 
 def cell_key(cell: dict) -> tuple:

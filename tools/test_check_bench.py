@@ -75,6 +75,22 @@ def faults_cells(revocations=3, n_done=None):
     return cells
 
 
+def chaos_cells(**over):
+    cells = []
+    for scenario in ("chaos-latency", "chaos-flaky", "chaos-storm"):
+        for system in ("prompttuner", "infless", "elasticflow"):
+            cells.append(make_cell(
+                label=f"fig15/{scenario}", system=system, scenario=scenario,
+                retries=0 if scenario == "chaos-latency" else 4,
+                retry_iters=0.0 if scenario == "chaos-latency" else 18.0,
+                chaos_delay_s=42.0,
+                revocations=3 if scenario == "chaos-storm" else 0,
+                lost_iters=7.5 if scenario == "chaos-storm" else 0.0,
+                **over,
+            ))
+    return cells
+
+
 def bank_cells(warm_q=0.9, cold_q=0.6, warm_viol=1, cold_viol=3):
     cells = []
     for state in ("cold", "warm", "drifting"):
@@ -261,6 +277,71 @@ def test_bank_suite_rejects_stranded_jobs(tmp):
     r = run_check(path)
     assert r.returncode == 1, (r.returncode, r.stderr)
     assert "stranded" in r.stderr
+
+
+def test_empty_cells_exits_3(tmp):
+    # structurally valid record, zero cells: the distinct empty-suite exit
+    path = write_tmp(tmp, "e.json", make_record(cells=[]))
+    r = run_check(path)
+    assert r.returncode == 3, (r.returncode, r.stderr)
+    assert "zero cells" in r.stderr
+
+
+def test_chaos_suite_passes_when_covered(tmp):
+    path = write_tmp(tmp, "c.json",
+                     make_record(suite="chaos", cells=chaos_cells()))
+    r = run_check(path)
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "chaos suite covers" in r.stdout
+
+
+def test_chaos_suite_requires_retry_telemetry(tmp):
+    cells = chaos_cells()
+    del cells[0]["retry_iters"]
+    path = write_tmp(tmp, "c.json", make_record(suite="chaos", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "retry_iters" in r.stderr
+
+
+def test_chaos_suite_enforces_attainment_floor(tmp):
+    # chaos-flaky floor is 0.20; 9 violations of 10 jobs is 0.10
+    cells = chaos_cells()
+    for c in cells:
+        if c["scenario"] == "chaos-flaky":
+            c["n_violations"] = 9
+    path = write_tmp(tmp, "c.json", make_record(suite="chaos", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "below the" in r.stderr and "floor" in r.stderr, r.stderr
+
+
+def test_chaos_suite_rejects_retries_under_latency_profile(tmp):
+    cells = chaos_cells()
+    for c in cells:
+        if c["scenario"] == "chaos-latency":
+            c["retries"] = 2
+    path = write_tmp(tmp, "c.json", make_record(suite="chaos", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "failure-free latency profile" in r.stderr
+
+
+def test_chaos_suite_rejects_stranded_retried_jobs(tmp):
+    cells = chaos_cells()
+    cells[-1]["n_done"] = cells[-1]["n_jobs"] - 2
+    path = write_tmp(tmp, "c.json", make_record(suite="chaos", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "stranded" in r.stderr
+
+
+def test_chaos_suite_requires_full_coverage(tmp):
+    cells = [c for c in chaos_cells() if c["scenario"] != "chaos-storm"]
+    path = write_tmp(tmp, "c.json", make_record(suite="chaos", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "chaos-storm" in r.stderr
 
 
 def test_missing_mean_quality_names_the_cell(tmp):
