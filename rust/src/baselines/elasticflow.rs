@@ -398,16 +398,18 @@ impl Policy for ElasticFlow {
                 next = t;
             }
         }
-        if self.free() == 0 {
-            // No admission, rescale or growth without free capacity;
-            // capacity only returns through a completion event.
-            return if next.is_finite() { Wake::At(next) } else { Wake::Idle };
-        }
-        // Free capacity, empty queue, and the round that just ran proved
-        // itself a no-op: rescale decisions are monotone in time (a plan
-        // that misses now misses later), so the only future time-driven
-        // action is greedy growth currently suppressed by the 60 s
-        // rescale window.
+        // Empty queue and the round that just ran proved itself a no-op:
+        // rescale decisions are monotone in time (a plan that misses now
+        // misses later), so the only future time-driven action is greedy
+        // growth currently suppressed by the 60 s rescale window. Merge
+        // every open window's expiry *unconditionally* — an earlier
+        // version returned early when `free() == 0`, dropping pending
+        // window expiries on a full cluster (a lost wakeup: if the
+        // policy's free-capacity bookkeeping ever went stale-zero, the
+        // run slept forever past a due growth round; the starved-wake
+        // `StateAudit::check_wake` patrols this bug class now). An early
+        // wake on a still-full cluster just executes a cheap no-op
+        // round, so honesty costs almost nothing.
         let now = st.now();
         for llm in Llm::ALL {
             let replica = llm.gpus_per_replica();
@@ -416,25 +418,27 @@ impl Policy for ElasticFlow {
                 if job.status != JobStatus::Running {
                     continue;
                 }
-                if job.gpus + replica > self.cfg.max_gpus_per_job
-                    || self.free() < replica
-                {
+                if job.gpus + replica > self.cfg.max_gpus_per_job {
                     continue;
                 }
                 let it = st.eff_iter_time(llm, job.gpus);
                 if job.iters_remaining * it < 2.0 * st.perf.cold_start(llm) {
                     continue;
                 }
-                if !self.rescaled_recently(i, now, 60.0) {
-                    // An eligible, unsuppressed candidate should have
-                    // been grown by the round that just ran; stay dense
-                    // rather than risk divergence.
+                if self.rescaled_recently(i, now, 60.0) {
+                    let t = self.last_rescale[i] + 60.0;
+                    if t < next {
+                        next = t;
+                    }
+                } else if self.free() >= replica {
+                    // An eligible, unsuppressed candidate with capacity
+                    // should have been grown by the round that just ran;
+                    // stay dense rather than risk divergence.
                     return Wake::Dense;
                 }
-                let t = self.last_rescale[i] + 60.0;
-                if t < next {
-                    next = t;
-                }
+                // Eligible, out of its window, but capacity-starved:
+                // nothing time-driven to merge — growth is blocked on a
+                // completion event, which re-queries this hint.
             }
         }
         if next.is_finite() {

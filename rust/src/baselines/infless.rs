@@ -355,7 +355,11 @@ impl Policy for Infless {
         // Empty queues after a no-op round: the next possible actions are
         // a keep-alive expiry (changes billing and the autoscale target)
         // or a pre-warm instance becoming ready (its idle timestamp must
-        // be taken at the right round).
+        // be taken at the right round). Starved-wake audit (batch-skip
+        // core): keep-alive, pre-warm and retry-holdback expiries are
+        // all merged unconditionally below — no early return can drop a
+        // due action, so every `retry_not_before` in the future is
+        // covered by the returned wake.
         let mut next = f64::INFINITY;
         for pool in &self.pools {
             if let Some(t) = pool.earliest_idle() {

@@ -8,10 +8,13 @@
 //!
 //! Each run also produces a machine-readable perf record
 //! (`BENCH_<suite>.json`, hand-rolled JSON — no serde offline) with
-//! per-cell wall-clock, executed/coalesced round counts and rounds/s, so
-//! the perf trajectory of the simulator hot path is tracked from PR 1
-//! onward. CI fails if the record is malformed or a cell regresses
-//! against the committed baseline (see `tools/check_bench.py`).
+//! per-cell wall-clock, executed/skipped round counts, rounds/s and
+//! events/s (the batch-skip core's O(events) throughput), so the perf
+//! trajectory of the simulator hot path is tracked from PR 1 onward.
+//! `rounds_skipped` is the canonical name for the batch-skipped count;
+//! `rounds_coalesced` is kept as an alias for older tooling. CI fails
+//! if the record is malformed or a cell regresses against the committed
+//! baseline (see `tools/check_bench.py`).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -360,10 +363,18 @@ impl BenchReport {
             out.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
             out.push_str(&format!("\"rounds_executed\": {}, ",
                                   r.rounds_executed));
+            // `rounds_skipped` is the canonical batch-skip counter;
+            // `rounds_coalesced` stays as an alias for older tooling.
+            out.push_str(&format!("\"rounds_skipped\": {}, ",
+                                  r.rounds_coalesced));
             out.push_str(&format!("\"rounds_coalesced\": {}, ",
                                   r.rounds_coalesced));
             out.push_str(&format!("\"ticks_per_s\": {}, ",
                                   json_f64(r.ticks_per_s())));
+            out.push_str(&format!("\"events_processed\": {}, ",
+                                  r.events_processed));
+            out.push_str(&format!("\"events_per_s\": {}, ",
+                                  json_f64(r.events_per_s())));
             out.push_str(&format!("\"revocations\": {}, ", r.revocations));
             out.push_str(&format!("\"lost_iters\": {}, ",
                                   json_f64(r.lost_iters)));
@@ -455,6 +466,9 @@ mod tests {
         assert!(json.contains("\\\"")); // label quote escaped
         assert!(json.contains("\"ticks_per_s\""));
         assert!(json.contains("\"rounds_coalesced\""));
+        assert!(json.contains("\"rounds_skipped\""));
+        assert!(json.contains("\"events_processed\""));
+        assert!(json.contains("\"events_per_s\""));
         // crude structural checks (no JSON parser offline)
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());

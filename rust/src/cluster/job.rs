@@ -69,6 +69,12 @@ pub struct JobState {
     /// Last retry backoff applied (seconds). The oracle audits that it
     /// never shrinks — exponential backoff is monotone per job.
     pub retry_backoff_s: f64,
+    /// Absolute time the last retry's backoff expires (`now + backoff`
+    /// at the failed completion). While a job is `Pending` with this in
+    /// the future, it is held back by backoff rather than capacity —
+    /// the anchor of the starved-wake audit (`StateAudit::check_wake`):
+    /// no policy may declare a wake that sleeps past it.
+    pub retry_not_before: f64,
 }
 
 impl JobState {
@@ -96,6 +102,7 @@ impl JobState {
             retries: 0,
             retry_iters: 0.0,
             retry_backoff_s: 0.0,
+            retry_not_before: 0.0,
         }
     }
 

@@ -7,23 +7,44 @@
 //! ElasticFlow, live instances for INFless); GPU *usage* (busy) is
 //! integrated automatically from job allocations.
 //!
-//! # Tick coalescing
+//! # Tick coalescing: O(events) batch skipping
 //!
 //! The paper's 50 ms scheduling round means a simulated experiment
 //! executes hundreds of thousands of rounds, the vast majority of which
 //! are no-ops (empty queues, nothing to expire). Policies can report
 //! their next *time-driven* action through
-//! [`Policy::next_timed_action`]; the run loop then fast-forwards the
-//! tick stream over provably-idle rounds while keeping the simulation
-//! bit-identical to dense ticking:
+//! [`Policy::next_timed_action`]; when the hint is [`Wake::At`] or
+//! [`Wake::Idle`], the run loop *batch-skips* the tick stream: it
+//! advances `tick_time` round by round — without integrating, querying
+//! the policy, or touching the heap — until the first round at or past
+//! the wake target or the next heap event, then resumes there with a
+//! single `integrate_to`. Per-skipped-round work is three scalar ops,
+//! so simulated cost is O(events + executed rounds), independent of how
+//! much idle grid a trace spans. Bit-identity with dense ticking holds
+//! because:
 //!
-//! * skipped rounds still advance cost/utilization integration at every
-//!   grid point, so float accumulation order is unchanged;
-//! * skipped rounds still consume the event sequence numbers their
-//!   next-tick pushes would have taken, so equal-time ordering between
-//!   ticks and job events is unchanged;
+//! * cost/utilization integration is *segment-based*: the GPU-second
+//!   integrals accumulate in [`ClusterState::commit_levels`], invoked
+//!   only when a level actually changes (launch / realloc / revoke /
+//!   completion / `set_billable`) — and levels change only inside
+//!   callbacks, which fire at identical times in dense and batch-skip
+//!   runs, so both accumulate the exact same `level × dt` sequence;
+//! * utilization samples flushed late (at the resume point) read levels
+//!   that provably did not change during the skipped span, and the
+//!   sample clock advances by the same repeated addition either way;
+//! * `tick_time` advances by repeated addition of the period — the same
+//!   float path dense ticking takes — and each skipped round consumes
+//!   the event sequence number its next-tick push would have taken, so
+//!   equal-time ordering between ticks and job events is unchanged;
 //! * the default hint is [`Wake::Dense`] (tick every round), so policies
 //!   that don't opt in behave exactly as before.
+//!
+//! The contract this puts on `next_timed_action` is load-bearing: a
+//! policy that sleeps past a round where it would have acted diverges
+//! from its dense reference (a *lost wakeup*). [`StateAudit::check_wake`]
+//! patrols the state-observable class of that bug (pending retries held
+//! back past a declared wake), and [`SimOracle`] applies it to every
+//! wake hint the wrapped policy emits.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -412,16 +433,15 @@ impl ClusterState {
         self.active_pos[job_id] = usize::MAX;
     }
 
-    /// Advance cost/usage integration to `t` (called by the run loop).
+    /// Advance simulated time to `t`, flushing any utilization samples
+    /// that fell due. Called by the run loop at every executed round and
+    /// event; batch-skipped rounds go *through* here in one jump, which
+    /// is safe because levels cannot change while the policy sleeps —
+    /// every sample in the span reads the same levels it would have read
+    /// under dense ticking, and the sample clock advances by the same
+    /// repeated addition. GPU-second accumulation lives in
+    /// [`ClusterState::commit_levels`], not here.
     fn integrate_to(&mut self, t: f64) {
-        let dt = t - self.last_integrate_t;
-        if dt > 0.0 {
-            self.cost_gpu_s += self.billable_gpus * dt;
-            self.busy_gpu_s += self.busy_gpus * dt;
-            self.billable_gpu_s += self.billable_gpus.max(0.0) * dt;
-            // charge running jobs' gpu_seconds
-            self.last_integrate_t = t;
-        }
         while self.next_util_sample <= t {
             let util = if self.billable_gpus > 0.0 {
                 self.busy_gpus / self.billable_gpus
@@ -434,9 +454,28 @@ impl ClusterState {
         self.now = t;
     }
 
+    /// Accumulate the GPU-second integrals over the segment since the
+    /// last commit, at the current levels. Must run *before* any
+    /// mutation of `billable_gpus`/`busy_gpus` (and once more at run
+    /// end). Segment boundaries are therefore exactly the level-change
+    /// instants — which occur only inside policy/event callbacks, at
+    /// identical times in dense and batch-skip runs — so the float
+    /// accumulation sequence, and hence the cost bits, are identical
+    /// however many rounds were skipped in between.
+    fn commit_levels(&mut self) {
+        let dt = self.now - self.last_integrate_t;
+        if dt > 0.0 {
+            self.cost_gpu_s += self.billable_gpus * dt;
+            self.busy_gpu_s += self.busy_gpus * dt;
+            self.billable_gpu_s += self.billable_gpus.max(0.0) * dt;
+            self.last_integrate_t = self.now;
+        }
+    }
+
     /// Set the current billed GPU level (e.g. warm-pool size, or the
     /// fixed cluster size). Integration is handled by the run loop.
     pub fn set_billable(&mut self, gpus: f64) {
+        self.commit_levels();
         self.billable_gpus = gpus;
     }
 
@@ -516,6 +555,12 @@ impl ClusterState {
         job.retries += 1;
         job.retry_iters += redo_iters;
         job.retry_backoff_s = backoff_s;
+        // The earliest round a policy may act on this retry — the anchor
+        // for the starved-wake audit ([`StateAudit::check_wake`]). Same
+        // float expression the chaos engine uses for `RetryEvent::
+        // not_before`, so policies holding the event's time back-merge
+        // bit-identically.
+        job.retry_not_before = self.now + backoff_s;
         self.total_retries += 1;
         self.total_retry_iters += redo_iters;
     }
@@ -575,6 +620,7 @@ impl ClusterState {
             job.needs_restore = true;
             job.restarts += 1;
         }
+        self.commit_levels();
         self.busy_gpus -= held as f64;
         self.deactivate(job_id);
         self.revocations += 1;
@@ -694,6 +740,7 @@ impl ClusterState {
                     COMM_PAYLOAD_GB * replicas as f64 * exec_h * STORAGE_PRICE_PER_GB_H;
             }
         }
+        self.commit_levels();
         self.busy_gpus += gpus as f64;
         self.activate(job_id);
         let gen = self.jobs[job_id].gen;
@@ -737,6 +784,7 @@ impl ClusterState {
                 finish = now + job.iters_remaining * it_new;
             }
         }
+        self.commit_levels();
         self.busy_gpus += new_gpus as f64 - old as f64;
         let gen = self.jobs[job_id].gen;
         self.push(finish, EventKind::JobDone(job_id, gen));
@@ -938,7 +986,10 @@ impl SimObserver for () {}
 ///   capacity sits inside a dead domain).
 ///
 /// Use one auditor per simulated run (the monotonicity history resets
-/// with it).
+/// with it). The stateless starved-wake check
+/// ([`StateAudit::check_wake`]) rides alongside: it audits each wake
+/// hint a policy emits, not the cluster state, and so is an associated
+/// function rather than part of [`StateAudit::check`].
 #[derive(Debug, Default)]
 pub struct StateAudit {
     /// Scratch: whether job i should appear in the active index.
@@ -1268,19 +1319,74 @@ impl StateAudit {
         self.last_revocations = st.revocations;
         self.last_retries = st.total_retries;
     }
+
+    /// Starved-wake check: may the policy really sleep on `wake` given
+    /// the current state? Under batch skipping a hint governs whole
+    /// blocks of rounds, so a hint that sleeps past a due action is a
+    /// lost wakeup — the run diverges from its dense reference.
+    ///
+    /// A policy may never sleep past a round where a fresh arrival,
+    /// retry expiry, fault, or governor evaluation would have acted. Of
+    /// those, only retry expiries are observable from `ClusterState`
+    /// alone (`JobState::retry_not_before`): arrivals and accepted
+    /// completions are heap events that structurally end a skip batch
+    /// and re-query the hint, while fault-plan and governor deadlines
+    /// live inside the `FaultInjector`/`Governed` wrappers, which merge
+    /// their own wakes via [`Wake::earliest`] and can only make the
+    /// inner hint *earlier*. So the check is: every pending job whose
+    /// retry backoff expires in the future must be covered by the
+    /// declared wake. Pending jobs whose backoff already expired are
+    /// waiting on capacity, which only returns through a completion
+    /// event — event-driven, hence exempt.
+    ///
+    /// Associated function (no audit history needed) so both the
+    /// immutable [`SimOracle::next_timed_action`] forward path and the
+    /// run loop's `debug_oracle` hook can call it.
+    pub fn check_wake(st: &ClusterState, wake: Wake, out: &mut Vec<String>) {
+        if wake == Wake::Dense {
+            return; // ticking every round can never starve anything
+        }
+        let eps = 1e-9;
+        let now = st.now();
+        for (i, job) in st.jobs.iter().enumerate() {
+            if job.status != JobStatus::Pending {
+                continue;
+            }
+            let due = job.retry_not_before;
+            if due <= now + eps {
+                continue; // backoff expired: capacity-waiting, event-driven
+            }
+            match wake {
+                Wake::At(w) if w <= due + eps => {}
+                Wake::At(w) => out.push(format!(
+                    "wake@{now:.3}: policy sleeps to {w:.3} past job {i}'s \
+                     retry-backoff expiry at {due:.3} (starved wake)"
+                )),
+                _ => out.push(format!(
+                    "wake@{now:.3}: policy sleeps until the next event \
+                     while job {i}'s retry backoff expires at {due:.3} \
+                     (starved wake)"
+                )),
+            }
+        }
+    }
 }
 
 /// The simulation oracle: wraps any [`Policy`] and runs the full
-/// [`StateAudit`] invariant set after every policy callback. Strict mode
-/// ([`SimOracle::new`]) panics on the first violation with the offending
-/// invariant and simulated time; collecting mode ([`SimOracle::collecting`])
-/// records messages for property harnesses to report. The wrapper forwards
-/// `next_timed_action`, so coalescing behavior (and therefore simulated
-/// results) are unchanged — it is a pure observer.
+/// [`StateAudit`] invariant set after every policy callback, plus the
+/// starved-wake check ([`StateAudit::check_wake`]) on every wake hint
+/// the wrapped policy emits. Strict mode ([`SimOracle::new`]) panics on
+/// the first violation with the offending invariant and simulated time;
+/// collecting mode ([`SimOracle::collecting`]) records messages for
+/// property harnesses to report. The wrapper forwards
+/// `next_timed_action` results unchanged, so coalescing behavior (and
+/// therefore simulated results) are unchanged — it is a pure observer.
 pub struct SimOracle<P: Policy> {
     inner: P,
     audit: StateAudit,
-    violations: Vec<String>,
+    /// Interior mutability: `next_timed_action` takes `&self` but must
+    /// still record starved-wake violations.
+    violations: std::cell::RefCell<Vec<String>>,
     panic_on_violation: bool,
 }
 
@@ -1299,13 +1405,15 @@ impl<P: Policy> SimOracle<P> {
         SimOracle {
             inner,
             audit: StateAudit::new(),
-            violations: vec![],
+            violations: std::cell::RefCell::new(vec![]),
             panic_on_violation,
         }
     }
 
-    pub fn violations(&self) -> &[String] {
-        &self.violations
+    /// Violations recorded so far (owned snapshot: the backing store is
+    /// a `RefCell` so the immutable wake-audit path can append too).
+    pub fn violations(&self) -> Vec<String> {
+        self.violations.borrow().clone()
     }
 
     /// Number of audits performed (each checks the full invariant set).
@@ -1318,13 +1426,14 @@ impl<P: Policy> SimOracle<P> {
     }
 
     fn run_audit(&mut self, st: &ClusterState, whence: &str) {
-        let before = self.violations.len();
-        self.audit.check(st, whence, &mut self.violations);
-        if self.panic_on_violation && self.violations.len() > before {
+        let v = self.violations.get_mut();
+        let before = v.len();
+        self.audit.check(st, whence, v);
+        if self.panic_on_violation && v.len() > before {
             panic!(
                 "SimOracle[{}]: {}",
                 self.inner.name(),
-                self.violations[before..].join("; ")
+                v[before..].join("; ")
             );
         }
     }
@@ -1360,7 +1469,18 @@ impl<P: Policy> Policy for SimOracle<P> {
         self.run_audit(st, "retry");
     }
     fn next_timed_action(&self, st: &ClusterState) -> Wake {
-        self.inner.next_timed_action(st)
+        let wake = self.inner.next_timed_action(st);
+        let mut v = self.violations.borrow_mut();
+        let before = v.len();
+        StateAudit::check_wake(st, wake, &mut v);
+        if self.panic_on_violation && v.len() > before {
+            panic!(
+                "SimOracle[{}]: {}",
+                self.inner.name(),
+                v[before..].join("; ")
+            );
+        }
+        wake
     }
     fn capacity(&self) -> Option<usize> {
         self.inner.capacity()
@@ -1399,8 +1519,12 @@ pub struct SimResult {
     pub sched_overhead_ms_max: f64,
     /// Scheduling rounds actually executed (policy `on_tick` calls).
     pub rounds_executed: u64,
-    /// Rounds proven idle and skipped by tick coalescing.
+    /// Rounds proven idle and batch-skipped by tick coalescing
+    /// (`rounds_skipped` in the emitted bench records).
     pub rounds_coalesced: u64,
+    /// Discrete heap events processed (arrivals, completions including
+    /// stale ones, end-of-horizon) — the O(events) core's unit of work.
+    pub events_processed: u64,
     /// Involuntary revocations (fault-engine preemptions) over the run.
     pub revocations: u64,
     /// Iterations lost to restore-from-last-checkpoint over the run.
@@ -1435,6 +1559,17 @@ impl SimResult {
             0.0
         }
     }
+
+    /// Heap events processed per wall-clock second — the headline
+    /// throughput metric of the batch-skip core (ROADMAP's hyperscale
+    /// sweep tracks sim-events/s, which this feeds).
+    pub fn events_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.events_processed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Drives a [`Policy`] over a trace.
@@ -1449,6 +1584,18 @@ fn debug_audit(audit: &mut Option<StateAudit>, scratch: &mut Vec<String>,
                st: &ClusterState, whence: &str) {
     if let Some(a) = audit.as_mut() {
         a.check(st, whence, scratch);
+        if !scratch.is_empty() {
+            panic!("debug sim oracle: {}", scratch.join("; "));
+        }
+    }
+}
+
+/// `SimConfig::debug_oracle` hook for wake hints: every hint the run
+/// loop is about to batch-skip on goes through the starved-wake check.
+fn debug_wake(audit: &Option<StateAudit>, scratch: &mut Vec<String>,
+              st: &ClusterState, wake: Wake) {
+    if audit.is_some() {
+        StateAudit::check_wake(st, wake, scratch);
         if !scratch.is_empty() {
             panic!("debug sim oracle: {}", scratch.join("; "));
         }
@@ -1501,6 +1648,7 @@ impl Simulator {
         let mut done = 0usize;
         let mut rounds: u64 = 0;
         let mut coalesced: u64 = 0;
+        let mut events: u64 = 0;
         let tick = policy.tick_interval();
         let mut wake = Wake::Dense;
         let mut audit = self.cfg.debug_oracle.then(StateAudit::new);
@@ -1520,21 +1668,52 @@ impl Simulator {
                     Wake::Idle => true,
                     Wake::At(t) => tick_time < t,
                 };
-                st.integrate_to(tick_time);
                 if skip {
-                    coalesced += 1;
-                } else {
-                    let t0 = Instant::now();
-                    policy.on_tick(&mut st);
-                    overhead.add(t0.elapsed().as_secs_f64() * 1e3);
-                    rounds += 1;
-                    st.drain_queued(&mut heap);
-                    debug_audit(&mut audit, &mut audit_scratch, &st, "tick");
-                    observer.on_round(&st);
-                    wake = policy.next_timed_action(&st);
-                    if done == n_jobs {
-                        break;
+                    // Batch skip: burn through every provably-idle round
+                    // strictly before the wake target and the next heap
+                    // event in one tight loop — no integration, no
+                    // policy query, no heap access. The heap top cannot
+                    // change while we skip (only callbacks push events,
+                    // and none run here), so the snapshot is stable.
+                    // Each skipped round advances `tick_time` by the
+                    // same repeated addition dense ticking uses and
+                    // consumes the sequence number its next-tick push
+                    // would have taken; integration catches up at the
+                    // resume point (next event or executed round).
+                    let (ev_time, ev_seq) = match heap.peek() {
+                        Some(ev) => (ev.time, ev.seq),
+                        None => (f64::INFINITY, u64::MAX),
+                    };
+                    loop {
+                        coalesced += 1;
+                        st.seq += 1;
+                        tick_seq = st.seq;
+                        tick_time += tick;
+                        if tick_time > horizon
+                            || (tick_time, tick_seq) >= (ev_time, ev_seq)
+                        {
+                            break;
+                        }
+                        if let Wake::At(t) = wake {
+                            if tick_time >= t {
+                                break;
+                            }
+                        }
                     }
+                    continue;
+                }
+                st.integrate_to(tick_time);
+                let t0 = Instant::now();
+                policy.on_tick(&mut st);
+                overhead.add(t0.elapsed().as_secs_f64() * 1e3);
+                rounds += 1;
+                st.drain_queued(&mut heap);
+                debug_audit(&mut audit, &mut audit_scratch, &st, "tick");
+                observer.on_round(&st);
+                wake = policy.next_timed_action(&st);
+                debug_wake(&audit, &mut audit_scratch, &st, wake);
+                if done == n_jobs {
+                    break;
                 }
                 // Re-arm the next round: advance by one period (repeated
                 // addition, the same float path dense ticking takes) and
@@ -1550,6 +1729,7 @@ impl Simulator {
                 if ev.time > horizon {
                     break;
                 }
+                events += 1;
                 st.integrate_to(ev.time);
                 match ev.kind {
                     EventKind::Arrival(id) => {
@@ -1559,6 +1739,7 @@ impl Simulator {
                                     "arrival");
                         observer.on_arrival(&st, id);
                         wake = policy.next_timed_action(&st);
+                        debug_wake(&audit, &mut audit_scratch, &st, wake);
                     }
                     EventKind::JobDone(id, gen) => {
                         let stale = st.jobs[id].gen != gen
@@ -1575,6 +1756,7 @@ impl Simulator {
                                     gpus as f64 * (ev.time - job.launched_at);
                                 job.gpus = 0;
                             }
+                            st.commit_levels();
                             st.busy_gpus -= gpus as f64;
                             st.deactivate(id);
                             policy.on_job_complete(&mut st, id);
@@ -1592,11 +1774,26 @@ impl Simulator {
                                 observer.on_job_complete(&st, id);
                             }
                             wake = policy.next_timed_action(&st);
+                            debug_wake(&audit, &mut audit_scratch, &st, wake);
                             if done == n_jobs {
                                 break;
                             }
                         } else {
                             st.drain_queued(&mut heap);
+                            // Refresh the wake even though the stale
+                            // event mutated nothing: under batch
+                            // skipping the hint governs whole blocks of
+                            // rounds, so a hint must never outlive an
+                            // event pop — even a no-op one. For a pure
+                            // `next_timed_action` this re-query returns
+                            // the same hint in dense and batch-skip runs
+                            // alike (state is unchanged and stale pops
+                            // happen at identical times), so equivalence
+                            // is preserved; for an impure policy it is
+                            // the difference between waking and sleeping
+                            // forever.
+                            wake = policy.next_timed_action(&st);
+                            debug_wake(&audit, &mut audit_scratch, &st, wake);
                         }
                     }
                     EventKind::End => break,
@@ -1604,6 +1801,7 @@ impl Simulator {
             }
         }
         st.integrate_to(st.now());
+        st.commit_levels();
         observer.on_end(&st);
 
         let n_done = st.jobs.iter().filter(|j| j.status == JobStatus::Done).count();
@@ -1650,6 +1848,7 @@ impl Simulator {
             sched_overhead_ms_max: if overhead.n == 0 { 0.0 } else { overhead.max },
             rounds_executed: rounds,
             rounds_coalesced: coalesced,
+            events_processed: events,
             revocations: st.revocations,
             lost_iters: st.total_lost_iters,
             straggler_iters: st.total_straggler_iters,
@@ -2315,5 +2514,154 @@ mod tests {
         let res = sim.run(&mut p, vec![spec(0, 0.0, 100.0), spec(1, 1.0, 50.0)]);
         assert_eq!(res.n_done, 2);
         assert!(p.seen_active);
+    }
+
+    /// Chaos-style retry driver for the stale-`JobDone` regression test:
+    /// fails job 0's first completion back to Pending with a 1 s
+    /// backoff, relaunches at the backoff expiry, then slows the relaunch
+    /// mid-flight — the gen bump leaves the relaunch's completion event
+    /// stale in the heap, and it pops while the policy sleeps on
+    /// `Wake::Idle`. With `dense` set, the same policy runs on the dense
+    /// grid as the bit-identity reference.
+    struct ChaosRetry {
+        dense: bool,
+        failed: bool,
+        /// Relaunch not-before (the failed completion's backoff expiry).
+        holdback: Option<f64>,
+        /// When to apply the mid-flight slowdown that stales the event.
+        slow_at: Option<f64>,
+    }
+    impl ChaosRetry {
+        fn new(dense: bool) -> Self {
+            ChaosRetry { dense, failed: false, holdback: None, slow_at: None }
+        }
+    }
+    impl Policy for ChaosRetry {
+        fn name(&self) -> &str {
+            "chaosretry"
+        }
+        fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+            st.set_billable(2.0);
+            st.launch(id, 1, 0.0, 0.0, 1.0);
+        }
+        fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
+            if !self.failed {
+                self.failed = true;
+                st.fail_completion(id, 20.0, 1.0);
+                self.holdback = Some(st.now() + 1.0);
+            }
+        }
+        fn on_tick(&mut self, st: &mut ClusterState) {
+            if let Some(t) = self.holdback {
+                if st.now() >= t {
+                    self.holdback = None;
+                    st.launch(0, 1, 0.0, 0.0, 1.0);
+                    self.slow_at = Some(st.now() + 0.3);
+                }
+            } else if let Some(t) = self.slow_at {
+                if st.now() >= t {
+                    self.slow_at = None;
+                    // gen bump mid-flight: the relaunch's completion
+                    // event in the heap goes stale
+                    st.slow_job(0, 1.5);
+                }
+            }
+        }
+        fn next_timed_action(&self, _st: &ClusterState) -> Wake {
+            if self.dense {
+                return Wake::Dense;
+            }
+            if let Some(t) = self.holdback {
+                return Wake::At(t); // == job 0's retry_not_before
+            }
+            if let Some(t) = self.slow_at {
+                return Wake::At(t);
+            }
+            Wake::Idle
+        }
+    }
+
+    #[test]
+    fn stale_event_mid_sleep_matches_dense_reference() {
+        // Regression (stale-JobDone wake refresh): the staled completion
+        // event pops while the coalesced run sleeps on Wake::Idle; the
+        // run loop must survive the no-op pop, refresh the hint, and
+        // stay bit-identical to the dense grid.
+        let specs = vec![spec(0, 0.0, 10.0)];
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut dense = SimOracle::new(ChaosRetry::new(true));
+        let ref_res = sim.run(&mut dense, specs.clone());
+        let mut fast = SimOracle::new(ChaosRetry::new(false));
+        let res = sim.run(&mut fast, specs);
+        assert_eq!(ref_res.n_done, 1);
+        assert_eq!(ref_res.retries, 1);
+        // arrival + failed completion + stale pop + accepted completion
+        assert_eq!(ref_res.events_processed, 4);
+        assert_eq!(res.events_processed, 4);
+        // bit-identical across the retry, the stale pop and the slowdown
+        assert_eq!(res.n_done, ref_res.n_done);
+        assert_eq!(res.retries, ref_res.retries);
+        assert_eq!(res.cost_usd, ref_res.cost_usd);
+        assert_eq!(res.gpu_seconds_billed, ref_res.gpu_seconds_billed);
+        assert_eq!(res.util_timeline, ref_res.util_timeline);
+        assert_eq!(res.job_latencies, ref_res.job_latencies);
+        // every round the dense reference ran is accounted for
+        assert_eq!(res.rounds_executed + res.rounds_coalesced,
+                   ref_res.rounds_executed);
+        assert!(res.rounds_coalesced > 0, "{}", res.rounds_coalesced);
+    }
+
+    #[test]
+    fn oracle_catches_a_starved_wake() {
+        // Rogue policy: fails the first completion back to Pending with
+        // a 1 s backoff but then sleeps until the next event — there is
+        // none before the horizon, so the retry's due round is starved
+        // (the lost-wakeup class the wake audit patrols).
+        struct SleepyRetry {
+            failed: bool,
+        }
+        impl Policy for SleepyRetry {
+            fn name(&self) -> &str {
+                "sleepyretry"
+            }
+            fn on_arrival(&mut self, st: &mut ClusterState, id: usize) {
+                st.set_billable(1.0);
+                st.launch(id, 1, 0.0, 0.0, 1.0);
+            }
+            fn on_job_complete(&mut self, st: &mut ClusterState, id: usize) {
+                if !self.failed {
+                    self.failed = true;
+                    st.fail_completion(id, 10.0, 1.0);
+                }
+            }
+            fn on_tick(&mut self, _st: &mut ClusterState) {}
+            fn next_timed_action(&self, _st: &ClusterState) -> Wake {
+                Wake::Idle
+            }
+        }
+        let cfg = SimConfig { horizon_s: 50.0, ..Default::default() };
+        let sim = Simulator::new(cfg, PerfModel::default());
+        let mut p = SimOracle::collecting(SleepyRetry { failed: false });
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 10.0)]);
+        assert_eq!(res.n_done, 0); // the retry really was starved
+        assert!(
+            p.violations().iter().any(|v| v.contains("starved wake")),
+            "expected a starved-wake violation, got {:?}",
+            p.violations()
+        );
+    }
+
+    #[test]
+    fn batch_skip_and_wake_audit_pass_an_honest_retry_policy() {
+        // The flip side of `oracle_catches_a_starved_wake`: ChaosRetry
+        // declares Wake::At(retry_not_before) while its retry is held
+        // back, so the strict oracle's wake audit stays silent — already
+        // exercised above; here we pin that the collecting oracle
+        // records nothing at all over the full retry lifecycle.
+        let sim = Simulator::new(SimConfig::default(), PerfModel::default());
+        let mut p = SimOracle::collecting(ChaosRetry::new(false));
+        let res = sim.run(&mut p, vec![spec(0, 0.0, 10.0)]);
+        assert_eq!(res.n_done, 1);
+        assert!(p.violations().is_empty(), "{:?}", p.violations());
     }
 }

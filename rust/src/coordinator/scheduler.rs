@@ -676,6 +676,10 @@ impl Policy for PromptTuner {
         // at their backoff expiry, and (with runtime reuse) the
         // idle-window shrink of the earliest-idle warm GPU. Without
         // warm pools idle GPUs are drained eagerly — no window expires.
+        // Starved-wake audit (batch-skip core): both sources are merged
+        // unconditionally below — there is no early return that could
+        // drop a holdback expiry, so every `retry_not_before` in the
+        // future is covered by the returned wake.
         let mut next = f64::INFINITY;
         for &(t, _) in &self.retry_holdback {
             if t < next {

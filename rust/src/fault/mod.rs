@@ -479,6 +479,11 @@ impl<P: Policy> Policy for FaultInjector<P> {
         // somehow left capacity above the degraded ceiling, the next
         // round must execute so the re-clamp cannot land in a round
         // dense ticking runs but coalescing skips.
+        // Starved-wake audit (batch-skip core): below this guard the
+        // wrapper only merges *earlier* wakes (fault-plan events,
+        // pending reclaims, repairs) on top of the inner hint via
+        // `Wake::earliest`, so it can never starve an action the inner
+        // policy declared.
         if self.governor_over_ceiling() {
             return Wake::Dense;
         }

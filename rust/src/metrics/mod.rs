@@ -52,13 +52,14 @@ pub fn render_series(title: &str, xlabel: &str, ylabel: &str,
 /// violation-free run is credited half a violation (rate `0.5/n`), and a
 /// zero-cost run is floored at one billed GPU-second — a perfect run
 /// yields a large-but-finite factor instead of ∞/NaN, so downstream
-/// tables and JSON stay well-formed. Both axes degenerate → 1.0.
+/// tables and JSON stay well-formed. A zero-job `ours` uses the
+/// one-job floor (`0.5`): it used to degrade the floor to `0.0`, which
+/// collapsed the ratio to a silent `1.0` against *any* baseline — an
+/// empty run masquerading as "no improvement" instead of reporting the
+/// baseline's violation rate against the half-violation credit. Both
+/// axes degenerate → 1.0.
 pub fn improvement(ours: &SimResult, other: &SimResult) -> (f64, f64) {
-    let rate_floor = if ours.n_jobs > 0 {
-        0.5 / ours.n_jobs as f64
-    } else {
-        0.0
-    };
+    let rate_floor = 0.5 / ours.n_jobs.max(1) as f64;
     let viol = ratio(other.violation_rate(), ours.violation_rate(), rate_floor);
     let cost = ratio(other.cost_usd, ours.cost_usd, GPU_PRICE_PER_S);
     (viol, cost)
@@ -138,6 +139,7 @@ mod tests {
             sched_overhead_ms_max: 2.0,
             rounds_executed: 0,
             rounds_coalesced: 0,
+            events_processed: 0,
             revocations: 0,
             lost_iters: 0.0,
             straggler_iters: 0.0,
@@ -220,6 +222,21 @@ mod tests {
         let ours = result("pt", 0, 0, 1.0);
         let other = result("b", 0, 0, 1.0);
         assert_eq!(improvement(&ours, &other).0, 1.0);
+    }
+
+    #[test]
+    fn improvement_zero_job_ours_vs_violating_other_is_finite() {
+        // Regression: a zero-job "ours" used to degrade the rate floor
+        // to 0.0, collapsing the ratio to a silent 1.0 against any
+        // baseline. The floor now falls back to the one-job credit
+        // (0.5), so a violating baseline still registers:
+        // 0.2 / 0.5 = 0.4, finite and responsive to `other`.
+        let ours = result("pt", 0, 0, 10.0);
+        let other = result("b", 20, 100, 45.0);
+        let (v, c) = improvement(&ours, &other);
+        assert!(v.is_finite() && v > 0.0, "{v}");
+        assert!((v - 0.4).abs() < 1e-9, "{v}");
+        assert!((c - 4.5).abs() < 1e-9, "{c}");
     }
 
     #[test]

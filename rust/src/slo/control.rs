@@ -356,6 +356,10 @@ impl<P: Policy> Policy for Governed<P> {
         if self.needs_round {
             return Wake::Dense;
         }
+        // Starved-wake audit (batch-skip core): this wrapper only merges
+        // *earlier* wakes (deferred-admission releases, the governor
+        // grid) on top of the inner hint via `earliest`, so it can never
+        // starve an action the inner policy declared.
         let mut wake = self.inner.next_timed_action(st);
         if let Some(t) = self.admission.next_release() {
             wake = earliest(wake, Wake::At(t));

@@ -283,6 +283,47 @@ fn prop_tick_coalescing_matches_dense_reference() {
     assert!(coalesced_total > 0, "no rounds were ever coalesced");
 }
 
+/// Efficiency bound for the O(events) batch-skip core: on an idle-heavy
+/// diurnal trace (12 h of wall-clock, 30 jobs, deep overnight troughs)
+/// every system must *execute* at most a tenth of the 50 ms grid — the
+/// rest is batch-skipped. The bound is intentionally generous: each
+/// pending job keeps rounds dense for at most ~its SLO slack
+/// (duration × emergence + cold start, a few minutes), and every
+/// `Wake::At` timer (keep-alives, rescale windows, holdbacks) costs one
+/// executed round per expiry — orders of magnitude below the ~900k-round
+/// grid. The grid size is recovered from the run itself
+/// (`rounds_executed + rounds_coalesced` re-tiles the dense grid exactly;
+/// `prop_tick_coalescing_matches_dense_reference` pins that identity), so
+/// no dense reference run is needed here.
+#[test]
+fn prop_batch_skip_is_sublinear_on_idle_heavy_trace() {
+    let sc = Scenario::Diurnal { hours: 12.0, jobs_per_llm: 10, peak_to_trough: 6.0 };
+    for system in SYSTEMS {
+        let gpus = 32;
+        let cell = SweepCell::scenario(
+            format!("eff/diurnal/{system}"), system, sc.clone(), 1.0, gpus, 7,
+        );
+        let sim = Simulator::new(
+            SimConfig { max_gpus: gpus, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut p = SimOracle::collecting(bench::make_policy(&cell));
+        let res = sim.run(&mut p, bench::gen_jobs(&cell));
+        assert!(p.violations().is_empty(), "{system}: {:?}",
+                p.violations().first());
+        let grid = res.rounds_executed + res.rounds_coalesced;
+        // 12 h on a 50 ms grid is ~900k rounds; sanity-check the trace
+        // is actually long enough to make the bound meaningful
+        assert!(grid > 500_000, "{system}: grid only {grid} rounds");
+        assert!(
+            res.rounds_executed * 10 <= grid,
+            "{system}: executed {} of {} grid rounds — batch skip is not \
+             sublinear on an idle-heavy trace",
+            res.rounds_executed, grid,
+        );
+    }
+}
+
 #[test]
 fn prop_prompttuner_invariants_hold() {
     check("prompttuner invariants over random workloads", 12, |rng| {

@@ -215,7 +215,11 @@ impl Policy for DenseTick {
 /// chaos-wrapped run must be bit-identical across repeated same-seed
 /// runs AND across dense vs coalesced ticking — for every profile and
 /// every system (the full `bench::make_policy` wiring: FaultInjector +
-/// ChaosEngine, rolling rack storms included).
+/// ChaosEngine, rolling rack storms included). Since the tick core moved
+/// to O(events) batch skipping, the coalesced leg of this rotation drives
+/// chaos storms — retry-backoff holdbacks, staled completion events and
+/// rack fan-out — straight through the batch-skip fast path, so the
+/// equality here doubles as its conformance oracle.
 #[test]
 fn prop_chaos_runs_bit_identical_across_ticking_and_repeats() {
     let mut retries_total: u64 = 0;

@@ -32,7 +32,8 @@ import sys
 REQUIRED_TOP = ["suite", "created_unix", "total_wall_s", "cells"]
 REQUIRED_CELL = [
     "label", "system", "gpus", "seed", "load", "slo", "scale", "wall_s",
-    "rounds_executed", "rounds_coalesced", "ticks_per_s", "n_jobs",
+    "rounds_executed", "rounds_skipped", "rounds_coalesced", "ticks_per_s",
+    "events_processed", "events_per_s", "n_jobs",
     "n_done", "n_violations", "cost_usd", "mean_quality",
     "mean_utilization",
 ]
@@ -84,6 +85,12 @@ def load_record(path: str) -> dict:
             fail(f"{path}: {where} finished more jobs than it has")
         if cell["rounds_executed"] > 0 and cell["ticks_per_s"] <= 0:
             fail(f"{path}: {where} executed rounds but reports no throughput")
+        if cell["rounds_skipped"] < 0 or cell["events_per_s"] < 0:
+            fail(f"{path}: {where} has negative event-core telemetry "
+                 f"(rounds_skipped/events_per_s)")
+        if cell["events_processed"] > 0 and cell["events_per_s"] <= 0:
+            fail(f"{path}: {where} processed events but reports no "
+                 f"event throughput")
     if suite == "scenarios":
         check_scenarios(path, rec)
     if suite == "slo":
@@ -109,8 +116,11 @@ SCENARIO_SYSTEMS = {"prompttuner", "infless", "elasticflow"}
 
 def check_scenarios(path: str, rec: dict) -> None:
     """Extra validation for BENCH_scenarios.json: every cell is tagged
-    with a scenario family, the full catalogue is present, and every
-    system ran every family (otherwise a comparison row is missing)."""
+    with a scenario family, the full catalogue is present, every
+    system ran every family (otherwise a comparison row is missing), and
+    the O(events) batch-skip fast path engaged in every cell — a scenario
+    run that never skips a round means the policies degraded to dense
+    ticking (a lost `Wake` hint, not a workload property)."""
     seen = {}
     for i, cell in enumerate(rec["cells"]):
         name = cell.get("scenario")
@@ -119,6 +129,9 @@ def check_scenarios(path: str, rec: dict) -> None:
             fail(f"{path}: {where} has no scenario tag")
         if cell["n_jobs"] <= 0:
             fail(f"{path}: {where} ({name}) ran no jobs")
+        if cell["rounds_skipped"] <= 0:
+            fail(f"{path}: {where} ({name}) skipped no rounds — the "
+                 f"batch-skip fast path never engaged")
         seen.setdefault(name, set()).add(cell["system"])
     missing = SCENARIO_FAMILIES - set(seen)
     if missing:

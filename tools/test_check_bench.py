@@ -32,8 +32,9 @@ def make_cell(**over):
         "label": "t/cell", "system": "prompttuner", "gpus": 32, "seed": 1,
         "load": "medium", "scenario": "none", "governed": False,
         "slo": 1.0, "scale": 1.0, "wall_s": 0.5,
-        "rounds_executed": 100, "rounds_coalesced": 50,
-        "ticks_per_s": 200.0, "revocations": 0, "lost_iters": 0.0,
+        "rounds_executed": 100, "rounds_skipped": 50, "rounds_coalesced": 50,
+        "ticks_per_s": 200.0, "events_processed": 120, "events_per_s": 240.0,
+        "revocations": 0, "lost_iters": 0.0,
         "n_jobs": 10, "n_done": 10, "n_violations": 1,
         "cost_usd": 5.0, "mean_quality": 0.85, "mean_utilization": 0.8,
         "sched_overhead_ms_mean": 0.1, "sched_overhead_ms_max": 0.4,
@@ -342,6 +343,41 @@ def test_chaos_suite_requires_full_coverage(tmp):
     r = run_check(path)
     assert r.returncode == 1, (r.returncode, r.stderr)
     assert "chaos-storm" in r.stderr
+
+
+def test_missing_events_per_s_names_the_cell(tmp):
+    cell = make_cell()
+    del cell["events_per_s"]
+    path = write_tmp(tmp, "ev.json", make_record(cells=[cell]))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "events_per_s" in r.stderr
+
+
+def test_negative_rounds_skipped_is_rejected(tmp):
+    path = write_tmp(tmp, "neg.json",
+                     make_record(cells=[make_cell(rounds_skipped=-1)]))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "event-core telemetry" in r.stderr
+
+
+def test_scenarios_suite_requires_batch_skip_to_engage(tmp):
+    cells = []
+    for scenario in sorted(
+            {"diurnal", "flash-crowd", "heavy-tail", "multi-tenant",
+             "replay", "spot-market", "az-outage", "task-drift",
+             "chaos-latency", "chaos-flaky", "chaos-storm"}):
+        for system in ("prompttuner", "infless", "elasticflow"):
+            cells.append(make_cell(label=f"fig11/{scenario}", system=system,
+                                   scenario=scenario))
+    # full coverage, but one cell never skipped a round
+    cells[0]["rounds_skipped"] = 0
+    path = write_tmp(tmp, "sk.json", make_record(suite="scenarios",
+                                                 cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "batch-skip fast path never engaged" in r.stderr
 
 
 def test_missing_mean_quality_names_the_cell(tmp):
