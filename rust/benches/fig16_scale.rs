@@ -1,0 +1,204 @@
+//! Fig 16 (beyond the paper) — the hyperscale shard-plane sweep: the
+//! simulator scaled out to a cluster-of-clusters via `shard::ShardPlane`
+//! and fed from streaming `trace::ScaleSource` traces (resident memory
+//! stays one minute's batch however long the trace is).
+//!
+//! Four tiers per system:
+//! * **conf** — 1 shard × 32 GPUs, gossip off: the plane degenerates to
+//!   the unsharded simulator (bit-identity is property-enforced by
+//!   tests/prop_shard.rs; this tier keeps the configuration exercised
+//!   under the CI oracle);
+//! * **gossip-off / gossip-on** — 4 × 32 over an all-novel-task trace:
+//!   the cross-shard prompt-synchronization ablation the scale suite
+//!   gates on (gossip must lift mean prompt quality);
+//! * **partition** — 4 × 32 under `ChaosProfile::partition` network
+//!   partitions: one shard per 600 s window is severed from the router
+//!   for 120 s, routing fails over, nothing is lost;
+//! * **mega** — 16 × 640 = 10,240 GPUs, a 3-day trace at 250 jobs/min
+//!   (~1M jobs), gossip on. The strict in-loop oracle is explicitly off
+//!   for this tier (it is O(jobs) per event); the plane's own
+//!   conservation/routing audits stay armed and fatal.
+//!
+//! Emits a BENCH_scale.json perf record; tools/check_bench.py validates
+//! tier × system coverage, 10k-GPU/1M-job floors on the mega tier,
+//! conservation (every routed job completes), the gossip quality lift,
+//! and that every cell reports positive event throughput.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use common::{BenchReport, CellResult, SweepCell};
+use prompttuner::fault::ChaosProfile;
+use prompttuner::scenario::NOVEL_TASK_BASE;
+use prompttuner::shard::{ShardPlane, ShardPlaneConfig};
+use prompttuner::trace::{Load, ScaleSource, ScaleSourceConfig};
+
+/// One plane run of the sweep: the shard-plane config plus its trace.
+struct PlaneCell {
+    label: String,
+    plane: ShardPlaneConfig,
+    trace: ScaleSourceConfig,
+}
+
+fn tiers(seed: u64) -> Vec<PlaneCell> {
+    let mut cells = vec![];
+    for system in common::SYSTEMS {
+        // conf: 1 x 32, the unsharded-equivalent configuration.
+        let mut plane = ShardPlaneConfig::new(system, 1, 32, seed);
+        plane.gossip = false;
+        cells.push(PlaneCell {
+            label: "fig16/conf/1x32".into(),
+            plane,
+            trace: ScaleSourceConfig {
+                seed,
+                minutes: 20,
+                jobs_per_minute: 6.0,
+                ..Default::default()
+            },
+        });
+
+        // gossip ablation: 4 x 32 over an all-novel-task trace, so the
+        // bank flywheel (and its cross-shard extension) carries the
+        // whole quality signal.
+        let ablation_trace = ScaleSourceConfig {
+            seed,
+            minutes: 120,
+            jobs_per_minute: 25.0,
+            n_tasks: 32,
+            task_base: NOVEL_TASK_BASE,
+            ..Default::default()
+        };
+        for gossip in [false, true] {
+            let mut plane = ShardPlaneConfig::new(system, 4, 32, seed);
+            plane.gossip = gossip;
+            plane.gossip_period_s = 300.0;
+            cells.push(PlaneCell {
+                label: format!("fig16/gossip-{}/4x32",
+                               if gossip { "on" } else { "off" }),
+                plane,
+                trace: ablation_trace.clone(),
+            });
+        }
+
+        // partition chaos: 4 x 32, one shard severed per 600 s window.
+        let mut plane = ShardPlaneConfig::new(system, 4, 32, seed);
+        plane.gossip_period_s = 300.0;
+        plane.partition = Some(ChaosProfile::partition());
+        cells.push(PlaneCell {
+            label: "fig16/partition/4x32".into(),
+            plane,
+            trace: ScaleSourceConfig {
+                seed,
+                minutes: 60,
+                jobs_per_minute: 12.0,
+                ..Default::default()
+            },
+        });
+
+        // mega: 10,240 GPUs, ~1M jobs, 3 days.
+        let mut plane = ShardPlaneConfig::new(system, 16, 640, seed);
+        plane.gossip_period_s = 900.0;
+        // The strict per-event audit is O(jobs) per event — fine for the
+        // small tiers under PT_SIM_ORACLE=1, quadratic death at 1M jobs.
+        // The plane's own routing/conservation audits remain fatal.
+        plane.sim.debug_oracle = false;
+        cells.push(PlaneCell {
+            label: "fig16/mega/16x640".into(),
+            plane,
+            trace: ScaleSourceConfig {
+                seed,
+                minutes: 3 * 24 * 60,
+                jobs_per_minute: 250.0,
+                n_tasks: 256,
+                task_base: NOVEL_TASK_BASE,
+                ..Default::default()
+            },
+        });
+    }
+    cells
+}
+
+fn run_plane(cell: &PlaneCell) -> (CellResult, u64, u64, u64) {
+    let t0 = Instant::now();
+    let plane = ShardPlane::new(cell.plane.clone());
+    let mut source = ScaleSource::new(cell.trace.clone());
+    let pr = plane.run(&mut source);
+    assert!(pr.violations.is_empty(),
+            "{} [{}]: plane audit failed: {:?}",
+            cell.label, cell.plane.system, pr.violations);
+    let gpus = cell.plane.shards * cell.plane.gpus_per_shard;
+    let sweep_cell = SweepCell::new(cell.label.clone(),
+                                    cell.plane.system.clone(), Load::Medium,
+                                    cell.trace.slo_emergence, gpus,
+                                    cell.plane.seed);
+    let result = pr.merged();
+    (
+        CellResult { cell: sweep_cell, result,
+                     wall_s: t0.elapsed().as_secs_f64() },
+        pr.gossip_rounds,
+        pr.gossip_items,
+        pr.failovers,
+    )
+}
+
+fn main() {
+    let seed = 61u64;
+    let cells = tiers(seed);
+
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<(CellResult, u64, u64, u64)>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(cells.len());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run_plane(&cells[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    let total_wall = t0.elapsed().as_secs_f64();
+    let runs: Vec<(CellResult, u64, u64, u64)> = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker dropped a plane"))
+        .collect();
+
+    println!("=== Fig 16 — hyperscale shard plane ===");
+    println!(
+        "{:<24} {:<13} {:>9} {:>9} {:>10} {:>12} {:>8} {:>8} {:>9}",
+        "tier", "system", "jobs", "done", "quality", "events/s",
+        "gossip", "items", "failovers"
+    );
+    for (cr, rounds, items, failovers) in &runs {
+        println!(
+            "{:<24} {:<13} {:>9} {:>9} {:>10.4} {:>12.0} {:>8} {:>8} {:>9}",
+            cr.cell.label, cr.cell.system, cr.result.n_jobs,
+            cr.result.n_done, cr.result.mean_prompt_quality,
+            cr.result.events_per_s(), rounds, items, failovers
+        );
+    }
+
+    let results: Vec<CellResult> =
+        runs.into_iter().map(|(cr, ..)| cr).collect();
+    let report = BenchReport::new("scale", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!(
+            "\n[{} plane runs in {total_wall:.2}s wall] perf record: {}",
+            report.cells.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+}

@@ -12,8 +12,8 @@
 
 use crate::baselines::BankRouter;
 use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
-                     RevokeEvent, Wake};
-use crate::promptbank::SimBankSet;
+                     RevokeEvent, TunedPrompt, Wake};
+use crate::promptbank::{SimBankSet, TUNED_PROMPT_QUALITY};
 use crate::workload::Llm;
 
 /// ElasticFlow configuration.
@@ -62,6 +62,10 @@ pub struct ElasticFlow {
     /// State changed since the last round — the next round must run
     /// densely before idle-round coalescing may resume.
     needs_round: bool,
+    /// Tuned prompts fed back since the last gossip drain (only recorded
+    /// when a shard plane enabled the log — see [`Policy::enable_gossip_log`]).
+    gossip_log: Vec<TunedPrompt>,
+    gossip_enabled: bool,
     // ---- reusable scratch buffers ----
     scratch_ids: Vec<usize>,
     scratch_rank: Vec<(f64, usize)>,
@@ -80,6 +84,8 @@ impl ElasticFlow {
             last_rescale: vec![],
             retry_holdback: vec![],
             needs_round: true,
+            gossip_log: vec![],
+            gossip_enabled: false,
             scratch_ids: vec![],
             scratch_rank: vec![],
         }
@@ -302,7 +308,15 @@ impl Policy for ElasticFlow {
             .round() as usize;
         self.busy_gpus = self.busy_gpus.saturating_sub(gpus);
         // Completion feedback: the tuned prompt flows back into the bank.
-        self.cfg.bank.complete(&mut self.banks, llm, task_id);
+        if self.cfg.bank.complete(&mut self.banks, llm, task_id)
+            && self.gossip_enabled
+        {
+            self.gossip_log.push(TunedPrompt {
+                llm,
+                task_id,
+                quality: TUNED_PROMPT_QUALITY,
+            });
+        }
         self.needs_round = true;
         let _ = st;
     }
@@ -463,6 +477,32 @@ impl Policy for ElasticFlow {
             st.set_billable(new as f64);
         }
         self.needs_round = true;
+    }
+
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        if self.cfg.bank.enabled {
+            Some(self.banks.quality_for(llm, task_id))
+        } else {
+            None
+        }
+    }
+
+    fn enable_gossip_log(&mut self) {
+        self.gossip_enabled = true;
+    }
+
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        out.append(&mut self.gossip_log);
+    }
+
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        // Remote prompts are first-hand tunes from other shards: insert,
+        // never re-log (each item crosses a shard boundary at most once).
+        if self.cfg.bank.enabled {
+            for it in items {
+                self.banks.insert_tuned(it.llm, it.task_id, it.quality);
+            }
+        }
     }
 }
 

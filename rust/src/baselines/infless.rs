@@ -12,7 +12,8 @@
 
 use crate::baselines::BankRouter;
 use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
-                     RevokeEvent, Wake};
+                     RevokeEvent, TunedPrompt, Wake};
+use crate::promptbank::TUNED_PROMPT_QUALITY;
 use crate::coordinator::pools::WarmPool;
 use crate::promptbank::SimBankSet;
 use crate::util::rng::Rng;
@@ -80,6 +81,10 @@ pub struct Infless {
     /// State changed since the last round — the next round must run
     /// densely before idle-round coalescing may resume.
     needs_round: bool,
+    /// Tuned prompts fed back since the last gossip drain (only recorded
+    /// when a shard plane enabled the log — see [`Policy::enable_gossip_log`]).
+    gossip_log: Vec<TunedPrompt>,
+    gossip_enabled: bool,
     /// Scratch buffer for warming-instance completions (no per-round
     /// allocation).
     scratch_ready: Vec<usize>,
@@ -100,6 +105,8 @@ impl Infless {
             warming: vec![],
             retry_holdback: vec![],
             needs_round: true,
+            gossip_log: vec![],
+            gossip_enabled: false,
             scratch_ready: vec![],
         }
     }
@@ -199,7 +206,15 @@ impl Policy for Infless {
             .round() as usize;
         self.pools[llm.index()].release(gpus, st.now());
         // Completion feedback: the tuned prompt flows back into the bank.
-        self.cfg.bank.complete(&mut self.banks, llm, task_id);
+        if self.cfg.bank.complete(&mut self.banks, llm, task_id)
+            && self.gossip_enabled
+        {
+            self.gossip_log.push(TunedPrompt {
+                llm,
+                task_id,
+                quality: TUNED_PROMPT_QUALITY,
+            });
+        }
         self.needs_round = true;
         self.update_billable(st);
     }
@@ -397,6 +412,32 @@ impl Policy for Infless {
         // instances below the new budget.
         self.cfg.max_gpus = gpus;
         self.needs_round = true;
+    }
+
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        if self.cfg.bank.enabled {
+            Some(self.banks.quality_for(llm, task_id))
+        } else {
+            None
+        }
+    }
+
+    fn enable_gossip_log(&mut self) {
+        self.gossip_enabled = true;
+    }
+
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        out.append(&mut self.gossip_log);
+    }
+
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        // Remote prompts are first-hand tunes from other shards: insert,
+        // never re-log (each item crosses a shard boundary at most once).
+        if self.cfg.bank.enabled {
+            for it in items {
+                self.banks.insert_tuned(it.llm, it.task_id, it.quality);
+            }
+        }
     }
 }
 

@@ -86,10 +86,16 @@ impl BankRouter {
     }
 
     /// Completion feedback (Fig 5b): the finished job's tuned prompt
-    /// flows back into its LLM's bank.
-    pub fn complete(&self, banks: &mut SimBankSet, llm: Llm, task_id: usize) {
+    /// flows back into its LLM's bank. Returns whether a prompt was
+    /// actually inserted (false when the router is disabled), so gossiping
+    /// callers know what to log.
+    pub fn complete(&self, banks: &mut SimBankSet, llm: Llm, task_id: usize)
+                    -> bool {
         if self.enabled {
             banks.insert_tuned(llm, task_id, TUNED_PROMPT_QUALITY);
+            true
+        } else {
+            false
         }
     }
 }

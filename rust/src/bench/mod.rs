@@ -28,7 +28,7 @@ use crate::fault::{ChaosEngine, FaultInjector, FaultPlan};
 use crate::promptbank::SimBankConfig;
 use crate::scenario::Scenario;
 use crate::slo::{Governed, GovernorConfig};
-use crate::trace::{Load, TraceConfig, TraceGenerator};
+use crate::trace::{Load, TraceConfig, TraceGenerator, VecSource};
 use crate::workload::{JobSpec, Llm, PerfModel};
 
 /// The three systems every end-to-end comparison sweeps.
@@ -236,7 +236,10 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
     }
     let sim = Simulator::new(cfg, PerfModel::default());
     let mut policy = make_policy(cell);
-    let result = sim.run(policy.as_mut(), jobs);
+    // Streamed through the same `StreamCore` every trace path uses now;
+    // bit-identical to the materialized `Simulator::run` (the streaming
+    // equivalence property in tests/prop_shard.rs enforces it per family).
+    let result = sim.run_source(policy.as_mut(), &mut VecSource::new(jobs));
     CellResult {
         cell: cell.clone(),
         result,
@@ -329,6 +332,17 @@ impl BenchReport {
         out.push_str(&format!("  \"created_unix\": {created},\n"));
         out.push_str(&format!("  \"total_wall_s\": {},\n",
                               json_f64(self.total_wall_s)));
+        // The scenario-family manifest, emitted from the Rust single
+        // source of truth (`scenario::FAMILIES`) so tooling never
+        // hand-maintains the list.
+        out.push_str("  \"families\": [");
+        for (i, f) in crate::scenario::FAMILIES.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\"", json_escape(f)));
+        }
+        out.push_str("],\n");
         out.push_str("  \"cells\": [\n");
         for (i, c) in self.cells.iter().enumerate() {
             let r = &c.result;
@@ -463,6 +477,11 @@ mod tests {
         let report = BenchReport::new("test", results, 0.5);
         let json = report.to_json();
         assert!(json.contains("\"suite\": \"test\""));
+        // every record carries the scenario-family manifest
+        assert!(json.contains("\"families\": ["));
+        for f in crate::scenario::FAMILIES {
+            assert!(json.contains(&format!("\"{f}\"")), "missing family {f}");
+        }
         assert!(json.contains("\\\"")); // label quote escaped
         assert!(json.contains("\"ticks_per_s\""));
         assert!(json.contains("\"rounds_coalesced\""));

@@ -15,4 +15,5 @@ pub mod sim;
 pub use job::{JobState, JobStatus};
 pub use sim::{ChaosInjection, CheckpointModel, ClusterState, Policy,
               RetryEvent, Revoked, RevokeEvent, SimConfig, SimObserver,
-              SimOracle, SimResult, Simulator, StateAudit, Wake};
+              SimOracle, SimResult, Simulator, StateAudit, StreamCore,
+              TunedPrompt, Wake};

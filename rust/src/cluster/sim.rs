@@ -51,6 +51,7 @@ use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use crate::cluster::job::{JobState, JobStatus};
+use crate::trace::source::TraceSource;
 use crate::util::rng::Rng;
 use crate::util::stats::Accum;
 use crate::workload::{JobSpec, Llm, PerfModel, COMM_PAYLOAD_GB, GPU_PRICE_PER_S,
@@ -235,6 +236,18 @@ pub struct RetryEvent {
     pub attempt: u32,
     /// Earliest relaunch time (absolute seconds): `now + backoff`.
     pub not_before: f64,
+}
+
+/// A tuned prompt produced by a completed tuning run — the unit of
+/// cross-shard Prompt-Bank gossip in the shard plane (`crate::shard`).
+/// Policies record these when a plane enables the gossip log, a gossip
+/// round drains them, and peer shards absorb them into their own banks
+/// (the Fig 5b feedback edge, stretched across shards).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedPrompt {
+    pub llm: Llm,
+    pub task_id: usize,
+    pub quality: f64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -893,6 +906,35 @@ pub trait Policy {
     fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
         let _ = (st, gpus);
     }
+
+    /// Prompt-Bank coverage this policy realizes for `(llm, task)` right
+    /// now — the shard-plane router's placement signal. `None` means the
+    /// policy has no bank (or it is disabled); the router treats that as
+    /// zero coverage. Must be a pure read (no bank mutation, no RNG).
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        let _ = (llm, task_id);
+        None
+    }
+
+    /// Start recording tuned prompts (completion feedback) for
+    /// cross-shard gossip. Off by default, and never enabled outside a
+    /// gossiping shard plane — so unsharded runs carry no log and stay
+    /// bit-identical to the pre-gossip simulator.
+    fn enable_gossip_log(&mut self) {}
+
+    /// Move every tuned prompt recorded since the last drain into `out`
+    /// (append; callers batch several shards into one vector). No-op
+    /// unless [`Policy::enable_gossip_log`] armed the log.
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        let _ = out;
+    }
+
+    /// Merge tuned prompts gossiped from peer shards into this policy's
+    /// bank. Absorbed prompts are not re-logged (gossip converges
+    /// instead of echoing).
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        let _ = items;
+    }
 }
 
 /// Forward [`Policy`] through boxes so trait objects (e.g. the
@@ -928,6 +970,18 @@ impl<P: Policy + ?Sized> Policy for Box<P> {
     }
     fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
         (**self).set_capacity(st, gpus)
+    }
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        (**self).bank_coverage(llm, task_id)
+    }
+    fn enable_gossip_log(&mut self) {
+        (**self).enable_gossip_log()
+    }
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        (**self).drain_tuned(out)
+    }
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        (**self).absorb_tuned(items)
     }
 }
 
@@ -1489,6 +1543,20 @@ impl<P: Policy> Policy for SimOracle<P> {
         self.inner.set_capacity(st, gpus);
         self.run_audit(st, "set_capacity");
     }
+    // Gossip hooks touch only the policy's own bank, never ClusterState,
+    // so there is no cluster invariant to audit — forward verbatim.
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        self.inner.bank_coverage(llm, task_id)
+    }
+    fn enable_gossip_log(&mut self) {
+        self.inner.enable_gossip_log()
+    }
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        self.inner.drain_tuned(out)
+    }
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        self.inner.absorb_tuned(items)
+    }
 }
 
 /// Outcome of one simulated experiment.
@@ -1856,6 +1924,412 @@ impl Simulator {
             retry_iters: st.total_retry_iters,
             chaos_delay_s: st.total_chaos_delay_s,
             wall_s: wall0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Run `policy` from a streaming [`TraceSource`] — arrivals are
+    /// injected as the stream yields them, so resident trace memory is
+    /// O(active jobs) instead of the full trace. Bit-identical to
+    /// [`Simulator::run`] on the materialized trace (property-enforced
+    /// by `tests/prop_shard.rs` for every scenario family).
+    pub fn run_source(&self, policy: &mut dyn Policy,
+                      source: &mut dyn TraceSource) -> SimResult {
+        self.run_source_observed(policy, source, &mut ())
+    }
+
+    /// [`Simulator::run_source`] with a passive [`SimObserver`] attached.
+    pub fn run_source_observed(&self, policy: &mut dyn Policy,
+                               source: &mut dyn TraceSource,
+                               observer: &mut dyn SimObserver) -> SimResult {
+        let wall0 = Instant::now();
+        let n_total = source.total_jobs();
+        let horizon = source.last_arrival_s() + self.cfg.horizon_s;
+        let tick = policy.tick_interval();
+        let mut core = StreamCore::new(self.cfg.clone(), self.perf.clone(),
+                                       tick, n_total, horizon);
+        let mut injected = 0u64;
+        while let Some(spec) = source.next_job() {
+            // The pending arrival's (time, seq) key — seq i+1, exactly
+            // the sequence number the materialized loop pre-assigns to
+            // arrival i.
+            let key = (spec.submit_s, injected + 1);
+            let finished = core.advance_until(policy, observer, Some(key));
+            debug_assert!(!finished,
+                          "stream core finished with arrivals pending");
+            if finished {
+                break;
+            }
+            core.inject_arrival(policy, observer, spec);
+            injected += 1;
+        }
+        core.exhaust();
+        core.advance_until(policy, observer, None);
+        core.finalize(policy, observer, wall0.elapsed().as_secs_f64())
+    }
+}
+
+// ----------------------------------------------------------- stream core
+
+/// The [`Simulator::run_observed`] state machine, refactored so arrivals
+/// are *injected by a caller* instead of pre-loaded into the heap. This
+/// is the kernel both streaming entry points share: `run_source` drives
+/// one core from a [`TraceSource`], and the shard plane (`crate::shard`)
+/// drives N of them in lockstep with a router deciding which core each
+/// arrival enters.
+///
+/// Bit-identity with the materialized loop rests on one observation: an
+/// arrival the materialized loop holds in its heap at key `(t, seq)`
+/// influences the run *only* through that key — it bounds tick-vs-event
+/// ordering and the batch-skip loop. [`StreamCore::advance_until`] takes
+/// the pending injection's key as `limit` and folds it into both bounds
+/// exactly as the heap top would be, so a not-yet-injected arrival
+/// constrains the core identically to a heap-resident one. Every other
+/// line is a verbatim transplant of `run_observed`; that loop remains as
+/// the executable reference the equivalence properties compare against.
+///
+/// Event-sequence layout (must match the materialized loop bit-for-bit):
+/// arrival `i` of the *global* stream owns seq `i + 1`, the tick stream
+/// starts at `n_total + 1`, the end-of-horizon event takes
+/// `n_total + 2`, and `ClusterState::event_seq` continues from there. A
+/// sharded plane passes the same global `n_total` to every core, so
+/// per-shard seqs stay unique and monotone (they are simply sparse).
+pub struct StreamCore {
+    st: ClusterState,
+    heap: BinaryHeap<Event>,
+    horizon: f64,
+    tick: f64,
+    tick_time: f64,
+    tick_seq: u64,
+    wake: Wake,
+    overhead: Accum,
+    done: usize,
+    admitted: usize,
+    /// `done` level at which the run ends: `usize::MAX` while the source
+    /// may still yield (matching `done == n_jobs` being unreachable with
+    /// arrivals outstanding), the admitted count after [`StreamCore::
+    /// exhaust`].
+    stop_done: usize,
+    rounds: u64,
+    coalesced: u64,
+    events: u64,
+    audit: Option<StateAudit>,
+    audit_scratch: Vec<String>,
+    finished: bool,
+}
+
+impl StreamCore {
+    /// A core expecting up to `n_total` injected arrivals (the *global*
+    /// stream length — per-shard cores of one plane all take the same
+    /// value) over `horizon` seconds, ticking every `tick` seconds.
+    pub fn new(cfg: SimConfig, perf: PerfModel, tick: f64, n_total: usize,
+               horizon: f64) -> Self {
+        let debug_oracle = cfg.debug_oracle;
+        let mut st = ClusterState::new(cfg, perf, vec![]);
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        // Arrivals own seqs 1..=n_total; replicate the materialized
+        // loop's layout for the tick stream and the end event.
+        let mut seq = n_total as u64;
+        seq += 1;
+        let tick_time = 0.0f64;
+        let tick_seq = seq;
+        seq += 1;
+        heap.push(Event { time: horizon, seq, kind: EventKind::End });
+        st.seq = seq;
+        StreamCore {
+            st,
+            heap,
+            horizon,
+            tick,
+            tick_time,
+            tick_seq,
+            wake: Wake::Dense,
+            overhead: Accum::new(),
+            done: 0,
+            admitted: 0,
+            stop_done: usize::MAX,
+            rounds: 0,
+            coalesced: 0,
+            events: 0,
+            audit: debug_oracle.then(StateAudit::new),
+            audit_scratch: vec![],
+            finished: false,
+        }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.st.now()
+    }
+
+    /// Jobs injected so far.
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    /// Jobs completed (accepted completions) so far.
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    /// Whether the run has ended (horizon reached or all admitted jobs
+    /// done after exhaustion).
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// The cluster state (router placement signals: billable/busy
+    /// levels, config).
+    pub fn state(&self) -> &ClusterState {
+        &self.st
+    }
+
+    /// Process every tick and heap event with key strictly before
+    /// `limit` — the (time, seq) key of the caller's next injection, or
+    /// `None` to run to completion. Returns `true` when the run ended,
+    /// `false` when it stopped at `limit` (the caller injects now).
+    pub fn advance_until(&mut self, policy: &mut dyn Policy,
+                         observer: &mut dyn SimObserver,
+                         limit: Option<(f64, u64)>) -> bool {
+        if self.finished {
+            return true;
+        }
+        loop {
+            let heap_key = self.heap.peek().map(|ev| (ev.time, ev.seq));
+            // Effective next event: the earlier of the heap top and the
+            // pending injection — which stands in for the heap-resident
+            // arrival event of the materialized loop.
+            let (next_key, at_limit) = match (heap_key, limit) {
+                (Some(h), Some(l)) if l < h => (Some(l), true),
+                (None, Some(l)) => (Some(l), true),
+                (h, _) => (h, false),
+            };
+            let tick_first = match next_key {
+                Some(k) => (self.tick_time, self.tick_seq) < k,
+                None => true,
+            };
+            if tick_first {
+                if self.tick_time > self.horizon {
+                    self.finished = true;
+                    return true;
+                }
+                let skip = match self.wake {
+                    Wake::Dense => false,
+                    Wake::Idle => true,
+                    Wake::At(t) => self.tick_time < t,
+                };
+                if skip {
+                    let (ev_time, ev_seq) =
+                        next_key.unwrap_or((f64::INFINITY, u64::MAX));
+                    loop {
+                        self.coalesced += 1;
+                        self.st.seq += 1;
+                        self.tick_seq = self.st.seq;
+                        self.tick_time += self.tick;
+                        if self.tick_time > self.horizon
+                            || (self.tick_time, self.tick_seq)
+                                >= (ev_time, ev_seq)
+                        {
+                            break;
+                        }
+                        if let Wake::At(t) = self.wake {
+                            if self.tick_time >= t {
+                                break;
+                            }
+                        }
+                    }
+                    continue;
+                }
+                self.st.integrate_to(self.tick_time);
+                let t0 = Instant::now();
+                policy.on_tick(&mut self.st);
+                self.overhead.add(t0.elapsed().as_secs_f64() * 1e3);
+                self.rounds += 1;
+                self.st.drain_queued(&mut self.heap);
+                debug_audit(&mut self.audit, &mut self.audit_scratch,
+                            &self.st, "tick");
+                observer.on_round(&self.st);
+                self.wake = policy.next_timed_action(&self.st);
+                debug_wake(&self.audit, &mut self.audit_scratch, &self.st,
+                           self.wake);
+                if self.done == self.stop_done {
+                    self.finished = true;
+                    return true;
+                }
+                self.st.seq += 1;
+                self.tick_seq = self.st.seq;
+                self.tick_time += self.tick;
+            } else if at_limit {
+                return false;
+            } else {
+                let ev = match self.heap.pop() {
+                    Some(ev) => ev,
+                    None => {
+                        self.finished = true;
+                        return true;
+                    }
+                };
+                if ev.time > self.horizon {
+                    self.finished = true;
+                    return true;
+                }
+                self.events += 1;
+                self.st.integrate_to(ev.time);
+                match ev.kind {
+                    EventKind::Arrival(_) => {
+                        unreachable!("stream-core arrivals are injected, \
+                                      never heap events")
+                    }
+                    EventKind::JobDone(id, gen) => {
+                        let stale = self.st.jobs[id].gen != gen
+                            || self.st.jobs[id].status == JobStatus::Done;
+                        if !stale {
+                            let gpus;
+                            {
+                                let job = &mut self.st.jobs[id];
+                                job.status = JobStatus::Done;
+                                job.completed_at = ev.time;
+                                job.iters_remaining = 0.0;
+                                gpus = job.gpus;
+                                job.gpu_seconds = gpus as f64
+                                    * (ev.time - job.launched_at);
+                                job.gpus = 0;
+                            }
+                            self.st.commit_levels();
+                            self.st.busy_gpus -= gpus as f64;
+                            self.st.deactivate(id);
+                            policy.on_job_complete(&mut self.st, id);
+                            self.st.drain_queued(&mut self.heap);
+                            debug_audit(&mut self.audit,
+                                        &mut self.audit_scratch, &self.st,
+                                        "complete");
+                            if self.st.jobs[id].status == JobStatus::Done {
+                                self.done += 1;
+                                observer.on_job_complete(&self.st, id);
+                            }
+                            self.wake = policy.next_timed_action(&self.st);
+                            debug_wake(&self.audit, &mut self.audit_scratch,
+                                       &self.st, self.wake);
+                            if self.done == self.stop_done {
+                                self.finished = true;
+                                return true;
+                            }
+                        } else {
+                            self.st.drain_queued(&mut self.heap);
+                            // See run_observed: a wake hint must never
+                            // outlive an event pop, even a no-op one.
+                            self.wake = policy.next_timed_action(&self.st);
+                            debug_wake(&self.audit, &mut self.audit_scratch,
+                                       &self.st, self.wake);
+                        }
+                    }
+                    EventKind::End => {
+                        self.finished = true;
+                        return true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inject the arrival [`StreamCore::advance_until`] just stopped at.
+    /// The spec's id is re-assigned to the next dense local index (for a
+    /// single-cluster run of a finalized trace this is the id the spec
+    /// already carries). Verbatim the materialized loop's arrival branch,
+    /// with the job-table entry created here instead of at construction.
+    pub fn inject_arrival(&mut self, policy: &mut dyn Policy,
+                          observer: &mut dyn SimObserver, mut spec: JobSpec) {
+        debug_assert!(!self.finished);
+        debug_assert!(spec.submit_s + 1e-12 >= self.st.now(),
+                      "arrival at {} injected after t={}", spec.submit_s,
+                      self.st.now());
+        let id = self.st.jobs.len();
+        spec.id = id;
+        let submit = spec.submit_s;
+        self.st.jobs.push(JobState::new(spec));
+        self.st.active_pos.push(usize::MAX);
+        self.admitted += 1;
+        self.events += 1;
+        self.st.integrate_to(submit);
+        policy.on_arrival(&mut self.st, id);
+        self.st.drain_queued(&mut self.heap);
+        debug_audit(&mut self.audit, &mut self.audit_scratch, &self.st,
+                    "arrival");
+        observer.on_arrival(&self.st, id);
+        self.wake = policy.next_timed_action(&self.st);
+        debug_wake(&self.audit, &mut self.audit_scratch, &self.st,
+                   self.wake);
+    }
+
+    /// Declare the arrival stream exhausted: the run now ends when every
+    /// admitted job is done — the streaming equivalent of the
+    /// materialized loop's `done == n_jobs`, which likewise only fires
+    /// once no arrival is outstanding.
+    pub fn exhaust(&mut self) {
+        self.stop_done = self.admitted;
+    }
+
+    /// Final integration and metric extraction (the tail of
+    /// `run_observed`), consuming the core.
+    pub fn finalize(mut self, policy: &dyn Policy,
+                    observer: &mut dyn SimObserver, wall_s: f64) -> SimResult {
+        let st = &mut self.st;
+        st.integrate_to(st.now());
+        st.commit_levels();
+        observer.on_end(st);
+
+        let n_done =
+            st.jobs.iter().filter(|j| j.status == JobStatus::Done).count();
+        let n_violations = st.jobs.iter().filter(|j| !j.met_slo()).count();
+        let mean_prompt_quality = if n_done > 0 {
+            st.jobs
+                .iter()
+                .filter(|j| j.status == JobStatus::Done)
+                .map(|j| j.quality)
+                .sum::<f64>()
+                / n_done as f64
+        } else {
+            0.0
+        };
+        let cost_usd = st.cost_gpu_s * GPU_PRICE_PER_S + st.storage_cost;
+        let mean_utilization = if st.billable_gpu_s > 0.0 {
+            st.busy_gpu_s / st.billable_gpu_s
+        } else {
+            0.0
+        };
+        SimResult {
+            policy: policy.name().to_string(),
+            n_jobs: st.jobs.len(),
+            n_done,
+            n_violations,
+            cost_usd,
+            gpu_seconds_billed: st.cost_gpu_s,
+            gpu_seconds_busy: st.busy_gpu_s,
+            mean_utilization,
+            util_timeline: std::mem::take(&mut st.util_timeline),
+            job_latencies: st
+                .jobs
+                .iter()
+                .map(|j| (j.latency(), j.spec.slo_s, j.init_wait,
+                          j.bank_latency))
+                .collect(),
+            job_quality: st.jobs.iter().map(|j| j.quality).collect(),
+            mean_prompt_quality,
+            sched_overhead_ms_mean: self.overhead.mean(),
+            sched_overhead_ms_max: if self.overhead.n == 0 {
+                0.0
+            } else {
+                self.overhead.max
+            },
+            rounds_executed: self.rounds,
+            rounds_coalesced: self.coalesced,
+            events_processed: self.events,
+            revocations: st.revocations,
+            lost_iters: st.total_lost_iters,
+            straggler_iters: st.total_straggler_iters,
+            retries: st.total_retries,
+            retry_iters: st.total_retry_iters,
+            chaos_delay_s: st.total_chaos_delay_s,
+            wall_s,
         }
     }
 }

@@ -30,7 +30,7 @@
 //! [`crate::cluster::Wake`].
 
 use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
-                     RevokeEvent, Wake};
+                     RevokeEvent, TunedPrompt, Wake};
 use crate::coordinator::cold_alloc::{allocate_from_cold_pool_into, ColdPlan};
 use crate::coordinator::pools::WarmPool;
 use crate::coordinator::warm_alloc::{allocate_from_warm_pool_into, WarmAllocation};
@@ -154,6 +154,11 @@ pub struct PromptTuner {
     /// the earliest entry is declared through `next_timed_action` so
     /// coalesced runs wake exactly when a backoff expires.
     retry_holdback: Vec<(f64, usize)>,
+    /// Tuned prompts fed back since the last gossip drain. Only recorded
+    /// when a shard plane enabled the log — unsharded runs never touch it,
+    /// keeping them bit-identical to pre-gossip behavior.
+    gossip_log: Vec<TunedPrompt>,
+    gossip_enabled: bool,
     // ---- reusable scratch buffers (steady-state rounds allocate nothing)
     scratch_ids: Vec<usize>,
     scratch_el: Vec<f64>,
@@ -180,6 +185,8 @@ impl PromptTuner {
             warm_total: 0,
             needs_round: true,
             retry_holdback: vec![],
+            gossip_log: vec![],
+            gossip_enabled: false,
             scratch_ids: vec![],
             scratch_el: vec![],
             scratch_warm: vec![],
@@ -434,6 +441,13 @@ impl Policy for PromptTuner {
         // dense and coalesced ticking, so bank state stays bit-equal.
         if self.cfg.use_bank {
             self.banks.insert_tuned(llm, task_id, TUNED_PROMPT_QUALITY);
+            if self.gossip_enabled {
+                self.gossip_log.push(TunedPrompt {
+                    llm,
+                    task_id,
+                    quality: TUNED_PROMPT_QUALITY,
+                });
+            }
         }
         self.needs_round = true;
         self.update_billable(st);
@@ -714,6 +728,33 @@ impl Policy for PromptTuner {
         // capacity tracks the warm pools, so no cluster update is needed.
         self.cfg.max_gpus = gpus;
         self.needs_round = true;
+    }
+
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        if self.cfg.use_bank {
+            Some(self.banks.quality_for(llm, task_id))
+        } else {
+            None
+        }
+    }
+
+    fn enable_gossip_log(&mut self) {
+        self.gossip_enabled = true;
+    }
+
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        out.append(&mut self.gossip_log);
+    }
+
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        // Remote prompts land in the local bank like local completions do,
+        // but are *not* re-logged: gossip forwards first-hand tunes only,
+        // so an item crosses each shard boundary at most once.
+        if self.cfg.use_bank {
+            for it in items {
+                self.banks.insert_tuned(it.llm, it.task_id, it.quality);
+            }
+        }
     }
 }
 

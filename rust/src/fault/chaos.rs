@@ -40,9 +40,18 @@ pub enum ChaosKind {
     /// Rack storm: completion errors and tails on top of correlated
     /// whole-rack failures (pair with a `FaultPlan` of failure waves).
     RackStorm,
+    /// Network partition: a shard is periodically severed from the
+    /// global router for a window (`partition_period_s` / `partition_s`).
+    /// Local scheduling continues inside the severed cell; only the
+    /// routing and gossip planes are cut. Consumed by
+    /// [`crate::shard::ShardPlane`] — single-cluster runs have no router
+    /// to sever, so this kind stays out of [`ChaosKind::ALL`].
+    Partition,
 }
 
 impl ChaosKind {
+    /// The single-cluster chaos rotation (scenario catalogue, property
+    /// tests). `Partition` is excluded: it only acts on the shard plane.
     pub const ALL: [ChaosKind; 3] =
         [ChaosKind::LatencyTail, ChaosKind::Flaky, ChaosKind::RackStorm];
 
@@ -51,6 +60,7 @@ impl ChaosKind {
             ChaosKind::LatencyTail => ChaosProfile::latency_tail(),
             ChaosKind::Flaky => ChaosProfile::flaky(),
             ChaosKind::RackStorm => ChaosProfile::rack_storm(),
+            ChaosKind::Partition => ChaosProfile::partition(),
         }
     }
 }
@@ -84,6 +94,12 @@ pub struct ChaosProfile {
     /// Failure domains (racks) the fleet is partitioned into; 0 keeps
     /// today's independent per-GPU revocations.
     pub domains: usize,
+    /// Network-partition cadence: one partition event per period
+    /// (shard-plane only; 0 disables).
+    pub partition_period_s: f64,
+    /// How long each partition severs its victim shard from the router
+    /// (must be ≤ the period; 0 disables).
+    pub partition_s: f64,
 }
 
 impl ChaosProfile {
@@ -101,6 +117,8 @@ impl ChaosProfile {
             backoff_base_s: 0.0,
             backoff_factor: 1.0,
             domains: 0,
+            partition_period_s: 0.0,
+            partition_s: 0.0,
         }
     }
 
@@ -118,6 +136,8 @@ impl ChaosProfile {
             backoff_base_s: 15.0,
             backoff_factor: 2.0,
             domains: 0,
+            partition_period_s: 0.0,
+            partition_s: 0.0,
         }
     }
 
@@ -135,6 +155,30 @@ impl ChaosProfile {
             backoff_base_s: 20.0,
             backoff_factor: 2.0,
             domains: 4,
+            partition_period_s: 0.0,
+            partition_s: 0.0,
+        }
+    }
+
+    /// Network partitions only: every 10 minutes one shard loses its
+    /// router link for 2 minutes. No tails, no completion errors — the
+    /// profile isolates the routing/gossip failure mode so shard-plane
+    /// runs attribute every effect to the partition itself.
+    pub fn partition() -> ChaosProfile {
+        ChaosProfile {
+            name: "partition".into(),
+            launch_tail_frac: 0.0,
+            launch_tail_factor: 1.0,
+            lookup_tail_frac: 0.0,
+            lookup_tail_factor: 1.0,
+            completion_error_frac: 0.0,
+            redo_frac: 0.5,
+            retry_budget: 0,
+            backoff_base_s: 0.0,
+            backoff_factor: 1.0,
+            domains: 0,
+            partition_period_s: 600.0,
+            partition_s: 120.0,
         }
     }
 
@@ -144,6 +188,7 @@ impl ChaosProfile {
             "latency-tail" => Some(ChaosProfile::latency_tail()),
             "flaky" => Some(ChaosProfile::flaky()),
             "rack-storm" => Some(ChaosProfile::rack_storm()),
+            "partition" => Some(ChaosProfile::partition()),
             _ => None,
         }
     }
@@ -180,6 +225,9 @@ impl ChaosProfile {
         p.backoff_factor =
             cfg.f64_or("chaos.backoff_factor", p.backoff_factor);
         p.domains = cfg.usize_or("chaos.domains", p.domains);
+        p.partition_period_s =
+            cfg.f64_or("chaos.partition_period_s", p.partition_period_s);
+        p.partition_s = cfg.f64_or("chaos.partition_s", p.partition_s);
         p.validate()?;
         Ok(p)
     }
@@ -216,6 +264,21 @@ impl ChaosProfile {
             return Err(format!(
                 "chaos.backoff_base_s = {} must be non-negative",
                 self.backoff_base_s
+            ));
+        }
+        for (name, v) in [
+            ("partition_period_s", self.partition_period_s),
+            ("partition_s", self.partition_s),
+        ] {
+            if !(v >= 0.0 && v.is_finite()) {
+                return Err(format!("chaos.{name} = {v} must be non-negative"));
+            }
+        }
+        if self.partition_s > 0.0 && self.partition_s > self.partition_period_s
+        {
+            return Err(format!(
+                "chaos.partition_s = {} exceeds the period {}",
+                self.partition_s, self.partition_period_s
             ));
         }
         Ok(())
@@ -430,6 +493,22 @@ mod tests {
             assert_eq!(ChaosProfile::by_name(&p.name), Some(p));
         }
         assert_eq!(ChaosProfile::by_name("no-such-profile"), None);
+    }
+
+    #[test]
+    fn partition_profile_validates_and_resolves() {
+        let p = ChaosProfile::partition();
+        p.validate().unwrap();
+        assert_eq!(ChaosProfile::by_name("partition"), Some(p.clone()));
+        assert_eq!(ChaosKind::Partition.profile(), p);
+        assert!(p.partition_s > 0.0 && p.partition_s <= p.partition_period_s);
+        // partitions inject no single-cluster chaos at all
+        assert!(p.injection(1).is_none());
+        assert_eq!(p.completion_error_frac, 0.0);
+        // a window longer than its period is rejected
+        let mut bad = p;
+        bad.partition_s = bad.partition_period_s + 1.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub mod chaos;
 pub use chaos::{ChaosEngine, ChaosKind, ChaosProfile, DomainTopology};
 
 use crate::cluster::{CheckpointModel, ClusterState, JobStatus, Policy,
-                     RetryEvent, Revoked, RevokeEvent, Wake};
+                     RetryEvent, Revoked, RevokeEvent, TunedPrompt, Wake};
 use crate::util::rng::Rng;
 use crate::workload::Llm;
 
@@ -513,6 +513,24 @@ impl<P: Policy> Policy for FaultInjector<P> {
         // External capacity requests may not exceed the degraded fleet.
         let clamped = if self.started { gpus.min(self.ceiling()) } else { gpus };
         self.inner.set_capacity(st, clamped);
+    }
+
+    // Gossip hooks: pure pass-throughs — the injector owns no bank, so
+    // the wrapped policy's answers are authoritative.
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        self.inner.bank_coverage(llm, task_id)
+    }
+
+    fn enable_gossip_log(&mut self) {
+        self.inner.enable_gossip_log();
+    }
+
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        self.inner.drain_tuned(out);
+    }
+
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        self.inner.absorb_tuned(items);
     }
 }
 

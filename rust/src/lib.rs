@@ -24,6 +24,10 @@
 //!   (seeded GPU-failure / spot-reclaim / straggler plans, the
 //!   checkpoint/restore cost model, and the `FaultInjector` policy
 //!   wrapper driving involuntary churn through `Policy::on_revoke`).
+//! - **[`shard`]** — the hyperscale shard plane: N simulated cells fed
+//!   by streaming [`trace`] sources, a coverage/queue/headroom router,
+//!   periodic cross-shard Prompt-Bank gossip, and deterministic
+//!   network-partition chaos.
 
 // Style-lint policy for CI's `cargo clippy -- -D warnings` gate: the
 // numeric simulation code deliberately keeps a few patterns clippy's
@@ -47,6 +51,7 @@ pub mod promptbank;
 pub mod runtime;
 pub mod scenario;
 pub mod serve;
+pub mod shard;
 pub mod slo;
 pub mod trace;
 pub mod tuning;

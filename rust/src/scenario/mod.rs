@@ -65,6 +65,26 @@ pub const TENANT_TIERS: [f64; 4] = [0.5, 1.0, 1.5, 2.0];
 /// candidates for drifted tasks until completions feed them back.
 pub const NOVEL_TASK_BASE: usize = 4096;
 
+/// Every scenario-family name a bench record may carry: the synthetic
+/// catalogue plus `replay` (file-backed, so absent from
+/// [`Scenario::catalogue`]). This is the single source of truth the
+/// bench reports embed (`families` key) so `tools/check_bench.py` never
+/// hand-maintains the list again — a test below pins it against the
+/// catalogue.
+pub const FAMILIES: [&str; 11] = [
+    "diurnal",
+    "flash-crowd",
+    "heavy-tail",
+    "multi-tenant",
+    "replay",
+    "spot-market",
+    "az-outage",
+    "task-drift",
+    "chaos-latency",
+    "chaos-flaky",
+    "chaos-storm",
+];
+
 /// A named workload family with its parameters.
 #[derive(Clone, Debug)]
 pub enum Scenario {
@@ -142,6 +162,11 @@ impl Scenario {
             }
             Scenario::Chaos { kind: ChaosKind::Flaky, .. } => "chaos-flaky",
             Scenario::Chaos { kind: ChaosKind::RackStorm, .. } => "chaos-storm",
+            Scenario::Chaos { kind: ChaosKind::Partition, .. } => {
+                // Shard-plane only (no router to sever on one cluster);
+                // named for completeness, absent from the catalogue.
+                "chaos-partition"
+            }
         }
     }
 
@@ -426,6 +451,18 @@ mod tests {
         }
         assert!(Scenario::from_name("replay").is_none());
         assert!(Scenario::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn families_constant_matches_catalogue_plus_replay() {
+        let mut expected: Vec<&str> =
+            Scenario::catalogue().iter().map(|s| s.name()).collect();
+        expected.push("replay");
+        expected.sort_unstable();
+        let mut got: Vec<&str> = FAMILIES.to_vec();
+        got.sort_unstable();
+        assert_eq!(got, expected,
+                   "scenario::FAMILIES drifted from the catalogue");
     }
 
     #[test]

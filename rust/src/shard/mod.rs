@@ -1,0 +1,760 @@
+//! Hyperscale shard plane: N simulated cells, one router, gossiped banks.
+//!
+//! One `StreamCore` scales to a few hundred GPUs before the scheduling
+//! policy itself becomes the bottleneck — the paper's control plane is
+//! per-cluster by design (§5). This module scales *out* instead of up:
+//! `shards` independent cells each run a local policy (PromptTuner,
+//! INFless or ElasticFlow) over their own cluster state and Prompt-Bank,
+//! and a thin global router places each arrival by a weighted score of
+//!
+//! * **bank coverage** — the quality the shard's bank already realizes
+//!   for the job's `(llm, task)` (the [`crate::cluster::Policy::
+//!   bank_coverage`] hook), so work lands where its prompts are warm;
+//! * **queue depth** — outstanding (admitted − done) jobs per GPU;
+//! * **headroom** — the shard's busy-GPU fraction.
+//!
+//! Lower score wins; ties break to the lowest shard index, so routing is
+//! a pure function of (seed, trace, round) and bit-deterministic.
+//!
+//! **Gossip.** Every `gossip_period_s` the plane advances all cells to
+//! the barrier instant and exchanges first-hand tuned prompts (the
+//! Fig 5b completion-feedback edge, stretched across shards): each live
+//! shard drains its [`crate::cluster::TunedPrompt`] log and every other
+//! live shard absorbs it. Absorbed prompts are *not* re-logged, so an
+//! item crosses each shard boundary at most once and traffic stays
+//! O(tuned × shards) per period. With gossip off no log is even
+//! recorded, which keeps a 1-shard plane bit-identical to the unsharded
+//! simulator (property-enforced by `tests/prop_shard.rs`).
+//!
+//! **Partitions.** [`PartitionSchedule`] (fed by `ChaosProfile::
+//! partition`) severs one pseudo-randomly chosen shard per period from
+//! the router for a window: local scheduling continues, routing fails
+//! over to the surviving shards, and the severed shard neither drains
+//! nor absorbs gossip until a barrier finds it healed (its log simply
+//! accumulates — nothing is lost). The plane audits, StateAudit-style,
+//! that no job is routed into a severed shard while an alternative
+//! exists and that every streamed job is admitted exactly once; any
+//! breach lands in [`ShardPlaneResult::violations`].
+//!
+//! The barrier instant `t_k` uses event key `(t_k, 0)`: sequence 0 sorts
+//! before every real event, so cells stop *before* anything scheduled at
+//! the barrier time — the exchange is a consistent cut.
+
+use std::time::Instant;
+
+use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless,
+                       InflessConfig};
+use crate::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
+                     SimConfig, SimResult, StreamCore, TunedPrompt, Wake};
+use crate::coordinator::{PromptTuner, PromptTunerConfig};
+use crate::fault::ChaosProfile;
+use crate::trace::TraceSource;
+use crate::workload::{Llm, PerfModel};
+
+const PHI: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Configuration of a sharded simulation plane.
+#[derive(Clone, Debug)]
+pub struct ShardPlaneConfig {
+    /// Number of cells. 1 reproduces the unsharded simulator exactly.
+    pub shards: usize,
+    /// Provider budget of each cell (total plane capacity is the
+    /// product).
+    pub gpus_per_shard: usize,
+    /// "prompttuner" | "infless" | "elasticflow" — every shard runs the
+    /// same system, seeded per shard (shard 0 keeps the plane seed).
+    pub system: String,
+    pub seed: u64,
+    /// Cross-shard prompt synchronization (ignored below 2 shards).
+    pub gossip: bool,
+    /// Gossip barrier period, seconds.
+    pub gossip_period_s: f64,
+    /// Network-partition chaos: `partition_period_s`/`partition_s` of
+    /// the profile drive a [`PartitionSchedule`]; None = no partitions.
+    pub partition: Option<ChaosProfile>,
+    /// Per-shard simulator config; `max_gpus` is overridden with
+    /// `gpus_per_shard`.
+    pub sim: SimConfig,
+    /// Router weight on (1 − bank coverage).
+    pub w_coverage: f64,
+    /// Router weight on queued jobs per GPU.
+    pub w_queue: f64,
+    /// Router weight on the busy-GPU fraction.
+    pub w_headroom: f64,
+    /// Pin every shard policy to dense ticking (coalescing-vs-dense
+    /// equivalence runs).
+    pub force_dense: bool,
+}
+
+impl ShardPlaneConfig {
+    pub fn new(system: impl Into<String>, shards: usize,
+               gpus_per_shard: usize, seed: u64) -> Self {
+        ShardPlaneConfig {
+            shards,
+            gpus_per_shard,
+            system: system.into(),
+            seed,
+            gossip: true,
+            gossip_period_s: 900.0,
+            partition: None,
+            sim: SimConfig { max_gpus: gpus_per_shard, ..Default::default() },
+            w_coverage: 1.0,
+            w_queue: 1.0,
+            w_headroom: 0.5,
+            force_dense: false,
+        }
+    }
+}
+
+/// Deterministic partition chaos: in window `k` (of `partition_period_s`
+/// seconds) one pseudo-randomly chosen victim shard is severed from the
+/// router for the first `partition_s` seconds. Pure functions of
+/// `(seed, k)` — no state, so repeats and dense-vs-coalesced runs agree
+/// bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct PartitionSchedule {
+    seed: u64,
+    shards: usize,
+    period_s: f64,
+    window_s: f64,
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(PHI);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl PartitionSchedule {
+    /// Build from a chaos profile's partition knobs; None when the
+    /// profile carries no partition window.
+    pub fn from_profile(profile: &ChaosProfile, seed: u64,
+                        shards: usize) -> Option<Self> {
+        if profile.partition_period_s <= 0.0 || profile.partition_s <= 0.0 {
+            return None;
+        }
+        Some(PartitionSchedule {
+            seed,
+            shards,
+            period_s: profile.partition_period_s,
+            window_s: profile.partition_s,
+        })
+    }
+
+    /// The shard severed during period `k`.
+    pub fn victim(&self, k: u64) -> usize {
+        (mix64(self.seed ^ (k + 1).wrapping_mul(PHI)) % self.shards as u64)
+            as usize
+    }
+
+    /// Is `shard` severed from the router at time `t`?
+    pub fn severed(&self, shard: usize, t: f64) -> bool {
+        if t < 0.0 || self.shards < 2 {
+            return false;
+        }
+        let k = (t / self.period_s).floor();
+        let start = k * self.period_s;
+        t - start < self.window_s && self.victim(k as u64) == shard
+    }
+}
+
+/// Build the bare (ungoverned, fault-free) policy a shard runs — the
+/// same construction as `bench::make_policy`'s bare-system arm, so the
+/// 1-shard conformance property can build an identical reference.
+pub fn make_shard_policy(system: &str, seed: u64,
+                         gpus: usize) -> Box<dyn Policy> {
+    match system {
+        "prompttuner" => Box::new(PromptTuner::new(PromptTunerConfig {
+            seed,
+            max_gpus: gpus,
+            ..Default::default()
+        })),
+        "infless" => Box::new(Infless::new(InflessConfig {
+            max_gpus: gpus,
+            seed,
+            ..Default::default()
+        })),
+        "elasticflow" => Box::new(ElasticFlow::new(ElasticFlowConfig {
+            cluster_size: gpus,
+            seed,
+            ..Default::default()
+        })),
+        other => panic!("unknown system {other}"),
+    }
+}
+
+/// Forces dense ticking on a wrapped policy while forwarding everything
+/// else — the shard-plane analogue of the dense oracle wrapper the
+/// equivalence properties use.
+struct DenseWrap(Box<dyn Policy>);
+
+impl Policy for DenseWrap {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+    fn tick_interval(&self) -> f64 {
+        self.0.tick_interval()
+    }
+    fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.0.on_arrival(st, job_id)
+    }
+    fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.0.on_job_complete(st, job_id)
+    }
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.0.on_tick(st)
+    }
+    fn next_timed_action(&self, _st: &ClusterState) -> Wake {
+        Wake::Dense
+    }
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        self.0.on_revoke(st, ev)
+    }
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        self.0.on_retry(st, ev)
+    }
+    fn capacity(&self) -> Option<usize> {
+        self.0.capacity()
+    }
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        self.0.set_capacity(st, gpus)
+    }
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        self.0.bank_coverage(llm, task_id)
+    }
+    fn enable_gossip_log(&mut self) {
+        self.0.enable_gossip_log()
+    }
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        self.0.drain_tuned(out)
+    }
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        self.0.absorb_tuned(items)
+    }
+}
+
+struct ShardCell {
+    core: StreamCore,
+    policy: Box<dyn Policy>,
+    routed: usize,
+}
+
+/// Result of one plane run: per-shard simulator results plus the
+/// plane-level routing/gossip/audit telemetry.
+#[derive(Clone, Debug)]
+pub struct ShardPlaneResult {
+    pub system: String,
+    pub shards: usize,
+    pub gpus_per_shard: usize,
+    pub per_shard: Vec<SimResult>,
+    /// Jobs the router placed on each shard (sums to the trace length).
+    pub routed: Vec<usize>,
+    /// Gossip barriers at which an exchange actually happened.
+    pub gossip_rounds: u64,
+    /// First-hand tuned prompts drained across all exchanges.
+    pub gossip_items: u64,
+    /// Arrivals placed while *every* shard was severed (best-effort
+    /// placement rather than job loss).
+    pub failovers: u64,
+    /// Plane-invariant breaches (empty on a correct run): a job routed
+    /// into a severed shard while an alternative existed, or jobs
+    /// lost/duplicated between router and cells.
+    pub violations: Vec<String>,
+}
+
+impl ShardPlaneResult {
+    /// Fold the per-shard results into one cluster-of-clusters summary.
+    /// Counters add; means weight by their natural denominators; the
+    /// utilization timeline is per-shard telemetry and stays empty here.
+    pub fn merged(&self) -> SimResult {
+        assert!(!self.per_shard.is_empty());
+        let billed: f64 =
+            self.per_shard.iter().map(|r| r.gpu_seconds_billed).sum();
+        let n_done: usize = self.per_shard.iter().map(|r| r.n_done).sum();
+        let rounds: u64 =
+            self.per_shard.iter().map(|r| r.rounds_executed).sum();
+        let mean_utilization = if billed > 0.0 {
+            self.per_shard
+                .iter()
+                .map(|r| r.mean_utilization * r.gpu_seconds_billed)
+                .sum::<f64>()
+                / billed
+        } else {
+            0.0
+        };
+        let mean_prompt_quality = if n_done > 0 {
+            self.per_shard
+                .iter()
+                .map(|r| r.mean_prompt_quality * r.n_done as f64)
+                .sum::<f64>()
+                / n_done as f64
+        } else {
+            0.0
+        };
+        let sched_overhead_ms_mean = if rounds > 0 {
+            self.per_shard
+                .iter()
+                .map(|r| r.sched_overhead_ms_mean * r.rounds_executed as f64)
+                .sum::<f64>()
+                / rounds as f64
+        } else {
+            0.0
+        };
+        SimResult {
+            policy: format!("{}@{}x{}", self.system, self.shards,
+                            self.gpus_per_shard),
+            n_jobs: self.per_shard.iter().map(|r| r.n_jobs).sum(),
+            n_done,
+            n_violations: self.per_shard.iter().map(|r| r.n_violations).sum(),
+            cost_usd: self.per_shard.iter().map(|r| r.cost_usd).sum(),
+            gpu_seconds_billed: billed,
+            gpu_seconds_busy: self
+                .per_shard
+                .iter()
+                .map(|r| r.gpu_seconds_busy)
+                .sum(),
+            mean_utilization,
+            util_timeline: vec![],
+            job_latencies: self
+                .per_shard
+                .iter()
+                .flat_map(|r| r.job_latencies.iter().copied())
+                .collect(),
+            job_quality: self
+                .per_shard
+                .iter()
+                .flat_map(|r| r.job_quality.iter().copied())
+                .collect(),
+            mean_prompt_quality,
+            sched_overhead_ms_mean,
+            sched_overhead_ms_max: self
+                .per_shard
+                .iter()
+                .map(|r| r.sched_overhead_ms_max)
+                .fold(0.0, f64::max),
+            rounds_executed: rounds,
+            rounds_coalesced: self
+                .per_shard
+                .iter()
+                .map(|r| r.rounds_coalesced)
+                .sum(),
+            events_processed: self
+                .per_shard
+                .iter()
+                .map(|r| r.events_processed)
+                .sum(),
+            revocations: self.per_shard.iter().map(|r| r.revocations).sum(),
+            lost_iters: self.per_shard.iter().map(|r| r.lost_iters).sum(),
+            straggler_iters: self
+                .per_shard
+                .iter()
+                .map(|r| r.straggler_iters)
+                .sum(),
+            retries: self.per_shard.iter().map(|r| r.retries).sum(),
+            retry_iters: self.per_shard.iter().map(|r| r.retry_iters).sum(),
+            chaos_delay_s: self
+                .per_shard
+                .iter()
+                .map(|r| r.chaos_delay_s)
+                .sum(),
+            wall_s: self
+                .per_shard
+                .iter()
+                .map(|r| r.wall_s)
+                .fold(0.0, f64::max),
+        }
+    }
+}
+
+/// The sharded plane itself. Construct with a validated config, then
+/// [`ShardPlane::run`] any [`TraceSource`] through it.
+pub struct ShardPlane {
+    pub cfg: ShardPlaneConfig,
+}
+
+impl ShardPlane {
+    pub fn new(cfg: ShardPlaneConfig) -> Self {
+        assert!(cfg.shards >= 1, "shard plane needs at least one shard");
+        assert!(cfg.gpus_per_shard >= 1, "shards need GPUs");
+        assert!(cfg.gossip_period_s > 0.0 && cfg.gossip_period_s.is_finite(),
+                "gossip period must be positive");
+        for w in [cfg.w_coverage, cfg.w_queue, cfg.w_headroom] {
+            assert!(w.is_finite() && w >= 0.0,
+                    "router weights must be finite and non-negative");
+        }
+        ShardPlane { cfg }
+    }
+
+    /// Run the whole stream through the plane. Every arrival is placed
+    /// on exactly one shard; determinism is inherited from the cells
+    /// (seeded policies, seq-ordered events) plus the router and
+    /// schedule being pure functions.
+    pub fn run(&self, source: &mut dyn TraceSource) -> ShardPlaneResult {
+        let wall0 = Instant::now();
+        let n_shards = self.cfg.shards;
+        let n_total = source.total_jobs();
+        let horizon = source.last_arrival_s() + self.cfg.sim.horizon_s;
+        let sched = self.cfg.partition.as_ref().and_then(|p| {
+            PartitionSchedule::from_profile(p, self.cfg.seed, n_shards)
+        });
+        let gossip_on = self.cfg.gossip && n_shards >= 2;
+        let mut cells: Vec<ShardCell> = (0..n_shards)
+            .map(|s| {
+                let shard_seed =
+                    self.cfg.seed ^ (s as u64).wrapping_mul(PHI);
+                let mut policy = make_shard_policy(&self.cfg.system,
+                                                   shard_seed,
+                                                   self.cfg.gpus_per_shard);
+                if self.cfg.force_dense {
+                    policy = Box::new(DenseWrap(policy));
+                }
+                if gossip_on {
+                    policy.enable_gossip_log();
+                }
+                let tick = policy.tick_interval();
+                let mut sim = self.cfg.sim.clone();
+                sim.max_gpus = self.cfg.gpus_per_shard;
+                let core = StreamCore::new(sim, PerfModel::default(), tick,
+                                           n_total, horizon);
+                ShardCell { core, policy, routed: 0 }
+            })
+            .collect();
+
+        let mut violations: Vec<String> = vec![];
+        let mut failovers = 0u64;
+        let mut gossip_rounds = 0u64;
+        let mut gossip_items = 0u64;
+        let mut next_k = 1u64;
+        let mut injected = 0u64;
+
+        while let Some(spec) = source.next_job() {
+            // Barriers due at or before this arrival fire first, so the
+            // router sees post-exchange coverage.
+            while gossip_on
+                && next_k as f64 * self.cfg.gossip_period_s <= spec.submit_s
+            {
+                let t_k = next_k as f64 * self.cfg.gossip_period_s;
+                if let Some(items) =
+                    gossip_barrier(&mut cells, t_k, sched.as_ref())
+                {
+                    gossip_rounds += 1;
+                    gossip_items += items;
+                }
+                next_k += 1;
+            }
+            // Advance every cell to the arrival's global event key —
+            // seq i+1, the sequence the materialized loop pre-assigns
+            // to arrival i — so all cells observe a consistent "now".
+            let key = (spec.submit_s, injected + 1);
+            for cell in cells.iter_mut() {
+                cell.core.advance_until(cell.policy.as_mut(), &mut (),
+                                        Some(key));
+            }
+            let t = spec.submit_s;
+            let mut best: Option<(f64, usize)> = None;
+            let mut best_any: Option<(f64, usize)> = None;
+            for (s, cell) in cells.iter().enumerate() {
+                let cov = cell
+                    .policy
+                    .bank_coverage(spec.llm, spec.task_id)
+                    .unwrap_or(0.0);
+                let queued =
+                    (cell.core.admitted() - cell.core.done()) as f64
+                        / self.cfg.gpus_per_shard as f64;
+                let busy = cell.core.state().busy()
+                    / self.cfg.gpus_per_shard as f64;
+                let score = self.cfg.w_coverage * (1.0 - cov)
+                    + self.cfg.w_queue * queued
+                    + self.cfg.w_headroom * busy;
+                // Strict < keeps the earliest index on ties.
+                if best_any.is_none() || score < best_any.unwrap().0 {
+                    best_any = Some((score, s));
+                }
+                let severed =
+                    sched.as_ref().is_some_and(|p| p.severed(s, t));
+                if !severed && (best.is_none() || score < best.unwrap().0) {
+                    best = Some((score, s));
+                }
+            }
+            let target = match best {
+                Some((_, s)) => s,
+                None => {
+                    // Every shard severed: place best-effort rather than
+                    // drop the job.
+                    failovers += 1;
+                    best_any.expect("plane has at least one shard").1
+                }
+            };
+            if let Some(p) = sched.as_ref() {
+                if p.severed(target, t)
+                    && (0..n_shards)
+                        .any(|s| s != target && !p.severed(s, t))
+                {
+                    violations.push(format!(
+                        "job {injected} routed into severed shard {target} \
+                         at t={t:.3} with alternatives live"
+                    ));
+                }
+            }
+            let cell = &mut cells[target];
+            cell.core.inject_arrival(cell.policy.as_mut(), &mut (), spec);
+            cell.routed += 1;
+            injected += 1;
+        }
+
+        // Stream exhausted: each cell now ends once its admitted jobs
+        // are done. Keep gossiping until everyone is finished or the
+        // horizon passes — queued jobs still launch and read banks.
+        for cell in cells.iter_mut() {
+            cell.core.exhaust();
+        }
+        while gossip_on {
+            let t_k = next_k as f64 * self.cfg.gossip_period_s;
+            if t_k > horizon || cells.iter().all(|c| c.core.is_finished()) {
+                break;
+            }
+            if let Some(items) =
+                gossip_barrier(&mut cells, t_k, sched.as_ref())
+            {
+                gossip_rounds += 1;
+                gossip_items += items;
+            }
+            next_k += 1;
+        }
+        for cell in cells.iter_mut() {
+            cell.core.advance_until(cell.policy.as_mut(), &mut (), None);
+        }
+
+        // Conservation audit: router placements and cell admissions must
+        // both account for every streamed job exactly once.
+        let admitted: usize = cells.iter().map(|c| c.core.admitted()).sum();
+        if admitted != n_total {
+            violations.push(format!(
+                "plane admitted {admitted} of {n_total} streamed jobs"
+            ));
+        }
+        for (s, cell) in cells.iter().enumerate() {
+            if cell.core.admitted() != cell.routed {
+                violations.push(format!(
+                    "shard {s}: router placed {} jobs but the cell \
+                     admitted {}",
+                    cell.routed,
+                    cell.core.admitted()
+                ));
+            }
+        }
+
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let routed: Vec<usize> = cells.iter().map(|c| c.routed).collect();
+        let per_shard: Vec<SimResult> = cells
+            .into_iter()
+            .map(|c| c.core.finalize(c.policy.as_ref(), &mut (), wall_s))
+            .collect();
+        ShardPlaneResult {
+            system: self.cfg.system.clone(),
+            shards: n_shards,
+            gpus_per_shard: self.cfg.gpus_per_shard,
+            per_shard,
+            routed,
+            gossip_rounds,
+            gossip_items,
+            failovers,
+            violations,
+        }
+    }
+}
+
+/// Advance every cell to the barrier cut `(t_k, 0)` and exchange
+/// first-hand tuned prompts among the shards the partition schedule
+/// leaves connected at `t_k`. Returns the number of items drained, or
+/// None when fewer than two shards were reachable (nothing is drained
+/// then — severed logs keep accumulating and deliver at heal).
+fn gossip_barrier(cells: &mut [ShardCell], t_k: f64,
+                  sched: Option<&PartitionSchedule>) -> Option<u64> {
+    for cell in cells.iter_mut() {
+        cell.core.advance_until(cell.policy.as_mut(), &mut (),
+                                Some((t_k, 0)));
+    }
+    let alive: Vec<usize> = (0..cells.len())
+        .filter(|&s| !sched.is_some_and(|p| p.severed(s, t_k)))
+        .collect();
+    if alive.len() < 2 {
+        return None;
+    }
+    let mut pools: Vec<(usize, Vec<TunedPrompt>)> =
+        Vec::with_capacity(alive.len());
+    for &s in &alive {
+        let mut out = vec![];
+        cells[s].policy.drain_tuned(&mut out);
+        pools.push((s, out));
+    }
+    let drained: u64 = pools.iter().map(|(_, p)| p.len() as u64).sum();
+    for &r in &alive {
+        for (origin, pool) in &pools {
+            if *origin != r && !pool.is_empty() {
+                cells[r].policy.absorb_tuned(pool);
+            }
+        }
+    }
+    Some(drained)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Simulator;
+    use crate::trace::{Load, ScaleSource, ScaleSourceConfig, TraceConfig,
+                       TraceGenerator, VecSource};
+
+    fn small_trace(seed: u64) -> Vec<crate::workload::JobSpec> {
+        let mut g = TraceGenerator::new(
+            TraceConfig { seed, ..Default::default() },
+            PerfModel::default(),
+        );
+        g.generate_main(Load::Low)
+    }
+
+    #[test]
+    fn partition_schedule_is_deterministic_and_windowed() {
+        let prof = ChaosProfile::partition();
+        let a = PartitionSchedule::from_profile(&prof, 9, 4).unwrap();
+        let b = PartitionSchedule::from_profile(&prof, 9, 4).unwrap();
+        for k in 0..32 {
+            assert!(a.victim(k) < 4);
+            assert_eq!(a.victim(k), b.victim(k), "schedule not a pure fn");
+        }
+        // Victims move with the seed (32 draws over 4 shards).
+        let c = PartitionSchedule::from_profile(&prof, 10, 4).unwrap();
+        assert!((0..32).any(|k| a.victim(k) != c.victim(k)));
+        // Window semantics: severed in [k·period, k·period + window).
+        let k = 3u64;
+        let v = a.victim(k);
+        let start = k as f64 * 600.0;
+        assert!(a.severed(v, start));
+        assert!(a.severed(v, start + 119.9));
+        assert!(!a.severed(v, start + 120.0));
+        for s in 0..4 {
+            if s != v {
+                assert!(!a.severed(s, start + 10.0));
+            }
+        }
+        // Profiles without partition knobs yield no schedule.
+        assert!(PartitionSchedule::from_profile(
+            &ChaosProfile::latency_tail(), 9, 4)
+            .is_none());
+    }
+
+    #[test]
+    fn one_shard_plane_matches_unsharded_simulator() {
+        let jobs = small_trace(3);
+        let mut cfg = ShardPlaneConfig::new("prompttuner", 1, 32, 3);
+        cfg.gossip = false;
+        let plane = ShardPlane::new(cfg);
+        let pr = plane.run(&mut VecSource::new(jobs.clone()));
+        assert!(pr.violations.is_empty(), "{:?}", pr.violations);
+
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 32, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = make_shard_policy("prompttuner", 3, 32);
+        let reference = sim.run(policy.as_mut(), jobs);
+
+        let s = &pr.per_shard[0];
+        assert_eq!(s.n_jobs, reference.n_jobs);
+        assert_eq!(s.n_done, reference.n_done);
+        assert_eq!(s.n_violations, reference.n_violations);
+        assert_eq!(s.rounds_executed, reference.rounds_executed);
+        assert_eq!(s.events_processed, reference.events_processed);
+        assert_eq!(s.cost_usd.to_bits(), reference.cost_usd.to_bits());
+        assert_eq!(s.mean_prompt_quality.to_bits(),
+                   reference.mean_prompt_quality.to_bits());
+        assert_eq!(s.job_quality.len(), reference.job_quality.len());
+        for (x, y) in s.job_quality.iter().zip(&reference.job_quality) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn plane_conserves_jobs_and_replays_deterministically() {
+        let src = ScaleSourceConfig {
+            seed: 21,
+            minutes: 20,
+            jobs_per_minute: 6.0,
+            n_tasks: 16,
+            task_base: crate::scenario::NOVEL_TASK_BASE,
+            ..Default::default()
+        };
+        let mut pc = ShardPlaneConfig::new("prompttuner", 3, 16, 21);
+        pc.gossip_period_s = 300.0;
+        let plane = ShardPlane::new(pc.clone());
+        let r1 = plane.run(&mut ScaleSource::new(src.clone()));
+        let total = ScaleSource::new(src.clone()).total_jobs();
+        assert_eq!(r1.routed.iter().sum::<usize>(), total);
+        assert!(r1.violations.is_empty(), "{:?}", r1.violations);
+        assert!(r1.routed.iter().all(|&n| n > 0),
+                "router starved a shard: {:?}", r1.routed);
+
+        let r2 = ShardPlane::new(pc).run(&mut ScaleSource::new(src));
+        assert_eq!(r1.routed, r2.routed);
+        let (m1, m2) = (r1.merged(), r2.merged());
+        assert_eq!(m1.n_jobs, total);
+        assert_eq!(m1.n_done, m2.n_done);
+        assert_eq!(m1.cost_usd.to_bits(), m2.cost_usd.to_bits());
+        assert_eq!(m1.policy, "prompttuner@3x16");
+    }
+
+    #[test]
+    fn gossip_exchanges_prompts_and_lifts_quality() {
+        let src = ScaleSourceConfig {
+            seed: 33,
+            minutes: 30,
+            jobs_per_minute: 8.0,
+            n_tasks: 8,
+            task_base: crate::scenario::NOVEL_TASK_BASE,
+            ..Default::default()
+        };
+        let mut on = ShardPlaneConfig::new("prompttuner", 2, 16, 33);
+        on.gossip_period_s = 120.0;
+        let mut off = on.clone();
+        off.gossip = false;
+        let r_on = ShardPlane::new(on).run(&mut ScaleSource::new(src.clone()));
+        let r_off = ShardPlane::new(off).run(&mut ScaleSource::new(src));
+        assert!(r_on.gossip_rounds > 0);
+        assert!(r_on.gossip_items > 0, "no prompts crossed shards");
+        assert_eq!(r_off.gossip_items, 0);
+        assert!(r_on.violations.is_empty() && r_off.violations.is_empty());
+        // Shared tuned prompts can only help cold novel tasks.
+        assert!(r_on.merged().mean_prompt_quality + 1e-12
+                    >= r_off.merged().mean_prompt_quality,
+                "gossip lowered quality: {} < {}",
+                r_on.merged().mean_prompt_quality,
+                r_off.merged().mean_prompt_quality);
+    }
+
+    #[test]
+    fn partition_windows_divert_routing_without_losing_jobs() {
+        let src = ScaleSourceConfig {
+            seed: 44,
+            minutes: 30,
+            jobs_per_minute: 6.0,
+            ..Default::default()
+        };
+        let mut pc = ShardPlaneConfig::new("infless", 3, 16, 44);
+        pc.gossip_period_s = 300.0;
+        pc.partition = Some(ChaosProfile::partition());
+        let r1 = ShardPlane::new(pc.clone())
+            .run(&mut ScaleSource::new(src.clone()));
+        assert!(r1.violations.is_empty(), "{:?}", r1.violations);
+        assert_eq!(r1.failovers, 0,
+                   "3-shard plane never loses every alternative");
+        let total = ScaleSource::new(src.clone()).total_jobs();
+        assert_eq!(r1.routed.iter().sum::<usize>(), total);
+
+        let r2 = ShardPlane::new(pc).run(&mut ScaleSource::new(src));
+        assert_eq!(r1.routed, r2.routed, "partitioned routing not replayable");
+        assert_eq!(r1.merged().cost_usd.to_bits(),
+                   r2.merged().cost_usd.to_bits());
+    }
+}

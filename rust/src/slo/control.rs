@@ -6,9 +6,11 @@
 //! invariant the oracle audits (busy ≤ billable ≤ budget) is preserved by
 //! construction.
 
-use crate::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent, Wake};
+use crate::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
+                     TunedPrompt, Wake};
 use crate::slo::monitor::SloMonitor;
 use crate::slo::SloConfig;
+use crate::workload::Llm;
 
 /// Admission verdict for one arrival.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -380,6 +382,24 @@ impl<P: Policy> Policy for Governed<P> {
     fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
         self.capacity_gpus = gpus.min(self.cfg.ceiling_gpus);
         self.inner.set_capacity(st, self.capacity_gpus);
+    }
+
+    // Gossip hooks: pure pass-throughs — the governor has no bank of its
+    // own, so the wrapped policy's answers are authoritative.
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        self.inner.bank_coverage(llm, task_id)
+    }
+
+    fn enable_gossip_log(&mut self) {
+        self.inner.enable_gossip_log();
+    }
+
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        self.inner.drain_tuned(out);
+    }
+
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        self.inner.absorb_tuned(items);
     }
 }
 

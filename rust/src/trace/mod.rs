@@ -3,9 +3,13 @@
 //! (stand-in for Table 6), and a plain-text trace (de)serializer.
 
 pub mod generator;
+pub mod source;
 pub mod tasks;
 
-pub use generator::{DurationDist, Load, TraceConfig, TraceGenerator};
+pub use generator::{arrivals_per_minute, DurationDist, Load, TraceConfig,
+                    TraceGenerator};
+pub use source::{ArrivalHistogram, ReplaySource, ScaleSource,
+                 ScaleSourceConfig, TraceSource, VecSource};
 
 use std::path::Path;
 

@@ -1,0 +1,645 @@
+//! Streaming trace sources: arrivals yielded incrementally so resident
+//! trace memory is O(active jobs), not O(trace length).
+//!
+//! The classic path materializes a full `Vec<JobSpec>` before the run —
+//! fine for the paper's 20-minute windows, fatal for the hyperscale
+//! sweep (multi-day traces, ~1M jobs). A [`TraceSource`] instead yields
+//! jobs one at a time in submission order; the simulator's `StreamCore`
+//! injects each arrival when simulated time reaches it, so the only
+//! per-job state resident before a job's submit time is the source's
+//! own generation buffer (one minute's batch for [`ScaleSource`], one
+//! 52-byte record for [`ReplaySource`]).
+//!
+//! Contract (load-bearing for bit-identity with the materialized path):
+//!
+//! * `next_job` yields jobs in non-decreasing `submit_s` order;
+//! * [`TraceSource::total_jobs`] and [`TraceSource::last_arrival_s`] are
+//!   known up front without materializing (the run loop pre-computes its
+//!   event-sequence layout and horizon from them, exactly as
+//!   `Simulator::run` derives them from the full slice);
+//! * `last_arrival_s` is `0.0` for an empty source, the maximum
+//!   `submit_s` otherwise — the same `fold(0.0, max)` the materialized
+//!   run loop computes.
+//!
+//! Job ids in yielded specs are advisory: the simulator re-assigns each
+//! injected job the next dense index, which for a single-cluster run of
+//! a finalized trace reproduces the ids the spec already carries.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::generator::DurationDist;
+use crate::util::rng::Rng;
+use crate::workload::{ita_multiplier, JobSpec, Llm, PerfModel,
+                      MEDIAN_USER_QUALITY};
+
+/// A stream of job arrivals in submission order. See the module docs for
+/// the contract.
+pub trait TraceSource {
+    /// Total number of jobs this source will yield (known up front).
+    fn total_jobs(&self) -> usize;
+    /// Maximum `submit_s` over the whole trace; `0.0` when empty.
+    fn last_arrival_s(&self) -> f64;
+    /// The next job in non-decreasing `submit_s` order.
+    fn next_job(&mut self) -> Option<JobSpec>;
+}
+
+// --------------------------------------------------------- materialized
+
+/// Adapter: a fully materialized trace as a [`TraceSource`]. Exists so
+/// every classic `Vec<JobSpec>` path (scenario catalogue, bench cells)
+/// can drive the streaming run loop — and so the streaming-vs-
+/// materialized equivalence property has a trivial reference.
+pub struct VecSource {
+    jobs: std::vec::IntoIter<JobSpec>,
+    total: usize,
+    last_arrival: f64,
+}
+
+impl VecSource {
+    /// Wrap a finalized trace (sorted by `submit_s`, dense ids — what
+    /// `TraceGenerator::finalize` produces).
+    pub fn new(jobs: Vec<JobSpec>) -> Self {
+        debug_assert!(
+            jobs.windows(2).all(|w| w[0].submit_s <= w[1].submit_s),
+            "VecSource requires a submit-sorted trace"
+        );
+        let total = jobs.len();
+        // Same floor-at-zero fold the materialized run loop uses.
+        let last_arrival =
+            jobs.iter().map(|j| j.submit_s).fold(0.0f64, f64::max);
+        VecSource { jobs: jobs.into_iter(), total, last_arrival }
+    }
+}
+
+impl TraceSource for VecSource {
+    fn total_jobs(&self) -> usize {
+        self.total
+    }
+    fn last_arrival_s(&self) -> f64 {
+        self.last_arrival
+    }
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.jobs.next()
+    }
+}
+
+// --------------------------------------------------------------- replay
+
+/// Size of one on-disk job record in the `PTR1` binary trace format
+/// (three `u32` fields + five `f64` fields, little-endian).
+const REPLAY_RECORD_BYTES: usize = 12 + 40;
+const REPLAY_HEADER_BYTES: usize = 12;
+
+/// Streaming reader for `PTR1` binary traces (`scenario::replay`): one
+/// record is decoded per `next_job` call, so no `Vec<JobSpec>` ever
+/// exists. The whole byte buffer is held (unavoidable for a file), but
+/// that is 52 bytes/job against ~200 for a decoded spec plus job state.
+///
+/// Unlike `scenario::replay::from_bytes` — which sorts defensively —
+/// streaming cannot reorder, so `open` validates up front (one O(jobs)
+/// scan over the raw bytes, no allocation) that records are already in
+/// non-decreasing submit order, which is what `replay::save` writes for
+/// every finalized trace.
+pub struct ReplaySource {
+    bytes: Vec<u8>,
+    pos: usize,
+    next_id: usize,
+    total: usize,
+    last_arrival: f64,
+}
+
+fn u32_at(bytes: &[u8], pos: usize) -> u32 {
+    u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap())
+}
+
+fn f64_at(bytes: &[u8], pos: usize) -> f64 {
+    f64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap())
+}
+
+impl ReplaySource {
+    /// Open a `PTR1` byte buffer, validating the header, the exact byte
+    /// length, every record's physical bounds, and submit-order — after
+    /// which `next_job` decodes infallibly.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() < REPLAY_HEADER_BYTES {
+            bail!("binary trace: truncated header ({} bytes)", bytes.len());
+        }
+        let magic = u32_at(&bytes, 0);
+        if magic != crate::scenario::replay::MAGIC {
+            bail!("binary trace: bad magic {magic:#010x}");
+        }
+        let version = u32_at(&bytes, 4);
+        if version != crate::scenario::replay::VERSION {
+            bail!("binary trace: unsupported version {version}");
+        }
+        let total = u32_at(&bytes, 8) as usize;
+        let want = REPLAY_HEADER_BYTES + total * REPLAY_RECORD_BYTES;
+        if bytes.len() != want {
+            bail!("binary trace: {} bytes for {total} jobs (want {want})",
+                  bytes.len());
+        }
+        // One flat validation scan over the raw records.
+        let mut last_arrival = 0.0f64;
+        let mut prev_submit = f64::NEG_INFINITY;
+        for i in 0..total {
+            let p = REPLAY_HEADER_BYTES + i * REPLAY_RECORD_BYTES;
+            let llm_idx = u32_at(&bytes, p) as usize;
+            if llm_idx >= Llm::ALL.len() {
+                bail!("job {i}: bad LLM index {llm_idx}");
+            }
+            let traced_gpus = u32_at(&bytes, p + 8);
+            if traced_gpus == 0 {
+                bail!("job {i}: zero traced GPUs");
+            }
+            let submit_s = f64_at(&bytes, p + 12);
+            let duration_s = f64_at(&bytes, p + 20);
+            let base_iters = f64_at(&bytes, p + 28);
+            let quality = f64_at(&bytes, p + 36);
+            let slo_s = f64_at(&bytes, p + 44);
+            if !submit_s.is_finite() || submit_s < 0.0 {
+                bail!("job {i}: bad submit time {submit_s}");
+            }
+            if !(duration_s.is_finite() && duration_s > 0.0) {
+                bail!("job {i}: bad duration {duration_s}");
+            }
+            if !(base_iters.is_finite() && base_iters > 0.0) {
+                bail!("job {i}: bad base iterations {base_iters}");
+            }
+            if !(0.0..=1.0).contains(&quality) {
+                bail!("job {i}: prompt quality {quality} outside [0, 1]");
+            }
+            if !(slo_s.is_finite() && slo_s > 0.0) {
+                bail!("job {i}: bad SLO {slo_s}");
+            }
+            if submit_s < prev_submit {
+                bail!("job {i}: submit {submit_s} before predecessor \
+                       {prev_submit} — streaming replay needs a \
+                       submit-sorted trace (replay::save writes one)");
+            }
+            prev_submit = submit_s;
+            last_arrival = last_arrival.max(submit_s);
+        }
+        Ok(ReplaySource {
+            bytes,
+            pos: REPLAY_HEADER_BYTES,
+            next_id: 0,
+            total,
+            last_arrival,
+        })
+    }
+
+    /// Open a binary trace file written by `scenario::replay::save`.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_bytes(bytes)
+            .with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+}
+
+impl TraceSource for ReplaySource {
+    fn total_jobs(&self) -> usize {
+        self.total
+    }
+    fn last_arrival_s(&self) -> f64 {
+        self.last_arrival
+    }
+    fn next_job(&mut self) -> Option<JobSpec> {
+        if self.next_id == self.total {
+            return None;
+        }
+        let p = self.pos;
+        let b = &self.bytes;
+        let job = JobSpec {
+            id: self.next_id,
+            llm: Llm::ALL[u32_at(b, p) as usize],
+            task_id: u32_at(b, p + 4) as usize,
+            traced_gpus: u32_at(b, p + 8) as usize,
+            submit_s: f64_at(b, p + 12),
+            duration_s: f64_at(b, p + 20),
+            base_iters: f64_at(b, p + 28),
+            user_prompt_quality: f64_at(b, p + 36),
+            slo_s: f64_at(b, p + 44),
+        };
+        self.pos += REPLAY_RECORD_BYTES;
+        self.next_id += 1;
+        Some(job)
+    }
+}
+
+// ---------------------------------------------------------------- scale
+
+const PHI: u64 = 0x9E37_79B9_7F4A_7C15;
+const SCALE_COUNT_STREAM: u64 = 0x5CA1_E000_C000;
+const SCALE_JOB_STREAM: u64 = 0x5CA1_E000_0B00;
+
+/// Configuration of the hyperscale streaming generator.
+#[derive(Clone, Debug)]
+pub struct ScaleSourceConfig {
+    pub seed: u64,
+    /// Trace span in minutes (a multi-day trace is just a big number —
+    /// memory stays one minute's batch regardless).
+    pub minutes: usize,
+    /// Mean arrivals per minute across the whole span.
+    pub jobs_per_minute: f64,
+    /// SLO emergence factor S (same meaning as `TraceConfig`).
+    pub slo_emergence: f64,
+    /// Task-universe size.
+    pub n_tasks: usize,
+    /// First task id. `0` draws from the seeded-corpus range; the
+    /// hyperscale sweep uses `scenario::NOVEL_TASK_BASE` so every task
+    /// starts cold and the bank/gossip flywheel carries the signal.
+    pub task_base: usize,
+    /// Fraction of spike minutes and their traffic multiplier (Fig 2b).
+    pub spike_frac: f64,
+    pub spike_mult: f64,
+    pub duration: DurationDist,
+}
+
+impl Default for ScaleSourceConfig {
+    fn default() -> Self {
+        ScaleSourceConfig {
+            seed: 42,
+            minutes: 60,
+            jobs_per_minute: 8.0,
+            slo_emergence: 1.0,
+            n_tasks: 64,
+            task_base: 0,
+            spike_frac: 0.10,
+            spike_mult: 8.0,
+            duration: DurationDist::PAPER,
+        }
+    }
+}
+
+/// Streaming generator for hyperscale traces: arrivals are produced one
+/// minute-batch at a time from per-minute hash-keyed draws, so a
+/// multi-day million-job trace is never resident — only the current
+/// minute's batch is. Both the per-minute arrival *count* and the job
+/// *contents* are pure functions of `(seed, minute)`, drawn from two
+/// independent keyed streams, which buys two properties:
+///
+/// * `total_jobs` is an O(minutes) pre-pass over the count stream alone
+///   (no job sampling), satisfying the [`TraceSource`] contract;
+/// * regeneration is trivially bit-deterministic — `materialize` and a
+///   fresh streaming pass agree exactly (property-enforced).
+pub struct ScaleSource {
+    cfg: ScaleSourceConfig,
+    total: usize,
+    last_arrival: f64,
+    perf: PerfModel,
+    minute: usize,
+    buf: Vec<JobSpec>,
+    buf_pos: usize,
+    next_id: usize,
+}
+
+impl ScaleSource {
+    pub fn new(cfg: ScaleSourceConfig) -> Self {
+        let perf = PerfModel::default();
+        let mut src = ScaleSource {
+            cfg,
+            total: 0,
+            last_arrival: 0.0,
+            perf,
+            minute: 0,
+            buf: vec![],
+            buf_pos: 0,
+            next_id: 0,
+        };
+        // O(minutes) pre-pass: totals from the count stream, the last
+        // arrival from the final non-empty minute's batch.
+        let mut total = 0usize;
+        let mut last_nonempty = None;
+        for m in 0..src.cfg.minutes {
+            let c = src.minute_count(m);
+            total += c;
+            if c > 0 {
+                last_nonempty = Some(m);
+            }
+        }
+        src.total = total;
+        if let Some(m) = last_nonempty {
+            let mut batch = vec![];
+            src.fill_minute(m, &mut batch);
+            src.last_arrival = batch
+                .last()
+                .map(|j| j.submit_s)
+                .expect("non-empty minute produced an empty batch");
+        }
+        src
+    }
+
+    pub fn cfg(&self) -> &ScaleSourceConfig {
+        &self.cfg
+    }
+
+    /// Arrival count of minute `m`: Bernoulli-rounded rate from the
+    /// keyed count stream (mean `jobs_per_minute`, spike minutes ~8x).
+    fn minute_count(&self, m: usize) -> usize {
+        let mut rng = Rng::new(
+            self.cfg.seed
+                ^ SCALE_COUNT_STREAM
+                ^ (m as u64 + 1).wrapping_mul(PHI),
+        );
+        let spike = rng.f64() < self.cfg.spike_frac;
+        let base = 0.3 + rng.f64();
+        let w = if spike { self.cfg.spike_mult * base } else { base };
+        // E[base] = 0.8, so this normalization keeps E[count] at exactly
+        // jobs_per_minute whatever the spike parameters are.
+        let mean_w = 0.8
+            * ((1.0 - self.cfg.spike_frac)
+                + self.cfg.spike_frac * self.cfg.spike_mult);
+        let rate = self.cfg.jobs_per_minute * w / mean_w;
+        let mut count = rate.floor();
+        if rng.f64() < rate - count {
+            count += 1.0;
+        }
+        count as usize
+    }
+
+    /// Generate minute `m`'s batch, submit-sorted, ids unassigned (the
+    /// streaming cursor assigns dense global ids on yield).
+    fn fill_minute(&self, m: usize, out: &mut Vec<JobSpec>) {
+        out.clear();
+        let count = self.minute_count(m);
+        let mut rng = Rng::new(
+            self.cfg.seed
+                ^ SCALE_JOB_STREAM
+                ^ (m as u64 + 1).wrapping_mul(PHI),
+        );
+        for _ in 0..count {
+            let llm = Llm::MAIN[rng.below(Llm::MAIN.len())];
+            let submit_s = m as f64 * 60.0 + rng.f64() * 60.0;
+            out.push(self.sample_job(llm, submit_s, &mut rng));
+        }
+        out.sort_by(|a, b| a.submit_s.partial_cmp(&b.submit_s).unwrap());
+    }
+
+    /// Same job model as `TraceGenerator::sample_job`, fed from the
+    /// minute's keyed stream.
+    fn sample_job(&self, llm: Llm, submit_s: f64, rng: &mut Rng) -> JobSpec {
+        let duration_s = self.cfg.duration.sample(rng);
+        let per = llm.gpus_per_replica();
+        let replicas = *[1usize, 1, 1, 2, 2, 4].get(rng.below(6)).unwrap_or(&1);
+        let traced_gpus = per * replicas;
+        let iters_med = duration_s / self.perf.iter_time(llm, traced_gpus);
+        let base_iters = iters_med / ita_multiplier(MEDIAN_USER_QUALITY);
+        let user_prompt_quality = rng.beta(2.2, 1.8).clamp(0.02, 0.98);
+        let slo_s =
+            duration_s * self.cfg.slo_emergence + self.perf.cold_start(llm);
+        JobSpec {
+            id: 0, // assigned at yield
+            llm,
+            task_id: self.cfg.task_base + rng.below(self.cfg.n_tasks),
+            submit_s,
+            duration_s,
+            traced_gpus,
+            base_iters,
+            user_prompt_quality,
+            slo_s,
+        }
+    }
+
+    /// Materialize the whole stream (small configs / equivalence tests
+    /// only — this is exactly what streaming exists to avoid at scale).
+    pub fn materialize(&self) -> Vec<JobSpec> {
+        let mut fresh = ScaleSource::new(self.cfg.clone());
+        let mut jobs = Vec::with_capacity(fresh.total);
+        while let Some(j) = fresh.next_job() {
+            jobs.push(j);
+        }
+        jobs
+    }
+}
+
+impl TraceSource for ScaleSource {
+    fn total_jobs(&self) -> usize {
+        self.total
+    }
+    fn last_arrival_s(&self) -> f64 {
+        self.last_arrival
+    }
+    fn next_job(&mut self) -> Option<JobSpec> {
+        loop {
+            if self.buf_pos < self.buf.len() {
+                let mut job = self.buf[self.buf_pos].clone();
+                self.buf_pos += 1;
+                job.id = self.next_id;
+                self.next_id += 1;
+                return Some(job);
+            }
+            if self.minute == self.cfg.minutes {
+                return None;
+            }
+            let m = self.minute;
+            self.minute += 1;
+            let mut buf = std::mem::take(&mut self.buf);
+            self.fill_minute(m, &mut buf);
+            self.buf = buf;
+            self.buf_pos = 0;
+        }
+    }
+}
+
+// ------------------------------------------------------------ histogram
+
+/// Streaming counterpart of [`crate::trace::arrivals_per_minute`]: the
+/// same per-minute binning fed one arrival at a time, so the hyperscale
+/// sweep's traffic telemetry never needs the full job slice either.
+#[derive(Clone, Debug)]
+pub struct ArrivalHistogram {
+    counts: Vec<usize>,
+}
+
+impl ArrivalHistogram {
+    pub fn new(window_s: f64) -> Self {
+        let minutes = (window_s / 60.0).ceil() as usize;
+        ArrivalHistogram { counts: vec![0; minutes] }
+    }
+
+    /// Record one arrival (same clamp-into-last-bin rule as the batch
+    /// helper).
+    pub fn record(&mut self, submit_s: f64) {
+        if self.counts.is_empty() {
+            return;
+        }
+        let m = ((submit_s / 60.0) as usize).min(self.counts.len() - 1);
+        self.counts[m] += 1;
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::replay;
+    use crate::trace::generator::{arrivals_per_minute, Load, TraceConfig,
+                                  TraceGenerator};
+
+    fn trace(seed: u64) -> Vec<JobSpec> {
+        let mut g = TraceGenerator::new(
+            TraceConfig { seed, ..Default::default() },
+            PerfModel::default(),
+        );
+        g.generate_main(Load::Low)
+    }
+
+    fn assert_specs_equal(a: &JobSpec, b: &JobSpec) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.llm, b.llm);
+        assert_eq!(a.task_id, b.task_id);
+        assert_eq!(a.traced_gpus, b.traced_gpus);
+        assert_eq!(a.submit_s.to_bits(), b.submit_s.to_bits());
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        assert_eq!(a.base_iters.to_bits(), b.base_iters.to_bits());
+        assert_eq!(
+            a.user_prompt_quality.to_bits(),
+            b.user_prompt_quality.to_bits()
+        );
+        assert_eq!(a.slo_s.to_bits(), b.slo_s.to_bits());
+    }
+
+    #[test]
+    fn vec_source_yields_the_trace_verbatim() {
+        let jobs = trace(1);
+        let expect_last =
+            jobs.iter().map(|j| j.submit_s).fold(0.0f64, f64::max);
+        let mut src = VecSource::new(jobs.clone());
+        assert_eq!(src.total_jobs(), jobs.len());
+        assert_eq!(src.last_arrival_s().to_bits(), expect_last.to_bits());
+        for j in &jobs {
+            assert_specs_equal(j, &src.next_job().unwrap());
+        }
+        assert!(src.next_job().is_none());
+        assert_eq!(VecSource::new(vec![]).last_arrival_s(), 0.0);
+    }
+
+    #[test]
+    fn replay_source_matches_batch_loader_bitwise() {
+        let jobs = trace(2);
+        let bytes = replay::to_bytes(&jobs);
+        let batch = replay::from_bytes(&bytes).unwrap();
+        let mut src = ReplaySource::from_bytes(bytes).unwrap();
+        assert_eq!(src.total_jobs(), batch.len());
+        let expect_last =
+            batch.iter().map(|j| j.submit_s).fold(0.0f64, f64::max);
+        assert_eq!(src.last_arrival_s().to_bits(), expect_last.to_bits());
+        for j in &batch {
+            assert_specs_equal(j, &src.next_job().unwrap());
+        }
+        assert!(src.next_job().is_none());
+    }
+
+    #[test]
+    fn replay_source_rejects_malformed_inputs() {
+        assert!(ReplaySource::from_bytes(vec![]).is_err());
+        assert!(ReplaySource::from_bytes(vec![0u8; 12]).is_err());
+        let jobs = trace(3);
+        let bytes = replay::to_bytes(&jobs);
+        // truncated record
+        assert!(
+            ReplaySource::from_bytes(bytes[..bytes.len() - 4].to_vec())
+                .is_err()
+        );
+        // unsorted file: streaming cannot reorder, so it must refuse
+        let mut rev = jobs.clone();
+        rev.reverse();
+        assert!(ReplaySource::from_bytes(replay::to_bytes(&rev)).is_err());
+        // non-physical value
+        let mut bad = jobs;
+        bad[2].traced_gpus = 0;
+        assert!(ReplaySource::from_bytes(replay::to_bytes(&bad)).is_err());
+    }
+
+    #[test]
+    fn scale_source_stream_matches_materialize_bitwise() {
+        let cfg = ScaleSourceConfig {
+            seed: 7,
+            minutes: 30,
+            jobs_per_minute: 5.0,
+            ..Default::default()
+        };
+        let mut src = ScaleSource::new(cfg.clone());
+        let jobs = src.materialize();
+        assert_eq!(jobs.len(), src.total_jobs());
+        let mut prev = 0.0f64;
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(j.submit_s >= prev, "unsorted at {i}");
+            prev = j.submit_s;
+            assert_specs_equal(j, &src.next_job().unwrap());
+        }
+        assert!(src.next_job().is_none());
+        let expect_last =
+            jobs.iter().map(|j| j.submit_s).fold(0.0f64, f64::max);
+        assert_eq!(src.last_arrival_s().to_bits(), expect_last.to_bits());
+    }
+
+    #[test]
+    fn scale_source_rate_and_determinism() {
+        let cfg = ScaleSourceConfig {
+            seed: 11,
+            minutes: 240,
+            jobs_per_minute: 10.0,
+            ..Default::default()
+        };
+        let a = ScaleSource::new(cfg.clone());
+        let b = ScaleSource::new(cfg.clone());
+        assert_eq!(a.total_jobs(), b.total_jobs());
+        assert_eq!(a.last_arrival_s().to_bits(), b.last_arrival_s().to_bits());
+        // mean rate lands near the configured one (law of large numbers
+        // over 240 keyed minutes; generous band for spike variance)
+        let mean = a.total_jobs() as f64 / cfg.minutes as f64;
+        assert!((5.0..20.0).contains(&mean), "mean {mean}");
+        // a different seed moves the stream
+        let c = ScaleSource::new(ScaleSourceConfig { seed: 12, ..cfg });
+        assert!(
+            c.total_jobs() != a.total_jobs()
+                || c.last_arrival_s() != a.last_arrival_s()
+        );
+    }
+
+    #[test]
+    fn scale_source_task_base_offsets_tasks() {
+        let cfg = ScaleSourceConfig {
+            seed: 5,
+            minutes: 10,
+            jobs_per_minute: 6.0,
+            task_base: 4096,
+            n_tasks: 32,
+            ..Default::default()
+        };
+        let jobs = ScaleSource::new(cfg).materialize();
+        assert!(!jobs.is_empty());
+        for j in &jobs {
+            assert!((4096..4128).contains(&j.task_id), "task {}", j.task_id);
+        }
+    }
+
+    #[test]
+    fn arrival_histogram_matches_batch_helper() {
+        let jobs = trace(4);
+        let window = 1200.0;
+        let batch = arrivals_per_minute(&jobs, window);
+        let mut h = ArrivalHistogram::new(window);
+        for j in &jobs {
+            h.record(j.submit_s);
+        }
+        assert_eq!(h.counts(), &batch[..]);
+        assert_eq!(h.total(), jobs.len());
+        // out-of-window arrivals clamp into the last bin, same as batch
+        let mut h2 = ArrivalHistogram::new(120.0);
+        h2.record(10_000.0);
+        assert_eq!(h2.counts(), &[0, 1]);
+    }
+}

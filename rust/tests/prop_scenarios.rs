@@ -208,6 +208,18 @@ impl Policy for DenseTick {
     fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
         self.0.set_capacity(st, gpus)
     }
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        self.0.bank_coverage(llm, task_id)
+    }
+    fn enable_gossip_log(&mut self) {
+        self.0.enable_gossip_log()
+    }
+    fn drain_tuned(&mut self, out: &mut Vec<prompttuner::cluster::TunedPrompt>) {
+        self.0.drain_tuned(out)
+    }
+    fn absorb_tuned(&mut self, items: &[prompttuner::cluster::TunedPrompt]) {
+        self.0.absorb_tuned(items)
+    }
     // next_timed_action: default Wake::Dense — never coalesce.
 }
 

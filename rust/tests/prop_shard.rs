@@ -1,0 +1,325 @@
+//! Conformance suite for the shard plane and the streaming trace path.
+//!
+//! Two bit-identity oracles anchor the new subsystem to the proven one,
+//! the same playbook as the dense-vs-coalesced rotation:
+//!
+//! * **streaming = materialized** — `Simulator::run_source` (the
+//!   `StreamCore` injection path) must be bit-identical to
+//!   `Simulator::run` (the materialized heap path) for every scenario
+//!   family, every system, and the hyperscale/replay sources, with the
+//!   strict in-loop oracle armed;
+//! * **1 shard = unsharded** — a 1-shard, gossip-off `ShardPlane` must
+//!   be bit-identical to the unsharded simulator for all three systems
+//!   (router, barriers and gossip must all vanish exactly);
+//!
+//! plus the partition-chaos property: a partitioned multi-shard plane
+//! replays bit-identically across repeats *and* across dense-vs-
+//! coalesced ticking, never routes into a severed shard while an
+//! alternative lives, and never loses a job.
+
+use prompttuner::bench::{self, SweepCell, SYSTEMS};
+use prompttuner::cluster::{SimConfig, SimResult, Simulator};
+use prompttuner::fault::ChaosProfile;
+use prompttuner::scenario::{replay, Scenario, NOVEL_TASK_BASE};
+use prompttuner::shard::{make_shard_policy, ShardPlane, ShardPlaneConfig};
+use prompttuner::trace::{ReplaySource, ScaleSource, ScaleSourceConfig,
+                         TraceSource, VecSource};
+use prompttuner::util::prop::{check, ensure};
+use prompttuner::workload::PerfModel;
+
+/// Bitwise comparison of everything a run computes deterministically —
+/// wall-clock and scheduler-overhead timings are the only exclusions.
+/// `same_rounds` is false for dense-vs-coalesced comparisons, where the
+/// executed/skipped round split legitimately differs.
+fn assert_results_identical(tag: &str, a: &SimResult, b: &SimResult,
+                            same_rounds: bool) -> Result<(), String> {
+    ensure(a.n_jobs == b.n_jobs && a.n_done == b.n_done,
+           format!("{tag}: jobs {}/{} vs {}/{}", a.n_jobs, a.n_done,
+                   b.n_jobs, b.n_done))?;
+    ensure(a.n_violations == b.n_violations,
+           format!("{tag}: violations {} vs {}", a.n_violations,
+                   b.n_violations))?;
+    ensure(a.cost_usd.to_bits() == b.cost_usd.to_bits(),
+           format!("{tag}: cost {} vs {}", a.cost_usd, b.cost_usd))?;
+    ensure(a.gpu_seconds_billed.to_bits() == b.gpu_seconds_billed.to_bits()
+               && a.gpu_seconds_busy.to_bits()
+                   == b.gpu_seconds_busy.to_bits()
+               && a.mean_utilization.to_bits()
+                   == b.mean_utilization.to_bits(),
+           format!("{tag}: GPU-second accounting diverged"))?;
+    ensure(a.mean_prompt_quality.to_bits() == b.mean_prompt_quality.to_bits(),
+           format!("{tag}: quality {} vs {}", a.mean_prompt_quality,
+                   b.mean_prompt_quality))?;
+    if same_rounds {
+        ensure(a.rounds_executed == b.rounds_executed
+                   && a.rounds_coalesced == b.rounds_coalesced,
+               format!("{tag}: rounds {}+{} vs {}+{}", a.rounds_executed,
+                       a.rounds_coalesced, b.rounds_executed,
+                       b.rounds_coalesced))?;
+        ensure(a.events_processed == b.events_processed,
+               format!("{tag}: events {} vs {}", a.events_processed,
+                       b.events_processed))?;
+    }
+    ensure(a.revocations == b.revocations
+               && a.lost_iters.to_bits() == b.lost_iters.to_bits()
+               && a.straggler_iters.to_bits() == b.straggler_iters.to_bits(),
+           format!("{tag}: fault telemetry diverged"))?;
+    ensure(a.retries == b.retries
+               && a.retry_iters.to_bits() == b.retry_iters.to_bits()
+               && a.chaos_delay_s.to_bits() == b.chaos_delay_s.to_bits(),
+           format!("{tag}: chaos telemetry diverged"))?;
+    ensure(a.util_timeline.len() == b.util_timeline.len(),
+           format!("{tag}: util timeline {} vs {} samples",
+                   a.util_timeline.len(), b.util_timeline.len()))?;
+    for (x, y) in a.util_timeline.iter().zip(&b.util_timeline) {
+        ensure(x.0.to_bits() == y.0.to_bits()
+                   && x.1.to_bits() == y.1.to_bits(),
+               format!("{tag}: util sample {x:?} vs {y:?}"))?;
+    }
+    ensure(a.job_latencies.len() == b.job_latencies.len(),
+           format!("{tag}: latency counts"))?;
+    for (x, y) in a.job_latencies.iter().zip(&b.job_latencies) {
+        ensure(x.0.to_bits() == y.0.to_bits()
+                   && x.1.to_bits() == y.1.to_bits()
+                   && x.2.to_bits() == y.2.to_bits()
+                   && x.3.to_bits() == y.3.to_bits(),
+               format!("{tag}: per-job latency {x:?} vs {y:?}"))?;
+    }
+    for (x, y) in a.job_quality.iter().zip(&b.job_quality) {
+        ensure(x.to_bits() == y.to_bits(),
+               format!("{tag}: per-job quality {x} vs {y}"))?;
+    }
+    Ok(())
+}
+
+fn oracle_cfg(sc: Option<&Scenario>) -> SimConfig {
+    let mut cfg = SimConfig { max_gpus: 32, debug_oracle: true,
+                              ..Default::default() };
+    if let Some(h) = sc.and_then(Scenario::horizon_hint) {
+        cfg.horizon_s = cfg.horizon_s.max(h);
+    }
+    cfg
+}
+
+/// Streaming vs materialized, every catalogue family, under the strict
+/// in-loop oracle — the `StreamCore` refactor's conformance property.
+#[test]
+fn prop_streaming_matches_materialized_for_every_family() {
+    check("stream = materialized per family", 2, |rng| {
+        let seed = rng.next_u64();
+        for sc in Scenario::catalogue() {
+            let cell = SweepCell::scenario(
+                format!("ps/{}", sc.name()), "prompttuner", sc.clone(), 1.0,
+                32, seed);
+            let jobs = bench::gen_jobs(&cell);
+            let sim = Simulator::new(oracle_cfg(Some(&sc)),
+                                     PerfModel::default());
+            let mut p1 = bench::make_policy(&cell);
+            let a = sim.run(p1.as_mut(), jobs.clone());
+            let mut p2 = bench::make_policy(&cell);
+            let b = sim.run_source(p2.as_mut(), &mut VecSource::new(jobs));
+            assert_results_identical(
+                &format!("{} seed={seed}", sc.name()), &a, &b, true)?;
+        }
+        Ok(())
+    });
+}
+
+/// The same equality for all three systems on one family, and for the
+/// two genuinely streaming sources (hyperscale generator, binary
+/// replay) against their materialized counterparts.
+#[test]
+fn prop_streaming_matches_materialized_across_systems_and_sources() {
+    check("stream = materialized across systems/sources", 2, |rng| {
+        let seed = rng.next_u64();
+        let sc = Scenario::catalogue().into_iter().next().unwrap();
+        for system in SYSTEMS {
+            let cell = SweepCell::scenario(
+                format!("ps/{system}"), system, sc.clone(), 1.0, 32, seed);
+            let jobs = bench::gen_jobs(&cell);
+            let sim = Simulator::new(oracle_cfg(Some(&sc)),
+                                     PerfModel::default());
+            let mut p1 = bench::make_policy(&cell);
+            let a = sim.run(p1.as_mut(), jobs.clone());
+            let mut p2 = bench::make_policy(&cell);
+            let b = sim.run_source(p2.as_mut(), &mut VecSource::new(jobs));
+            assert_results_identical(&format!("{system} seed={seed}"), &a,
+                                     &b, true)?;
+        }
+
+        // Hyperscale generator: stream vs its own materialization.
+        let scfg = ScaleSourceConfig {
+            seed,
+            minutes: 15,
+            jobs_per_minute: 6.0,
+            ..Default::default()
+        };
+        let sim = Simulator::new(oracle_cfg(None), PerfModel::default());
+        let mut p1 = make_shard_policy("prompttuner", seed, 32);
+        let a = sim.run(p1.as_mut(), ScaleSource::new(scfg.clone())
+            .materialize());
+        let mut p2 = make_shard_policy("prompttuner", seed, 32);
+        let b = sim.run_source(p2.as_mut(), &mut ScaleSource::new(scfg));
+        assert_results_identical(&format!("scale seed={seed}"), &a, &b,
+                                 true)?;
+
+        // Binary replay: streaming decoder vs the batch loader.
+        let jobs = sc.generate(seed, 1.0).map_err(|e| e.to_string())?;
+        let bytes = replay::to_bytes(&jobs);
+        let mut p1 = make_shard_policy("prompttuner", seed, 32);
+        let a = sim.run(p1.as_mut(),
+                        replay::from_bytes(&bytes).map_err(|e| e.to_string())?);
+        let mut p2 = make_shard_policy("prompttuner", seed, 32);
+        let b = sim.run_source(
+            p2.as_mut(),
+            &mut ReplaySource::from_bytes(bytes).map_err(|e| e.to_string())?);
+        assert_results_identical(&format!("replay seed={seed}"), &a, &b,
+                                 true)?;
+        Ok(())
+    });
+}
+
+/// A 1-shard gossip-off plane is the unsharded simulator, bit for bit,
+/// for all three systems — the shard plane's conformance oracle.
+#[test]
+fn prop_one_shard_plane_bit_identical_to_unsharded() {
+    check("1-shard plane = unsharded simulator", 3, |rng| {
+        let seed = rng.next_u64();
+        for system in SYSTEMS {
+            let trace = ScaleSourceConfig {
+                seed,
+                minutes: 15,
+                jobs_per_minute: 5.0,
+                ..Default::default()
+            };
+            let mut pc = ShardPlaneConfig::new(system, 1, 32, seed);
+            pc.gossip = false;
+            pc.sim.debug_oracle = true;
+            let pr = ShardPlane::new(pc)
+                .run(&mut ScaleSource::new(trace.clone()));
+            ensure(pr.violations.is_empty(),
+                   format!("{system}: plane violations {:?}", pr.violations))?;
+
+            let sim = Simulator::new(
+                SimConfig { max_gpus: 32, debug_oracle: true,
+                            ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut policy = make_shard_policy(system, seed, 32);
+            let reference =
+                sim.run(policy.as_mut(), ScaleSource::new(trace).materialize());
+            assert_results_identical(&format!("{system} seed={seed}"),
+                                     &pr.per_shard[0], &reference, true)?;
+        }
+        Ok(())
+    });
+}
+
+/// Partition chaos is a pure function of (seed, window): a partitioned
+/// plane replays bit-identically across repeats and across dense vs
+/// coalesced ticking, routes around severed shards, and admits every
+/// streamed job exactly once.
+#[test]
+fn prop_partitioned_plane_deterministic_across_repeats_and_ticking() {
+    check("partitioned plane deterministic", 2, |rng| {
+        let seed = rng.next_u64();
+        for system in SYSTEMS {
+            let trace = ScaleSourceConfig {
+                seed,
+                minutes: 25,
+                jobs_per_minute: 6.0,
+                ..Default::default()
+            };
+            let mut pc = ShardPlaneConfig::new(system, 3, 16, seed);
+            pc.gossip_period_s = 300.0;
+            pc.partition = Some(ChaosProfile::partition());
+            let run = |dense: bool| {
+                let mut cfg = pc.clone();
+                cfg.force_dense = dense;
+                ShardPlane::new(cfg)
+                    .run(&mut ScaleSource::new(trace.clone()))
+            };
+            let a = run(false);
+            let b = run(false);
+            let d = run(true);
+            let total = ScaleSource::new(trace.clone()).total_jobs();
+            let tag = format!("{system} seed={seed}");
+            for r in [&a, &b, &d] {
+                ensure(r.violations.is_empty(),
+                       format!("{tag}: plane violations {:?}", r.violations))?;
+                ensure(r.routed.iter().sum::<usize>() == total,
+                       format!("{tag}: {} of {total} jobs routed",
+                               r.routed.iter().sum::<usize>()))?;
+            }
+            ensure(a.routed == b.routed && a.routed == d.routed,
+                   format!("{tag}: routing not replayable: {:?} / {:?} / \
+                            {:?}", a.routed, b.routed, d.routed))?;
+            ensure(a.failovers == b.failovers && a.failovers == d.failovers,
+                   format!("{tag}: failovers diverged"))?;
+            assert_results_identical(&format!("{tag} repeat"), &a.merged(),
+                                     &b.merged(), true)?;
+            assert_results_identical(&format!("{tag} dense"), &a.merged(),
+                                     &d.merged(), false)?;
+        }
+        Ok(())
+    });
+}
+
+/// Gossip moves first-hand prompts across shards without breaking
+/// conservation, and a gossiping plane still replays exactly.
+#[test]
+fn prop_gossip_plane_conserves_and_replays() {
+    check("gossip plane conserves and replays", 2, |rng| {
+        let seed = rng.next_u64();
+        let trace = ScaleSourceConfig {
+            seed,
+            minutes: 30,
+            jobs_per_minute: 8.0,
+            n_tasks: 16,
+            task_base: NOVEL_TASK_BASE,
+            ..Default::default()
+        };
+        let mut pc = ShardPlaneConfig::new("prompttuner", 2, 16, seed);
+        pc.gossip_period_s = 180.0;
+        let a = ShardPlane::new(pc.clone())
+            .run(&mut ScaleSource::new(trace.clone()));
+        let b = ShardPlane::new(pc)
+            .run(&mut ScaleSource::new(trace.clone()));
+        let total = ScaleSource::new(trace).total_jobs();
+        ensure(a.violations.is_empty(),
+               format!("plane violations {:?}", a.violations))?;
+        ensure(a.routed.iter().sum::<usize>() == total,
+               format!("{} of {total} jobs routed",
+                       a.routed.iter().sum::<usize>()))?;
+        ensure(a.gossip_items > 0,
+               "novel-task plane exchanged no prompts".to_string())?;
+        ensure(a.gossip_items == b.gossip_items
+                   && a.gossip_rounds == b.gossip_rounds,
+               format!("gossip telemetry not replayable: {}/{} vs {}/{}",
+                       a.gossip_rounds, a.gossip_items, b.gossip_rounds,
+                       b.gossip_items))?;
+        assert_results_identical("gossip repeat", &a.merged(), &b.merged(),
+                                 true)
+    });
+}
+
+/// `scenario::FAMILIES` (the manifest benches emit into every perf
+/// record) names the whole catalogue plus replay — pinned here from the
+/// test side too, so a new family cannot ship without joining the
+/// manifest the tooling consumes.
+#[test]
+fn families_manifest_covers_catalogue_and_replay() {
+    let mut expect: Vec<String> = Scenario::catalogue()
+        .iter()
+        .map(|sc| sc.name().to_string())
+        .collect();
+    expect.push("replay".to_string());
+    expect.sort();
+    expect.dedup();
+    let mut got: Vec<String> = prompttuner::scenario::FAMILIES
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    got.sort();
+    assert_eq!(got, expect);
+}

@@ -101,17 +101,36 @@ def load_record(path: str) -> dict:
         check_bank(path, rec)
     if suite == "chaos":
         check_chaos(path, rec)
+    if suite == "scale":
+        check_scale(path, rec)
     return rec
 
 
-# The scenario-engine families the fig11 sweep must cover (and the
-# systems that must each run every family).
+# Fallback scenario-family manifest for records written by harnesses
+# that predate the embedded "families" array. Current records carry the
+# list themselves (emitted from the Rust single source of truth,
+# scenario::FAMILIES) — prefer families_for(rec) over this constant.
 SCENARIO_FAMILIES = {
     "diurnal", "flash-crowd", "heavy-tail", "multi-tenant", "replay",
     "spot-market", "az-outage", "task-drift",
     "chaos-latency", "chaos-flaky", "chaos-storm",
 }
 SCENARIO_SYSTEMS = {"prompttuner", "infless", "elasticflow"}
+
+
+def families_for(path: str, rec: dict) -> set:
+    """The scenario-family manifest governing this record: the record's
+    own 'families' array when present (the Rust harness emits it from
+    scenario::FAMILIES, so tooling never hand-maintains the list), the
+    hardcoded fallback for older records."""
+    fams = rec.get("families")
+    if fams is None:
+        return set(SCENARIO_FAMILIES)
+    if (not isinstance(fams, list) or not fams
+            or not all(isinstance(f, str) and f for f in fams)):
+        fail(f"{path}: 'families' manifest must be a non-empty list of "
+             f"non-empty strings, got {fams!r}")
+    return set(fams)
 
 
 def check_scenarios(path: str, rec: dict) -> None:
@@ -133,7 +152,8 @@ def check_scenarios(path: str, rec: dict) -> None:
             fail(f"{path}: {where} ({name}) skipped no rounds — the "
                  f"batch-skip fast path never engaged")
         seen.setdefault(name, set()).add(cell["system"])
-    missing = SCENARIO_FAMILIES - set(seen)
+    manifest = families_for(path, rec)
+    missing = manifest - set(seen)
     if missing:
         fail(f"{path}: scenario families missing from the sweep: "
              f"{sorted(missing)}")
@@ -412,6 +432,86 @@ def check_chaos(path: str, rec: dict) -> None:
                       f"(floor {CHAOS_ATTAINMENT_FLOOR[name]})")
     print(f"check_bench: chaos suite covers {sorted(seen)} x "
           f"{sorted(SCENARIO_SYSTEMS)}, {total_retries} total retries")
+
+
+# The hyperscale shard-plane sweep (fig16) must cover these tiers under
+# every system. Labels are fig16/<tier>/<ShardsxGpus>.
+SCALE_TIERS = {"conf", "gossip-off", "gossip-on", "partition", "mega"}
+
+# Hard floors for the mega tier — the suite's reason to exist is proving
+# the plane runs at datacenter scale, so these are not advisory.
+SCALE_MEGA_MIN_GPUS = 10_000
+SCALE_MEGA_MIN_JOBS = 1_000_000
+
+
+def check_scale(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_scale.json: every cell's label names a
+    shard-plane tier (fig16/<tier>/<NxG>), coverage spans tiers x
+    systems, every routed job completes (trace durations cap at ~6 min
+    against the plane's 2 h post-arrival drain horizon, so a stranded
+    job means the router or a shard lost it), every cell reports positive
+    event throughput, the mega tier actually hits the 10k-GPU / 1M-job
+    scale the suite advertises, and for each system gossip-on beats
+    gossip-off on realized prompt quality — the cross-shard bank
+    synchronization's reason to exist."""
+    seen = {}
+    for i, cell in enumerate(rec["cells"]):
+        where = cell_name("scale", i, cell)
+        parts = cell.get("label", "").split("/")
+        tier = parts[1] if len(parts) > 1 else ""
+        if tier not in SCALE_TIERS:
+            fail(f"{path}: {where} label names no shard-plane tier "
+                 f"(want fig16/<{'|'.join(sorted(SCALE_TIERS))}>/<NxG>)")
+        if cell["n_jobs"] <= 0:
+            fail(f"{path}: {where} ({tier}) ran no jobs")
+        if cell["n_done"] != cell["n_jobs"]:
+            fail(f"{path}: {where} ({tier}) stranded jobs "
+                 f"({cell['n_done']}/{cell['n_jobs']} done) — every job "
+                 f"the router places must complete")
+        if cell["events_per_s"] <= 0:
+            fail(f"{path}: {where} ({tier}) reports no event throughput")
+        if not 0.0 <= cell["mean_quality"] <= 1.0:
+            fail(f"{path}: {where} mean_quality {cell['mean_quality']} "
+                 f"outside [0, 1]")
+        if tier == "mega":
+            if cell["gpus"] < SCALE_MEGA_MIN_GPUS:
+                fail(f"{path}: {where} mega tier runs {cell['gpus']} GPUs "
+                     f"— below the {SCALE_MEGA_MIN_GPUS}-GPU floor")
+            if cell["n_jobs"] < SCALE_MEGA_MIN_JOBS:
+                fail(f"{path}: {where} mega tier ran {cell['n_jobs']} jobs "
+                     f"— below the {SCALE_MEGA_MIN_JOBS}-job floor")
+        seen.setdefault(tier, set()).add(cell["system"])
+    missing = SCALE_TIERS - set(seen)
+    if missing:
+        fail(f"{path}: shard-plane tiers missing from the sweep: "
+             f"{sorted(missing)}")
+    for tier, systems in sorted(seen.items()):
+        lacking = SCENARIO_SYSTEMS - systems
+        if lacking:
+            fail(f"{path}: scale tier '{tier}' missing systems: "
+                 f"{sorted(lacking)}")
+
+    def pick(tier: str, system: str) -> dict:
+        for cell in rec["cells"]:
+            if (cell["label"].split("/")[1] == tier
+                    and cell["system"] == system):
+                return cell
+        fail(f"{path}: no {system} cell for scale tier '{tier}'")
+
+    for system in sorted(SCENARIO_SYSTEMS):
+        on, off = pick("gossip-on", system), pick("gossip-off", system)
+        print(f"check_bench: scale {system} gossip on vs off: quality "
+              f"{on['mean_quality']:.4f} vs {off['mean_quality']:.4f}")
+        if on["mean_quality"] <= off["mean_quality"]:
+            fail(f"{path}: {system} gossip-on quality "
+                 f"{on['mean_quality']:.4f} does not beat gossip-off "
+                 f"{off['mean_quality']:.4f} — cross-shard prompt gossip "
+                 f"delivered no lift")
+        mega = pick("mega", system)
+        print(f"check_bench: scale mega/{system}: {mega['gpus']} GPUs, "
+              f"{mega['n_jobs']} jobs, {mega['events_per_s']:.0f} events/s")
+    print(f"check_bench: scale suite covers {sorted(seen)} x "
+          f"{sorted(SCENARIO_SYSTEMS)}")
 
 
 def cell_key(cell: dict) -> tuple:

@@ -92,6 +92,25 @@ def chaos_cells(**over):
     return cells
 
 
+def scale_cells(on_q=0.9, off_q=0.6, mega_gpus=10240, mega_jobs=1_200_000):
+    cells = []
+    tiers = [
+        ("conf", "1x32", 32, 120),
+        ("gossip-off", "4x32", 128, 3000),
+        ("gossip-on", "4x32", 128, 3000),
+        ("partition", "4x32", 128, 720),
+        ("mega", "16x640", mega_gpus, mega_jobs),
+    ]
+    for tier, geom, gpus, n_jobs in tiers:
+        for system in ("prompttuner", "infless", "elasticflow"):
+            q = {"gossip-on": on_q, "gossip-off": off_q}.get(tier, 0.8)
+            cells.append(make_cell(
+                label=f"fig16/{tier}/{geom}", system=system, gpus=gpus,
+                n_jobs=n_jobs, n_done=n_jobs, mean_quality=q,
+            ))
+    return cells
+
+
 def bank_cells(warm_q=0.9, cold_q=0.6, warm_viol=1, cold_viol=3):
     cells = []
     for state in ("cold", "warm", "drifting"):
@@ -378,6 +397,104 @@ def test_scenarios_suite_requires_batch_skip_to_engage(tmp):
     r = run_check(path)
     assert r.returncode == 1, (r.returncode, r.stderr)
     assert "batch-skip fast path never engaged" in r.stderr
+
+
+def test_scale_suite_passes_when_covered(tmp):
+    path = write_tmp(tmp, "s.json",
+                     make_record(suite="scale", cells=scale_cells()))
+    r = run_check(path)
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "scale suite covers" in r.stdout
+
+
+def test_scale_suite_requires_every_tier(tmp):
+    cells = [c for c in scale_cells() if "/mega/" not in c["label"]]
+    path = write_tmp(tmp, "s.json", make_record(suite="scale", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "mega" in r.stderr
+
+
+def test_scale_suite_rejects_stranded_jobs(tmp):
+    cells = scale_cells()
+    cells[3]["n_done"] = cells[3]["n_jobs"] - 1
+    path = write_tmp(tmp, "s.json", make_record(suite="scale", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "stranded" in r.stderr
+
+
+def test_scale_suite_rejects_gossip_without_lift(tmp):
+    path = write_tmp(tmp, "s.json",
+                     make_record(suite="scale",
+                                 cells=scale_cells(on_q=0.6, off_q=0.6)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "delivered no lift" in r.stderr
+
+
+def test_scale_suite_enforces_mega_floors(tmp):
+    for kwargs, needle in (({"mega_gpus": 8192}, "GPU floor"),
+                           ({"mega_jobs": 500_000}, "job floor")):
+        path = write_tmp(tmp, "s.json",
+                         make_record(suite="scale",
+                                     cells=scale_cells(**kwargs)))
+        r = run_check(path)
+        assert r.returncode == 1, (r.returncode, r.stderr)
+        assert needle in r.stderr, r.stderr
+
+
+def test_scale_suite_rejects_unknown_tier(tmp):
+    cells = scale_cells()
+    cells[0]["label"] = "fig16/warp/1x32"
+    path = write_tmp(tmp, "s.json", make_record(suite="scale", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "names no shard-plane tier" in r.stderr
+
+
+def scenario_cells(families):
+    cells = []
+    for scenario in sorted(families):
+        for system in ("prompttuner", "infless", "elasticflow"):
+            cells.append(make_cell(label=f"fig11/{scenario}", system=system,
+                                   scenario=scenario))
+    return cells
+
+
+def test_scenarios_embedded_manifest_supersedes_fallback(tmp):
+    # A record whose own 'families' manifest is a two-family catalogue
+    # passes with just those two — the embedded list, not the hardcoded
+    # fallback, governs coverage.
+    fams = ["diurnal", "flash-crowd"]
+    path = write_tmp(tmp, "sc.json",
+                     make_record(suite="scenarios",
+                                 cells=scenario_cells(fams), families=fams))
+    r = run_check(path)
+    assert r.returncode == 0, (r.returncode, r.stderr)
+    assert "scenarios suite covers" in r.stdout
+
+
+def test_scenarios_embedded_manifest_detects_missing_family(tmp):
+    fams = ["diurnal", "flash-crowd", "heavy-tail"]
+    path = write_tmp(tmp, "sc.json",
+                     make_record(suite="scenarios",
+                                 cells=scenario_cells(fams[:2]),
+                                 families=fams))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "heavy-tail" in r.stderr
+
+
+def test_scenarios_malformed_manifest_is_rejected(tmp):
+    fams = ["diurnal", ""]
+    path = write_tmp(tmp, "sc.json",
+                     make_record(suite="scenarios",
+                                 cells=scenario_cells(["diurnal"]),
+                                 families=fams))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "families" in r.stderr
 
 
 def test_missing_mean_quality_names_the_cell(tmp):
