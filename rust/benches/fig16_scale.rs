@@ -138,7 +138,7 @@ fn run_plane(cell: &PlaneCell) -> (CellResult, u64, u64, u64) {
     let result = pr.merged();
     (
         CellResult { cell: sweep_cell, result,
-                     wall_s: t0.elapsed().as_secs_f64() },
+                     wall_s: t0.elapsed().as_secs_f64(), tuner: None },
         pr.gossip_rounds,
         pr.gossip_items,
         pr.failovers,

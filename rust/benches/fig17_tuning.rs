@@ -1,0 +1,124 @@
+//! Fig 17 (beyond the paper) — the self-tuning control plane sweep:
+//! violation and cost of {hand-set, tuned} × {PromptTuner, INFless,
+//! ElasticFlow} across four drifting scenarios (diurnal, flash-crowd,
+//! task-drift, chaos-flaky).
+//!
+//! "Tuned" wraps the policy in `slo::Tuned`: a deterministic seeded
+//! successive-halving race over the policy's declared knob lattice
+//! (capacity, bank ceiling, lookup-latency budget), with SLO-Guard-style
+//! budget-consistent exploration — a hard cap on the share of error
+//! budget exploration may burn, and immediate fast-burn reverts to the
+//! hand-set incumbent. Every decision is audited against
+//! `StateAudit::check_tuner` in-run. The simulator budget is widened to
+//! the capacity knob's surge ceiling for tuned cells, mirroring the
+//! fig12 governed treatment.
+//!
+//! Emits a BENCH_tuning.json perf record with per-knob trajectories
+//! (lattice bounds, final incumbent, set-value extremes);
+//! tools/check_bench.py validates the full tuned/hand-set × system ×
+//! scenario coverage, trajectory legality, and that tuned PromptTuner
+//! improves on violations or cost on at least one drifting scenario.
+//! Run with PT_SIM_ORACLE=1 (CI does) to audit every tuned round under
+//! the strict in-loop oracle.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::*;
+use prompttuner::fault::ChaosKind;
+use prompttuner::metrics::{render_table, Row};
+use prompttuner::scenario::Scenario;
+
+fn main() {
+    let seed = 31u64;
+    let gpus = 32;
+
+    let scenarios = [
+        Scenario::Diurnal { hours: 3.0, jobs_per_llm: 30,
+                            peak_to_trough: 4.0 },
+        Scenario::FlashCrowd { storms: 3, intensity: 25.0,
+                               jobs_per_llm: 50 },
+        Scenario::TaskDrift { drift_at_frac: 0.4, novel_tasks: 12,
+                              jobs_per_llm: 50 },
+        Scenario::Chaos { kind: ChaosKind::Flaky, jobs_per_llm: 30 },
+    ];
+
+    let mut cells = vec![];
+    for sc in &scenarios {
+        for system in SYSTEMS {
+            for tuned in [false, true] {
+                let mode = if tuned { "tuned" } else { "hand-set" };
+                let mut cell = SweepCell::scenario(
+                    format!("fig17/{}/{mode}", sc.name()),
+                    system,
+                    sc.clone(),
+                    1.0,
+                    gpus,
+                    seed,
+                );
+                if tuned {
+                    cell = cell.tuned();
+                }
+                cells.push(cell);
+            }
+        }
+    }
+
+    let t0 = Instant::now();
+    let results = run_sweep(&cells);
+    let total_wall = t0.elapsed().as_secs_f64();
+
+    for sc in &scenarios {
+        for mode in ["hand-set", "tuned"] {
+            let label = format!("fig17/{}/{mode}", sc.name());
+            let rows: Vec<Row> = results
+                .iter()
+                .filter(|r| r.cell.label == label)
+                .map(|r| Row::from(&r.result))
+                .collect();
+            print!(
+                "\n{}",
+                render_table(
+                    &format!("Fig 17 — {} / {mode} ({gpus}-GPU baseline, \
+                              S = 1.0)", sc.name()),
+                    &rows
+                )
+            );
+        }
+    }
+
+    // Per-knob sensitivity: the incumbent trajectory each tuned cell
+    // converged to, against its hand-set starting point.
+    println!("\nFig 17 — tuned knob trajectories (seed {seed})");
+    for r in &results {
+        let Some(t) = &r.tuner else { continue };
+        println!(
+            "  {:<28} {:<12} {} decisions, {} promoted, {} reverted{}",
+            r.cell.label,
+            r.cell.system,
+            t.decisions,
+            t.promotions,
+            t.reverts,
+            if t.frozen { ", budget-frozen" } else { "" },
+        );
+        for k in &t.knobs {
+            println!(
+                "      {:<22} lattice [{:>8.2}, {:>8.2}]  incumbent \
+                 {:>8.2}  set-range [{:>8.2}, {:>8.2}]",
+                k.name, k.lo, k.hi, k.value, k.min_seen, k.max_seen
+            );
+        }
+    }
+
+    let report = BenchReport::new("tuning", results, total_wall);
+    match report.write_default() {
+        Ok(path) => println!(
+            "\n[{} cells in {total_wall:.2}s wall] perf record: {}",
+            report.cells.len(),
+            path.display()
+        ),
+        Err(e) => eprintln!("warning: could not write perf record: {e}"),
+    }
+}

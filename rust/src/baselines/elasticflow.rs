@@ -11,8 +11,8 @@
 //!   full cold start (framework + weights load).
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
-                     RevokeEvent, TunedPrompt, Wake};
+use crate::cluster::{ClusterState, JobStatus, KnobSpec, Policy,
+                     RetryEvent, RevokeEvent, TunedPrompt, Wake};
 use crate::promptbank::{SimBankSet, TUNED_PROMPT_QUALITY};
 use crate::workload::Llm;
 
@@ -477,6 +477,33 @@ impl Policy for ElasticFlow {
             st.set_billable(new as f64);
         }
         self.needs_round = true;
+    }
+
+    // Self-tuning declaration (`slo::Tuned`): the statically-billed
+    // cluster size is the one knob this baseline exposes; moving it
+    // routes through `set_capacity` (with its busy-level clamp), so a
+    // tuned shrink re-bills the smaller fleet immediately.
+    fn knobs(&self) -> Vec<KnobSpec> {
+        let base = self.cfg.cluster_size;
+        vec![KnobSpec {
+            name: "capacity",
+            lo: (base / 2).max(1) as f64,
+            hi: (base + (base / 4).max(1)) as f64,
+            steps: 4,
+        }]
+    }
+
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        match name {
+            "capacity" => Some(self.cfg.cluster_size as f64),
+            _ => None,
+        }
+    }
+
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        if name == "capacity" {
+            self.set_capacity(st, value.round().max(1.0) as usize);
+        }
     }
 
     fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {

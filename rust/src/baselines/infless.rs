@@ -11,8 +11,8 @@
 //!   schedule, no cross-LLM GPU sharing, no delay-based planning.
 
 use crate::baselines::BankRouter;
-use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
-                     RevokeEvent, TunedPrompt, Wake};
+use crate::cluster::{ClusterState, JobStatus, KnobSpec, Policy,
+                     RetryEvent, RevokeEvent, TunedPrompt, Wake};
 use crate::promptbank::TUNED_PROMPT_QUALITY;
 use crate::coordinator::pools::WarmPool;
 use crate::promptbank::SimBankSet;
@@ -412,6 +412,32 @@ impl Policy for Infless {
         // instances below the new budget.
         self.cfg.max_gpus = gpus;
         self.needs_round = true;
+    }
+
+    // Self-tuning declaration (`slo::Tuned`): the instance budget is the
+    // one knob this baseline exposes; moving it routes through the same
+    // path the governor drives.
+    fn knobs(&self) -> Vec<KnobSpec> {
+        let base = self.cfg.max_gpus;
+        vec![KnobSpec {
+            name: "capacity",
+            lo: (base / 2).max(1) as f64,
+            hi: (base + (base / 4).max(1)) as f64,
+            steps: 4,
+        }]
+    }
+
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        match name {
+            "capacity" => Some(self.cfg.max_gpus as f64),
+            _ => None,
+        }
+    }
+
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        if name == "capacity" {
+            self.set_capacity(st, value.round().max(1.0) as usize);
+        }
     }
 
     fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {

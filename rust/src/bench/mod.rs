@@ -22,12 +22,13 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
-use crate::cluster::{CheckpointModel, Policy, SimConfig, SimResult, Simulator};
+use crate::cluster::{CheckpointModel, Policy, SimConfig, SimResult, Simulator,
+                     TunerReport};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
 use crate::fault::{ChaosEngine, FaultInjector, FaultPlan};
 use crate::promptbank::SimBankConfig;
 use crate::scenario::Scenario;
-use crate::slo::{Governed, GovernorConfig};
+use crate::slo::{Governed, GovernorConfig, Tuned, TunerConfig};
 use crate::trace::{Load, TraceConfig, TraceGenerator, VecSource};
 use crate::workload::{JobSpec, Llm, PerfModel};
 
@@ -59,6 +60,12 @@ pub struct SweepCell {
     /// headroom over the cell's GPU baseline (the simulator budget is
     /// widened to the surge ceiling by `run_cell`).
     pub governed: bool,
+    /// Wrap the policy in the self-tuning control plane (`slo::Tuned`):
+    /// a seeded successive-halving race over the policy's declared knob
+    /// lattice with budget-guarded exploration (fig17). Like governed
+    /// cells, the simulator budget is widened to the capacity knob's
+    /// surge ceiling by `run_cell`.
+    pub tuned: bool,
     /// PromptTuner config override (ablation sweeps); the cell seed is
     /// applied on top.
     pub cfg: Option<PromptTunerConfig>,
@@ -82,6 +89,7 @@ impl SweepCell {
             heavy: None,
             scenario: None,
             governed: false,
+            tuned: false,
             cfg: None,
             bank: None,
         }
@@ -97,6 +105,14 @@ impl SweepCell {
     /// `slo::Governed` with `GovernorConfig::for_cluster(gpus)`.
     pub fn governed(mut self) -> Self {
         self.governed = true;
+        self
+    }
+
+    /// Mark the cell tuned (fig17): the policy is wrapped in
+    /// `slo::Tuned` with the default race parameters and the cell's
+    /// seed, so per-seed knob trajectories are reproducible.
+    pub fn tuned(mut self) -> Self {
+        self.tuned = true;
         self
     }
 
@@ -118,6 +134,9 @@ pub struct CellResult {
     pub cell: SweepCell,
     pub result: SimResult,
     pub wall_s: f64,
+    /// End-of-run tuner telemetry (`Policy::tuner_report`): Some for
+    /// tuned cells, None otherwise.
+    pub tuner: Option<TunerReport>,
 }
 
 /// Build the policy a cell names (ablation override aware; governed
@@ -171,6 +190,17 @@ pub fn make_policy(cell: &SweepCell) -> Box<dyn Policy> {
         Box::new(Governed::new(inner, GovernorConfig::for_cluster(cell.gpus)))
     } else {
         inner
+    };
+    // The tuner sits in the control-plane slot, directly over the knobs
+    // it races (and under the fault engine, which re-clamps capacity to
+    // any degraded ceiling after every callback).
+    let policy: Box<dyn Policy> = if cell.tuned {
+        Box::new(Tuned::new(
+            policy,
+            TunerConfig { seed: cell.seed, ..Default::default() },
+        ))
+    } else {
+        policy
     };
     let plan = cell
         .scenario
@@ -231,7 +261,10 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
     // Governed cells may surge above the baseline: widen the provider
     // budget to the governor's ceiling (the policy still starts at
     // cell.gpus; only the burn-rate governor may claim the headroom).
-    if cell.governed {
+    // Tuned cells get the same headroom — the capacity knob's lattice
+    // tops out at the identical surge ceiling, so an up-lattice arm is
+    // realizable instead of silently clamped.
+    if cell.governed || cell.tuned {
         cfg.max_gpus = GovernorConfig::for_cluster(cell.gpus).ceiling_gpus;
     }
     let sim = Simulator::new(cfg, PerfModel::default());
@@ -240,10 +273,12 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
     // bit-identical to the materialized `Simulator::run` (the streaming
     // equivalence property in tests/prop_shard.rs enforces it per family).
     let result = sim.run_source(policy.as_mut(), &mut VecSource::new(jobs));
+    let tuner = policy.tuner_report();
     CellResult {
         cell: cell.clone(),
         result,
         wall_s: t0.elapsed().as_secs_f64(),
+        tuner,
     }
 }
 
@@ -358,6 +393,7 @@ impl BenchReport {
                 c.cell.scenario.as_ref().map_or("none", |s| s.name())
             ));
             out.push_str(&format!("\"governed\": {}, ", c.cell.governed));
+            out.push_str(&format!("\"tuned\": {}, ", c.cell.tuned));
             // Bank construction tag: "cold" / "warm:<seeded>" carries the
             // override's seeded-corpus size so size-capped sweeps stay
             // distinguishable; drift shows through the scenario tag.
@@ -409,6 +445,37 @@ impl BenchReport {
                                   json_f64(r.sched_overhead_ms_mean)));
             out.push_str(&format!("\"sched_overhead_ms_max\": {}",
                                   json_f64(r.sched_overhead_ms_max)));
+            // Tuner telemetry (fig17): decision counters plus per-knob
+            // lattice bounds, final incumbent, and the set-value
+            // extremes — check_bench asserts every trajectory stayed
+            // inside its declared lattice.
+            if let Some(t) = &c.tuner {
+                out.push_str(&format!(", \"tuner_decisions\": {}, ",
+                                      t.decisions));
+                out.push_str(&format!("\"tuner_promotions\": {}, ",
+                                      t.promotions));
+                out.push_str(&format!("\"tuner_reverts\": {}, ", t.reverts));
+                out.push_str(&format!("\"tuner_explore_bad\": {}, ",
+                                      t.explore_bad));
+                out.push_str(&format!("\"tuner_frozen\": {}, ", t.frozen));
+                out.push_str("\"knobs\": [");
+                for (j, k) in t.knobs.iter().enumerate() {
+                    if j > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&format!(
+                        "{{\"name\": \"{}\", \"lo\": {}, \"hi\": {}, \
+                         \"value\": {}, \"min_seen\": {}, \"max_seen\": {}}}",
+                        json_escape(k.name),
+                        json_f64(k.lo),
+                        json_f64(k.hi),
+                        json_f64(k.value),
+                        json_f64(k.min_seen),
+                        json_f64(k.max_seen),
+                    ));
+                }
+                out.push(']');
+            }
             out.push_str(if i + 1 < self.cells.len() { "},\n" } else { "}\n" });
         }
         out.push_str("  ]\n}\n");
@@ -531,6 +598,43 @@ mod tests {
         assert_eq!(r.result.policy, "prompttuner+slo");
         let report = BenchReport::new("slo", vec![r], 0.1);
         assert!(report.to_json().contains("\"governed\": true"));
+    }
+
+    #[test]
+    fn tuned_cells_wrap_policy_and_emit_knob_telemetry() {
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 8 };
+        let cell = SweepCell::scenario("t", "prompttuner", sc, 1.0, 16, 5)
+            .tuned();
+        let r = run_cell(&cell);
+        assert_eq!(r.result.n_done, r.result.n_jobs);
+        assert_eq!(r.result.policy, "prompttuner+tuned");
+        let rep = r.tuner.as_ref().expect("tuned cell must carry a report");
+        assert!(!rep.knobs.is_empty(), "PromptTuner declares knobs");
+        for k in &rep.knobs {
+            assert!(k.lo <= k.min_seen && k.max_seen <= k.hi,
+                    "{}: [{}, {}] seen [{}, {}]",
+                    k.name, k.lo, k.hi, k.min_seen, k.max_seen);
+        }
+        let report = BenchReport::new("tuning", vec![r], 0.1);
+        let json = report.to_json();
+        assert!(json.contains("\"tuned\": true"));
+        assert!(json.contains("\"tuner_decisions\""));
+        assert!(json.contains("\"knobs\": ["));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn untuned_cells_tag_record_and_carry_no_report() {
+        let cells = vec![SweepCell::new("p", "prompttuner", Load::Low, 1.0,
+                                        8, 7)];
+        let results = run_sweep(&cells);
+        assert!(results[0].tuner.is_none());
+        let report = BenchReport::new("t", results, 0.1);
+        let json = report.to_json();
+        assert!(json.contains("\"tuned\": false"));
+        assert!(!json.contains("\"knobs\""));
     }
 
     #[test]

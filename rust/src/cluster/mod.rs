@@ -13,7 +13,8 @@ pub mod job;
 pub mod sim;
 
 pub use job::{JobState, JobStatus};
-pub use sim::{ChaosInjection, CheckpointModel, ClusterState, Policy,
-              RetryEvent, Revoked, RevokeEvent, SimConfig, SimObserver,
-              SimOracle, SimResult, Simulator, StateAudit, StreamCore,
-              TunedPrompt, Wake};
+pub use sim::{ChaosInjection, CheckpointModel, ClusterState, KnobSpec,
+              KnobStat, Policy, RetryEvent, Revoked, RevokeEvent,
+              SimConfig, SimObserver, SimOracle, SimResult, Simulator,
+              StateAudit, StreamCore, TunedPrompt, TunerAction,
+              TunerDecision, TunerLog, TunerReport, Wake};

@@ -838,6 +838,103 @@ impl ClusterState {
     }
 }
 
+// --------------------------------------------- tuner knob declarations
+
+/// One tunable knob a policy declares to the self-tuning control plane
+/// (`slo::Tuned`): a bounded lattice of `steps` evenly spaced values in
+/// `[lo, hi]`. The declaration is a contract — [`StateAudit::check_tuner`]
+/// fails any run whose logged knob values ever leave the declared bounds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KnobSpec {
+    /// Stable knob name (`"capacity"`, `"bank_ceiling"`, ...).
+    pub name: &'static str,
+    /// Inclusive lower lattice bound.
+    pub lo: f64,
+    /// Inclusive upper lattice bound.
+    pub hi: f64,
+    /// Number of lattice points in `[lo, hi]` (clamped to ≥ 2).
+    pub steps: usize,
+}
+
+impl KnobSpec {
+    /// The `i`-th lattice value (evenly spaced, both endpoints included;
+    /// `i` saturates at the last point).
+    pub fn value_at(&self, i: usize) -> f64 {
+        let steps = self.steps.max(2);
+        let i = i.min(steps - 1);
+        self.lo + (self.hi - self.lo) * (i as f64) / ((steps - 1) as f64)
+    }
+}
+
+/// What one tuner decision did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunerAction {
+    /// Switched a knob onto an exploration arm's lattice value.
+    Explore,
+    /// Promoted the measured winner's value to incumbent.
+    Promote,
+    /// Reverted a misbehaving arm back to the incumbent value.
+    Revert,
+    /// Froze exploration (budget cap hit) and pinned the incumbent.
+    Freeze,
+}
+
+/// One audited tuner decision: at evaluation-window boundary `t`, knob
+/// `knob` was set to `value` on behalf of exploration arm `arm` (arm 0
+/// is always the incumbent configuration).
+#[derive(Clone, Debug)]
+pub struct TunerDecision {
+    /// Simulated time the decision executed (a window boundary).
+    pub t: f64,
+    pub action: TunerAction,
+    /// Arm whose configuration the knob was moved to.
+    pub arm: usize,
+    pub knob: &'static str,
+    /// The value the knob was set to.
+    pub value: f64,
+}
+
+/// Append-only audit log of every tuner decision; consumed by
+/// [`StateAudit::check_tuner`] and surfaced through
+/// [`Policy::tuner_report`] counters.
+#[derive(Clone, Debug, Default)]
+pub struct TunerLog {
+    pub decisions: Vec<TunerDecision>,
+}
+
+/// Per-knob telemetry surfaced into bench records: the declared bounds,
+/// the final (incumbent) value, and the extremes the tuner ever set.
+#[derive(Clone, Debug)]
+pub struct KnobStat {
+    pub name: &'static str,
+    pub lo: f64,
+    pub hi: f64,
+    /// Incumbent value at end of run.
+    pub value: f64,
+    /// Smallest value the tuner ever set this knob to.
+    pub min_seen: f64,
+    /// Largest value the tuner ever set this knob to.
+    pub max_seen: f64,
+}
+
+/// End-of-run tuner summary ([`Policy::tuner_report`]); the bench
+/// harness embeds it in `BENCH_tuning.json` cells.
+#[derive(Clone, Debug, Default)]
+pub struct TunerReport {
+    pub knobs: Vec<KnobStat>,
+    /// Total logged decisions.
+    pub decisions: usize,
+    /// Arms promoted to incumbent.
+    pub promotions: usize,
+    /// Fast-burn reverts to the incumbent.
+    pub reverts: usize,
+    /// SLO-missing completions observed while an exploration arm was
+    /// live (the exploration spend charged against the error budget).
+    pub explore_bad: usize,
+    /// True once the exploration budget cap froze further exploration.
+    pub frozen: bool,
+}
+
 /// A scheduling policy (PromptTuner's Workload Scheduler or a baseline).
 pub trait Policy {
     fn name(&self) -> &str;
@@ -935,6 +1032,37 @@ pub trait Policy {
     fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
         let _ = items;
     }
+
+    /// Tunable knobs this policy declares to the self-tuning control
+    /// plane (`slo::Tuned`). Empty by default — a policy with no
+    /// declarations is simply not tunable. Must be stable over a run
+    /// (the tuner snapshots it once).
+    fn knobs(&self) -> Vec<KnobSpec> {
+        vec![]
+    }
+
+    /// Current value of declared knob `name` (`None` when undeclared).
+    /// Must be a pure read.
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        let _ = name;
+        None
+    }
+
+    /// Set declared knob `name` to `value`. Implementations round/clamp
+    /// as needed but must preserve the cluster invariants (busy ≤
+    /// billable ≤ provider budget) — capacity-like knobs route through
+    /// the same machinery as [`Policy::set_capacity`]. The default
+    /// ignores the request.
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        let _ = (st, name, value);
+    }
+
+    /// End-of-run tuner telemetry (`None` for untuned policies);
+    /// wrappers forward it so the bench harness can surface it from
+    /// behind `FaultInjector`/oracle layers.
+    fn tuner_report(&self) -> Option<TunerReport> {
+        None
+    }
 }
 
 /// Forward [`Policy`] through boxes so trait objects (e.g. the
@@ -982,6 +1110,18 @@ impl<P: Policy + ?Sized> Policy for Box<P> {
     }
     fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
         (**self).absorb_tuned(items)
+    }
+    fn knobs(&self) -> Vec<KnobSpec> {
+        (**self).knobs()
+    }
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        (**self).knob_value(name)
+    }
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        (**self).set_knob(st, name, value)
+    }
+    fn tuner_report(&self) -> Option<TunerReport> {
+        (**self).tuner_report()
     }
 }
 
@@ -1424,6 +1564,94 @@ impl StateAudit {
             }
         }
     }
+
+    /// Tuner-legality audit (`slo::Tuned`). Checks, over a finished
+    /// [`TunerLog`] against the declared [`KnobSpec`] lattice and the
+    /// incumbent knob values captured before any tuning:
+    ///
+    /// - every logged value lies inside its knob's declared `[lo, hi]`;
+    /// - decisions land only on evaluation-window boundaries: decisions
+    ///   sharing a timestamp form one boundary batch, and the window
+    ///   index `floor(t / eval_period_s)` strictly increases between
+    ///   batches (at most one decision batch per window, never between
+    ///   windows);
+    /// - `Revert`/`Freeze` decisions restore the incumbent value
+    ///   exactly (capacity accounting is conserved — a revert is a
+    ///   bit-exact return to the configuration being protected), where
+    ///   the incumbent is updated by each `Promote`.
+    ///
+    /// Associated function like [`StateAudit::check_wake`] so the
+    /// tuner's finish path, the bench harness, and tests can all call
+    /// it without an audit history.
+    pub fn check_tuner(
+        log: &TunerLog,
+        specs: &[KnobSpec],
+        incumbent: &[f64],
+        eval_period_s: f64,
+        out: &mut Vec<String>,
+    ) {
+        let eps = 1e-9;
+        if incumbent.len() != specs.len() {
+            out.push(format!(
+                "tuner: incumbent snapshot covers {} knobs but {} are \
+                 declared",
+                incumbent.len(),
+                specs.len()
+            ));
+            return;
+        }
+        let mut current: Vec<f64> = incumbent.to_vec();
+        let mut last_window: Option<(i64, f64)> = None;
+        for d in &log.decisions {
+            let Some(k) = specs.iter().position(|s| s.name == d.knob)
+            else {
+                out.push(format!(
+                    "tuner@{:.3}: decision moves undeclared knob {:?}",
+                    d.t, d.knob
+                ));
+                continue;
+            };
+            let spec = &specs[k];
+            if d.value < spec.lo - eps || d.value > spec.hi + eps {
+                out.push(format!(
+                    "tuner@{:.3}: knob {:?} set to {} outside its \
+                     declared lattice [{}, {}]",
+                    d.t, d.knob, d.value, spec.lo, spec.hi
+                ));
+            }
+            if eval_period_s > 0.0 {
+                let window = (d.t / eval_period_s).floor() as i64;
+                match last_window {
+                    Some((w, t)) if (d.t - t).abs() <= eps => {
+                        // same boundary batch — same window by
+                        // construction
+                        debug_assert_eq!(w, window);
+                    }
+                    Some((w, _)) if window <= w => out.push(format!(
+                        "tuner@{:.3}: second decision batch inside \
+                         evaluation window {w} (knob {:?}) — knob \
+                         changes are only legal at window boundaries",
+                        d.t, d.knob
+                    )),
+                    _ => last_window = Some((window, d.t)),
+                }
+            }
+            match d.action {
+                TunerAction::Promote => current[k] = d.value,
+                TunerAction::Revert | TunerAction::Freeze => {
+                    if (d.value - current[k]).abs() > eps {
+                        out.push(format!(
+                            "tuner@{:.3}: {:?} sets knob {:?} to {} but \
+                             the incumbent value is {} — reverts must \
+                             conserve the incumbent configuration",
+                            d.t, d.action, d.knob, d.value, current[k]
+                        ));
+                    }
+                }
+                TunerAction::Explore => {}
+            }
+        }
+    }
 }
 
 /// The simulation oracle: wraps any [`Policy`] and runs the full
@@ -1542,6 +1770,21 @@ impl<P: Policy> Policy for SimOracle<P> {
     fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
         self.inner.set_capacity(st, gpus);
         self.run_audit(st, "set_capacity");
+    }
+    fn knobs(&self) -> Vec<KnobSpec> {
+        self.inner.knobs()
+    }
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        self.inner.knob_value(name)
+    }
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        // A knob move can re-bill capacity (capacity-like knobs route
+        // through set_capacity machinery) — audit like set_capacity.
+        self.inner.set_knob(st, name, value);
+        self.run_audit(st, "set_knob");
+    }
+    fn tuner_report(&self) -> Option<TunerReport> {
+        self.inner.tuner_report()
     }
     // Gossip hooks touch only the policy's own bank, never ClusterState,
     // so there is no cluster invariant to audit — forward verbatim.

@@ -29,8 +29,8 @@
 //! expiry) so the simulator can coalesce idle rounds — see
 //! [`crate::cluster::Wake`].
 
-use crate::cluster::{ClusterState, JobStatus, Policy, RetryEvent,
-                     RevokeEvent, TunedPrompt, Wake};
+use crate::cluster::{ClusterState, JobStatus, KnobSpec, Policy,
+                     RetryEvent, RevokeEvent, TunedPrompt, Wake};
 use crate::coordinator::cold_alloc::{allocate_from_cold_pool_into, ColdPlan};
 use crate::coordinator::pools::WarmPool;
 use crate::coordinator::warm_alloc::{allocate_from_warm_pool_into, WarmAllocation};
@@ -754,6 +754,73 @@ impl Policy for PromptTuner {
             for it in items {
                 self.banks.insert_tuned(it.llm, it.task_id, it.quality);
             }
+        }
+    }
+
+    // Self-tuning knob declarations (`slo::Tuned`). The lattice bounds
+    // mirror the knobs' hand-set operating ranges: capacity between half
+    // the configured budget and the governor's 25 % surge ceiling, the
+    // bank ceiling between the autoscale floor and the configured size,
+    // and the §4.4.1 lookup budget around its hand-set 20 %.
+    fn knobs(&self) -> Vec<KnobSpec> {
+        let base = self.cfg.max_gpus;
+        let target = self.cfg.bank.max_size;
+        let floor = self.cfg.bank_min_size.min(target).max(1);
+        let mut out = vec![KnobSpec {
+            name: "capacity",
+            lo: (base / 2).max(1) as f64,
+            hi: (base + (base / 4).max(1)) as f64,
+            steps: 4,
+        }];
+        if self.cfg.use_bank {
+            out.push(KnobSpec {
+                name: "bank_ceiling",
+                lo: floor as f64,
+                hi: target as f64,
+                steps: 4,
+            });
+            out.push(KnobSpec {
+                name: "latency_budget_frac",
+                lo: 0.05,
+                hi: 0.4,
+                steps: 4,
+            });
+        }
+        out
+    }
+
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        match name {
+            "capacity" => Some(self.cfg.max_gpus as f64),
+            "bank_ceiling" if self.cfg.use_bank => {
+                Some(self.bank_ceiling as f64)
+            }
+            "latency_budget_frac" if self.cfg.use_bank => {
+                Some(self.cfg.latency_budget_frac)
+            }
+            _ => None,
+        }
+    }
+
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        match name {
+            "capacity" => {
+                self.set_capacity(st, value.round().max(1.0) as usize);
+            }
+            "bank_ceiling" if self.cfg.use_bank => {
+                // Drive both the live ceiling and the §4.4.3 autoscale
+                // target, so the pressure window flexes around the tuned
+                // point instead of pulling back to the hand-set size.
+                let size = value.round().max(1.0) as usize;
+                self.cfg.bank.max_size = size;
+                self.bank_ceiling = size;
+                self.banks.set_max_size_all(size);
+                self.needs_round = true;
+            }
+            "latency_budget_frac" if self.cfg.use_bank => {
+                self.cfg.latency_budget_frac = value.clamp(0.0, 1.0);
+            }
+            _ => {}
         }
     }
 }

@@ -41,8 +41,9 @@ pub mod chaos;
 
 pub use chaos::{ChaosEngine, ChaosKind, ChaosProfile, DomainTopology};
 
-use crate::cluster::{CheckpointModel, ClusterState, JobStatus, Policy,
-                     RetryEvent, Revoked, RevokeEvent, TunedPrompt, Wake};
+use crate::cluster::{CheckpointModel, ClusterState, JobStatus, KnobSpec,
+                     Policy, RetryEvent, Revoked, RevokeEvent, TunedPrompt,
+                     TunerReport, Wake};
 use crate::util::rng::Rng;
 use crate::workload::Llm;
 
@@ -531,6 +532,47 @@ impl<P: Policy> Policy for FaultInjector<P> {
 
     fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
         self.inner.absorb_tuned(items);
+    }
+
+    // Knob hooks: forward the inner policy's declarations and add the
+    // injector's own checkpoint period (the §self-tuning knob the fault
+    // layer — not the policy — owns). The lattice spans aggressive
+    // 30 s checkpoints to relaxed 4-minute ones around the 60 s default.
+    fn knobs(&self) -> Vec<KnobSpec> {
+        let mut out = self.inner.knobs();
+        out.push(KnobSpec {
+            name: "checkpoint_period_s",
+            lo: 30.0,
+            hi: 240.0,
+            steps: 4,
+        });
+        out
+    }
+
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        if name == "checkpoint_period_s" {
+            Some(self.ckpt.period_s)
+        } else {
+            self.inner.knob_value(name)
+        }
+    }
+
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        if name == "checkpoint_period_s" {
+            self.ckpt.period_s = value.max(1.0);
+            if self.started {
+                // Re-install so the amortized-slowdown model picks the
+                // new period up for launches from now on.
+                st.set_checkpoint_model(Some(self.ckpt.clone()));
+            }
+        } else {
+            self.inner.set_knob(st, name, value);
+            self.clamp_to_ceiling(st);
+        }
+    }
+
+    fn tuner_report(&self) -> Option<TunerReport> {
+        self.inner.tuner_report()
     }
 }
 

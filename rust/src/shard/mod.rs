@@ -44,8 +44,9 @@ use std::time::Instant;
 
 use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless,
                        InflessConfig};
-use crate::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
-                     SimConfig, SimResult, StreamCore, TunedPrompt, Wake};
+use crate::cluster::{ClusterState, KnobSpec, Policy, RetryEvent,
+                     RevokeEvent, SimConfig, SimResult, StreamCore,
+                     TunedPrompt, TunerReport, Wake};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
 use crate::fault::ChaosProfile;
 use crate::trace::TraceSource;
@@ -231,6 +232,18 @@ impl Policy for DenseWrap {
     }
     fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
         self.0.absorb_tuned(items)
+    }
+    fn knobs(&self) -> Vec<KnobSpec> {
+        self.0.knobs()
+    }
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        self.0.knob_value(name)
+    }
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        self.0.set_knob(st, name, value)
+    }
+    fn tuner_report(&self) -> Option<TunerReport> {
+        self.0.tuner_report()
     }
 }
 

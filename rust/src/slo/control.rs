@@ -6,8 +6,8 @@
 //! invariant the oracle audits (busy ≤ billable ≤ budget) is preserved by
 //! construction.
 
-use crate::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
-                     TunedPrompt, Wake};
+use crate::cluster::{ClusterState, KnobSpec, Policy, RetryEvent,
+                     RevokeEvent, TunedPrompt, TunerReport, Wake};
 use crate::slo::monitor::SloMonitor;
 use crate::slo::SloConfig;
 use crate::workload::Llm;
@@ -400,6 +400,34 @@ impl<P: Policy> Policy for Governed<P> {
 
     fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
         self.inner.absorb_tuned(items);
+    }
+
+    // Knob hooks: forward the inner declarations, but route the
+    // `capacity` knob through the governor's own ceiling-clamped
+    // setter so a tuner layered outside can never out-scale the
+    // governor it wraps.
+    fn knobs(&self) -> Vec<KnobSpec> {
+        self.inner.knobs()
+    }
+
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        if name == "capacity" {
+            Some(self.capacity_gpus as f64)
+        } else {
+            self.inner.knob_value(name)
+        }
+    }
+
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        if name == "capacity" {
+            self.set_capacity(st, value.round().max(1.0) as usize);
+        } else {
+            self.inner.set_knob(st, name, value);
+        }
+    }
+
+    fn tuner_report(&self) -> Option<TunerReport> {
+        self.inner.tuner_report()
     }
 }
 

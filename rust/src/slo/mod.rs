@@ -19,19 +19,27 @@
 //!   *and* both baselines through the [`crate::cluster::Policy`] trait's
 //!   `set_capacity` knob, so it can never break the cluster invariants
 //!   (busy ≤ billable ≤ budget) the simulation oracle audits.
+//! * **self-tuning** ([`tuner`]) — the [`Tuned`] policy wrapper that
+//!   races seeded lattice configurations of any knob-declaring policy
+//!   (successive halving, budget-guarded exploration, fast-burn
+//!   reverts) and promotes the winner only if it did not lose to the
+//!   hand-set incumbent on attainment.
 //!
-//! Everything here is deterministic (no RNG, no wall clock) and purely
-//! trait-driven, so governed runs stay bit-reproducible per seed and
-//! oracle-clean.
+//! Everything here is deterministic (no RNG state survives a decision —
+//! tuner arm lattices are pure hashes of the seed — and no wall clock)
+//! and purely trait-driven, so governed and tuned runs stay
+//! bit-reproducible per seed and oracle-clean.
 
 pub mod budget;
 pub mod control;
 pub mod monitor;
+pub mod tuner;
 pub mod window;
 
 pub use budget::{BurnGauge, ErrorBudget};
 pub use control::{Admission, AdmissionController, Governed, GovernorConfig};
 pub use monitor::{AttainmentCell, SloMonitor};
+pub use tuner::{Tuned, TunerConfig};
 pub use window::{nearest_rank, SliWindow};
 
 use crate::scenario::TENANT_TIERS;

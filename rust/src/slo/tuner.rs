@@ -1,0 +1,802 @@
+//! Self-tuning control plane: the [`Tuned`] policy wrapper closes the
+//! loop on the knobs the rest of the crate hand-sets (ROADMAP item 5).
+//!
+//! The system accumulated many hand-set constants — the cold-pool GPU
+//! budget, the Prompt-Bank ceiling, the §4.4.1 lookup-latency budget,
+//! the checkpoint period. SCOOT and SLO-Guard (PAPERS.md) show that
+//! tuning exactly these serving-system knobs *online against the SLO
+//! signal* recovers attainment/cost headroom hand-tuning leaves on the
+//! table — provided exploration is budget-consistent (a bounded share
+//! of the error budget may be spent probing) and crash-guarded (an arm
+//! that burns hot is abandoned immediately).
+//!
+//! [`Tuned`] wraps any [`Policy`] that declares knobs
+//! ([`Policy::knobs`]) and races a deterministic, seeded set of
+//! configurations ("arms") drawn from the declared lattice with
+//! successive halving: every arm is measured for
+//! [`TunerConfig::windows_per_arm`] evaluation windows against the
+//! multiwindow burn-rate signal ([`SloMonitor`]/[`crate::slo::budget`]),
+//! the worse half is eliminated each rung (the incumbent is immune),
+//! and the last survivor is promoted only if it did not lose to the
+//! incumbent on attainment. Guards, in the SLO-Guard shape:
+//!
+//! * **fast-burn revert** — an exploration arm whose window pushes the
+//!   fast burn rate past [`TunerConfig::revert_burn`] is reverted to
+//!   the incumbent at the boundary and eliminated;
+//! * **exploration budget cap** — at most
+//!   [`TunerConfig::explore_budget_frac`] of the rolling error budget
+//!   may be spent on SLO misses observed under exploration arms; past
+//!   the cap, exploration freezes and the incumbent is pinned for the
+//!   rest of the run.
+//!
+//! Every decision is appended to a [`TunerLog`] and checked against
+//! [`StateAudit::check_tuner`] at the boundary it lands on (knob values
+//! inside the declared lattice, one decision batch per evaluation
+//! window, reverts restoring the incumbent bit-exactly) — a violation
+//! is a programming error and panics, benches included.
+//!
+//! Determinism follows the [`Governed`](crate::slo::Governed) template:
+//! evaluation instants live on an *absolute* time grid declared through
+//! [`Wake::At`], every knob move happens inside a mutating callback at
+//! such a boundary, and arm lattices are pure hashes of the seed — so
+//! tuned runs are bit-identical under dense and coalesced ticking, and
+//! a [`TunerConfig::explore`]` = false` wrapper never calls
+//! [`Policy::set_knob`] at all and is a bit-exact pass-through
+//! (property-enforced in `tests/prop_policies.rs`).
+
+use crate::cluster::{ClusterState, KnobSpec, KnobStat, Policy, RetryEvent,
+                     RevokeEvent, StateAudit, TunedPrompt, TunerAction,
+                     TunerDecision, TunerLog, TunerReport, Wake};
+use crate::slo::monitor::SloMonitor;
+use crate::slo::SloConfig;
+use crate::util::rng::Rng;
+use crate::workload::Llm;
+
+/// Tuner parameters. Defaults size the race for multi-hour scenario
+/// traces: 6 arms × 2 windows × 30 s converges in roughly 12 minutes
+/// of simulated time, leaving the bulk of the run to exploit the
+/// winner.
+#[derive(Clone, Debug)]
+pub struct TunerConfig {
+    /// SLO target and burn windows for the tuner's own monitor.
+    pub slo: SloConfig,
+    /// Evaluation-window period, seconds (the decision grid).
+    pub eval_period_s: f64,
+    /// Evaluation windows each live arm is measured for per rung.
+    pub windows_per_arm: usize,
+    /// Total arms, incumbent included (arm 0 is always the incumbent
+    /// configuration).
+    pub n_arms: usize,
+    /// Master switch: `false` never calls `set_knob` — the wrapper is a
+    /// bit-exact pass-through (property-enforced).
+    pub explore: bool,
+    /// Hard cap on exploration spend, as a fraction of the error
+    /// budget: exploration freezes once the SLO misses observed under
+    /// exploration arms exceed `explore_budget_frac × budget_frac ×
+    /// total completions`.
+    pub explore_budget_frac: f64,
+    /// Fast-burn rate at which a live exploration arm is immediately
+    /// reverted to the incumbent and eliminated.
+    pub revert_burn: f64,
+    /// Seed for the deterministic arm-lattice assignment.
+    pub seed: u64,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            slo: SloConfig::default(),
+            eval_period_s: 30.0,
+            windows_per_arm: 2,
+            n_arms: 6,
+            explore: true,
+            explore_budget_frac: 0.25,
+            revert_burn: 2.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Measurement accumulated for one arm over its rung windows.
+#[derive(Clone, Copy, Debug, Default)]
+struct ArmScore {
+    bad: u64,
+    total: u64,
+    /// Eliminated by the fast-burn guard: ranks behind everything.
+    burned: bool,
+}
+
+impl ArmScore {
+    fn bad_frac(&self) -> f64 {
+        if self.burned {
+            f64::INFINITY
+        } else if self.total == 0 {
+            0.0
+        } else {
+            self.bad as f64 / self.total as f64
+        }
+    }
+}
+
+/// The race state machine: which arm is on the cluster right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// `alive[pos]` is applied; measurement started at the recorded
+    /// budget counters.
+    Measuring { pos: usize },
+    /// Converged (or frozen): the incumbent is pinned, no more
+    /// boundaries are declared.
+    Done,
+}
+
+/// Online knob tuner over any knob-declaring [`Policy`] — see the
+/// module docs for the algorithm and guards.
+pub struct Tuned<P: Policy> {
+    inner: P,
+    pub cfg: TunerConfig,
+    pub monitor: SloMonitor,
+    name: String,
+    started: bool,
+    needs_round: bool,
+    next_eval_t: f64,
+    /// Knob lattice snapshot (taken once, before any mutation).
+    specs: Vec<KnobSpec>,
+    /// Incumbent values per knob (snapshot of the hand-set config,
+    /// updated only by promotion).
+    incumbent: Vec<f64>,
+    /// Arm → per-knob values; `arms[0]` is the incumbent snapshot.
+    arms: Vec<Vec<f64>>,
+    /// Arms still racing this rung (always contains arm 0).
+    alive: Vec<usize>,
+    scores: Vec<ArmScore>,
+    phase: Phase,
+    /// Arm whose configuration is currently applied to the cluster.
+    active_arm: usize,
+    /// Windows the active arm has been measured for.
+    windows_done: usize,
+    /// Budget counters at the active arm's measurement start.
+    mark_bad: u64,
+    mark_total: u64,
+    /// SLO misses completed while a non-incumbent arm was active.
+    explore_bad: u64,
+    frozen: bool,
+    promotions: usize,
+    reverts: usize,
+    log: TunerLog,
+    min_seen: Vec<f64>,
+    max_seen: Vec<f64>,
+}
+
+impl<P: Policy> Tuned<P> {
+    pub fn new(inner: P, cfg: TunerConfig) -> Self {
+        let name = format!("{}+tuned", inner.name());
+        let monitor = SloMonitor::new(cfg.slo.clone());
+        Tuned {
+            inner,
+            monitor,
+            name,
+            started: false,
+            needs_round: true,
+            next_eval_t: 0.0,
+            specs: vec![],
+            incumbent: vec![],
+            arms: vec![],
+            alive: vec![],
+            scores: vec![],
+            phase: Phase::Done,
+            active_arm: 0,
+            windows_done: 0,
+            mark_bad: 0,
+            mark_total: 0,
+            explore_bad: 0,
+            frozen: false,
+            promotions: 0,
+            reverts: 0,
+            log: TunerLog::default(),
+            min_seen: vec![],
+            max_seen: vec![],
+        }
+    }
+
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+
+    /// The audited decision log.
+    pub fn log(&self) -> &TunerLog {
+        &self.log
+    }
+
+    /// The knob-lattice snapshot the race runs over (empty until the
+    /// first event, or when the inner policy declares nothing).
+    pub fn specs(&self) -> &[KnobSpec] {
+        &self.specs
+    }
+
+    /// Run [`StateAudit::check_tuner`] over the decision log as it
+    /// stands. Called internally after every decision batch (a
+    /// violation panics — it is a tuner bug, not a workload property);
+    /// public so tests and harnesses can re-assert on the final log.
+    pub fn audit_violations(&self) -> Vec<String> {
+        let mut out = vec![];
+        StateAudit::check_tuner(
+            &self.log,
+            &self.specs,
+            self.arms.first().map(Vec::as_slice).unwrap_or(&[]),
+            self.cfg.eval_period_s,
+            &mut out,
+        );
+        out
+    }
+
+    fn ensure_started(&mut self, st: &mut ClusterState) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        let _ = st;
+        if !self.cfg.explore {
+            return; // pass-through: no snapshot, no grid, no decisions
+        }
+        // Snapshot the declared lattice and the hand-set (incumbent)
+        // values *before* any mutation, so bounds and the revert target
+        // cannot drift however the knobs move later.
+        self.specs = self
+            .inner
+            .knobs()
+            .into_iter()
+            .filter(|s| self.inner.knob_value(s.name).is_some())
+            .collect();
+        if self.specs.is_empty() {
+            return; // nothing declared: stay a pass-through
+        }
+        self.incumbent = self
+            .specs
+            .iter()
+            .map(|s| self.inner.knob_value(s.name).expect("filtered above"))
+            .collect();
+        self.min_seen = self.incumbent.clone();
+        self.max_seen = self.incumbent.clone();
+        // Arm 0 is the incumbent; arms 1.. are seeded lattice draws
+        // (pure hashes — no RNG state survives, so dense and coalesced
+        // runs build identical arms).
+        let n_arms = self.cfg.n_arms.max(2);
+        self.arms.push(self.incumbent.clone());
+        for arm in 1..n_arms {
+            let values = self
+                .specs
+                .iter()
+                .enumerate()
+                .map(|(k, spec)| {
+                    let key = self
+                        .cfg
+                        .seed
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        .wrapping_add((arm as u64) << 32)
+                        .wrapping_add(k as u64 + 1);
+                    let idx = Rng::new(key).below(spec.steps.max(2));
+                    spec.value_at(idx)
+                })
+                .collect();
+            self.arms.push(values);
+        }
+        self.alive = (0..n_arms).collect();
+        self.scores = vec![ArmScore::default(); n_arms];
+        self.phase = Phase::Measuring { pos: 0 };
+        self.active_arm = 0;
+        self.mark_bad = self.monitor.gauge.budget.bad_seen;
+        self.mark_total = self.monitor.gauge.budget.total_seen;
+        // First boundary on the absolute grid (strictly after t = 0).
+        self.next_eval_t = self.cfg.eval_period_s;
+    }
+
+    /// Apply `arm`'s configuration and log one `action` decision per
+    /// knob at boundary `t` (one batch: identical timestamps).
+    fn apply_arm(&mut self, st: &mut ClusterState, t: f64, arm: usize,
+                 action: TunerAction) {
+        for (k, spec) in self.specs.iter().enumerate() {
+            let value = self.arms[arm][k];
+            self.inner.set_knob(st, spec.name, value);
+            if value < self.min_seen[k] {
+                self.min_seen[k] = value;
+            }
+            if value > self.max_seen[k] {
+                self.max_seen[k] = value;
+            }
+            self.log.decisions.push(TunerDecision {
+                t,
+                action,
+                arm,
+                knob: spec.name,
+                value,
+            });
+        }
+        self.active_arm = arm;
+        self.needs_round = true;
+        match action {
+            TunerAction::Promote => self.promotions += 1,
+            TunerAction::Revert => self.reverts += 1,
+            _ => {}
+        }
+        // Self-audit the batch just logged: lattice bounds, one batch
+        // per window, revert conservation. A violation here is a tuner
+        // bug — fail loudly everywhere, benches included.
+        let violations = self.audit_violations();
+        assert!(
+            violations.is_empty(),
+            "Tuned[{}]: illegal decision batch: {}",
+            self.name,
+            violations.join("; ")
+        );
+    }
+
+    /// Start measuring the arm at `alive[pos]`.
+    fn start_measuring(&mut self, st: &mut ClusterState, t: f64, pos: usize) {
+        let arm = self.alive[pos];
+        self.phase = Phase::Measuring { pos };
+        self.windows_done = 0;
+        self.mark_bad = self.monitor.gauge.budget.bad_seen;
+        self.mark_total = self.monitor.gauge.budget.total_seen;
+        self.apply_arm(st, t, arm, TunerAction::Explore);
+    }
+
+    /// Rung complete: rank, halve (incumbent immune), and either start
+    /// the next rung or settle the race.
+    fn finish_rung(&mut self, st: &mut ClusterState, t: f64) {
+        // Rank alive arms: attainment first (lower bad fraction), then
+        // cheaper capacity, then arm index for determinism.
+        let cap_of = |this: &Self, arm: usize| -> f64 {
+            this.specs
+                .iter()
+                .position(|s| s.name == "capacity")
+                .map(|k| this.arms[arm][k])
+                .unwrap_or(0.0)
+        };
+        let mut ranked = self.alive.clone();
+        ranked.sort_by(|&a, &b| {
+            let fa = self.scores[a].bad_frac();
+            let fb = self.scores[b].bad_frac();
+            fa.partial_cmp(&fb)
+                .unwrap()
+                .then(
+                    cap_of(self, a)
+                        .partial_cmp(&cap_of(self, b))
+                        .unwrap(),
+                )
+                .then(a.cmp(&b))
+        });
+        if ranked.len() <= 2 {
+            // Final rung: promote the winner only if it did not lose to
+            // the incumbent on attainment — tuning never structurally
+            // hurts the SLO.
+            let winner = ranked[0];
+            if winner != 0
+                && self.scores[winner].bad_frac()
+                    <= self.scores[0].bad_frac()
+            {
+                // NB: `arms[0]` keeps the *original* hand-set snapshot —
+                // `check_tuner` replays the log from it and tracks the
+                // promotion itself; only the live incumbent moves.
+                self.incumbent = self.arms[winner].clone();
+                self.apply_arm(st, t, winner, TunerAction::Promote);
+            } else if self.active_arm != 0 {
+                self.apply_arm(st, t, 0, TunerAction::Revert);
+            }
+            self.phase = Phase::Done;
+            return;
+        }
+        let keep = ranked.len().div_ceil(2);
+        let mut kept: Vec<usize> = ranked[..keep].to_vec();
+        if !kept.contains(&0) {
+            kept.push(0); // the incumbent is immune to elimination
+        }
+        kept.sort_unstable();
+        self.alive = kept;
+        for &arm in &self.alive {
+            self.scores[arm] = ArmScore::default();
+        }
+        self.start_measuring(st, t, 0);
+    }
+
+    /// One evaluation-window boundary (rate-limited to the absolute
+    /// grid, like `Governed::govern`): close the active arm's window,
+    /// run the guards, and advance the race.
+    fn tune(&mut self, st: &mut ClusterState) {
+        let Phase::Measuring { pos } = self.phase else {
+            return;
+        };
+        let now = st.now();
+        if now < self.next_eval_t {
+            return;
+        }
+        // Absolute-grid re-arm: evaluation instants are a pure function
+        // of simulated time, never of which rounds executed — the
+        // backbone of dense/coalesced bit-identity.
+        self.next_eval_t = self.cfg.eval_period_s
+            * ((now / self.cfg.eval_period_s).floor() + 1.0);
+        self.monitor.gauge.advance(now);
+
+        // Budget-consistency guard: exploration may spend at most
+        // `explore_budget_frac` of the rolling error budget. Past the
+        // cap, pin the incumbent for good.
+        let budget = &self.monitor.gauge.budget;
+        let cap = self.cfg.explore_budget_frac
+            * budget.budget_frac()
+            * budget.total_seen as f64;
+        if self.explore_bad as f64 > cap {
+            if self.active_arm != 0 {
+                self.apply_arm(st, now, 0, TunerAction::Freeze);
+            } else {
+                // Already on the incumbent: log the freeze for audit
+                // without moving any knob.
+                for (k, spec) in self.specs.iter().enumerate() {
+                    self.log.decisions.push(TunerDecision {
+                        t: now,
+                        action: TunerAction::Freeze,
+                        arm: 0,
+                        knob: spec.name,
+                        value: self.incumbent[k],
+                    });
+                }
+            }
+            self.frozen = true;
+            self.phase = Phase::Done;
+            return;
+        }
+
+        // Fast-burn guard: a hot exploration arm is reverted at the
+        // first boundary that sees it and eliminated from the race.
+        let gauge = &self.monitor.gauge;
+        if self.active_arm != 0
+            && gauge.fast.len() >= gauge.min_samples
+            && gauge.fast_burn() >= self.cfg.revert_burn
+        {
+            let burned = self.active_arm;
+            self.scores[burned].burned = true;
+            self.alive.retain(|&a| a != burned);
+            self.apply_arm(st, now, 0, TunerAction::Revert);
+            // `pos` now indexes the next arm (the burned one was
+            // removed); resume the rung at the next boundary.
+            if pos >= self.alive.len() {
+                self.finish_rung(st, now);
+            } else {
+                self.phase = Phase::Measuring { pos };
+                self.windows_done = 0;
+                self.mark_bad = self.monitor.gauge.budget.bad_seen;
+                self.mark_total = self.monitor.gauge.budget.total_seen;
+            }
+            return;
+        }
+
+        self.windows_done += 1;
+        if self.windows_done < self.cfg.windows_per_arm {
+            return; // keep measuring the same arm
+        }
+        // Window quota reached: book the arm's score and move on.
+        let arm = self.alive[pos];
+        let score = &mut self.scores[arm];
+        score.bad += self.monitor.gauge.budget.bad_seen - self.mark_bad;
+        score.total +=
+            self.monitor.gauge.budget.total_seen - self.mark_total;
+        if pos + 1 < self.alive.len() {
+            self.start_measuring(st, now, pos + 1);
+        } else {
+            self.finish_rung(st, now);
+        }
+    }
+
+    /// End-of-run telemetry (also available mid-run).
+    pub fn report(&self) -> TunerReport {
+        TunerReport {
+            knobs: self
+                .specs
+                .iter()
+                .enumerate()
+                .map(|(k, s)| KnobStat {
+                    name: s.name,
+                    lo: s.lo,
+                    hi: s.hi,
+                    value: self.incumbent[k],
+                    min_seen: self.min_seen[k],
+                    max_seen: self.max_seen[k],
+                })
+                .collect(),
+            decisions: self.log.decisions.len(),
+            promotions: self.promotions,
+            reverts: self.reverts,
+            explore_bad: self.explore_bad as usize,
+            frozen: self.frozen,
+        }
+    }
+}
+
+/// Earliest of two wake hints.
+fn earliest(a: Wake, b: Wake) -> Wake {
+    match (a, b) {
+        (Wake::Dense, _) | (_, Wake::Dense) => Wake::Dense,
+        (Wake::Idle, w) | (w, Wake::Idle) => w,
+        (Wake::At(x), Wake::At(y)) => Wake::At(x.min(y)),
+    }
+}
+
+impl<P: Policy> Policy for Tuned<P> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick_interval(&self) -> f64 {
+        self.inner.tick_interval()
+    }
+
+    fn on_arrival(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.ensure_started(st);
+        self.monitor.note_arrival(st);
+        self.inner.on_arrival(st, job_id);
+        self.tune(st);
+        self.needs_round = true;
+    }
+
+    fn on_job_complete(&mut self, st: &mut ClusterState, job_id: usize) {
+        self.inner.on_job_complete(st, job_id);
+        if self.cfg.explore
+            && self.active_arm != 0
+            && !st.jobs[job_id].met_slo()
+        {
+            // Exploration spend: an SLO miss completed under a
+            // non-incumbent arm is charged to the exploration budget.
+            self.explore_bad += 1;
+        }
+        self.monitor.note_completion(st, job_id, false);
+        self.tune(st);
+    }
+
+    fn on_revoke(&mut self, st: &mut ClusterState, ev: &RevokeEvent) {
+        self.inner.on_revoke(st, ev);
+        self.needs_round = true;
+    }
+
+    fn on_retry(&mut self, st: &mut ClusterState, ev: &RetryEvent) {
+        self.inner.on_retry(st, ev);
+        self.tune(st);
+        self.needs_round = true;
+    }
+
+    fn on_tick(&mut self, st: &mut ClusterState) {
+        self.ensure_started(st);
+        self.needs_round = false;
+        self.inner.on_tick(st);
+        self.monitor.note_round(st);
+        self.tune(st);
+    }
+
+    fn next_timed_action(&self, st: &ClusterState) -> Wake {
+        if self.needs_round {
+            return Wake::Dense;
+        }
+        let wake = self.inner.next_timed_action(st);
+        // The evaluation grid is declared only while the race is live:
+        // rounds before `next_eval_t` are provable no-ops for the tuner
+        // (tune() is clock-gated), and once the race settles the
+        // wrapper declares nothing — a settled Tuned<P> coalesces
+        // exactly like bare P. Merging only ever makes the inner wake
+        // *earlier*, so no inner action can be starved.
+        if self.cfg.explore && self.phase != Phase::Done {
+            earliest(wake, Wake::At(self.next_eval_t))
+        } else {
+            wake
+        }
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        self.inner.capacity()
+    }
+
+    fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
+        self.inner.set_capacity(st, gpus);
+        self.needs_round = true;
+    }
+
+    // Gossip hooks: pure pass-throughs — the tuner owns no bank.
+    fn bank_coverage(&self, llm: Llm, task_id: usize) -> Option<f64> {
+        self.inner.bank_coverage(llm, task_id)
+    }
+
+    fn enable_gossip_log(&mut self) {
+        self.inner.enable_gossip_log()
+    }
+
+    fn drain_tuned(&mut self, out: &mut Vec<TunedPrompt>) {
+        self.inner.drain_tuned(out)
+    }
+
+    fn absorb_tuned(&mut self, items: &[TunedPrompt]) {
+        self.inner.absorb_tuned(items)
+    }
+
+    // Knob hooks are deliberately NOT forwarded: the tuner consumes its
+    // inner policy's declarations; re-exporting them outward would
+    // invite a second tuner to fight this one over the same knobs.
+
+    fn tuner_report(&self) -> Option<TunerReport> {
+        Some(self.report())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{SimConfig, SimOracle, Simulator};
+    use crate::coordinator::{PromptTuner, PromptTunerConfig};
+    use crate::scenario::Scenario;
+    use crate::workload::PerfModel;
+
+    fn run_tuned(explore: bool, seed: u64) -> (crate::cluster::SimResult,
+                                               TunerReport, Vec<String>) {
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 20 };
+        let jobs = sc.generate(seed, 1.0).unwrap();
+        let base = 32;
+        // Widen the provider budget to the capacity knob's upper bound
+        // so an up-lattice arm is actually realizable (mirrors what the
+        // bench harness does for governed/tuned cells).
+        let sim = Simulator::new(
+            SimConfig { max_gpus: base + base / 4, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = Tuned::new(
+            PromptTuner::new(PromptTunerConfig {
+                max_gpus: base,
+                seed,
+                ..Default::default()
+            }),
+            TunerConfig { explore, ..Default::default() },
+        );
+        let result = sim.run(&mut policy, jobs);
+        let report = policy.report();
+        let violations = policy.audit_violations();
+        (result, report, violations)
+    }
+
+    #[test]
+    fn exploration_off_is_a_bit_exact_pass_through() {
+        let seed = 47;
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 20 };
+        let mk_sim = || Simulator::new(
+            SimConfig { max_gpus: 32, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mk_inner = || PromptTuner::new(PromptTunerConfig {
+            max_gpus: 32,
+            seed,
+            ..Default::default()
+        });
+        let bare = mk_sim().run(&mut mk_inner(), sc.generate(seed, 1.0)
+                                                    .unwrap());
+        let mut wrapped = Tuned::new(
+            mk_inner(),
+            TunerConfig { explore: false, ..Default::default() },
+        );
+        let tuned = mk_sim().run(&mut wrapped, sc.generate(seed, 1.0)
+                                                  .unwrap());
+        assert_eq!(bare.n_done, tuned.n_done);
+        assert_eq!(bare.n_violations, tuned.n_violations);
+        assert_eq!(bare.cost_usd, tuned.cost_usd);
+        assert_eq!(bare.job_latencies, tuned.job_latencies);
+        assert_eq!(bare.util_timeline, tuned.util_timeline);
+        assert!(wrapped.log().decisions.is_empty(),
+                "pass-through must not decide anything");
+    }
+
+    #[test]
+    fn tuned_runs_are_deterministic_and_legal() {
+        let (a, ra, va) = run_tuned(true, 51);
+        let (b, rb, vb) = run_tuned(true, 51);
+        assert_eq!(a.n_done, b.n_done);
+        assert_eq!(a.cost_usd, b.cost_usd);
+        assert_eq!(a.job_latencies, b.job_latencies);
+        assert_eq!(ra.decisions, rb.decisions);
+        assert!(va.is_empty(), "{va:?}");
+        assert!(vb.is_empty(), "{vb:?}");
+        // The race actually ran: a decision log and full completion.
+        assert!(ra.decisions > 0, "tuner never acted");
+        assert_eq!(a.n_done, a.n_jobs, "tuned run stranded jobs");
+        // Every knob stat stays inside its declared lattice.
+        for k in &ra.knobs {
+            assert!(k.lo <= k.min_seen && k.max_seen <= k.hi,
+                    "{}: [{}, {}] seen [{}, {}]",
+                    k.name, k.lo, k.hi, k.min_seen, k.max_seen);
+            assert!(k.lo <= k.value && k.value <= k.hi, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn tuned_run_is_oracle_clean() {
+        let seed = 53;
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 20 };
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 40, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = SimOracle::new(Tuned::new(
+            PromptTuner::new(PromptTunerConfig {
+                max_gpus: 32,
+                seed,
+                ..Default::default()
+            }),
+            TunerConfig::default(),
+        ));
+        let r = sim.run(&mut policy, sc.generate(seed, 1.0).unwrap());
+        assert_eq!(r.n_done, r.n_jobs);
+        assert!(policy.audits() > 0);
+    }
+
+    #[test]
+    fn check_tuner_flags_out_of_lattice_and_mid_window_changes() {
+        let specs = [KnobSpec { name: "capacity", lo: 16.0, hi: 40.0,
+                                steps: 4 }];
+        let incumbent = [32.0];
+        // Out-of-lattice value.
+        let mut log = TunerLog::default();
+        log.decisions.push(TunerDecision {
+            t: 30.0, action: TunerAction::Explore, arm: 1,
+            knob: "capacity", value: 48.0,
+        });
+        let mut out = vec![];
+        StateAudit::check_tuner(&log, &specs, &incumbent, 30.0, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("lattice"), "{out:?}");
+        // Two decision batches inside one window.
+        let mut log = TunerLog::default();
+        for t in [30.0, 45.0] {
+            log.decisions.push(TunerDecision {
+                t, action: TunerAction::Explore, arm: 1,
+                knob: "capacity", value: 24.0,
+            });
+        }
+        let mut out = vec![];
+        StateAudit::check_tuner(&log, &specs, &incumbent, 30.0, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("window"), "{out:?}");
+        // A revert that fails to restore the incumbent.
+        let mut log = TunerLog::default();
+        log.decisions.push(TunerDecision {
+            t: 30.0, action: TunerAction::Revert, arm: 0,
+            knob: "capacity", value: 24.0,
+        });
+        let mut out = vec![];
+        StateAudit::check_tuner(&log, &specs, &incumbent, 30.0, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].contains("conserve"), "{out:?}");
+    }
+
+    #[test]
+    fn checkpoint_period_knob_is_declared_and_tunable() {
+        use crate::cluster::CheckpointModel;
+        use crate::fault::{FaultInjector, FaultPlan};
+        let fi = FaultInjector::new(
+            PromptTuner::new(PromptTunerConfig::default()),
+            FaultPlan::new(vec![]),
+            CheckpointModel::default(),
+        );
+        // The injector declares its own knob on top of the inner set.
+        assert!(fi.knobs().iter().any(|s| s.name == "checkpoint_period_s"));
+        assert_eq!(fi.knob_value("checkpoint_period_s"), Some(60.0));
+        assert_eq!(fi.knob_value("capacity"), Some(32.0));
+        // And the tuner can race it end-to-end without stranding jobs.
+        let seed = 59;
+        let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                        jobs_per_llm: 20 };
+        let sim = Simulator::new(
+            SimConfig { max_gpus: 40, ..Default::default() },
+            PerfModel::default(),
+        );
+        let mut policy = Tuned::new(fi, TunerConfig::default());
+        let r = sim.run(&mut policy, sc.generate(seed, 1.0).unwrap());
+        assert_eq!(r.n_done, r.n_jobs);
+        let rep = policy.report();
+        assert!(rep.knobs.iter().any(|k| k.name == "checkpoint_period_s"));
+        assert!(policy.audit_violations().is_empty());
+    }
+}

@@ -7,11 +7,13 @@
 
 use prompttuner::baselines::{ElasticFlow, ElasticFlowConfig, Infless, InflessConfig};
 use prompttuner::bench::{self, SweepCell, SYSTEMS};
-use prompttuner::cluster::{ClusterState, Policy, RetryEvent, RevokeEvent,
-                           SimConfig, SimOracle, Simulator, Wake};
+use prompttuner::cluster::{ClusterState, KnobSpec, Policy, RetryEvent,
+                           RevokeEvent, SimConfig, SimOracle, Simulator,
+                           TunerReport, Wake};
 use prompttuner::fault::ChaosKind;
 use prompttuner::coordinator::{PromptTuner, PromptTunerConfig};
 use prompttuner::scenario::Scenario;
+use prompttuner::slo::{GovernorConfig, Tuned, TunerConfig};
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};
 use prompttuner::util::prop::{check, check_sized, ensure};
 use prompttuner::util::rng::Rng;
@@ -119,6 +121,18 @@ impl Policy for DenseTick {
     }
     fn set_capacity(&mut self, st: &mut ClusterState, gpus: usize) {
         self.0.set_capacity(st, gpus)
+    }
+    fn knobs(&self) -> Vec<KnobSpec> {
+        self.0.knobs()
+    }
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        self.0.knob_value(name)
+    }
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        self.0.set_knob(st, name, value)
+    }
+    fn tuner_report(&self) -> Option<TunerReport> {
+        self.0.tuner_report()
     }
     // next_timed_action: default Wake::Dense — never coalesce.
 }
@@ -321,6 +335,110 @@ fn prop_batch_skip_is_sublinear_on_idle_heavy_trace() {
              sublinear on an idle-heavy trace",
             res.rounds_executed, grid,
         );
+    }
+}
+
+/// With exploration off, `Tuned<P>` must be a bit-exact pass-through
+/// for every system: it never calls `set_knob`, its evaluation grid is
+/// never declared, and the monitor only observes. Same argument as the
+/// neutral-governor property — any extra executed rounds would be
+/// no-ops the inner policy declared skippable, and here not even those
+/// exist.
+#[test]
+fn prop_tuned_exploration_off_is_a_bit_exact_pass_through() {
+    let sc = Scenario::FlashCrowd { storms: 2, intensity: 10.0,
+                                    jobs_per_llm: 20 };
+    let seed = 47;
+    let gpus = 32;
+    for system in SYSTEMS {
+        let cell = SweepCell::scenario(
+            format!("pt-eq/{system}"), system, sc.clone(), 1.0, gpus, seed);
+        let mk_sim = || Simulator::new(
+            SimConfig { max_gpus: gpus, ..Default::default() },
+            PerfModel::default(),
+        );
+        let bare = mk_sim().run(
+            bench::make_policy(&cell).as_mut(), bench::gen_jobs(&cell));
+        let mut wrapped = Tuned::new(
+            bench::make_policy(&cell),
+            TunerConfig { explore: false, ..Default::default() },
+        );
+        let tuned = mk_sim().run(&mut wrapped, bench::gen_jobs(&cell));
+        assert_eq!(bare.n_done, tuned.n_done, "{system}");
+        assert_eq!(bare.n_violations, tuned.n_violations, "{system}");
+        assert_eq!(bare.cost_usd.to_bits(), tuned.cost_usd.to_bits(),
+                   "{system}: cost {} vs {}", bare.cost_usd, tuned.cost_usd);
+        assert_eq!(bare.job_latencies, tuned.job_latencies, "{system}");
+        assert_eq!(bare.util_timeline, tuned.util_timeline, "{system}");
+        assert!(wrapped.log().decisions.is_empty(),
+                "{system}: pass-through decided something");
+    }
+}
+
+/// Tuned runs must stay bit-identical dense-vs-coalesced: every knob
+/// move happens at a `Wake::At` evaluation boundary on an absolute time
+/// grid, so batch-skipping rounds can never change what the tuner sees
+/// or does. Both runs execute under the strict in-loop oracle (which
+/// also re-audits cluster invariants after every `set_knob`).
+#[test]
+fn prop_tuned_runs_are_coalescing_invariant() {
+    let scenarios = [
+        Scenario::FlashCrowd { storms: 2, intensity: 20.0,
+                               jobs_per_llm: 30 },
+        Scenario::TaskDrift { drift_at_frac: 0.4, novel_tasks: 8,
+                              jobs_per_llm: 30 },
+    ];
+    let gpus = 32;
+    for sc in &scenarios {
+        for system in SYSTEMS {
+            let cell = SweepCell::scenario(
+                format!("tuned-eq/{}/{system}", sc.name()),
+                system, sc.clone(), 1.0, gpus, 47,
+            ).tuned();
+            // Same surge-widened provider budget run_cell gives tuned
+            // cells, so up-lattice capacity arms are realizable.
+            let budget = GovernorConfig::for_cluster(gpus).ceiling_gpus;
+            let sim = Simulator::new(
+                SimConfig { max_gpus: budget, ..Default::default() },
+                PerfModel::default(),
+            );
+            let mut fast = SimOracle::collecting(bench::make_policy(&cell));
+            let fast_res = sim.run(&mut fast, bench::gen_jobs(&cell));
+            let mut dense =
+                SimOracle::collecting(DenseTick(bench::make_policy(&cell)));
+            let dense_res = sim.run(&mut dense, bench::gen_jobs(&cell));
+            let tag = format!("{}/{system}", sc.name());
+            assert!(dense_res.rounds_coalesced == 0,
+                    "{tag}: reference run coalesced");
+            assert!(fast.violations().is_empty(),
+                    "{tag}: oracle (fast): {:?}", fast.violations().first());
+            assert!(dense.violations().is_empty(),
+                    "{tag}: oracle (dense): {:?}",
+                    dense.violations().first());
+            assert_eq!(fast_res.n_done, dense_res.n_done, "{tag}");
+            assert_eq!(fast_res.n_violations, dense_res.n_violations,
+                       "{tag}");
+            assert_eq!(fast_res.cost_usd.to_bits(),
+                       dense_res.cost_usd.to_bits(),
+                       "{tag}: cost {} vs {}",
+                       fast_res.cost_usd, dense_res.cost_usd);
+            assert_eq!(fast_res.job_latencies, dense_res.job_latencies,
+                       "{tag}");
+            // The tuner raced identically in both runs.
+            let (fr, dr) = (fast.tuner_report(), dense.tuner_report());
+            let fr = fr.expect("tuned cell must report");
+            let dr = dr.expect("dense tuned cell must report");
+            assert_eq!(fr.decisions, dr.decisions, "{tag}");
+            assert_eq!(fr.promotions, dr.promotions, "{tag}");
+            assert_eq!(fr.reverts, dr.reverts, "{tag}");
+            assert!(fr.decisions > 0, "{tag}: the tuner never acted");
+            // and the executed/skipped rounds re-tile the dense grid
+            assert_eq!(
+                fast_res.rounds_executed + fast_res.rounds_coalesced,
+                dense_res.rounds_executed,
+                "{tag}: rounds do not re-tile the dense grid",
+            );
+        }
     }
 }
 

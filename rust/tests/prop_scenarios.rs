@@ -220,6 +220,18 @@ impl Policy for DenseTick {
     fn absorb_tuned(&mut self, items: &[prompttuner::cluster::TunedPrompt]) {
         self.0.absorb_tuned(items)
     }
+    fn knobs(&self) -> Vec<prompttuner::cluster::KnobSpec> {
+        self.0.knobs()
+    }
+    fn knob_value(&self, name: &str) -> Option<f64> {
+        self.0.knob_value(name)
+    }
+    fn set_knob(&mut self, st: &mut ClusterState, name: &str, value: f64) {
+        self.0.set_knob(st, name, value)
+    }
+    fn tuner_report(&self) -> Option<prompttuner::cluster::TunerReport> {
+        self.0.tuner_report()
+    }
     // next_timed_action: default Wake::Dense — never coalesce.
 }
 

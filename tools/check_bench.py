@@ -103,6 +103,8 @@ def load_record(path: str) -> dict:
         check_chaos(path, rec)
     if suite == "scale":
         check_scale(path, rec)
+    if suite == "tuning":
+        check_tuning(path, rec)
     return rec
 
 
@@ -514,6 +516,111 @@ def check_scale(path: str, rec: dict) -> None:
           f"{sorted(SCENARIO_SYSTEMS)}")
 
 
+# The self-tuning control-plane sweep (fig17) must cover these scenarios
+# under every system, tuned and hand-set.
+TUNING_SCENARIOS = {"diurnal", "flash-crowd", "task-drift", "chaos-flaky"}
+
+# Drifting scenarios where the hand-set config is stale by construction —
+# tuned PromptTuner must beat hand-set PromptTuner on at least one axis
+# (violations or cost) on at least one of them.
+TUNING_DRIFT = {"task-drift", "chaos-flaky"}
+
+# Per-knob telemetry every tuned cell must carry.
+TUNING_KNOB_KEYS = ["name", "lo", "hi", "value", "min_seen", "max_seen"]
+
+
+def check_tuning(path: str, rec: dict) -> None:
+    """Extra validation for BENCH_tuning.json: every cell is tagged with
+    a scenario and a boolean 'tuned' flag, coverage spans
+    {tuned, hand-set} x systems x scenarios, no cell strands jobs, every
+    tuned cell carries per-knob telemetry whose whole set-value
+    trajectory (and final incumbent) stays inside the declared lattice,
+    the tuner actually decided something somewhere, and tuned PromptTuner
+    beats hand-set PromptTuner on violations or cost on at least one
+    drifting scenario — the self-tuning control plane's reason to
+    exist."""
+    eps = 1e-6
+    seen = {}
+    total_decisions = 0
+    for i, cell in enumerate(rec["cells"]):
+        where = cell_name("tuning", i, cell)
+        name = cell.get("scenario")
+        if name not in TUNING_SCENARIOS:
+            fail(f"{path}: {where} has unexpected scenario '{name}'")
+        tuned = cell.get("tuned")
+        if not isinstance(tuned, bool):
+            fail(f"{path}: {where} has no boolean 'tuned' flag")
+        if cell["n_jobs"] <= 0:
+            fail(f"{path}: {where} ({name}) ran no jobs")
+        if cell["n_done"] != cell["n_jobs"]:
+            fail(f"{path}: {where} ({name}) stranded jobs "
+                 f"({cell['n_done']}/{cell['n_jobs']} done) — knob moves "
+                 f"must never lose work")
+        if tuned:
+            knobs = cell.get("knobs")
+            if not isinstance(knobs, list) or not knobs:
+                fail(f"{path}: {where} is tuned but carries no knob "
+                     f"telemetry")
+            for k in knobs:
+                for key in TUNING_KNOB_KEYS:
+                    if key not in k:
+                        fail(f"{path}: {where} knob missing key '{key}'")
+                kname = k["name"]
+                if not k["lo"] <= k["hi"]:
+                    fail(f"{path}: {where} knob '{kname}' has inverted "
+                         f"lattice [{k['lo']}, {k['hi']}]")
+                if not (k["lo"] - eps <= k["min_seen"]
+                        and k["min_seen"] <= k["max_seen"]
+                        and k["max_seen"] <= k["hi"] + eps):
+                    fail(f"{path}: {where} knob '{kname}' trajectory "
+                         f"[{k['min_seen']}, {k['max_seen']}] escapes its "
+                         f"declared lattice [{k['lo']}, {k['hi']}]")
+                if not k["lo"] - eps <= k["value"] <= k["hi"] + eps:
+                    fail(f"{path}: {where} knob '{kname}' incumbent "
+                         f"{k['value']} outside its declared lattice "
+                         f"[{k['lo']}, {k['hi']}]")
+            decisions = cell.get("tuner_decisions")
+            if not isinstance(decisions, int) or decisions < 0:
+                fail(f"{path}: {where} is tuned but has no "
+                     f"'tuner_decisions' count")
+            total_decisions += decisions
+        seen.setdefault((name, cell["system"]), set()).add(tuned)
+    for name in sorted(TUNING_SCENARIOS):
+        for system in sorted(SCENARIO_SYSTEMS):
+            if seen.get((name, system), set()) != {False, True}:
+                fail(f"{path}: tuning suite missing a tuned/hand-set pair "
+                     f"for ({name}, {system})")
+    if total_decisions == 0:
+        fail(f"{path}: no tuned cell recorded a tuner decision — the "
+             f"knob race never engaged")
+
+    def pick(name: str, tuned: bool) -> dict:
+        for cell in rec["cells"]:
+            if (cell["scenario"] == name
+                    and cell["system"] == "prompttuner"
+                    and cell["tuned"] is tuned):
+                return cell
+        fail(f"{path}: no {name} prompttuner cell with tuned={tuned}")
+
+    improved = []
+    for name in sorted(TUNING_DRIFT):
+        tuned, hand = pick(name, True), pick(name, False)
+        t_viol = tuned["n_violations"] / max(tuned["n_jobs"], 1)
+        h_viol = hand["n_violations"] / max(hand["n_jobs"], 1)
+        print(f"check_bench: tuning {name}/prompttuner tuned vs hand-set: "
+              f"violations {t_viol:.3f} vs {h_viol:.3f}, "
+              f"cost {tuned['cost_usd']:.2f} vs {hand['cost_usd']:.2f}")
+        if t_viol < h_viol or tuned["cost_usd"] < hand["cost_usd"]:
+            improved.append(name)
+    if not improved:
+        fail(f"{path}: tuned prompttuner improves neither violation rate "
+             f"nor cost on any drifting scenario "
+             f"({sorted(TUNING_DRIFT)})")
+    print(f"check_bench: tuning suite covers {sorted(TUNING_SCENARIOS)} x "
+          f"{sorted(SCENARIO_SYSTEMS)} x {{tuned, hand-set}}, "
+          f"{total_decisions} decisions, improvement on {sorted(improved)}")
+
+
 def cell_key(cell: dict) -> tuple:
     return (cell["label"], cell["system"], cell["seed"], cell["gpus"])
 
@@ -550,6 +657,12 @@ def main() -> None:
     zero = [cell_key(c) for c in base.get("cells", [])
             if not c.get("wall_s")]
     if zero:
+        # GitHub Actions workflow-command annotation (stdout): surfaces
+        # the inert cells on the run's summary page, not just in the log.
+        print(f"::warning title=Inert bench baseline::{args.baseline} has "
+              f"{len(zero)} cell(s) with wall_s == 0.0; the wall-clock "
+              f"regression gate is inert for those cells. Re-run the bench "
+              f"on a toolchain machine and commit the measured record.")
         print("=" * 72, file=sys.stderr)
         print(f"check_bench: WARNING: baseline {args.baseline} has "
               f"{len(zero)} cell(s) with wall_s == 0.0 — the wall-clock "
