@@ -14,7 +14,8 @@
 #![allow(dead_code)]
 
 pub use prompttuner::bench::{
-    run_cell, run_sweep, BenchReport, CellResult, SweepCell, SYSTEMS,
+    run_cell, run_parallel, run_sweep, BenchReport, CellResult, SweepCell,
+    SYSTEMS,
 };
 use prompttuner::cluster::{Policy, SimConfig, SimResult, Simulator};
 use prompttuner::trace::{Load, TraceConfig, TraceGenerator};

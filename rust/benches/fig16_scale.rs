@@ -3,32 +3,40 @@
 //! and fed from streaming `trace::ScaleSource` traces (resident memory
 //! stays one minute's batch however long the trace is).
 //!
-//! Four tiers per system:
+//! Five tiers per system:
 //! * **conf** — 1 shard × 32 GPUs, gossip off: the plane degenerates to
 //!   the unsharded simulator (bit-identity is property-enforced by
 //!   tests/prop_shard.rs; this tier keeps the configuration exercised
 //!   under the CI oracle);
 //! * **gossip-off / gossip-on** — 4 × 32 over an all-novel-task trace:
 //!   the cross-shard prompt-synchronization ablation the scale suite
-//!   gates on (gossip must lift mean prompt quality);
+//!   gates on (gossip must lift mean prompt quality). The gossip-on
+//!   cell runs on the parallel fork-join executor (≥ 2 workers);
+//! * **exec-seq** — the gossip-on configuration pinned to `workers = 1`
+//!   (the sequential inline executor). check_bench.py gates that its
+//!   metrics are *bit-identical* to the parallel gossip-on cell and
+//!   that parallel wall-clock is no worse than sequential;
 //! * **partition** — 4 × 32 under `ChaosProfile::partition` network
 //!   partitions: one shard per 600 s window is severed from the router
 //!   for 120 s, routing fails over, nothing is lost;
 //! * **mega** — 16 × 640 = 10,240 GPUs, a 3-day trace at 250 jobs/min
-//!   (~1M jobs), gossip on. The strict in-loop oracle is explicitly off
-//!   for this tier (it is O(jobs) per event); the plane's own
-//!   conservation/routing audits stay armed and fatal.
+//!   (~1M jobs), gossip on, parallel executor (≥ 2 workers). The strict
+//!   in-loop oracle is explicitly off for this tier (it is O(jobs) per
+//!   event); the plane's own conservation/routing audits stay armed and
+//!   fatal.
 //!
-//! Emits a BENCH_scale.json perf record; tools/check_bench.py validates
-//! tier × system coverage, 10k-GPU/1M-job floors on the mega tier,
-//! conservation (every routed job completes), the gossip quality lift,
-//! and that every cell reports positive event throughput.
+//! Executor width comes from `PT_PLANE_WORKERS` (CI pins 4) or the
+//! machine's available parallelism; every cell's record carries
+//! `plane_workers` + `plane_wall_s`. Emits a BENCH_scale.json perf
+//! record; tools/check_bench.py validates tier × system coverage,
+//! 10k-GPU/1M-job floors on the mega tier, conservation (every routed
+//! job completes), the gossip quality lift, the executor telemetry and
+//! the sequential-vs-parallel equality, and that every cell reports
+//! positive event throughput.
 
 #[path = "common.rs"]
 mod common;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use common::{BenchReport, CellResult, SweepCell};
@@ -76,6 +84,12 @@ fn tiers(seed: u64) -> Vec<PlaneCell> {
             let mut plane = ShardPlaneConfig::new(system, 4, 32, seed);
             plane.gossip = gossip;
             plane.gossip_period_s = 300.0;
+            if gossip {
+                // The gossip-on cell doubles as the parallel-executor
+                // cell: force at least two workers even on one core so
+                // the PoolExec path is always exercised and gated.
+                plane.workers = plane.workers.max(2);
+            }
             cells.push(PlaneCell {
                 label: format!("fig16/gossip-{}/4x32",
                                if gossip { "on" } else { "off" }),
@@ -83,6 +97,18 @@ fn tiers(seed: u64) -> Vec<PlaneCell> {
                 trace: ablation_trace.clone(),
             });
         }
+
+        // exec-seq: the gossip-on configuration pinned to the inline
+        // sequential executor. check_bench gates bit-identity and
+        // wall-clock against the parallel gossip-on cell.
+        let mut plane = ShardPlaneConfig::new(system, 4, 32, seed);
+        plane.gossip_period_s = 300.0;
+        plane.workers = 1;
+        cells.push(PlaneCell {
+            label: "fig16/exec-seq/4x32".into(),
+            plane,
+            trace: ablation_trace.clone(),
+        });
 
         // partition chaos: 4 x 32, one shard severed per 600 s window.
         let mut plane = ShardPlaneConfig::new(system, 4, 32, seed);
@@ -99,9 +125,10 @@ fn tiers(seed: u64) -> Vec<PlaneCell> {
             },
         });
 
-        // mega: 10,240 GPUs, ~1M jobs, 3 days.
+        // mega: 10,240 GPUs, ~1M jobs, 3 days, parallel executor.
         let mut plane = ShardPlaneConfig::new(system, 16, 640, seed);
         plane.gossip_period_s = 900.0;
+        plane.workers = plane.workers.max(2);
         // The strict per-event audit is O(jobs) per event — fine for the
         // small tiers under PT_SIM_ORACLE=1, quadratic death at 1M jobs.
         // The plane's own routing/conservation audits remain fatal.
@@ -138,7 +165,9 @@ fn run_plane(cell: &PlaneCell) -> (CellResult, u64, u64, u64) {
     let result = pr.merged();
     (
         CellResult { cell: sweep_cell, result,
-                     wall_s: t0.elapsed().as_secs_f64(), tuner: None },
+                     wall_s: t0.elapsed().as_secs_f64(), tuner: None,
+                     plane_workers: Some(pr.workers),
+                     plane_wall_s: Some(pr.wall_s) },
         pr.gossip_rounds,
         pr.gossip_items,
         pr.failovers,
@@ -150,43 +179,23 @@ fn main() {
     let cells = tiers(seed);
 
     let t0 = Instant::now();
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<(CellResult, u64, u64, u64)>>> =
-        cells.iter().map(|_| Mutex::new(None)).collect();
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(cells.len());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                let r = run_plane(&cells[i]);
-                *slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
+    let runs = common::run_parallel(&cells, run_plane);
     let total_wall = t0.elapsed().as_secs_f64();
-    let runs: Vec<(CellResult, u64, u64, u64)> = slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker dropped a plane"))
-        .collect();
 
     println!("=== Fig 16 — hyperscale shard plane ===");
     println!(
-        "{:<24} {:<13} {:>9} {:>9} {:>10} {:>12} {:>8} {:>8} {:>9}",
+        "{:<24} {:<13} {:>9} {:>9} {:>10} {:>12} {:>8} {:>8} {:>9} {:>7}",
         "tier", "system", "jobs", "done", "quality", "events/s",
-        "gossip", "items", "failovers"
+        "gossip", "items", "failovers", "workers"
     );
     for (cr, rounds, items, failovers) in &runs {
         println!(
-            "{:<24} {:<13} {:>9} {:>9} {:>10.4} {:>12.0} {:>8} {:>8} {:>9}",
+            "{:<24} {:<13} {:>9} {:>9} {:>10.4} {:>12.0} {:>8} {:>8} {:>9} \
+             {:>7}",
             cr.cell.label, cr.cell.system, cr.result.n_jobs,
             cr.result.n_done, cr.result.mean_prompt_quality,
-            cr.result.events_per_s(), rounds, items, failovers
+            cr.result.events_per_s(), rounds, items, failovers,
+            cr.plane_workers.unwrap_or(0)
         );
     }
 

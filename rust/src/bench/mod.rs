@@ -137,6 +137,12 @@ pub struct CellResult {
     /// End-of-run tuner telemetry (`Policy::tuner_report`): Some for
     /// tuned cells, None otherwise.
     pub tuner: Option<TunerReport>,
+    /// Shard-plane executor width (clamped): Some for plane cells
+    /// (fig16), None for single-simulator cells.
+    pub plane_workers: Option<usize>,
+    /// Wall-clock of the plane run itself, seconds (the cell `wall_s`
+    /// additionally covers trace/plane construction).
+    pub plane_wall_s: Option<f64>,
 }
 
 /// Build the policy a cell names (ablation override aware; governed
@@ -279,31 +285,39 @@ pub fn run_cell(cell: &SweepCell) -> CellResult {
         result,
         wall_s: t0.elapsed().as_secs_f64(),
         tuner,
+        plane_workers: None,
+        plane_wall_s: None,
     }
 }
 
-/// Run all cells across worker threads; results come back in input
-/// order. Cell execution order across threads is nondeterministic, but
-/// every cell is self-contained and seeded, so results are not.
-pub fn run_sweep(cells: &[SweepCell]) -> Vec<CellResult> {
-    if cells.is_empty() {
+/// Map `f` over `items` on a scoped worker pool (one worker per
+/// available core, capped at the item count); results come back in
+/// input order. Work-stealing via a shared atomic cursor — the shared
+/// harness behind [`run_sweep`] and the fig16 plane sweep.
+pub fn run_parallel<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
         return vec![];
     }
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
-        .min(cells.len());
+        .min(items.len());
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<CellResult>>> =
-        cells.iter().map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<R>>> =
+        items.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                if i >= items.len() {
                     break;
                 }
-                let r = run_cell(&cells[i]);
+                let r = f(&items[i]);
                 *slots[i].lock().unwrap() = Some(r);
             });
         }
@@ -313,9 +327,16 @@ pub fn run_sweep(cells: &[SweepCell]) -> Vec<CellResult> {
         .map(|m| {
             m.into_inner()
                 .unwrap()
-                .expect("worker thread dropped a cell")
+                .expect("worker thread dropped an item")
         })
         .collect()
+}
+
+/// Run all cells across worker threads; results come back in input
+/// order. Cell execution order across threads is nondeterministic, but
+/// every cell is self-contained and seeded, so results are not.
+pub fn run_sweep(cells: &[SweepCell]) -> Vec<CellResult> {
+    run_parallel(cells, run_cell)
 }
 
 // --------------------------------------------------------------- report
@@ -411,6 +432,14 @@ impl BenchReport {
             out.push_str(&format!("\"slo\": {}, ", json_f64(c.cell.slo)));
             out.push_str(&format!("\"scale\": {}, ", json_f64(c.cell.scale)));
             out.push_str(&format!("\"wall_s\": {}, ", json_f64(c.wall_s)));
+            // Shard-plane executor telemetry (fig16 cells only).
+            if let Some(w) = c.plane_workers {
+                out.push_str(&format!("\"plane_workers\": {w}, "));
+            }
+            if let Some(pw) = c.plane_wall_s {
+                out.push_str(&format!("\"plane_wall_s\": {}, ",
+                                      json_f64(pw)));
+            }
             out.push_str(&format!("\"rounds_executed\": {}, ",
                                   r.rounds_executed));
             // `rounds_skipped` is the canonical batch-skip counter;
@@ -721,5 +750,29 @@ mod tests {
         });
         let r = run_cell(&cell);
         assert_eq!(r.result.n_done, r.result.n_jobs);
+    }
+
+    #[test]
+    fn run_parallel_preserves_input_order_and_handles_empty() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = run_parallel(&items, |&x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+        let none: Vec<usize> = vec![];
+        assert!(run_parallel(&none, |&x: &usize| x).is_empty());
+    }
+
+    #[test]
+    fn plane_fields_are_emitted_only_when_present() {
+        let cell = SweepCell::new("p/prompttuner", "prompttuner",
+                                  Load::Low, 1.0, 8, 9);
+        let mut r = run_cell(&cell);
+        let plain = BenchReport::new("scale", vec![r.clone()], 0.1).to_json();
+        assert!(!plain.contains("plane_workers"));
+        assert!(!plain.contains("plane_wall_s"));
+        r.plane_workers = Some(4);
+        r.plane_wall_s = Some(1.25);
+        let tagged = BenchReport::new("scale", vec![r], 0.1).to_json();
+        assert!(tagged.contains("\"plane_workers\": 4, "));
+        assert!(tagged.contains("\"plane_wall_s\": 1.250000"));
     }
 }

@@ -2326,6 +2326,22 @@ impl StreamCore {
         &self.st
     }
 
+    /// Heap events processed so far (arrivals, completions, chaos
+    /// deliveries…). Part of the shard executor's score-cache staleness
+    /// stamp: a cell whose event count has not moved cannot have
+    /// changed its admitted/done/bank state through event callbacks.
+    pub fn events_processed(&self) -> u64 {
+        self.events
+    }
+
+    /// Scheduler rounds actually executed (coalesced idle rounds are
+    /// skipped and run no policy code). The second component of the
+    /// score-cache staleness stamp: busy/billable levels only move in
+    /// executed rounds or event callbacks.
+    pub fn rounds_executed(&self) -> u64 {
+        self.rounds
+    }
+
     /// Process every tick and heap event with key strictly before
     /// `limit` — the (time, seq) key of the caller's next injection, or
     /// `None` to run to completion. Returns `true` when the run ended,

@@ -19,6 +19,9 @@
 //! no RNG is consumed at lookup or insertion time beyond counters hashed
 //! into jitter, so dense and coalesced simulator runs stay identical.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+
 use crate::promptbank::bankapi::{task_feature, Bank};
 use crate::promptbank::kmedoid::cosine_distance;
 use crate::util::rng::Rng;
@@ -105,6 +108,14 @@ struct SimCluster {
     members: Vec<usize>,
 }
 
+/// Per-task memo of [`SimBank::quality_scan`] results, valid for one
+/// structural epoch of the bank.
+#[derive(Clone, Debug, Default)]
+struct QualityCache {
+    epoch: u64,
+    map: HashMap<usize, f64>,
+}
+
 /// Deterministic stateful bank for one LLM inside the simulator.
 #[derive(Clone, Debug)]
 pub struct SimBank {
@@ -115,6 +126,15 @@ pub struct SimBank {
     clusters: Vec<SimCluster>,
     /// Lifetime insertions (jitter stream position + telemetry).
     inserted: u64,
+    /// Structural epoch: bumped by every insertion, eviction and
+    /// ceiling change. `quality_for` memoizes per task while the epoch
+    /// holds — the scheduler re-scores whole queues per round against
+    /// banks that usually did not change.
+    epoch: u64,
+    /// Interior-mutable so the `&self` lookup path can memoize; lookup
+    /// results stay a pure function of bank state (bit-identity with
+    /// the uncached scan is property-enforced below).
+    cache: RefCell<QualityCache>,
 }
 
 impl SimBank {
@@ -130,6 +150,8 @@ impl SimBank {
             cands: vec![],
             clusters: vec![],
             inserted: 0,
+            epoch: 1,
+            cache: RefCell::new(QualityCache::default()),
         };
         let mut rng = Rng::new(
             seed ^ 0x5EED_BA4C_0000_0000
@@ -186,6 +208,7 @@ impl SimBank {
     /// member if the ceiling is exceeded. Deterministic — the only
     /// "randomness" is jitter hashed from the insertion counter.
     fn insert_candidate(&mut self, task_id: usize, quality: f64) {
+        self.epoch += 1;
         let mut feature = self.feature_of(task_id);
         let mut jr = Rng::new(
             self.feat_seed
@@ -309,6 +332,7 @@ impl SimBank {
     /// Remove a candidate by index (swap-remove with index fix-ups,
     /// mirroring `TwoLayerBank::remove_candidate`).
     fn remove_candidate(&mut self, idx: usize) {
+        self.epoch += 1;
         let last = self.cands.len() - 1;
         self.cands.swap_remove(idx);
         for cl in self.clusters.iter_mut() {
@@ -342,46 +366,16 @@ impl SimBank {
     pub fn candidate_distance(&self, i: usize, j: usize) -> f32 {
         cosine_distance(&self.cands[i].feature, &self.cands[j].feature)
     }
-}
 
-impl Bank for SimBank {
-    fn len(&self) -> usize {
-        self.cands.len()
-    }
-
-    fn max_size(&self) -> usize {
-        self.max_size
-    }
-
-    fn set_max_size(&mut self, max_size: usize) {
-        self.max_size = max_size.max(1);
-        while self.cands.len() > self.max_size {
-            let before = self.cands.len();
-            self.evict_redundant(usize::MAX);
-            if self.cands.len() == before {
-                break; // single lone representative: nothing evictable
-            }
-        }
-    }
-
-    fn n_clusters(&self) -> usize {
-        self.clusters.len()
-    }
-
-    fn lookup_evals(&self) -> usize {
-        if self.cands.is_empty() {
-            return 0;
-        }
-        let k = self.clusters.len().max(1);
-        k + self.cands.len() / k
-    }
-
-    /// Two-layer lookup quality (Fig 5a), deterministically from state:
-    /// score the K representatives against the task's feature, descend
-    /// into the nearest cluster, take the best quality × coverage over
-    /// everything evaluated. An empty bank covers nothing (0.0 — callers
-    /// floor at the user's own prompt quality).
-    fn quality_for(&self, task_id: usize) -> f64 {
+    /// The uncached two-layer lookup scan (Fig 5a), deterministically
+    /// from state: score the K representatives against the task's
+    /// feature, descend into the nearest cluster, take the best
+    /// quality × coverage over everything evaluated. An empty bank
+    /// covers nothing (0.0 — callers floor at the user's own prompt
+    /// quality). `Bank::quality_for` memoizes this per task behind the
+    /// structural epoch; the memo is bit-identical to this scan
+    /// (property-enforced by the module tests).
+    pub fn quality_scan(&self, task_id: usize) -> f64 {
         if self.clusters.is_empty() {
             return 0.0;
         }
@@ -404,6 +398,60 @@ impl Bank for SimBank {
             let d = cosine_distance(&self.cands[m].feature, &f);
             q = q.max(self.contrib(m, d));
         }
+        q
+    }
+}
+
+impl Bank for SimBank {
+    fn len(&self) -> usize {
+        self.cands.len()
+    }
+
+    fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    fn set_max_size(&mut self, max_size: usize) {
+        self.epoch += 1;
+        self.max_size = max_size.max(1);
+        while self.cands.len() > self.max_size {
+            let before = self.cands.len();
+            self.evict_redundant(usize::MAX);
+            if self.cands.len() == before {
+                break; // single lone representative: nothing evictable
+            }
+        }
+    }
+
+    fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    fn lookup_evals(&self) -> usize {
+        if self.cands.is_empty() {
+            return 0;
+        }
+        let k = self.clusters.len().max(1);
+        k + self.cands.len() / k
+    }
+
+    /// Two-layer lookup quality: [`SimBank::quality_scan`] memoized per
+    /// task while the bank's structural epoch holds. The scheduler
+    /// refreshes estimates for whole queues every round; between
+    /// insertions the bank is immutable, so the O(K + C/K) scan runs
+    /// once per (epoch, task) and repeats are an O(1) hash hit with the
+    /// exact same bits.
+    fn quality_for(&self, task_id: usize) -> f64 {
+        let mut cache = self.cache.borrow_mut();
+        if cache.epoch != self.epoch {
+            cache.map.clear();
+            cache.epoch = self.epoch;
+        }
+        if let Some(&q) = cache.map.get(&task_id) {
+            return q;
+        }
+        let q = self.quality_scan(task_id);
+        cache.map.insert(task_id, q);
         q
     }
 
@@ -792,5 +840,65 @@ mod tests {
         assert_eq!(set.bank(Llm::Gpt2B).len(), 60);
         assert_eq!(set.bank(Llm::V7B).len(), before_v7b);
         assert_eq!(set.total_len(), 60 * Llm::COUNT);
+    }
+
+    #[test]
+    fn prop_memoized_quality_matches_uncached_scan() {
+        // Random insert / shrink / grow interleaved with double lookups:
+        // the epoch-stamped memo must return the scan's exact bits, and
+        // the memo itself must never change what a mutation produces.
+        check("memoized quality == uncached scan", 30, |rng| {
+            let mut bank = warm(40 + rng.below(60), rng.next_u64());
+            for step in 0..120 {
+                let t = rng.below(96);
+                match rng.below(5) {
+                    0 => bank.insert_tuned(t, rng.range_f64(0.3, 0.99)),
+                    1 if step % 3 == 0 => {
+                        bank.set_max_size(20 + rng.below(80))
+                    }
+                    _ => {}
+                }
+                let scan = bank.quality_scan(t);
+                let memo1 = bank.quality_for(t);
+                let memo2 = bank.quality_for(t);
+                ensure(
+                    memo1.to_bits() == scan.to_bits(),
+                    format!("task {t}: memo {memo1} != scan {scan}"),
+                )?;
+                ensure(
+                    memo2.to_bits() == scan.to_bits(),
+                    format!("task {t}: repeat {memo2} != scan {scan}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quality_cache_invalidates_on_insert_eviction_and_ceiling() {
+        let mut bank = warm(200, 77);
+        let t = 9usize;
+        let q0 = bank.quality_for(t);
+        assert_eq!(bank.quality_for(t).to_bits(), q0.to_bits());
+
+        // Insertion (with the bank at its ceiling this also evicts):
+        // the next lookup must see the new state, not the memo.
+        bank.insert_tuned(t, 0.99);
+        let q1 = bank.quality_for(t);
+        assert_eq!(q1.to_bits(), bank.quality_scan(t).to_bits());
+        assert!(q1 + 1e-9 >= q0,
+                "a 0.99 same-task prompt lowered quality: {q0} -> {q1}");
+
+        // Ceiling shrink evicts many candidates; the memo must follow.
+        bank.set_max_size(25);
+        let q2 = bank.quality_for(t);
+        assert_eq!(q2.to_bits(), bank.quality_scan(t).to_bits());
+
+        // Growing the ceiling alone changes no contents but still
+        // re-stamps — lookups keep matching the scan bit-for-bit.
+        bank.set_max_size(400);
+        assert_eq!(bank.quality_for(t).to_bits(),
+                   bank.quality_scan(t).to_bits());
+        assert_eq!(bank.quality_for(t).to_bits(), q2.to_bits());
     }
 }

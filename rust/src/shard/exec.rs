@@ -1,0 +1,644 @@
+//! Fork-join executor for the shard plane.
+//!
+//! The plane's inner loop is embarrassingly parallel between router
+//! decisions: cells are independent `StreamCore`s that only interact at
+//! arrival injections and gossip barriers, both of which are sequential
+//! by construction. This module factors the per-cell work behind the
+//! [`PlaneExec`] trait with two interchangeable implementations:
+//!
+//! * [`InlineExec`] — the cells in a `Vec`, serviced on the caller's
+//!   thread. `workers == 1` uses this and reproduces the original
+//!   sequential loop instruction-for-instruction.
+//! * [`PoolExec`] — a persistent std-only worker pool (plain threads +
+//!   mpsc channels, the same idiom as `bench::run_parallel`). Each
+//!   worker *owns* a disjoint contiguous slice of cells — it builds
+//!   them itself from the cloned config, so the non-`Send` policy boxes
+//!   never cross a thread boundary — and services broadcast commands
+//!   from its FIFO channel. Commands that need answers (scores, gossip
+//!   drains, finish) are barriers: the caller collects one reply per
+//!   worker and merges them sorted by shard index.
+//!
+//! **Determinism argument.** Every cell receives the exact same command
+//! sequence in the exact same order regardless of thread interleaving
+//! (per-worker channels are FIFO and each cell belongs to exactly one
+//! worker), each command's effect on a cell is a deterministic function
+//! of the cell's state, and all cross-thread data is plain values
+//! (`f64` bits are preserved by moves). Reply merging sorts by shard,
+//! so the router sees scores and gossip pools in the same order the
+//! sequential loop produced them. Hence the parallel plane is
+//! bit-identical to the sequential one — property-enforced by
+//! `tests/prop_shard.rs` across all three systems × gossip on/off ×
+//! partition chaos.
+//!
+//! **Score caching.** Re-scoring every cell on every arrival pays an
+//! O(bank) coverage lookup per cell even when nothing happened there.
+//! [`ExecCell::score`] memoizes the router score per `(llm, task)`
+//! behind a staleness stamp `(events_processed, rounds_executed,
+//! absorbs)`: coverage, queue depth and busy level can only change
+//! inside event callbacks, executed scheduler rounds, or gossip
+//! absorbs, so an unchanged stamp proves the cached score is still
+//! bit-exact. Coalesced (skipped) rounds run no policy code and
+//! correctly leave the stamp untouched.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use crate::cluster::{Policy, SimResult, StreamCore, TunedPrompt};
+use crate::workload::{JobSpec, Llm, PerfModel};
+
+use super::{make_shard_policy, DenseWrap, ShardPlaneConfig, PHI};
+
+/// One shard's simulator cell plus its router-score memo.
+pub(super) struct ExecCell {
+    pub(super) shard: usize,
+    core: StreamCore,
+    policy: Box<dyn Policy>,
+    gpus: f64,
+    w_coverage: f64,
+    w_queue: f64,
+    w_headroom: f64,
+    /// Gossip absorbs applied to this cell — the third stamp component
+    /// (absorbed prompts change the bank without an event or round).
+    absorbs: u64,
+    stamp: (u64, u64, u64),
+    scores: HashMap<(usize, usize), f64>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Everything the plane needs back from a finished cell, tagged with
+/// its shard index so pool replies can be merged deterministically.
+pub(super) struct CellDone {
+    pub(super) shard: usize,
+    pub(super) admitted: usize,
+    pub(super) cache_hits: u64,
+    pub(super) cache_misses: u64,
+    pub(super) result: SimResult,
+}
+
+impl ExecCell {
+    /// Build shard `shard`'s cell exactly as the sequential loop did:
+    /// per-shard seed, optional dense pin, gossip log armed only when
+    /// the plane actually gossips.
+    pub(super) fn build(cfg: &ShardPlaneConfig, shard: usize,
+                        n_total: usize, horizon: f64) -> ExecCell {
+        let shard_seed = cfg.seed ^ (shard as u64).wrapping_mul(PHI);
+        let mut policy = make_shard_policy(&cfg.system, shard_seed,
+                                           cfg.gpus_per_shard);
+        if cfg.force_dense {
+            policy = Box::new(DenseWrap(policy));
+        }
+        if cfg.gossip && cfg.shards >= 2 {
+            policy.enable_gossip_log();
+        }
+        let tick = policy.tick_interval();
+        let mut sim = cfg.sim.clone();
+        sim.max_gpus = cfg.gpus_per_shard;
+        let core = StreamCore::new(sim, PerfModel::default(), tick,
+                                   n_total, horizon);
+        ExecCell {
+            shard,
+            core,
+            policy,
+            gpus: cfg.gpus_per_shard as f64,
+            w_coverage: cfg.w_coverage,
+            w_queue: cfg.w_queue,
+            w_headroom: cfg.w_headroom,
+            absorbs: 0,
+            stamp: (0, 0, 0),
+            scores: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub(super) fn advance(&mut self, key: Option<(f64, u64)>) {
+        self.core.advance_until(self.policy.as_mut(), &mut (), key);
+    }
+
+    /// The router score, memoized per `(llm, task)` while the staleness
+    /// stamp holds. Bit-identical to [`ExecCell::score_uncached`] —
+    /// enforced by the module tests below.
+    pub(super) fn score(&mut self, llm: Llm, task_id: usize) -> f64 {
+        let cur = (self.core.events_processed(),
+                   self.core.rounds_executed(), self.absorbs);
+        if cur != self.stamp {
+            self.scores.clear();
+            self.stamp = cur;
+        }
+        if let Some(&s) = self.scores.get(&(llm.index(), task_id)) {
+            self.hits += 1;
+            return s;
+        }
+        let s = self.score_uncached(llm, task_id);
+        self.scores.insert((llm.index(), task_id), s);
+        self.misses += 1;
+        s
+    }
+
+    /// The raw weighted coverage/queue/headroom score — the exact
+    /// arithmetic the sequential loop computed per arrival.
+    pub(super) fn score_uncached(&self, llm: Llm, task_id: usize) -> f64 {
+        let cov = self.policy.bank_coverage(llm, task_id).unwrap_or(0.0);
+        let queued = (self.core.admitted() - self.core.done()) as f64
+            / self.gpus;
+        let busy = self.core.state().busy() / self.gpus;
+        self.w_coverage * (1.0 - cov) + self.w_queue * queued
+            + self.w_headroom * busy
+    }
+
+    pub(super) fn inject(&mut self, spec: JobSpec) {
+        self.core.inject_arrival(self.policy.as_mut(), &mut (), spec);
+    }
+
+    pub(super) fn drain(&mut self) -> Vec<TunedPrompt> {
+        let mut out = vec![];
+        self.policy.drain_tuned(&mut out);
+        out
+    }
+
+    /// Absorb gossip pools in ascending-origin order, skipping our own
+    /// and empty pools — the sequential exchange order exactly.
+    pub(super) fn absorb(&mut self, pools: &[(usize, Vec<TunedPrompt>)]) {
+        for (origin, pool) in pools {
+            if *origin != self.shard && !pool.is_empty() {
+                self.policy.absorb_tuned(pool);
+                self.absorbs += 1;
+            }
+        }
+    }
+
+    pub(super) fn exhaust(&mut self) {
+        self.core.exhaust();
+    }
+
+    pub(super) fn is_finished(&self) -> bool {
+        self.core.is_finished()
+    }
+
+    pub(super) fn finish(self, wall_s: f64) -> CellDone {
+        let ExecCell { shard, core, policy, hits, misses, .. } = self;
+        let admitted = core.admitted();
+        CellDone {
+            shard,
+            admitted,
+            cache_hits: hits,
+            cache_misses: misses,
+            result: core.finalize(policy.as_ref(), &mut (), wall_s),
+        }
+    }
+}
+
+/// What the plane's drive loop needs from an executor. Methods that
+/// return data are barriers; the rest may complete asynchronously as
+/// long as per-cell command order is preserved.
+pub(super) trait PlaneExec {
+    /// Advance every cell to the event key (None = run to completion).
+    fn advance(&mut self, key: Option<(f64, u64)>);
+    /// Router scores for all cells, in shard order. Barrier.
+    fn scores(&mut self, llm: Llm, task_id: usize) -> Vec<f64>;
+    /// Inject an arrival into one shard's cell.
+    fn inject(&mut self, shard: usize, spec: JobSpec);
+    /// Drain the gossip logs of the `alive` shards (ascending), as
+    /// `(origin, pool)` pairs in ascending-origin order. Barrier.
+    fn drain(&mut self, alive: &[usize]) -> Vec<(usize, Vec<TunedPrompt>)>;
+    /// Cross-absorb the drained pools into every alive shard.
+    fn absorb(&mut self, alive: &[usize],
+              pools: Vec<(usize, Vec<TunedPrompt>)>);
+    /// Mark the stream exhausted in every cell.
+    fn exhaust(&mut self);
+    /// Are all cells finished? Barrier.
+    fn all_finished(&mut self) -> bool;
+    /// Finalize every cell; results sorted by shard. Barrier.
+    fn finish(&mut self, wall_s: f64) -> Vec<CellDone>;
+}
+
+/// The sequential executor: cells serviced inline on the caller's
+/// thread, in shard order — `workers == 1` and the conformance
+/// reference for the pool.
+pub(super) struct InlineExec {
+    cells: Vec<ExecCell>,
+}
+
+impl InlineExec {
+    pub(super) fn new(cfg: &ShardPlaneConfig, n_total: usize,
+                      horizon: f64) -> InlineExec {
+        InlineExec {
+            cells: (0..cfg.shards)
+                .map(|s| ExecCell::build(cfg, s, n_total, horizon))
+                .collect(),
+        }
+    }
+}
+
+impl PlaneExec for InlineExec {
+    fn advance(&mut self, key: Option<(f64, u64)>) {
+        for cell in &mut self.cells {
+            cell.advance(key);
+        }
+    }
+
+    fn scores(&mut self, llm: Llm, task_id: usize) -> Vec<f64> {
+        self.cells.iter_mut().map(|c| c.score(llm, task_id)).collect()
+    }
+
+    fn inject(&mut self, shard: usize, spec: JobSpec) {
+        self.cells[shard].inject(spec);
+    }
+
+    fn drain(&mut self, alive: &[usize]) -> Vec<(usize, Vec<TunedPrompt>)> {
+        alive.iter().map(|&s| (s, self.cells[s].drain())).collect()
+    }
+
+    fn absorb(&mut self, alive: &[usize],
+              pools: Vec<(usize, Vec<TunedPrompt>)>) {
+        for &s in alive {
+            self.cells[s].absorb(&pools);
+        }
+    }
+
+    fn exhaust(&mut self) {
+        for cell in &mut self.cells {
+            cell.exhaust();
+        }
+    }
+
+    fn all_finished(&mut self) -> bool {
+        self.cells.iter().all(|c| c.is_finished())
+    }
+
+    fn finish(&mut self, wall_s: f64) -> Vec<CellDone> {
+        std::mem::take(&mut self.cells)
+            .into_iter()
+            .map(|c| c.finish(wall_s))
+            .collect()
+    }
+}
+
+/// A broadcast command. Per-worker channels are FIFO, so every cell
+/// observes commands in issue order.
+#[derive(Clone)]
+enum Cmd {
+    Advance(Option<(f64, u64)>),
+    Scores { llm: Llm, task_id: usize },
+    Inject { shard: usize, spec: JobSpec },
+    Drain { alive: Arc<Vec<usize>> },
+    Absorb { alive: Arc<Vec<usize>>, pools: Arc<Vec<(usize, Vec<TunedPrompt>)>> },
+    Exhaust,
+    Finished,
+    Finish { wall_s: f64 },
+}
+
+enum Reply {
+    Scores(Vec<(usize, f64)>),
+    Drained(Vec<(usize, Vec<TunedPrompt>)>),
+    Finished(bool),
+    Done(Vec<CellDone>),
+}
+
+/// The persistent fork-join pool. Workers own disjoint contiguous cell
+/// slices (built inside the worker thread, so policies never cross
+/// threads) and run until the command channel closes or `Finish`
+/// arrives.
+pub(super) struct PoolExec {
+    txs: Vec<Sender<Cmd>>,
+    rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    /// `shard → worker` for targeted injects.
+    owner: Vec<usize>,
+}
+
+impl PoolExec {
+    pub(super) fn new(cfg: &ShardPlaneConfig, workers: usize,
+                      n_total: usize, horizon: f64) -> PoolExec {
+        debug_assert!(workers >= 2 && workers <= cfg.shards);
+        let (reply_tx, rx) = channel();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        let mut owner = vec![0usize; cfg.shards];
+        // Balanced contiguous split: the first `rem` workers take one
+        // extra shard, so every worker owns at least one cell.
+        let base = cfg.shards / workers;
+        let rem = cfg.shards % workers;
+        let mut lo = 0usize;
+        for w in 0..workers {
+            let hi = lo + base + usize::from(w < rem);
+            for s in lo..hi {
+                owner[s] = w;
+            }
+            let (tx, cmd_rx) = channel();
+            let worker_cfg = cfg.clone();
+            let worker_reply = reply_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("pt-plane-{w}"))
+                .spawn(move || {
+                    worker_loop(worker_cfg, lo..hi, n_total, horizon,
+                                cmd_rx, worker_reply)
+                })
+                .expect("spawn shard-plane worker");
+            txs.push(tx);
+            handles.push(handle);
+            lo = hi;
+        }
+        PoolExec { txs, rx, handles, owner }
+    }
+
+    /// A worker exited early (its cell's fatal audit panicked). Join
+    /// everyone and re-raise the original panic so the caller sees the
+    /// real failure, not a broken channel.
+    fn fail(&mut self, what: &str) -> ! {
+        self.txs.clear();
+        for h in std::mem::take(&mut self.handles) {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        panic!("shard-plane worker {what} without panicking");
+    }
+
+    fn broadcast(&mut self, cmd: Cmd) {
+        for w in 0..self.txs.len() {
+            if self.txs[w].send(cmd.clone()).is_err() {
+                self.fail("closed its command channel");
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Reply {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => self.fail("closed the reply channel"),
+        }
+    }
+}
+
+impl PlaneExec for PoolExec {
+    fn advance(&mut self, key: Option<(f64, u64)>) {
+        self.broadcast(Cmd::Advance(key));
+    }
+
+    fn scores(&mut self, llm: Llm, task_id: usize) -> Vec<f64> {
+        self.broadcast(Cmd::Scores { llm, task_id });
+        let mut tagged: Vec<(usize, f64)> =
+            Vec::with_capacity(self.owner.len());
+        for _ in 0..self.txs.len() {
+            match self.recv() {
+                Reply::Scores(v) => tagged.extend(v),
+                _ => self.fail("sent a mismatched reply"),
+            }
+        }
+        tagged.sort_by_key(|&(s, _)| s);
+        tagged.into_iter().map(|(_, score)| score).collect()
+    }
+
+    fn inject(&mut self, shard: usize, spec: JobSpec) {
+        let w = self.owner[shard];
+        if self.txs[w].send(Cmd::Inject { shard, spec }).is_err() {
+            self.fail("closed its command channel");
+        }
+    }
+
+    fn drain(&mut self, alive: &[usize]) -> Vec<(usize, Vec<TunedPrompt>)> {
+        self.broadcast(Cmd::Drain { alive: Arc::new(alive.to_vec()) });
+        let mut pools: Vec<(usize, Vec<TunedPrompt>)> =
+            Vec::with_capacity(alive.len());
+        for _ in 0..self.txs.len() {
+            match self.recv() {
+                Reply::Drained(v) => pools.extend(v),
+                _ => self.fail("sent a mismatched reply"),
+            }
+        }
+        pools.sort_by_key(|&(s, _)| s);
+        pools
+    }
+
+    fn absorb(&mut self, alive: &[usize],
+              pools: Vec<(usize, Vec<TunedPrompt>)>) {
+        self.broadcast(Cmd::Absorb {
+            alive: Arc::new(alive.to_vec()),
+            pools: Arc::new(pools),
+        });
+    }
+
+    fn exhaust(&mut self) {
+        self.broadcast(Cmd::Exhaust);
+    }
+
+    fn all_finished(&mut self) -> bool {
+        self.broadcast(Cmd::Finished);
+        let mut all = true;
+        for _ in 0..self.txs.len() {
+            match self.recv() {
+                Reply::Finished(f) => all &= f,
+                _ => self.fail("sent a mismatched reply"),
+            }
+        }
+        all
+    }
+
+    fn finish(&mut self, wall_s: f64) -> Vec<CellDone> {
+        self.broadcast(Cmd::Finish { wall_s });
+        let mut done: Vec<CellDone> = Vec::with_capacity(self.owner.len());
+        for _ in 0..self.txs.len() {
+            match self.recv() {
+                Reply::Done(v) => done.extend(v),
+                _ => self.fail("sent a mismatched reply"),
+            }
+        }
+        done.sort_by_key(|d| d.shard);
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        done
+    }
+}
+
+impl Drop for PoolExec {
+    fn drop(&mut self) {
+        // Disconnect the command channels so workers fall out of their
+        // recv loops, then reap them. A normal `finish` already did
+        // both; this covers early unwinds in the drive loop.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(cfg: ShardPlaneConfig, shards: std::ops::Range<usize>,
+               n_total: usize, horizon: f64, rx: Receiver<Cmd>,
+               tx: Sender<Reply>) {
+    let mut cells: Vec<ExecCell> = shards
+        .map(|s| ExecCell::build(&cfg, s, n_total, horizon))
+        .collect();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Advance(key) => {
+                for cell in &mut cells {
+                    cell.advance(key);
+                }
+            }
+            Cmd::Scores { llm, task_id } => {
+                let v: Vec<(usize, f64)> = cells
+                    .iter_mut()
+                    .map(|c| (c.shard, c.score(llm, task_id)))
+                    .collect();
+                let _ = tx.send(Reply::Scores(v));
+            }
+            Cmd::Inject { shard, spec } => {
+                let cell = cells
+                    .iter_mut()
+                    .find(|c| c.shard == shard)
+                    .expect("inject routed to the wrong worker");
+                cell.inject(spec);
+            }
+            Cmd::Drain { alive } => {
+                let v: Vec<(usize, Vec<TunedPrompt>)> = cells
+                    .iter_mut()
+                    .filter(|c| alive.contains(&c.shard))
+                    .map(|c| (c.shard, c.drain()))
+                    .collect();
+                let _ = tx.send(Reply::Drained(v));
+            }
+            Cmd::Absorb { alive, pools } => {
+                for cell in &mut cells {
+                    if alive.contains(&cell.shard) {
+                        cell.absorb(&pools);
+                    }
+                }
+            }
+            Cmd::Exhaust => {
+                for cell in &mut cells {
+                    cell.exhaust();
+                }
+            }
+            Cmd::Finished => {
+                let all = cells.iter().all(|c| c.is_finished());
+                let _ = tx.send(Reply::Finished(all));
+            }
+            Cmd::Finish { wall_s } => {
+                let done: Vec<CellDone> = cells
+                    .drain(..)
+                    .map(|c| c.finish(wall_s))
+                    .collect();
+                let _ = tx.send(Reply::Done(done));
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TunedPrompt;
+    use crate::scenario::NOVEL_TASK_BASE;
+    use crate::trace::{ScaleSource, ScaleSourceConfig, TraceSource};
+
+    fn cold_cell(seed: u64) -> (ExecCell, ScaleSource) {
+        let src = ScaleSource::new(ScaleSourceConfig {
+            seed,
+            minutes: 10,
+            jobs_per_minute: 8.0,
+            n_tasks: 6,
+            task_base: NOVEL_TASK_BASE,
+            ..Default::default()
+        });
+        let cfg = ShardPlaneConfig::new("prompttuner", 2, 16, seed);
+        let horizon = src.last_arrival_s() + cfg.sim.horizon_s;
+        let cell = ExecCell::build(&cfg, 0, src.total_jobs(), horizon);
+        (cell, src)
+    }
+
+    /// The staleness stamp is sound: a cached score is always bit-equal
+    /// to a fresh recompute, before and after events, and an event
+    /// (inject) always invalidates.
+    #[test]
+    fn score_cache_never_serves_stale_scores() {
+        let (mut cell, mut src) = cold_cell(7);
+        let mut injected = 0u64;
+        let mut saw_hit = false;
+        while let Some(spec) = src.next_job() {
+            cell.advance(Some((spec.submit_s, injected + 1)));
+            let fresh = cell.score_uncached(spec.llm, spec.task_id);
+            let miss0 = cell.misses;
+            let s1 = cell.score(spec.llm, spec.task_id);
+            assert_eq!(s1.to_bits(), fresh.to_bits(),
+                       "first score diverged from uncached");
+            let hits0 = cell.hits;
+            let s2 = cell.score(spec.llm, spec.task_id);
+            assert_eq!(s2.to_bits(), s1.to_bits());
+            assert_eq!(cell.hits, hits0 + 1, "repeat lookup must hit");
+            saw_hit = true;
+            cell.inject(spec.clone());
+            injected += 1;
+            // The inject bumped the cell's event count: the stamp is
+            // stale, so the next score recomputes and matches fresh.
+            let miss1 = cell.misses;
+            let s3 = cell.score(spec.llm, spec.task_id);
+            assert_eq!(cell.misses, miss1 + 1,
+                       "score after an event must recompute");
+            assert_eq!(
+                s3.to_bits(),
+                cell.score_uncached(spec.llm, spec.task_id).to_bits()
+            );
+            assert!(cell.misses > miss0);
+        }
+        assert!(saw_hit);
+        assert!(cell.hits > 0 && cell.misses > 0);
+    }
+
+    /// Absorbing gossip changes the bank without an event or round —
+    /// the absorb counter must invalidate the cache.
+    #[test]
+    fn absorbing_gossip_invalidates_cached_scores() {
+        let (mut cell, mut src) = cold_cell(11);
+        // Warm the cell with a few jobs so scoring is non-trivial.
+        let mut injected = 0u64;
+        let mut last = None;
+        for _ in 0..5 {
+            let spec = src.next_job().unwrap();
+            cell.advance(Some((spec.submit_s, injected + 1)));
+            last = Some((spec.llm, spec.task_id));
+            cell.inject(spec);
+            injected += 1;
+        }
+        let (llm, task_id) = last.unwrap();
+        let before = cell.score(llm, task_id);
+        let hits0 = cell.hits;
+        assert_eq!(cell.score(llm, task_id).to_bits(), before.to_bits());
+        assert_eq!(cell.hits, hits0 + 1);
+
+        // A foreign shard gossips a near-perfect prompt for this task.
+        let pools = vec![(1usize, vec![TunedPrompt {
+            llm,
+            task_id,
+            quality: 0.99,
+        }])];
+        let misses0 = cell.misses;
+        cell.absorb(&pools);
+        let after = cell.score(llm, task_id);
+        assert_eq!(cell.misses, misses0 + 1,
+                   "absorb must invalidate the score cache");
+        assert_eq!(after.to_bits(),
+                   cell.score_uncached(llm, task_id).to_bits());
+        assert!(after <= before,
+                "a 0.99-quality prompt cannot worsen coverage: \
+                 {after} > {before}");
+
+        // A pool from our own shard is skipped and must NOT invalidate.
+        let own = vec![(0usize, vec![TunedPrompt {
+            llm,
+            task_id,
+            quality: 0.5,
+        }])];
+        let absorbs0 = cell.absorbs;
+        cell.absorb(&own);
+        assert_eq!(cell.absorbs, absorbs0, "own-origin pool absorbed");
+    }
+}

@@ -39,18 +39,36 @@
 //! The barrier instant `t_k` uses event key `(t_k, 0)`: sequence 0 sorts
 //! before every real event, so cells stop *before* anything scheduled at
 //! the barrier time — the exchange is a consistent cut.
+//!
+//! **Parallel execution.** Between router decisions and gossip barriers
+//! the cells are completely independent, so the plane advances them on
+//! a persistent fork-join worker pool ([`exec`]): each worker owns a
+//! disjoint slice of cells and services broadcast commands over FIFO
+//! channels, with a reply barrier (merged in shard order) before every
+//! sequential decision. Each cell sees the identical command sequence
+//! regardless of thread interleaving, so the parallel plane is
+//! **bit-identical** to the sequential one (`workers == 1`) — enforced
+//! by `tests/prop_shard.rs` across systems × gossip × partitions.
+//! Width comes from [`ShardPlaneConfig::workers`], defaulting to
+//! `PT_PLANE_WORKERS` or the machine's available parallelism. Router
+//! scores are memoized per `(llm, task)` behind an event/round/absorb
+//! staleness stamp, so idle cells answer from cache.
+
+mod exec;
 
 use std::time::Instant;
+
+use exec::{InlineExec, PlaneExec, PoolExec};
 
 use crate::baselines::{ElasticFlow, ElasticFlowConfig, Infless,
                        InflessConfig};
 use crate::cluster::{ClusterState, KnobSpec, Policy, RetryEvent,
-                     RevokeEvent, SimConfig, SimResult, StreamCore,
-                     TunedPrompt, TunerReport, Wake};
+                     RevokeEvent, SimConfig, SimResult, TunedPrompt,
+                     TunerReport, Wake};
 use crate::coordinator::{PromptTuner, PromptTunerConfig};
 use crate::fault::ChaosProfile;
 use crate::trace::TraceSource;
-use crate::workload::{Llm, PerfModel};
+use crate::workload::Llm;
 
 const PHI: u64 = 0x9E37_79B9_7F4A_7C15;
 
@@ -85,6 +103,24 @@ pub struct ShardPlaneConfig {
     /// Pin every shard policy to dense ticking (coalescing-vs-dense
     /// equivalence runs).
     pub force_dense: bool,
+    /// Fork-join executor width (worker threads advancing cells in
+    /// parallel). Clamped to `[1, shards]` at run time; `1` services
+    /// the cells inline and reproduces the sequential loop exactly —
+    /// and any width is bit-identical to it (property-enforced).
+    pub workers: usize,
+}
+
+/// The default executor width: `PT_PLANE_WORKERS` (a positive integer)
+/// when set, else the machine's available parallelism, else 1.
+pub fn default_plane_workers() -> usize {
+    if let Ok(v) = std::env::var("PT_PLANE_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl ShardPlaneConfig {
@@ -103,6 +139,7 @@ impl ShardPlaneConfig {
             w_queue: 1.0,
             w_headroom: 0.5,
             force_dense: false,
+            workers: default_plane_workers(),
         }
     }
 }
@@ -247,12 +284,6 @@ impl Policy for DenseWrap {
     }
 }
 
-struct ShardCell {
-    core: StreamCore,
-    policy: Box<dyn Policy>,
-    routed: usize,
-}
-
 /// Result of one plane run: per-shard simulator results plus the
 /// plane-level routing/gossip/audit telemetry.
 #[derive(Clone, Debug)]
@@ -274,6 +305,16 @@ pub struct ShardPlaneResult {
     /// into a severed shard while an alternative existed, or jobs
     /// lost/duplicated between router and cells.
     pub violations: Vec<String>,
+    /// Executor width the run actually used (after clamping to
+    /// `[1, shards]`).
+    pub workers: usize,
+    /// Wall-clock of the whole plane run, seconds.
+    pub wall_s: f64,
+    /// Router-score cache hits across all cells (scores served from
+    /// the memo because the cell's staleness stamp had not moved).
+    pub score_cache_hits: u64,
+    /// Router-score cache misses (fresh recomputes) across all cells.
+    pub score_cache_misses: u64,
 }
 
 impl ShardPlaneResult {
@@ -402,38 +443,37 @@ impl ShardPlane {
     /// Run the whole stream through the plane. Every arrival is placed
     /// on exactly one shard; determinism is inherited from the cells
     /// (seeded policies, seq-ordered events) plus the router and
-    /// schedule being pure functions.
+    /// schedule being pure functions — and is independent of the
+    /// executor width (`workers == 1` runs the cells inline, wider
+    /// runs them on the fork-join pool, bit-identically).
     pub fn run(&self, source: &mut dyn TraceSource) -> ShardPlaneResult {
-        let wall0 = Instant::now();
-        let n_shards = self.cfg.shards;
         let n_total = source.total_jobs();
         let horizon = source.last_arrival_s() + self.cfg.sim.horizon_s;
+        let workers = self.cfg.workers.max(1).min(self.cfg.shards);
+        if workers == 1 {
+            let exec = InlineExec::new(&self.cfg, n_total, horizon);
+            self.drive(source, exec, workers, n_total, horizon)
+        } else {
+            let exec = PoolExec::new(&self.cfg, workers, n_total, horizon);
+            self.drive(source, exec, workers, n_total, horizon)
+        }
+    }
+
+    /// The sequential decision loop, generic over the executor that
+    /// services the cells. Both executors observe the identical
+    /// command sequence, which is what makes width a pure performance
+    /// knob.
+    fn drive<E: PlaneExec>(&self, source: &mut dyn TraceSource,
+                           mut exec: E, workers: usize, n_total: usize,
+                           horizon: f64) -> ShardPlaneResult {
+        let wall0 = Instant::now();
+        let n_shards = self.cfg.shards;
         let sched = self.cfg.partition.as_ref().and_then(|p| {
             PartitionSchedule::from_profile(p, self.cfg.seed, n_shards)
         });
         let gossip_on = self.cfg.gossip && n_shards >= 2;
-        let mut cells: Vec<ShardCell> = (0..n_shards)
-            .map(|s| {
-                let shard_seed =
-                    self.cfg.seed ^ (s as u64).wrapping_mul(PHI);
-                let mut policy = make_shard_policy(&self.cfg.system,
-                                                   shard_seed,
-                                                   self.cfg.gpus_per_shard);
-                if self.cfg.force_dense {
-                    policy = Box::new(DenseWrap(policy));
-                }
-                if gossip_on {
-                    policy.enable_gossip_log();
-                }
-                let tick = policy.tick_interval();
-                let mut sim = self.cfg.sim.clone();
-                sim.max_gpus = self.cfg.gpus_per_shard;
-                let core = StreamCore::new(sim, PerfModel::default(), tick,
-                                           n_total, horizon);
-                ShardCell { core, policy, routed: 0 }
-            })
-            .collect();
 
+        let mut routed = vec![0usize; n_shards];
         let mut violations: Vec<String> = vec![];
         let mut failovers = 0u64;
         let mut gossip_rounds = 0u64;
@@ -449,7 +489,7 @@ impl ShardPlane {
             {
                 let t_k = next_k as f64 * self.cfg.gossip_period_s;
                 if let Some(items) =
-                    gossip_barrier(&mut cells, t_k, sched.as_ref())
+                    barrier_step(&mut exec, n_shards, t_k, sched.as_ref())
                 {
                     gossip_rounds += 1;
                     gossip_items += items;
@@ -459,27 +499,12 @@ impl ShardPlane {
             // Advance every cell to the arrival's global event key —
             // seq i+1, the sequence the materialized loop pre-assigns
             // to arrival i — so all cells observe a consistent "now".
-            let key = (spec.submit_s, injected + 1);
-            for cell in cells.iter_mut() {
-                cell.core.advance_until(cell.policy.as_mut(), &mut (),
-                                        Some(key));
-            }
+            exec.advance(Some((spec.submit_s, injected + 1)));
             let t = spec.submit_s;
+            let scores = exec.scores(spec.llm, spec.task_id);
             let mut best: Option<(f64, usize)> = None;
             let mut best_any: Option<(f64, usize)> = None;
-            for (s, cell) in cells.iter().enumerate() {
-                let cov = cell
-                    .policy
-                    .bank_coverage(spec.llm, spec.task_id)
-                    .unwrap_or(0.0);
-                let queued =
-                    (cell.core.admitted() - cell.core.done()) as f64
-                        / self.cfg.gpus_per_shard as f64;
-                let busy = cell.core.state().busy()
-                    / self.cfg.gpus_per_shard as f64;
-                let score = self.cfg.w_coverage * (1.0 - cov)
-                    + self.cfg.w_queue * queued
-                    + self.cfg.w_headroom * busy;
+            for (s, &score) in scores.iter().enumerate() {
                 // Strict < keeps the earliest index on ties.
                 if best_any.is_none() || score < best_any.unwrap().0 {
                     best_any = Some((score, s));
@@ -510,60 +535,56 @@ impl ShardPlane {
                     ));
                 }
             }
-            let cell = &mut cells[target];
-            cell.core.inject_arrival(cell.policy.as_mut(), &mut (), spec);
-            cell.routed += 1;
+            exec.inject(target, spec);
+            routed[target] += 1;
             injected += 1;
         }
 
         // Stream exhausted: each cell now ends once its admitted jobs
         // are done. Keep gossiping until everyone is finished or the
         // horizon passes — queued jobs still launch and read banks.
-        for cell in cells.iter_mut() {
-            cell.core.exhaust();
-        }
+        exec.exhaust();
         while gossip_on {
             let t_k = next_k as f64 * self.cfg.gossip_period_s;
-            if t_k > horizon || cells.iter().all(|c| c.core.is_finished()) {
+            if t_k > horizon || exec.all_finished() {
                 break;
             }
             if let Some(items) =
-                gossip_barrier(&mut cells, t_k, sched.as_ref())
+                barrier_step(&mut exec, n_shards, t_k, sched.as_ref())
             {
                 gossip_rounds += 1;
                 gossip_items += items;
             }
             next_k += 1;
         }
-        for cell in cells.iter_mut() {
-            cell.core.advance_until(cell.policy.as_mut(), &mut (), None);
-        }
+        exec.advance(None);
+
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let done = exec.finish(wall_s);
 
         // Conservation audit: router placements and cell admissions must
         // both account for every streamed job exactly once.
-        let admitted: usize = cells.iter().map(|c| c.core.admitted()).sum();
+        let admitted: usize = done.iter().map(|d| d.admitted).sum();
         if admitted != n_total {
             violations.push(format!(
                 "plane admitted {admitted} of {n_total} streamed jobs"
             ));
         }
-        for (s, cell) in cells.iter().enumerate() {
-            if cell.core.admitted() != cell.routed {
+        for d in &done {
+            if d.admitted != routed[d.shard] {
                 violations.push(format!(
-                    "shard {s}: router placed {} jobs but the cell \
+                    "shard {}: router placed {} jobs but the cell \
                      admitted {}",
-                    cell.routed,
-                    cell.core.admitted()
+                    d.shard, routed[d.shard], d.admitted
                 ));
             }
         }
 
-        let wall_s = wall0.elapsed().as_secs_f64();
-        let routed: Vec<usize> = cells.iter().map(|c| c.routed).collect();
-        let per_shard: Vec<SimResult> = cells
-            .into_iter()
-            .map(|c| c.core.finalize(c.policy.as_ref(), &mut (), wall_s))
-            .collect();
+        let score_cache_hits = done.iter().map(|d| d.cache_hits).sum();
+        let score_cache_misses =
+            done.iter().map(|d| d.cache_misses).sum();
+        let per_shard: Vec<SimResult> =
+            done.into_iter().map(|d| d.result).collect();
         ShardPlaneResult {
             system: self.cfg.system.clone(),
             shards: n_shards,
@@ -574,6 +595,10 @@ impl ShardPlane {
             gossip_items,
             failovers,
             violations,
+            workers,
+            wall_s,
+            score_cache_hits,
+            score_cache_misses,
         }
     }
 }
@@ -583,33 +608,19 @@ impl ShardPlane {
 /// leaves connected at `t_k`. Returns the number of items drained, or
 /// None when fewer than two shards were reachable (nothing is drained
 /// then — severed logs keep accumulating and deliver at heal).
-fn gossip_barrier(cells: &mut [ShardCell], t_k: f64,
-                  sched: Option<&PartitionSchedule>) -> Option<u64> {
-    for cell in cells.iter_mut() {
-        cell.core.advance_until(cell.policy.as_mut(), &mut (),
-                                Some((t_k, 0)));
-    }
-    let alive: Vec<usize> = (0..cells.len())
+fn barrier_step<E: PlaneExec>(exec: &mut E, n_shards: usize, t_k: f64,
+                              sched: Option<&PartitionSchedule>)
+                              -> Option<u64> {
+    exec.advance(Some((t_k, 0)));
+    let alive: Vec<usize> = (0..n_shards)
         .filter(|&s| !sched.is_some_and(|p| p.severed(s, t_k)))
         .collect();
     if alive.len() < 2 {
         return None;
     }
-    let mut pools: Vec<(usize, Vec<TunedPrompt>)> =
-        Vec::with_capacity(alive.len());
-    for &s in &alive {
-        let mut out = vec![];
-        cells[s].policy.drain_tuned(&mut out);
-        pools.push((s, out));
-    }
+    let pools = exec.drain(&alive);
     let drained: u64 = pools.iter().map(|(_, p)| p.len() as u64).sum();
-    for &r in &alive {
-        for (origin, pool) in &pools {
-            if *origin != r && !pool.is_empty() {
-                cells[r].policy.absorb_tuned(pool);
-            }
-        }
-    }
+    exec.absorb(&alive, pools);
     Some(drained)
 }
 
@@ -619,6 +630,7 @@ mod tests {
     use crate::cluster::Simulator;
     use crate::trace::{Load, ScaleSource, ScaleSourceConfig, TraceConfig,
                        TraceGenerator, VecSource};
+    use crate::workload::PerfModel;
 
     fn small_trace(seed: u64) -> Vec<crate::workload::JobSpec> {
         let mut g = TraceGenerator::new(
@@ -744,6 +756,45 @@ mod tests {
                 "gossip lowered quality: {} < {}",
                 r_on.merged().mean_prompt_quality,
                 r_off.merged().mean_prompt_quality);
+    }
+
+    #[test]
+    fn pool_executor_matches_inline_and_clamps_width() {
+        let src = ScaleSourceConfig {
+            seed: 55,
+            minutes: 15,
+            jobs_per_minute: 8.0,
+            n_tasks: 8,
+            task_base: crate::scenario::NOVEL_TASK_BASE,
+            ..Default::default()
+        };
+        let mut pc = ShardPlaneConfig::new("prompttuner", 3, 16, 55);
+        pc.gossip_period_s = 300.0;
+        let run = |w: usize| {
+            let mut cfg = pc.clone();
+            cfg.workers = w;
+            ShardPlane::new(cfg).run(&mut ScaleSource::new(src.clone()))
+        };
+        let seq = run(1);
+        assert_eq!(seq.workers, 1);
+        let par = run(2);
+        assert_eq!(par.workers, 2);
+        // Width 8 clamps to the shard count.
+        let wide = run(8);
+        assert_eq!(wide.workers, 3);
+        for other in [&par, &wide] {
+            assert_eq!(seq.routed, other.routed);
+            assert_eq!(seq.gossip_rounds, other.gossip_rounds);
+            assert_eq!(seq.gossip_items, other.gossip_items);
+            assert_eq!(seq.merged().cost_usd.to_bits(),
+                       other.merged().cost_usd.to_bits());
+            assert_eq!(seq.merged().mean_prompt_quality.to_bits(),
+                       other.merged().mean_prompt_quality.to_bits());
+            // The memo sees the same lookup stream either way.
+            assert_eq!(seq.score_cache_hits, other.score_cache_hits);
+            assert_eq!(seq.score_cache_misses, other.score_cache_misses);
+        }
+        assert!(seq.score_cache_misses > 0);
     }
 
     #[test]

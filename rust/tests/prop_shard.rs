@@ -11,6 +11,10 @@
 //! * **1 shard = unsharded** — a 1-shard, gossip-off `ShardPlane` must
 //!   be bit-identical to the unsharded simulator for all three systems
 //!   (router, barriers and gossip must all vanish exactly);
+//! * **parallel = sequential** — a plane on the fork-join worker pool
+//!   (workers ∈ {2, 4}) must be bit-identical to the inline sequential
+//!   executor (workers = 1) per system × gossip × partition: executor
+//!   width is a pure performance knob;
 //!
 //! plus the partition-chaos property: a partitioned multi-shard plane
 //! replays bit-identically across repeats *and* across dense-vs-
@@ -260,6 +264,84 @@ fn prop_partitioned_plane_deterministic_across_repeats_and_ticking() {
                                      &b.merged(), true)?;
             assert_results_identical(&format!("{tag} dense"), &a.merged(),
                                      &d.merged(), false)?;
+        }
+        Ok(())
+    });
+}
+
+/// The fork-join executor is bit-identical to the sequential inline
+/// loop for every system, with and without gossip, with and without
+/// partition chaos, at widths 2 and 4 (4 clamps to the shard count):
+/// every cell sees the identical command sequence whatever the thread
+/// interleaving, so width cannot change a single bit of the result.
+#[test]
+fn prop_parallel_plane_bit_identical_to_sequential() {
+    check("parallel plane = sequential plane", 1, |rng| {
+        let seed = rng.next_u64();
+        for system in SYSTEMS {
+            for (gossip, partition) in
+                [(false, false), (true, false), (false, true), (true, true)]
+            {
+                let trace = ScaleSourceConfig {
+                    seed,
+                    minutes: 20,
+                    jobs_per_minute: 6.0,
+                    n_tasks: 12,
+                    task_base: NOVEL_TASK_BASE,
+                    ..Default::default()
+                };
+                let mut pc = ShardPlaneConfig::new(system, 3, 16, seed);
+                pc.gossip = gossip;
+                pc.gossip_period_s = 300.0;
+                if partition {
+                    pc.partition = Some(ChaosProfile::partition());
+                }
+                let run = |w: usize| {
+                    let mut cfg = pc.clone();
+                    cfg.workers = w;
+                    ShardPlane::new(cfg)
+                        .run(&mut ScaleSource::new(trace.clone()))
+                };
+                let seq = run(1);
+                let tag = format!(
+                    "{system} gossip={gossip} partition={partition} \
+                     seed={seed}");
+                ensure(seq.workers == 1, format!("{tag}: seq width"))?;
+                ensure(seq.violations.is_empty(),
+                       format!("{tag}: seq violations {:?}",
+                               seq.violations))?;
+                for w in [2usize, 4] {
+                    let par = run(w);
+                    ensure(par.workers == w.min(3),
+                           format!("{tag}: width {w} ran at {}",
+                                   par.workers))?;
+                    ensure(par.violations.is_empty(),
+                           format!("{tag}: par violations {:?}",
+                                   par.violations))?;
+                    ensure(seq.routed == par.routed,
+                           format!("{tag} w={w}: routing diverged \
+                                    {:?} vs {:?}", seq.routed, par.routed))?;
+                    ensure(seq.failovers == par.failovers
+                               && seq.gossip_rounds == par.gossip_rounds
+                               && seq.gossip_items == par.gossip_items,
+                           format!("{tag} w={w}: plane telemetry \
+                                    diverged"))?;
+                    ensure(seq.score_cache_hits == par.score_cache_hits
+                               && seq.score_cache_misses
+                                   == par.score_cache_misses,
+                           format!("{tag} w={w}: score-cache telemetry \
+                                    diverged"))?;
+                    for (s, (x, y)) in seq
+                        .per_shard
+                        .iter()
+                        .zip(&par.per_shard)
+                        .enumerate()
+                    {
+                        assert_results_identical(
+                            &format!("{tag} w={w} shard={s}"), x, y, true)?;
+                    }
+                }
+            }
         }
         Ok(())
     });

@@ -438,12 +438,23 @@ def check_chaos(path: str, rec: dict) -> None:
 
 # The hyperscale shard-plane sweep (fig16) must cover these tiers under
 # every system. Labels are fig16/<tier>/<ShardsxGpus>.
-SCALE_TIERS = {"conf", "gossip-off", "gossip-on", "partition", "mega"}
+SCALE_TIERS = {"conf", "gossip-off", "gossip-on", "exec-seq", "partition",
+               "mega"}
 
 # Hard floors for the mega tier — the suite's reason to exist is proving
 # the plane runs at datacenter scale, so these are not advisory.
 SCALE_MEGA_MIN_GPUS = 10_000
 SCALE_MEGA_MIN_JOBS = 1_000_000
+
+# Tiers that must run on the parallel fork-join executor (workers >= 2);
+# exec-seq is their sequential twin and must stay at exactly 1.
+SCALE_PARALLEL_TIERS = {"gossip-on", "mega"}
+
+# Parallel wall-clock slack vs the sequential twin. The fig16 sweep runs
+# its plane cells concurrently (outer run_parallel), so on a saturated
+# CI box inner workers oversubscribe cores — this is a pathology gate
+# ("the pool must not make the plane slower"), not a speedup benchmark.
+SCALE_PAR_WALL_SLACK = 2.0
 
 
 def check_scale(path: str, rec: dict) -> None:
@@ -455,7 +466,15 @@ def check_scale(path: str, rec: dict) -> None:
     event throughput, the mega tier actually hits the 10k-GPU / 1M-job
     scale the suite advertises, and for each system gossip-on beats
     gossip-off on realized prompt quality — the cross-shard bank
-    synchronization's reason to exist."""
+    synchronization's reason to exist.
+
+    Executor gates: every cell carries `plane_workers`/`plane_wall_s`
+    telemetry, the gossip-on and mega tiers actually engage the parallel
+    fork-join executor (workers >= 2) while exec-seq stays sequential,
+    exec-seq and gossip-on (identical configs apart from width) agree on
+    every deterministic metric — the bit-identity contract surfaced in
+    the perf record — and the parallel cell's plane wall-clock is no
+    worse than the sequential twin's (with oversubscription slack)."""
     seen = {}
     for i, cell in enumerate(rec["cells"]):
         where = cell_name("scale", i, cell)
@@ -464,6 +483,24 @@ def check_scale(path: str, rec: dict) -> None:
         if tier not in SCALE_TIERS:
             fail(f"{path}: {where} label names no shard-plane tier "
                  f"(want fig16/<{'|'.join(sorted(SCALE_TIERS))}>/<NxG>)")
+        for key in ("plane_workers", "plane_wall_s"):
+            if key not in cell:
+                fail(f"{path}: {where} ({tier}) missing executor "
+                     f"telemetry '{key}'")
+        workers = cell["plane_workers"]
+        if not isinstance(workers, int) or workers < 1:
+            fail(f"{path}: {where} ({tier}) plane_workers {workers!r} is "
+                 f"not a positive integer")
+        if not isinstance(cell["plane_wall_s"], (int, float)) \
+                or cell["plane_wall_s"] < 0:
+            fail(f"{path}: {where} ({tier}) plane_wall_s "
+                 f"{cell['plane_wall_s']!r} is not a non-negative number")
+        if tier == "exec-seq" and workers != 1:
+            fail(f"{path}: {where} exec-seq tier must run sequentially "
+                 f"(plane_workers 1, got {workers})")
+        if tier in SCALE_PARALLEL_TIERS and workers < 2:
+            fail(f"{path}: {where} ({tier}) parallel executor must "
+                 f"engage (plane_workers >= 2, got {workers})")
         if cell["n_jobs"] <= 0:
             fail(f"{path}: {where} ({tier}) ran no jobs")
         if cell["n_done"] != cell["n_jobs"]:
@@ -509,9 +546,29 @@ def check_scale(path: str, rec: dict) -> None:
                  f"{on['mean_quality']:.4f} does not beat gossip-off "
                  f"{off['mean_quality']:.4f} — cross-shard prompt gossip "
                  f"delivered no lift")
+        # exec-seq is gossip-on with workers pinned to 1: apart from
+        # wall-clock, every deterministic metric must agree exactly —
+        # the parallel executor's bit-identity contract.
+        seq = pick("exec-seq", system)
+        for key in ("n_jobs", "n_done", "n_violations", "cost_usd",
+                    "mean_quality"):
+            if seq[key] != on[key]:
+                fail(f"{path}: {system} exec-seq and gossip-on disagree "
+                     f"on {key} ({seq[key]} vs {on[key]}) — the parallel "
+                     f"executor must be bit-identical to sequential")
+        if on["plane_wall_s"] > seq["plane_wall_s"] * SCALE_PAR_WALL_SLACK:
+            fail(f"{path}: {system} parallel gossip-on plane took "
+                 f"{on['plane_wall_s']:.3f}s vs sequential "
+                 f"{seq['plane_wall_s']:.3f}s — the fork-join executor "
+                 f"made the plane slower (> {SCALE_PAR_WALL_SLACK}x)")
+        print(f"check_bench: scale {system} executor: seq "
+              f"{seq['plane_wall_s']:.3f}s -> par "
+              f"{on['plane_wall_s']:.3f}s at {on['plane_workers']} "
+              f"workers")
         mega = pick("mega", system)
         print(f"check_bench: scale mega/{system}: {mega['gpus']} GPUs, "
-              f"{mega['n_jobs']} jobs, {mega['events_per_s']:.0f} events/s")
+              f"{mega['n_jobs']} jobs, {mega['events_per_s']:.0f} events/s "
+              f"({mega['plane_workers']} workers)")
     print(f"check_bench: scale suite covers {sorted(seen)} x "
           f"{sorted(SCENARIO_SYSTEMS)}")
 

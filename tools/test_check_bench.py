@@ -92,21 +92,30 @@ def chaos_cells(**over):
     return cells
 
 
-def scale_cells(on_q=0.9, off_q=0.6, mega_gpus=10240, mega_jobs=1_200_000):
+def scale_cells(on_q=0.9, off_q=0.6, mega_gpus=10240, mega_jobs=1_200_000,
+                par_workers=4, par_wall=1.0, seq_wall=2.0):
     cells = []
     tiers = [
         ("conf", "1x32", 32, 120),
         ("gossip-off", "4x32", 128, 3000),
         ("gossip-on", "4x32", 128, 3000),
+        # exec-seq mirrors gossip-on exactly apart from the executor
+        # width/wall — the bit-identity gate compares the two.
+        ("exec-seq", "4x32", 128, 3000),
         ("partition", "4x32", 128, 720),
         ("mega", "16x640", mega_gpus, mega_jobs),
     ]
     for tier, geom, gpus, n_jobs in tiers:
         for system in ("prompttuner", "infless", "elasticflow"):
-            q = {"gossip-on": on_q, "gossip-off": off_q}.get(tier, 0.8)
+            q = {"gossip-on": on_q, "gossip-off": off_q,
+                 "exec-seq": on_q}.get(tier, 0.8)
+            workers = par_workers if tier in ("gossip-on", "mega") else 1
+            wall = {"gossip-on": par_wall,
+                    "exec-seq": seq_wall}.get(tier, 0.5)
             cells.append(make_cell(
                 label=f"fig16/{tier}/{geom}", system=system, gpus=gpus,
                 n_jobs=n_jobs, n_done=n_jobs, mean_quality=q,
+                plane_workers=workers, plane_wall_s=wall,
             ))
     return cells
 
@@ -472,6 +481,56 @@ def test_scale_suite_rejects_unknown_tier(tmp):
     r = run_check(path)
     assert r.returncode == 1, (r.returncode, r.stderr)
     assert "names no shard-plane tier" in r.stderr
+
+
+def test_scale_suite_requires_executor_telemetry(tmp):
+    cells = scale_cells()
+    del cells[0]["plane_workers"]
+    path = write_tmp(tmp, "s.json", make_record(suite="scale", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "executor telemetry" in r.stderr
+
+
+def test_scale_suite_requires_parallel_executor_on_parallel_tiers(tmp):
+    path = write_tmp(tmp, "s.json",
+                     make_record(suite="scale",
+                                 cells=scale_cells(par_workers=1)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "parallel executor must engage" in r.stderr
+
+
+def test_scale_suite_requires_exec_seq_to_be_sequential(tmp):
+    cells = scale_cells()
+    for c in cells:
+        if "/exec-seq/" in c["label"]:
+            c["plane_workers"] = 2
+    path = write_tmp(tmp, "s.json", make_record(suite="scale", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "must run sequentially" in r.stderr
+
+
+def test_scale_suite_rejects_seq_parallel_divergence(tmp):
+    cells = scale_cells()
+    for c in cells:
+        if "/exec-seq/" in c["label"] and c["system"] == "infless":
+            c["cost_usd"] = 6.0
+    path = write_tmp(tmp, "s.json", make_record(suite="scale", cells=cells))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "bit-identical" in r.stderr
+
+
+def test_scale_suite_rejects_parallel_slowdown(tmp):
+    path = write_tmp(tmp, "s.json",
+                     make_record(suite="scale",
+                                 cells=scale_cells(par_wall=4.0,
+                                                   seq_wall=1.0)))
+    r = run_check(path)
+    assert r.returncode == 1, (r.returncode, r.stderr)
+    assert "made the plane slower" in r.stderr
 
 
 def scenario_cells(families):
